@@ -1,0 +1,66 @@
+//! Ablation grid over GD-SEC's three ingredients (paper §II-A):
+//! adaptive sparsification x error correction x state variables,
+//! on the lasso/DNA-like workload of Fig 3.
+//!
+//! Run: `cargo run --release --example compressor_ablation`
+
+use gdsec::algo::gdsec::{GdSecConfig, Xi};
+use gdsec::algo::gd;
+use gdsec::algo::gdsec as gdsec_algo;
+use gdsec::data::synthetic;
+use gdsec::objectives::Problem;
+use gdsec::util::tablefmt::{bits, sci, Table};
+
+fn main() {
+    let n = 2000;
+    let data = synthetic::dna_like(3, n);
+    let prob = Problem::lasso(data, 5, 1.0 / n as f64);
+    let alpha = 1.0 / prob.lipschitz();
+    let iters = 1500;
+    let m = prob.m() as f64;
+    let fstar = prob.estimate_fstar(6000);
+
+    let mut table = Table::new(&["variant", "ξ/M", "final err", "uplink", "tx"]);
+    let gd_trace =
+        gd::run(&prob, &gd::GdConfig { alpha, eval_every: 1, fstar: Some(fstar) }, iters);
+    table.row(vec![
+        "GD (dense)".into(),
+        "-".into(),
+        sci(gd_trace.final_error()),
+        bits(gd_trace.total_bits() as f64),
+        gd_trace.total_transmissions().to_string(),
+    ]);
+
+    // (error-correction, state-variable, ξ/M) — thresholds tuned for the
+    // dna-like substitute (fig3 runner): EC tolerates ~25x larger ξ.
+    let grid = [
+        ("GD-SEC (EC+SV)", true, true, 500.0),
+        ("EC only (no SV)", true, false, 20.0),
+        ("SV only (no EC) = GD-SOEC", false, true, 20.0),
+        ("neither (hard censor)", false, false, 20.0),
+        ("GD-SOEC at SEC's ξ", false, true, 500.0),
+    ];
+    for (label, ec, sv, xi_over_m) in grid {
+        let cfg = GdSecConfig {
+            alpha,
+            beta: if sv { 0.01 } else { 0.0 },
+            xi: Xi::Uniform(xi_over_m * m),
+            error_correction: ec,
+            state_variable: sv,
+            eval_every: 1,
+            fstar: Some(fstar),
+        };
+        let t = gdsec_algo::run(&prob, &cfg, iters);
+        table.row(vec![
+            label.into(),
+            format!("{xi_over_m}"),
+            sci(t.final_error()),
+            bits(t.total_bits() as f64),
+            t.total_transmissions().to_string(),
+        ]);
+    }
+    println!("== GD-SEC ingredient ablation (lasso / dna-like, {iters} iters) ==");
+    println!("{}", table.render());
+    println!("Takeaways (paper §IV-C/D): error correction lets ξ grow ~25x;");
+    println!("state variables let the server coast through censored rounds.");
+}

@@ -1,0 +1,48 @@
+//! Bandwidth-limited federated scenario (Fig 8): 100 workers on
+//! CIFAR-like data, round-robin scheduling of half the fleet per round,
+//! run through the REAL threaded coordinator (framed protocol, byte
+//! counters, failure tolerance) rather than the serial reference.
+//!
+//! Run: `cargo run --release --example federated_rr [-- --workers 100 --iters 300]`
+
+use gdsec::algo::gdsec::{GdSecConfig, Xi};
+use gdsec::coordinator::scheduler::Scheduler;
+use gdsec::data::synthetic;
+use gdsec::objectives::Problem;
+use gdsec::util::cli::Args;
+use gdsec::util::tablefmt::bits;
+
+fn main() {
+    let args = Args::from_env(false).unwrap();
+    let m = args.get_usize("workers", 100).unwrap();
+    let iters = args.get_usize("iters", 300).unwrap();
+    let n = args.get_usize("samples", 2000).unwrap();
+
+    let data = synthetic::cifar_like(7, n);
+    let prob = Problem::linear(data, m, 1.0 / n as f64);
+    let alpha = 1.0 / prob.lipschitz();
+
+    println!("== federated round-robin: M={m}, d={}, {iters} rounds ==", prob.d);
+    for (label, sched, xi_over_m) in [
+        ("all workers", Scheduler::All, 4000.0),
+        ("RR half", Scheduler::RoundRobin { fraction: 0.5 }, 400.0),
+    ] {
+        let cfg = GdSecConfig {
+            alpha,
+            beta: 0.01,
+            xi: Xi::Uniform(xi_over_m * m as f64),
+            ..Default::default()
+        };
+        let out = gdsec::coordinator::run_native(&prob, cfg, iters, sched);
+        let payload: u64 = out.rounds.iter().map(|r| r.payload_bits).sum();
+        let overhead: u64 = out.rounds.iter().map(|r| r.overhead_bits).sum();
+        println!(
+            "  {label:<12} ξ/M={xi_over_m:<5} f-f* {:.3e} | payload {:>10} | overhead {:>9} | mean round {:>7.0}µs",
+            out.trace.final_error(),
+            bits(payload as f64),
+            bits(overhead as f64),
+            out.rounds.iter().map(|r| r.wall_us as f64).sum::<f64>() / out.rounds.len() as f64,
+        );
+    }
+    println!("(GD-SEC with half participation keeps nearly full-fleet accuracy — Fig 8.)");
+}

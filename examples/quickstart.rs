@@ -1,0 +1,45 @@
+//! Quickstart: GD vs GD-SEC on the paper's synthetic logistic-regression
+//! workload (Fig 2 setup) in ~20 lines of library use.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use gdsec::algo::gdsec::{GdSecConfig, Xi};
+use gdsec::algo::gd;
+use gdsec::algo::gdsec as gdsec_algo;
+use gdsec::data::synthetic;
+use gdsec::objectives::Problem;
+use gdsec::util::tablefmt::{bits, pct};
+
+fn main() {
+    // 5 workers, 50 samples each, d = 300 (the paper's own recipe).
+    let data = synthetic::paper_logreg(42, 5, 50, 300);
+    let n = data.n();
+    let prob = Problem::logistic(data, 5, 1.0 / n as f64);
+    let alpha = 1.0 / prob.lipschitz();
+    let iters = 1000;
+
+    let t_gd = gd::run(&prob, &gd::GdConfig { alpha, eval_every: 1, fstar: None }, iters);
+    let cfg = GdSecConfig {
+        alpha,
+        beta: 0.01,
+        xi: Xi::Uniform(80.0 * prob.m() as f64), // paper: ξ/M = 80
+        ..Default::default()
+    };
+    let t_sec = gdsec_algo::run(&prob, &cfg, iters);
+
+    let eps = t_gd.final_error().max(t_sec.final_error()) * 2.0;
+    println!("target objective error: {eps:.3e}");
+    for t in [&t_gd, &t_sec] {
+        println!(
+            "  {:<8} iters {:>5}  uplink {:>10}  transmissions {:>6}",
+            t.algo,
+            t.iters_to_reach(eps).map(|v| v.to_string()).unwrap_or("-".into()),
+            bits(t.bits_to_reach(eps).unwrap_or(0) as f64),
+            t.total_transmissions(),
+        );
+    }
+    println!(
+        "GD-SEC saves {} of the uplink bits at equal accuracy.",
+        pct(t_sec.savings_vs(&t_gd, eps))
+    );
+}

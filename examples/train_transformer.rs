@@ -1,0 +1,194 @@
+//! END-TO-END DRIVER — the full three-layer stack on a real training
+//! workload:
+//!
+//!   L1  Pallas `gdsec_sparsify` kernel (compiled into the artifacts)
+//!   L2  jax transformer LM fwd/bwd, AOT-lowered to `artifacts/*.hlo.txt`
+//!   L3  this Rust coordinator: threaded workers, framed protocol,
+//!       RLE-coded sparsified gradient differences on the uplink
+//!
+//! A ~330k-parameter decoder-only transformer is trained with distributed
+//! full-batch GD-SEC across M worker threads, each worker owning a shard
+//! of a synthetic Markov token corpus and executing the compiled jax
+//! loss+grad via PJRT. Python never runs here — build artifacts first:
+//!
+//!   make artifacts && cargo run --release --example train_transformer
+//!       [-- --workers 4 --iters 200 --xi 25 --beta 0.05 --alpha 0.3]
+//!
+//! Outputs: loss curve + uplink accounting -> results/e2e_loss.csv, and a
+//! summary (recorded in EXPERIMENTS.md).
+
+use gdsec::compress;
+use gdsec::coordinator::worker::GradProvider;
+use gdsec::runtime::engine::TfmEngine;
+use gdsec::runtime::Manifest;
+use gdsec::util::cli::Args;
+use gdsec::util::csv::CsvWriter;
+use gdsec::util::tablefmt::{bits, pct};
+use gdsec::util::Timer;
+
+/// PJRT-backed provider: one compiled transformer engine + a fixed local
+/// token shard per worker.
+struct TfmProvider {
+    eng: TfmEngine,
+    tokens: Vec<i32>,
+    scratch: Vec<f32>,
+}
+
+impl TfmProvider {
+    fn new(manifest: Manifest, tokens: Vec<i32>) -> Self {
+        let eng = TfmEngine::new(manifest).expect("tfm engine");
+        let n = eng.n_params;
+        TfmProvider { eng, tokens, scratch: vec![0.0; n] }
+    }
+}
+
+impl GradProvider for TfmProvider {
+    fn dim(&self) -> usize {
+        self.eng.n_params
+    }
+
+    fn loss_grad(&mut self, theta: &[f64], out: &mut [f64]) -> f64 {
+        for (s, &t) in self.scratch.iter_mut().zip(theta) {
+            *s = t as f32;
+        }
+        let (loss, grad) = self.eng.loss_grad(&self.scratch, &self.tokens).expect("loss_grad");
+        for (o, g) in out.iter_mut().zip(&grad) {
+            *o = *g as f64;
+        }
+        loss
+    }
+}
+
+fn main() {
+    let args = Args::from_env(false).unwrap();
+    let m = args.get_usize("workers", 4).unwrap();
+    let iters = args.get_usize("iters", 200).unwrap();
+    let alpha = args.get_f64("alpha", 0.3).unwrap();
+    let beta = args.get_f64("beta", 0.05).unwrap();
+    let xi_over_m = args.get_f64("xi", 25.0).unwrap();
+    let seed = args.get_u64("seed", 42).unwrap();
+
+    let manifest = Manifest::load(Manifest::default_dir())
+        .expect("artifacts missing — run `make artifacts` first");
+
+    // Server-side engine: initialization + config introspection.
+    let mut server_eng = TfmEngine::new(manifest.clone()).expect("server engine");
+    let d = server_eng.n_params;
+    let (batch, seq, vocab) = (server_eng.batch, server_eng.seq, server_eng.vocab);
+    println!("== e2e transformer: {d} params, vocab {vocab}, seq {seq}, batch {batch}/worker, M={m} ==");
+    let theta0_f32 = server_eng.init_params(seed as i32).expect("init");
+    let theta0: Vec<f64> = theta0_f32.iter().map(|&v| v as f64).collect();
+
+    // Shard the corpus: each worker holds `batch` sequences.
+    let corpus = gdsec::data::synthetic::token_corpus(seed, m * batch, seq, vocab);
+    let shards: Vec<Vec<i32>> = (0..m)
+        .map(|w| {
+            corpus[w * batch..(w + 1) * batch]
+                .iter()
+                .flat_map(|s| s.iter().map(|&t| t as i32))
+                .collect()
+        })
+        .collect();
+
+    // --- GD-SEC over the full stack (serial round loop driving PJRT
+    //     providers; the threaded-coordinator variant of this same seam is
+    //     exercised by integration tests — here we keep all M PJRT
+    //     instances in one thread since the box has a single core). ---
+    let mut providers: Vec<TfmProvider> =
+        shards.iter().map(|s| TfmProvider::new(manifest.clone(), s.clone())).collect();
+
+    let xi = xi_over_m * m as f64;
+    let mut theta = theta0.clone();
+    let mut theta_prev = theta0.clone();
+    let mut h = vec![0.0f64; d];
+    let mut workers: Vec<gdsec::algo::gdsec::WorkerState> =
+        (0..m).map(|_| gdsec::algo::gdsec::WorkerState::new(d)).collect();
+    let cfg = gdsec::algo::gdsec::GdSecConfig {
+        alpha,
+        beta,
+        xi: gdsec::algo::gdsec::Xi::Uniform(xi),
+        ..Default::default()
+    };
+
+    std::fs::create_dir_all("results").ok();
+    let mut csv = CsvWriter::create(
+        "results/e2e_loss.csv",
+        &["iter", "loss", "payload_bits", "dense_bits", "tx", "entries", "secs"],
+    )
+    .unwrap();
+
+    let timer = Timer::start();
+    let (mut payload_bits, mut tx_count, mut entries) = (0u64, 0u64, 0u64);
+    // Adaptive dense/sparse fallback accounting (extension beyond the
+    // paper: caps the cost of weakly-censored rounds at 8 + 32·d bits).
+    let mut adaptive_bits_total = 0u64;
+    let mut theta_diff = vec![0.0f64; d];
+    let mut first_loss = f64::NAN;
+    let mut last_loss = f64::NAN;
+    for k in 1..=iters {
+        for i in 0..d {
+            theta_diff[i] = theta[i] - theta_prev[i];
+        }
+        let mut agg = vec![0.0f64; d];
+        let mut round_loss = 0.0;
+        for (w, prov) in providers.iter_mut().enumerate() {
+            let loss = prov.loss_grad(&theta, workers[w].grad_mut());
+            round_loss += loss;
+            let up = workers[w].sparsify_step(&cfg, m, &theta_diff);
+            if up.nnz() > 0 {
+                payload_bits += compress::sparse_bits(&up) as u64;
+                adaptive_bits_total += compress::adaptive_bits(&up) as u64;
+                tx_count += 1;
+                entries += up.nnz() as u64;
+                up.add_into(&mut agg);
+            }
+        }
+        let mean_loss = round_loss / m as f64;
+        if k == 1 {
+            first_loss = mean_loss;
+        }
+        last_loss = mean_loss;
+        theta_prev.copy_from_slice(&theta);
+        for i in 0..d {
+            theta[i] -= alpha * (h[i] + agg[i]);
+            h[i] += beta * agg[i];
+        }
+        let dense_bits = (k * m) as u64 * compress::dense_bits(d) as u64;
+        csv.row_f64(&[
+            k as f64,
+            mean_loss,
+            payload_bits as f64,
+            dense_bits as f64,
+            tx_count as f64,
+            entries as f64,
+            timer.elapsed_secs(),
+        ])
+        .unwrap();
+        if k % 10 == 0 || k == 1 {
+            println!(
+                "  iter {k:>4}  loss {mean_loss:.4}  uplink {:>10}  (dense would be {:>10})  [{:.1}s]",
+                bits(payload_bits as f64),
+                bits(dense_bits as f64),
+                timer.elapsed_secs()
+            );
+        }
+    }
+    csv.flush().unwrap();
+
+    let dense_total = (iters * m) as u64 * compress::dense_bits(d) as u64;
+    println!("\n== summary ==");
+    println!("  loss: {first_loss:.4} -> {last_loss:.4} (uniform baseline ln(V) = {:.4})", (vocab as f64).ln());
+    println!(
+        "  uplink payload {} vs dense GD {} -> {} saved",
+        bits(payload_bits as f64),
+        bits(dense_total as f64),
+        pct(1.0 - payload_bits as f64 / dense_total as f64)
+    );
+    println!(
+        "  with adaptive dense-fallback framing: {} -> {} saved",
+        bits(adaptive_bits_total as f64),
+        pct(1.0 - adaptive_bits_total as f64 / dense_total as f64)
+    );
+    println!("  transmissions {tx_count} / {}", iters * m);
+    println!("  wall time {:.1}s  -> results/e2e_loss.csv", timer.elapsed_secs());
+}

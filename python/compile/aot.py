@@ -1,0 +1,197 @@
+"""AOT lowering: JAX/Pallas (L2+L1) -> HLO text artifacts for the Rust
+PJRT runtime (L3).
+
+Interchange format is HLO *text*, not a serialized HloModuleProto: jax
+>= 0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1
+(the version the published `xla` 0.1.6 crate links) rejects; the text
+parser reassigns ids and round-trips cleanly. See /opt/xla-example/README.
+
+Usage:
+    cd python && python -m compile.aot --out ../artifacts \
+        [--tfm-vocab 256 --tfm-seq 32 --tfm-dmodel 128 ...]
+
+Writes one `<name>.hlo.txt` per artifact plus `manifest.json` describing
+input/output shapes — the Rust runtime loads executables by manifest name.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """Convert a jax Lowered to XLA HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _shape_entry(name, s):
+    return {"name": name, "shape": list(s.shape), "dtype": str(s.dtype)}
+
+
+class ArtifactBuilder:
+    def __init__(self, out_dir):
+        self.out_dir = out_dir
+        self.manifest = {"format": "hlo-text", "artifacts": []}
+
+    def add(self, name, fn, in_specs, meta=None):
+        """Lower fn at the given input specs and write the artifact."""
+        lowered = jax.jit(fn).lower(*[s for _, s in in_specs])
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        path = os.path.join(self.out_dir, fname)
+        with open(path, "w") as f:
+            f.write(text)
+        out_shapes = jax.eval_shape(fn, *[s for _, s in in_specs])
+        if not isinstance(out_shapes, (tuple, list)):
+            out_shapes = (out_shapes,)
+        entry = {
+            "name": name,
+            "file": fname,
+            "inputs": [_shape_entry(n, s) for n, s in in_specs],
+            "outputs": [_shape_entry(f"out{i}", s) for i, s in enumerate(out_shapes)],
+        }
+        if meta:
+            entry["meta"] = meta
+        self.manifest["artifacts"].append(entry)
+        print(f"  wrote {fname}  ({len(text)} chars, "
+              f"{len(entry['inputs'])} in / {len(entry['outputs'])} out)")
+
+    def finish(self):
+        path = os.path.join(self.out_dir, "manifest.json")
+        with open(path, "w") as f:
+            json.dump(self.manifest, f, indent=2, sort_keys=True)
+        print(f"  wrote manifest.json ({len(self.manifest['artifacts'])} artifacts)")
+
+
+def worker_step_specs(n, d):
+    """Input spec list for a worker-step artifact over an (n, d) shard."""
+    return [
+        ("x", spec((n, d))),
+        ("y", spec((n,))),
+        ("theta", spec((d,))),
+        ("theta_prev", spec((d,))),
+        ("h", spec((d,))),
+        ("e", spec((d,))),
+        ("xi", spec((d,))),
+        ("scalars", spec((4,))),  # [beta, 1/M, 1/N, lambda]
+    ]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--tfm-vocab", type=int, default=256)
+    ap.add_argument("--tfm-seq", type=int, default=32)
+    ap.add_argument("--tfm-dmodel", type=int, default=128)
+    ap.add_argument("--tfm-layers", type=int, default=2)
+    ap.add_argument("--tfm-heads", type=int, default=4)
+    ap.add_argument("--tfm-dff", type=int, default=256)
+    ap.add_argument("--tfm-batch", type=int, default=4)
+    # Worker-step shard shapes to pre-compile: "n x d" pairs.
+    ap.add_argument(
+        "--shards",
+        default="30x180:logreg,30x180:linreg,20x180:nlls",
+        help="comma list of NxD:kind worker-step artifacts",
+    )
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    print(f"AOT-lowering artifacts to {args.out}")
+
+    b = ArtifactBuilder(args.out)
+
+    # --- Worker-step artifacts (objective grad + Pallas sparsify fused) ---
+    for part in args.shards.split(","):
+        shape, kind = part.strip().split(":")
+        n, d = (int(v) for v in shape.split("x"))
+        fn = model.make_worker_step(kind)
+        b.add(
+            f"worker_step_{kind}_{n}x{d}",
+            fn,
+            worker_step_specs(n, d),
+            meta={"kind": kind, "n": n, "d": d},
+        )
+
+    # --- Standalone sparsify kernel (used by the transformer e2e path) ---
+    cfg = model.TfmConfig(
+        vocab=args.tfm_vocab,
+        seq=args.tfm_seq,
+        d_model=args.tfm_dmodel,
+        n_layers=args.tfm_layers,
+        n_heads=args.tfm_heads,
+        d_ff=args.tfm_dff,
+    )
+    n_params = int(cfg.n_params())
+
+    from .kernels.gdsec_sparsify import gdsec_sparsify
+
+    def sparsify_fn(grad, h, e, theta_diff, xi, scalars):
+        return gdsec_sparsify(grad, h, e, theta_diff, xi, scalars)
+
+    b.add(
+        f"gdsec_sparsify_{n_params}",
+        sparsify_fn,
+        [
+            ("grad", spec((n_params,))),
+            ("h", spec((n_params,))),
+            ("e", spec((n_params,))),
+            ("theta_diff", spec((n_params,))),
+            ("xi", spec((n_params,))),
+            ("scalars", spec((2,))),  # [beta, 1/M]
+        ],
+        meta={"d": n_params},
+    )
+
+    # --- Transformer loss+grad ---
+    loss_grad = model.make_tfm_loss_grad(cfg)
+    b.add(
+        "tfm_loss_grad",
+        loss_grad,
+        [
+            ("params", spec((n_params,))),
+            ("tokens", spec((args.tfm_batch, cfg.seq), jnp.int32)),
+        ],
+        meta={
+            "n_params": n_params,
+            "vocab": cfg.vocab,
+            "seq": cfg.seq,
+            "d_model": cfg.d_model,
+            "n_layers": cfg.n_layers,
+            "n_heads": cfg.n_heads,
+            "d_ff": cfg.d_ff,
+            "batch": args.tfm_batch,
+        },
+    )
+
+    # --- Transformer init params (lowered as a computation so Rust can
+    #     materialize the same initialization without Python) ---
+    def tfm_init(seed_arr):
+        key = jax.random.PRNGKey(seed_arr[0])
+        return model.init_params(cfg, key)
+
+    b.add(
+        "tfm_init",
+        tfm_init,
+        [("seed", spec((1,), jnp.int32))],
+        meta={"n_params": n_params},
+    )
+
+    b.finish()
+    print("AOT done.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,78 @@
+"""L1 Pallas kernel: tiled shard gradient for (regularized) linear
+regression — the compute hot spot of the paper's Fig 1/4/8 workloads:
+
+    g = (1/N) * X^T (X @ theta - y)        X: f32[n_m, d]
+
+TPU adaptation (DESIGN.md §Hardware-Adaptation): two MXU matmuls per row
+tile. The grid walks row blocks of X; each step keeps one (bm, d) tile of
+X in VMEM, computes the block residual r = X_blk @ theta - y_blk and
+accumulates X_blk^T r into the d-vector output, which stays resident
+across the sequential TPU grid (revisiting output blocks is the standard
+Pallas accumulation idiom). For the shard sizes in this repo (d <= 3072)
+theta and the accumulator fit comfortably in VMEM next to the X tile
+(structural footprint reported by `vmem_bytes_per_block`).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+ROW_BLOCK = 128
+
+
+def _kernel(x_ref, y_ref, theta_ref, scal_ref, out_ref):
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    n_inv = scal_ref[0]
+    x = x_ref[...]
+    r = x @ theta_ref[...] - y_ref[...]
+    out_ref[...] += n_inv * (r @ x)
+
+
+@functools.partial(jax.jit, static_argnames=("row_block",))
+def linreg_grad(x, y, theta, scalars, *, row_block=ROW_BLOCK):
+    """Data-term gradient (1/N)·X^T(Xθ−y) with row-tiled accumulation.
+
+    Args:
+      x: f32[n, d] shard features.
+      y: f32[n] shard labels.
+      theta: f32[d].
+      scalars: f32[1] = [1/N] (N = global sample count, per Eq. 19).
+    Returns:
+      f32[d] data-term gradient (regularizer added by the caller at L2).
+    """
+    n, d = x.shape
+    bm = min(row_block, max(n, 1))
+    np_ = _round_up(max(n, 1), bm)
+    pad = np_ - n
+    if pad:
+        # Zero rows contribute zero residual -> inert padding.
+        x = jnp.pad(x, ((0, pad), (0, 0)))
+        y = jnp.pad(y, (0, pad))
+    grid = np_ // bm
+    return pl.pallas_call(
+        _kernel,
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec((bm, d), lambda i: (i, 0)),
+            pl.BlockSpec((bm,), lambda i: (i,)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((d,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((d,), x.dtype),
+        interpret=True,
+    )(x, y, theta, scalars)
+
+
+def _round_up(v, to):
+    return ((v + to - 1) // to) * to
+
+
+def vmem_bytes_per_block(d, row_block=ROW_BLOCK, dtype_bytes=4):
+    """Structural VMEM footprint per grid step: X tile + theta + y + out."""
+    return dtype_bytes * (row_block * d + 2 * d + row_block + 1)

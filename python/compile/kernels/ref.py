@@ -1,0 +1,55 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the correctness ground truth: every kernel in this package is
+pinned against its oracle by pytest + hypothesis sweeps, and the Rust
+native implementation mirrors the same math (pinned on the Rust side).
+"""
+
+import jax.numpy as jnp
+
+
+def gdsec_sparsify_ref(grad, h, e, theta_diff, xi, beta, m_inv):
+    """GD-SEC worker step (Algorithm 1, lines 4-15), vectorized.
+
+    delta   = grad - h + e
+    tau_i   = xi_i * m_inv * |theta_diff_i|
+    keep_i  = |delta_i| > tau_i
+    wire    = delta * keep                  (the transmitted sparse vector)
+    h_new   = h + beta * wire
+    e_new   = delta - wire
+
+    Returns (wire, h_new, e_new).
+    """
+    delta = grad - h + e
+    tau = xi * m_inv * jnp.abs(theta_diff)
+    keep = jnp.abs(delta) > tau
+    wire = jnp.where(keep, delta, 0.0).astype(grad.dtype)
+    h_new = h + beta * wire
+    e_new = delta - wire
+    return wire, h_new, e_new
+
+
+def linreg_grad_ref(x, y, theta, n_total):
+    """Data-term gradient of regularized linear regression (Eq. 19):
+    (1/N) * X^T (X theta - y). Regularizer is added by the caller."""
+    r = x @ theta - y
+    return (x.T @ r) / n_total
+
+
+def logreg_grad_ref(x, y, theta, n_total):
+    """Data-term gradient of logistic regression (Eq. 20)."""
+    z = x @ theta
+    # s = sigmoid(-y*z), computed stably via exp(-|yz|) only.
+    yz = y * z
+    enz = jnp.exp(-jnp.abs(yz))
+    s = jnp.where(yz >= 0, enz / (1.0 + enz), 1.0 / (1.0 + enz))
+    w = -y * s
+    return (x.T @ w) / n_total
+
+
+def nlls_grad_ref(x, y, theta, n_total):
+    """Data-term gradient of the nonconvex NLLS loss (Eq. 23)."""
+    z = x @ theta
+    p = 1.0 / (1.0 + jnp.exp(-z))
+    w = -(y - p) * p * (1.0 - p)
+    return (x.T @ w) / n_total

@@ -1,0 +1,225 @@
+"""L2: JAX worker-step functions and the e2e transformer LM.
+
+Everything here is *build-time only*: `aot.py` lowers these functions once
+to HLO text under `artifacts/`, and the Rust coordinator executes the
+compiled artifacts via PJRT. Python never runs on the request path.
+
+Worker-step functions fuse the shard gradient (L1 `linreg_grad` kernel for
+linear regression, jnp for the other losses) with the L1 `gdsec_sparsify`
+kernel, so one PJRT execution performs the complete Algorithm-1 worker
+iteration.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.gdsec_sparsify import gdsec_sparsify
+from .kernels.linreg_grad import linreg_grad
+from .kernels import ref
+
+# ---------------------------------------------------------------------------
+# Objective gradients (Eqs. 19, 20, 23). scalars layout for worker steps:
+#   scalars: f32[4] = [beta, 1/M, 1/N, lambda]
+# ---------------------------------------------------------------------------
+
+
+def _local_loss(kind, x, y, theta, n_inv, lam_over_m):
+    z = x @ theta
+    if kind == "linreg":
+        data = 0.5 * n_inv * jnp.sum((y - z) ** 2)
+        reg = 0.5 * lam_over_m * jnp.sum(theta**2)
+    elif kind == "logreg":
+        yz = y * z
+        data = n_inv * jnp.sum(jnp.logaddexp(0.0, -yz))
+        reg = 0.5 * lam_over_m * jnp.sum(theta**2)
+    elif kind == "nlls":
+        p = jax.nn.sigmoid(z)
+        data = 0.5 * n_inv * jnp.sum((y - p) ** 2)
+        reg = 0.5 * lam_over_m * jnp.sum(theta**2)
+    else:
+        raise ValueError(kind)
+    return data + reg
+
+
+def _local_grad(kind, x, y, theta, n_inv, lam_over_m):
+    if kind == "linreg":
+        # L1 Pallas kernel for the data term.
+        g = linreg_grad(x, y, theta, jnp.stack([n_inv]))
+    elif kind == "logreg":
+        g = _logreg_grad(x, y, theta, n_inv)
+    elif kind == "nlls":
+        g = _nlls_grad(x, y, theta, n_inv)
+    else:
+        raise ValueError(kind)
+    return g + lam_over_m * theta
+
+
+def _logreg_grad(x, y, theta, n_inv):
+    yz = y * (x @ theta)
+    enz = jnp.exp(-jnp.abs(yz))
+    s = jnp.where(yz >= 0, enz / (1.0 + enz), 1.0 / (1.0 + enz))
+    return n_inv * ((-y * s) @ x)
+
+
+def _nlls_grad(x, y, theta, n_inv):
+    p = jax.nn.sigmoid(x @ theta)
+    w = -(y - p) * p * (1.0 - p)
+    return n_inv * (w @ x)
+
+
+def make_worker_step(kind):
+    """Build the fused Algorithm-1 worker iteration for one loss family.
+
+    Signature of the returned function (all f32):
+      (x[n,d], y[n], theta[d], theta_prev[d], h[d], e[d], xi[d], scalars[4])
+        -> (wire[d], h_new[d], e_new[d], loss[1])
+
+    scalars = [beta, 1/M, 1/N, lambda]. `wire` is the dense Δ̂ (zeros where
+    censored); L3 RLE-encodes it.
+    """
+
+    def step(x, y, theta, theta_prev, h, e, xi, scalars):
+        beta, m_inv, n_inv, lam = scalars[0], scalars[1], scalars[2], scalars[3]
+        lam_over_m = lam * m_inv
+        grad = _local_grad(kind, x, y, theta, n_inv, lam_over_m)
+        loss = _local_loss(kind, x, y, theta, n_inv, lam_over_m)
+        wire, h_new, e_new = gdsec_sparsify(
+            grad, h, e, theta - theta_prev, xi, jnp.stack([beta, m_inv])
+        )
+        return wire, h_new, e_new, jnp.reshape(loss, (1,))
+
+    step.__name__ = f"worker_step_{kind}"
+    return step
+
+
+# ---------------------------------------------------------------------------
+# Tiny transformer LM for the end-to-end example.
+#
+# Decoder-only, learned positions, pre-LN blocks. Parameters travel as ONE
+# flat f32 vector so the GD-SEC machinery (built around R^d) applies
+# unchanged; (un)flattening layout is fixed by `param_specs`.
+# ---------------------------------------------------------------------------
+
+
+class TfmConfig:
+    def __init__(self, vocab=256, seq=32, d_model=128, n_layers=2, n_heads=4, d_ff=256):
+        self.vocab = vocab
+        self.seq = seq
+        self.d_model = d_model
+        self.n_layers = n_layers
+        self.n_heads = n_heads
+        self.d_ff = d_ff
+
+    def param_specs(self):
+        """Ordered (name, shape) list defining the flat layout."""
+        c = self
+        specs = [
+            ("tok_embed", (c.vocab, c.d_model)),
+            ("pos_embed", (c.seq, c.d_model)),
+        ]
+        for l in range(c.n_layers):
+            specs += [
+                (f"l{l}.ln1.g", (c.d_model,)),
+                (f"l{l}.ln1.b", (c.d_model,)),
+                (f"l{l}.attn.wqkv", (c.d_model, 3 * c.d_model)),
+                (f"l{l}.attn.wo", (c.d_model, c.d_model)),
+                (f"l{l}.ln2.g", (c.d_model,)),
+                (f"l{l}.ln2.b", (c.d_model,)),
+                (f"l{l}.mlp.w1", (c.d_model, c.d_ff)),
+                (f"l{l}.mlp.b1", (c.d_ff,)),
+                (f"l{l}.mlp.w2", (c.d_ff, c.d_model)),
+                (f"l{l}.mlp.b2", (c.d_model,)),
+            ]
+        specs += [
+            ("ln_f.g", (c.d_model,)),
+            ("ln_f.b", (c.d_model,)),
+            ("head", (c.d_model, c.vocab)),
+        ]
+        return specs
+
+    def n_params(self):
+        return sum(int(jnp.prod(jnp.array(s))) for _, s in self.param_specs())
+
+
+def unflatten(cfg, flat):
+    params = {}
+    off = 0
+    for name, shape in cfg.param_specs():
+        size = 1
+        for s in shape:
+            size *= s
+        params[name] = flat[off : off + size].reshape(shape)
+        off += size
+    return params
+
+
+def init_params(cfg, key):
+    """Standard small-transformer init, returned flat."""
+    parts = []
+    for name, shape in cfg.param_specs():
+        key, sub = jax.random.split(key)
+        if name.endswith((".b", ".b1", ".b2", "ln1.b", "ln2.b", "ln_f.b")):
+            parts.append(jnp.zeros(shape, jnp.float32).ravel())
+        elif "ln" in name and name.endswith(".g"):
+            parts.append(jnp.ones(shape, jnp.float32).ravel())
+        else:
+            fan_in = shape[0] if len(shape) > 1 else shape[0]
+            scale = 0.02 if "embed" in name else 1.0 / jnp.sqrt(fan_in)
+            parts.append((jax.random.normal(sub, shape) * scale).astype(jnp.float32).ravel())
+    return jnp.concatenate(parts)
+
+
+def _layernorm(x, g, b):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + 1e-5) * g + b
+
+
+def _attention(cfg, x, wqkv, wo):
+    b, t, dm = x.shape
+    nh = cfg.n_heads
+    hd = dm // nh
+    qkv = x @ wqkv  # [b, t, 3*dm]
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+    q = q.reshape(b, t, nh, hd).transpose(0, 2, 1, 3)
+    k = k.reshape(b, t, nh, hd).transpose(0, 2, 1, 3)
+    v = v.reshape(b, t, nh, hd).transpose(0, 2, 1, 3)
+    att = (q @ k.transpose(0, 1, 3, 2)) / jnp.sqrt(hd).astype(x.dtype)
+    mask = jnp.tril(jnp.ones((t, t), bool))
+    att = jnp.where(mask, att, -1e30)
+    att = jax.nn.softmax(att, axis=-1)
+    out = (att @ v).transpose(0, 2, 1, 3).reshape(b, t, dm)
+    return out @ wo
+
+
+def forward(cfg, flat_params, tokens):
+    """Logits for next-token prediction. tokens: i32[b, t]."""
+    p = unflatten(cfg, flat_params)
+    x = p["tok_embed"][tokens] + p["pos_embed"][None, : tokens.shape[1]]
+    for l in range(cfg.n_layers):
+        ln1 = _layernorm(x, p[f"l{l}.ln1.g"], p[f"l{l}.ln1.b"])
+        x = x + _attention(cfg, ln1, p[f"l{l}.attn.wqkv"], p[f"l{l}.attn.wo"])
+        ln2 = _layernorm(x, p[f"l{l}.ln2.g"], p[f"l{l}.ln2.b"])
+        hdn = jax.nn.gelu(ln2 @ p[f"l{l}.mlp.w1"] + p[f"l{l}.mlp.b1"])
+        x = x + hdn @ p[f"l{l}.mlp.w2"] + p[f"l{l}.mlp.b2"]
+    x = _layernorm(x, p["ln_f.g"], p["ln_f.b"])
+    return x @ p["head"]
+
+
+def lm_loss(cfg, flat_params, tokens):
+    """Mean next-token cross-entropy over positions 0..t-2."""
+    logits = forward(cfg, flat_params, tokens)[:, :-1]
+    targets = tokens[:, 1:]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return jnp.mean(nll)
+
+
+def make_tfm_loss_grad(cfg):
+    """(params_flat[d], tokens[b,t]) -> (loss[1], grad[d])."""
+
+    def loss_grad(flat_params, tokens):
+        loss, grad = jax.value_and_grad(lambda q: lm_loss(cfg, q, tokens))(flat_params)
+        return jnp.reshape(loss, (1,)), grad
+
+    return loss_grad

@@ -1,0 +1,130 @@
+"""L2 correctness: worker-step functions and the transformer LM."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.kernels import ref
+
+
+def _shard(seed, n=20, d=50):
+    keys = jax.random.split(jax.random.PRNGKey(seed), 3)
+    x = (jax.random.normal(keys[0], (n, d)) * 0.5).astype(jnp.float32)
+    y = jnp.sign(jax.random.normal(keys[1], (n,))).astype(jnp.float32)
+    theta = (jax.random.normal(keys[2], (d,)) * 0.1).astype(jnp.float32)
+    return x, y, theta
+
+
+class TestWorkerStep:
+    @pytest.mark.parametrize("kind", ["linreg", "logreg", "nlls"])
+    def test_loss_matches_autodiff_grad(self, kind):
+        # With xi=0 (transmit everything), wire == grad - h + e; pick
+        # h=e=0 so wire == local gradient, pinned against jax.grad.
+        x, y, theta = _shard(1)
+        d = theta.shape[0]
+        zeros = jnp.zeros((d,), jnp.float32)
+        scalars = jnp.array([0.01, 0.2, 1.0 / 80.0, 0.05], jnp.float32)
+        step = model.make_worker_step(kind)
+        wire, h_new, e_new, loss = step(
+            x, y, theta, theta, zeros, zeros, zeros, scalars
+        )
+
+        def loss_fn(t):
+            return model._local_loss(kind, x, y, t, 1.0 / 80.0, 0.05 * 0.2)
+
+        want_grad = jax.grad(loss_fn)(theta)
+        np.testing.assert_allclose(wire, want_grad, rtol=3e-3, atol=2e-5)
+        np.testing.assert_allclose(loss[0], loss_fn(theta), rtol=1e-5)
+        np.testing.assert_allclose(h_new, 0.01 * wire, rtol=1e-6, atol=1e-8)
+        # EC identity
+        np.testing.assert_allclose(
+            wire + e_new, wire, atol=1e-6
+        )  # e_new ~ f32 rounding only
+
+    @pytest.mark.parametrize("kind", ["linreg", "logreg", "nlls"])
+    def test_censoring_consistent_with_ref(self, kind):
+        x, y, theta = _shard(2)
+        d = theta.shape[0]
+        keys = jax.random.split(jax.random.PRNGKey(7), 4)
+        h = (jax.random.normal(keys[0], (d,)) * 0.05).astype(jnp.float32)
+        e = (jax.random.normal(keys[1], (d,)) * 0.01).astype(jnp.float32)
+        theta_prev = theta - (jax.random.normal(keys[2], (d,)) * 0.01).astype(jnp.float32)
+        xi = jnp.abs(jax.random.normal(keys[3], (d,))).astype(jnp.float32) * 50.0
+        scalars = jnp.array([0.05, 0.25, 0.01, 0.1], jnp.float32)
+        step = model.make_worker_step(kind)
+        wire, h_new, e_new, _ = step(x, y, theta, theta_prev, h, e, xi, scalars)
+        # Rebuild via oracle using the same gradient (from the step with
+        # xi=0, h=e=0 it equals wire; here recompute directly):
+        grad = model._local_grad(kind, x, y, theta, 0.01, 0.1 * 0.25)
+        w_want, h_want, e_want = ref.gdsec_sparsify_ref(
+            grad, h, e, theta - theta_prev, xi, 0.05, 0.25
+        )
+        np.testing.assert_allclose(wire, w_want, rtol=1e-5, atol=1e-7)
+        np.testing.assert_allclose(h_new, h_want, rtol=1e-5, atol=1e-7)
+        np.testing.assert_allclose(e_new, e_want, rtol=1e-5, atol=1e-7)
+
+
+class TestTransformer:
+    def small_cfg(self):
+        return model.TfmConfig(vocab=17, seq=8, d_model=16, n_layers=2, n_heads=2, d_ff=24)
+
+    def test_param_count_matches_flat_vector(self):
+        cfg = self.small_cfg()
+        flat = model.init_params(cfg, jax.random.PRNGKey(0))
+        assert flat.shape == (cfg.n_params(),)
+        p = model.unflatten(cfg, flat)
+        assert p["tok_embed"].shape == (17, 16)
+        assert p["l1.mlp.w1"].shape == (16, 24)
+
+    def test_forward_shapes_and_loss_finite(self):
+        cfg = self.small_cfg()
+        flat = model.init_params(cfg, jax.random.PRNGKey(1))
+        tokens = jax.random.randint(jax.random.PRNGKey(2), (3, cfg.seq), 0, cfg.vocab)
+        logits = model.forward(cfg, flat, tokens)
+        assert logits.shape == (3, cfg.seq, cfg.vocab)
+        loss = model.lm_loss(cfg, flat, tokens)
+        assert np.isfinite(float(loss))
+        # At init the loss should be near ln(vocab) (head is not
+        # zero-initialized, so allow some slack).
+        assert abs(float(loss) - np.log(cfg.vocab)) < 1.0
+
+    def test_causality(self):
+        # Changing a future token must not affect earlier logits.
+        cfg = self.small_cfg()
+        flat = model.init_params(cfg, jax.random.PRNGKey(3))
+        tokens = jax.random.randint(jax.random.PRNGKey(4), (1, cfg.seq), 0, cfg.vocab)
+        logits_a = model.forward(cfg, flat, tokens)
+        tokens_b = tokens.at[0, -1].set((tokens[0, -1] + 1) % cfg.vocab)
+        logits_b = model.forward(cfg, flat, tokens_b)
+        np.testing.assert_allclose(
+            logits_a[0, : cfg.seq - 1], logits_b[0, : cfg.seq - 1], atol=1e-5
+        )
+
+    def test_grad_descends(self):
+        cfg = self.small_cfg()
+        flat = model.init_params(cfg, jax.random.PRNGKey(5))
+        tokens = jax.random.randint(jax.random.PRNGKey(6), (4, cfg.seq), 0, cfg.vocab)
+        loss_grad = model.make_tfm_loss_grad(cfg)
+        l0, g = loss_grad(flat, tokens)
+        assert g.shape == flat.shape
+        flat2 = flat - 0.5 * g
+        l1, _ = loss_grad(flat2, tokens)
+        assert float(l1[0]) < float(l0[0])
+
+    def test_grad_matches_fd_spotcheck(self):
+        cfg = self.small_cfg()
+        flat = model.init_params(cfg, jax.random.PRNGKey(7))
+        tokens = jax.random.randint(jax.random.PRNGKey(8), (2, cfg.seq), 0, cfg.vocab)
+        loss_grad = model.make_tfm_loss_grad(cfg)
+        _, g = loss_grad(flat, tokens)
+        f = lambda q: float(model.lm_loss(cfg, q, tokens))
+        eps = 1e-3
+        for idx in [0, 57, cfg.n_params() - 1]:
+            fp = f(flat.at[idx].add(eps))
+            fm = f(flat.at[idx].add(-eps))
+            fd = (fp - fm) / (2 * eps)
+            assert abs(fd - float(g[idx])) < 5e-2 * max(abs(fd), 1.0), (
+                f"idx {idx}: fd {fd} vs ad {float(g[idx])}"
+            )

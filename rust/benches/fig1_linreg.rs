@@ -1,0 +1,18 @@
+//! `cargo bench --bench fig1_linreg` — regenerates the paper's fig1
+//! (linear regression, MNIST-like, 6 algorithms) at full size and reports wall time.
+//! Set GDSEC_BENCH_QUICK=1 for a reduced-size smoke run.
+
+use gdsec::experiments::{run_figure, ExpContext};
+use gdsec::util::Timer;
+
+fn main() {
+    let quick = std::env::var("GDSEC_BENCH_QUICK").ok().as_deref() == Some("1");
+    let mut ctx = ExpContext::new("results");
+    ctx.quick = quick;
+    let t = Timer::start();
+    let reports = run_figure("fig1", &ctx).expect("fig1");
+    for r in &reports {
+        r.print();
+    }
+    println!("[bench] fig1 wall time: {:.2}s (quick={quick})", t.elapsed_secs());
+}

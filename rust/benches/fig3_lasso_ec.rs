@@ -1,0 +1,18 @@
+//! `cargo bench --bench fig3_lasso_ec` — regenerates the paper's fig3
+//! (lasso, error-correction ablation) at full size and reports wall time.
+//! Set GDSEC_BENCH_QUICK=1 for a reduced-size smoke run.
+
+use gdsec::experiments::{run_figure, ExpContext};
+use gdsec::util::Timer;
+
+fn main() {
+    let quick = std::env::var("GDSEC_BENCH_QUICK").ok().as_deref() == Some("1");
+    let mut ctx = ExpContext::new("results");
+    ctx.quick = quick;
+    let t = Timer::start();
+    let reports = run_figure("fig3", &ctx).expect("fig3");
+    for r in &reports {
+        r.print();
+    }
+    println!("[bench] fig3 wall time: {:.2}s (quick={quick})", t.elapsed_secs());
+}

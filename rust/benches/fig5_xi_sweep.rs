@@ -1,0 +1,18 @@
+//! `cargo bench --bench fig5_xi_sweep` — regenerates the paper's fig5
+//! (nonconvex NLLS, xi sweep) at full size and reports wall time.
+//! Set GDSEC_BENCH_QUICK=1 for a reduced-size smoke run.
+
+use gdsec::experiments::{run_figure, ExpContext};
+use gdsec::util::Timer;
+
+fn main() {
+    let quick = std::env::var("GDSEC_BENCH_QUICK").ok().as_deref() == Some("1");
+    let mut ctx = ExpContext::new("results");
+    ctx.quick = quick;
+    let t = Timer::start();
+    let reports = run_figure("fig5", &ctx).expect("fig5");
+    for r in &reports {
+        r.print();
+    }
+    println!("[bench] fig5 wall time: {:.2}s (quick={quick})", t.elapsed_secs());
+}

@@ -1,0 +1,18 @@
+//! `cargo bench --bench fig6_heatmap` — regenerates the paper's fig6
+//! (per-worker/coordinate transmission heatmap) at full size and reports wall time.
+//! Set GDSEC_BENCH_QUICK=1 for a reduced-size smoke run.
+
+use gdsec::experiments::{run_figure, ExpContext};
+use gdsec::util::Timer;
+
+fn main() {
+    let quick = std::env::var("GDSEC_BENCH_QUICK").ok().as_deref() == Some("1");
+    let mut ctx = ExpContext::new("results");
+    ctx.quick = quick;
+    let t = Timer::start();
+    let reports = run_figure("fig6", &ctx).expect("fig6");
+    for r in &reports {
+        r.print();
+    }
+    println!("[bench] fig6 wall time: {:.2}s (quick={quick})", t.elapsed_secs());
+}

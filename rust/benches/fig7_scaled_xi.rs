@@ -1,0 +1,18 @@
+//! `cargo bench --bench fig7_scaled_xi` — regenerates the paper's fig7
+//! (RCV1-like sparse, xi_i = xi/L^i scaling) at full size and reports wall time.
+//! Set GDSEC_BENCH_QUICK=1 for a reduced-size smoke run.
+
+use gdsec::experiments::{run_figure, ExpContext};
+use gdsec::util::Timer;
+
+fn main() {
+    let quick = std::env::var("GDSEC_BENCH_QUICK").ok().as_deref() == Some("1");
+    let mut ctx = ExpContext::new("results");
+    ctx.quick = quick;
+    let t = Timer::start();
+    let reports = run_figure("fig7", &ctx).expect("fig7");
+    for r in &reports {
+        r.print();
+    }
+    println!("[bench] fig7 wall time: {:.2}s (quick={quick})", t.elapsed_secs());
+}

@@ -1,0 +1,122 @@
+//! Hot-path microbenchmarks (custom harness — no criterion offline).
+//!
+//! Covers every operation on the per-round critical path:
+//!   worker: gradient (gemv), sparsify_step (censor+EC), RLE encode
+//!   server: decode, aggregate, apply_round
+//!   codecs: QSGD quantize/dequantize, protocol frame encode/decode
+//!
+//! These are the numbers behind EXPERIMENTS.md §Perf.
+
+use gdsec::algo::gdsec::{GdSecConfig, ServerState, WorkerState, Xi};
+use gdsec::compress::{self, quantize, SparseUpdate};
+use gdsec::coordinator::protocol::{self, Msg};
+use gdsec::data::synthetic;
+use gdsec::linalg;
+use gdsec::objectives::Problem;
+use gdsec::util::bench::Bencher;
+use gdsec::util::rng::Pcg64;
+
+fn main() {
+    let b = Bencher::from_env();
+    let mut reports = Vec::new();
+
+    // --- sparsify_step at the paper's dimensions ---
+    for &d in &[784usize, 3072, 47236] {
+        let mut rng = Pcg64::seeded(d as u64);
+        let mut ws = WorkerState::new(d);
+        let grad: Vec<f64> = (0..d).map(|_| rng.normal() * 0.1).collect();
+        let diff: Vec<f64> = (0..d).map(|_| rng.normal() * 1e-3).collect();
+        let cfg = GdSecConfig { xi: Xi::Uniform(100.0), beta: 0.01, ..Default::default() };
+        ws.grad_mut().copy_from_slice(&grad);
+        reports.push(b.run_units(&format!("sparsify_step d={d}"), d as f64, "elem", || {
+            ws.grad_mut().copy_from_slice(&grad);
+            let up = ws.sparsify_step(&cfg, 5, &diff);
+            std::hint::black_box(up.nnz());
+        }));
+    }
+
+    // --- gradient (the worker's other half) ---
+    let prob = Problem::linear(synthetic::mnist_like(1, 400), 1, 1e-3);
+    let l = &prob.locals[0];
+    let theta = vec![0.01; prob.d];
+    let mut g = vec![0.0; prob.d];
+    let elems = (400 * prob.d) as f64;
+    reports.push(b.run_units("local grad linreg 400x784", elems, "madd", || {
+        l.grad(&theta, &mut g);
+        std::hint::black_box(g[0]);
+    }));
+
+    // --- RLE codec ---
+    let mut rng = Pcg64::seeded(9);
+    for &(d, p_zero) in &[(784usize, 0.5), (47236, 0.95)] {
+        let v: Vec<f64> =
+            (0..d).map(|_| if rng.bernoulli(p_zero) { 0.0 } else { rng.normal() }).collect();
+        let up = SparseUpdate::from_dense(&v);
+        let mut buf = Vec::with_capacity(8 * d);
+        reports.push(b.run_units(
+            &format!("rle encode d={d} nnz={}", up.nnz()),
+            up.nnz() as f64,
+            "entry",
+            || {
+                buf.clear();
+                compress::encode_sparse(&up, &mut buf);
+                std::hint::black_box(buf.len());
+            },
+        ));
+        compress::encode_sparse(&up, &mut buf);
+        reports.push(b.run_units(
+            &format!("rle decode d={d} nnz={}", up.nnz()),
+            up.nnz() as f64,
+            "entry",
+            || {
+                let (u, _) = compress::decode_sparse(&buf, d as u32).unwrap();
+                std::hint::black_box(u.nnz());
+            },
+        ));
+    }
+
+    // --- QSGD quantizer ---
+    let v: Vec<f64> = (0..3072).map(|_| rng.normal()).collect();
+    reports.push(b.run_units("qsgd quantize d=3072", 3072.0, "elem", || {
+        let q = quantize::quantize(&v, 255, &mut rng);
+        std::hint::black_box(q.idx.len());
+    }));
+
+    // --- server aggregate + apply ---
+    let d = 3072;
+    let mut server = ServerState::new(d);
+    let updates: Vec<SparseUpdate> = (0..100)
+        .map(|w| {
+            let vv: Vec<f64> = (0..d)
+                .map(|i| if (i + w) % 10 == 0 { 0.5 } else { 0.0 })
+                .collect();
+            SparseUpdate::from_dense(&vv)
+        })
+        .collect();
+    let cfg = GdSecConfig { alpha: 1e-3, beta: 0.01, ..Default::default() };
+    reports.push(b.run_units("server apply_round M=100 d=3072", 100.0, "update", || {
+        server.apply_round(&cfg, &updates);
+        std::hint::black_box(server.theta[0]);
+    }));
+
+    // --- protocol framing ---
+    let v: Vec<f64> = (0..784).map(|i| if i % 3 == 0 { 1.0 } else { 0.0 }).collect();
+    let up = SparseUpdate::from_dense(&v);
+    let msg = Msg::Update { round: 5, worker: 2, update: up, local_f: 0.25 };
+    reports.push(b.run("protocol encode+decode update d=784", || {
+        let buf = protocol::encode(&msg, 784);
+        let m = protocol::decode(&buf, 784).unwrap();
+        std::hint::black_box(matches!(m, Msg::Update { .. }));
+    }));
+
+    // --- dot product roofline reference ---
+    let x: Vec<f64> = (0..4096).map(|i| i as f64).collect();
+    reports.push(b.run_units("dot 4096", 4096.0, "madd", || {
+        std::hint::black_box(linalg::dot(&x, &x));
+    }));
+
+    println!("\n== hotpath microbenchmarks ==");
+    for r in &reports {
+        println!("{}", r.report());
+    }
+}

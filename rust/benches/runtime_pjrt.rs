@@ -1,0 +1,88 @@
+//! PJRT runtime benchmarks: artifact compile time and request-path
+//! execution latency for the compiled worker step, the standalone Pallas
+//! sparsify kernel, and the transformer loss+grad.
+//!
+//! Skipped (with a message) when `make artifacts` hasn't run.
+
+use gdsec::data::{synthetic, Features};
+use gdsec::objectives::{ObjectiveKind, Problem};
+use gdsec::runtime::engine::{TfmEngine, WorkerScalars, XlaWorkerStep};
+use gdsec::runtime::{Manifest, Runtime};
+use gdsec::util::bench::Bencher;
+use gdsec::util::Timer;
+
+fn main() {
+    let man = match Manifest::load(Manifest::default_dir()) {
+        Ok(m) => m,
+        Err(e) => {
+            println!("SKIP runtime_pjrt: {e:#}");
+            return;
+        }
+    };
+    let b = Bencher::from_env();
+    let mut reports = Vec::new();
+
+    // --- compile latency (cold) ---
+    let t = Timer::start();
+    let mut rt = Runtime::new(man.clone()).unwrap();
+    rt.load("worker_step_logreg_30x180").unwrap();
+    println!("cold client+compile worker_step_logreg: {:.1} ms", t.elapsed_ms());
+
+    // --- worker step execute latency ---
+    let prob = Problem::new(ObjectiveKind::LogReg, synthetic::dna_like(23, 90), 3, 0.05);
+    let l = &prob.locals[0];
+    let (x, y) = match &l.shard.x {
+        Features::Dense(m) => (m.data.clone(), l.shard.y.clone()),
+        _ => unreachable!(),
+    };
+    let mut step = XlaWorkerStep::new(man.clone(), "worker_step_logreg_30x180", &x, &y).unwrap();
+    let d = prob.d;
+    let theta = vec![0.01; d];
+    let zeros32 = vec![0.0f32; d];
+    let zeros64 = vec![0.0f64; d];
+    let scal = WorkerScalars { beta: 0.01, m_inv: 1.0 / 3.0, n_inv: 1.0 / 90.0, lambda: 0.05 };
+    reports.push(b.run("pjrt worker_step 30x180 (grad+pallas sparsify)", || {
+        let out = step.step(&theta, &theta, &zeros32, &zeros32, &zeros64, scal).unwrap();
+        std::hint::black_box(out.loss);
+    }));
+
+    // --- transformer loss+grad latency ---
+    match TfmEngine::new(man) {
+        Ok(mut eng) => {
+            let params = eng.init_params(1).unwrap();
+            let corpus = synthetic::token_corpus(2, eng.batch, eng.seq, eng.vocab);
+            let tokens: Vec<i32> =
+                corpus.iter().flat_map(|s| s.iter().map(|&t| t as i32)).collect();
+            let toks = (eng.batch * eng.seq) as f64;
+            reports.push(b.run_units(
+                &format!("pjrt tfm_loss_grad ({} params)", eng.n_params),
+                toks,
+                "token",
+                || {
+                    let (loss, g) = eng.loss_grad(&params, &tokens).unwrap();
+                    std::hint::black_box((loss, g[0]));
+                },
+            ));
+            let dp = eng.n_params;
+            let grad = vec![0.01f32; dp];
+            let zeros = vec![0.0f32; dp];
+            let diff = vec![1e-3f32; dp];
+            reports.push(b.run_units(
+                &format!("pjrt pallas gdsec_sparsify d={dp}"),
+                dp as f64,
+                "elem",
+                || {
+                    let (w, _, _) =
+                        eng.sparsify(&grad, &zeros, &zeros, &diff, 100.0, 0.01, 0.25).unwrap();
+                    std::hint::black_box(w[0]);
+                },
+            ));
+        }
+        Err(e) => println!("tfm engine unavailable: {e:#}"),
+    }
+
+    println!("\n== PJRT runtime benchmarks ==");
+    for r in &reports {
+        println!("{}", r.report());
+    }
+}

@@ -1,0 +1,104 @@
+//! Classical distributed GD — the paper's baseline. Every worker
+//! transmits its full gradient every iteration (32·d bits each).
+
+use super::gdsec::{fstar_iters, record};
+use super::trace::Trace;
+use crate::compress;
+use crate::linalg;
+use crate::objectives::Problem;
+
+#[derive(Debug, Clone)]
+pub struct GdConfig {
+    pub alpha: f64,
+    pub eval_every: usize,
+    /// Known/precomputed f* (skips the internal estimate when set).
+    pub fstar: Option<f64>,
+}
+
+/// Run distributed GD for `iters` iterations.
+pub fn run(prob: &Problem, cfg: &GdConfig, iters: usize) -> Trace {
+    run_scheduled(prob, cfg, iters, |_k| None)
+}
+
+/// GD with a participation schedule (Fig 8's "GD with half transmissions"):
+/// only active workers compute + transmit; the server aggregates what it
+/// receives (no rescaling, matching the paper's setup).
+pub fn run_scheduled<F>(prob: &Problem, cfg: &GdConfig, iters: usize, mut active: F) -> Trace
+where
+    F: FnMut(usize) -> Option<Vec<usize>>,
+{
+    let d = prob.d;
+    let fstar = cfg.fstar.unwrap_or_else(|| prob.estimate_fstar(fstar_iters(iters)));
+    let mut trace = Trace::new("GD", &prob.name, fstar);
+    let mut theta = vec![0.0; d];
+    let mut g = vec![0.0; d];
+    let mut agg = vec![0.0; d];
+    let (mut bits, mut tx, mut entries) = (0u64, 0u64, 0u64);
+    record(&mut trace, prob, &theta, 0, bits, tx, entries);
+    for k in 1..=iters {
+        let act = active(k);
+        linalg::zero(&mut agg);
+        for (w, l) in prob.locals.iter().enumerate() {
+            if let Some(set) = &act {
+                if !set.contains(&w) {
+                    continue;
+                }
+            }
+            l.grad(&theta, &mut g);
+            // Wire: dense f32 vector, 32·d bits.
+            for i in 0..d {
+                agg[i] += g[i] as f32 as f64;
+            }
+            bits += compress::dense_bits(d) as u64;
+            tx += 1;
+            entries += d as u64;
+        }
+        linalg::axpy(-cfg.alpha, &agg, &mut theta);
+        if k % cfg.eval_every == 0 || k == iters {
+            record(&mut trace, prob, &theta, k, bits, tx, entries);
+        }
+    }
+    trace
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+
+    #[test]
+    fn linear_convergence_strongly_convex() {
+        // err_{k+1}/err_k should be ~constant < 1 for strongly-convex
+        // logistic regression with α = 1/L.
+        let prob = Problem::logistic(synthetic::dna_like(1, 80), 2, 0.1);
+        let cfg = GdConfig { alpha: 1.0 / prob.lipschitz(), eval_every: 1, fstar: None };
+        let t = run(&prob, &cfg, 200);
+        let errs = t.errors();
+        assert!(errs[199] < errs[0] * 1e-3, "not converging: {} -> {}", errs[0], errs[199]);
+        // monotone decrease
+        for w in errs.windows(2) {
+            assert!(w[1] <= w[0] * (1.0 + 1e-9), "objective increased");
+        }
+    }
+
+    #[test]
+    fn bit_accounting_exact() {
+        let prob = Problem::linear(synthetic::dna_like(2, 50), 5, 0.1);
+        let cfg = GdConfig { alpha: 1.0 / prob.lipschitz(), eval_every: 1, fstar: None };
+        let t = run(&prob, &cfg, 10);
+        assert_eq!(t.total_bits(), (10 * 5 * 32 * prob.d) as u64);
+        assert_eq!(t.total_transmissions(), 50);
+    }
+
+    #[test]
+    fn half_participation_slower() {
+        let prob = Problem::linear(synthetic::dna_like(4, 100), 4, 0.1);
+        let cfg = GdConfig { alpha: 1.0 / prob.lipschitz(), eval_every: 1, fstar: None };
+        let full = run(&prob, &cfg, 150);
+        let half = run_scheduled(&prob, &cfg, 150, |k| {
+            Some(if k % 2 == 0 { vec![0, 1] } else { vec![2, 3] })
+        });
+        assert!(half.final_error() >= full.final_error() * 0.5);
+        assert!(half.total_bits() < full.total_bits());
+    }
+}

@@ -1,0 +1,556 @@
+//! GD-SEC (Algorithm 1 of the paper) — the core contribution.
+//!
+//! Per iteration `k`, worker `m`:
+//! 1. `Δ_m = ∇f_m(θ^k) − h_m + e_m`
+//! 2. censor component-wise: suppress `i` when
+//!    `|[Δ_m]_i| ≤ (ξ_i/M)·|[θ^k − θ^{k−1}]_i|`      (Eq. 2)
+//! 3. transmit the survivors `Δ̂_m` (nothing at all if none survive),
+//! 4. `h_m ← h_m + β·Δ̂_m`,  `e_m ← Δ_m − Δ̂_m`.
+//!
+//! Server: `θ^{k+1} = θ^k − α(h + Σ_m Δ̂_m)`, `h ← h + β·Σ_m Δ̂_m` (Eq. 6).
+//!
+//! The wire carries f32 values (paper §IV); the error memory absorbs the
+//! f32 rounding too (`e` is computed against the *transmitted* value), so
+//! the server-side mirror `h == Σ_m h_m` holds bit-for-bit — pinned by the
+//! property tests.
+//!
+//! This module is the single-process reference implementation. The
+//! threaded, byte-on-the-wire version lives in [`crate::coordinator`]; an
+//! integration test pins both to identical trajectories.
+
+use super::trace::{Trace, TraceRow};
+use crate::compress::{self, SparseUpdate};
+use crate::linalg;
+use crate::objectives::Problem;
+
+/// Censoring thresholds ξ_i. The paper's experiments report ξ/M; configs
+/// here carry ξ (the threshold used is ξ_i/M · |θ_i diff|).
+#[derive(Debug, Clone)]
+pub enum Xi {
+    /// ξ_1 = … = ξ_d = ξ.
+    Uniform(f64),
+    /// Per-coordinate ξ_i (Fig 7 uses ξ_i = ξ/L^i).
+    PerCoord(Vec<f64>),
+}
+
+impl Xi {
+    /// ξ scaled by the coordinate-wise Lipschitz constants: ξ_i = ξ/L^i.
+    pub fn scaled_by_lipschitz(xi: f64, coord_l: &[f64]) -> Xi {
+        Xi::PerCoord(coord_l.iter().map(|&l| xi / l.max(1e-12)).collect())
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize) -> f64 {
+        match self {
+            Xi::Uniform(x) => *x,
+            Xi::PerCoord(v) => v[i],
+        }
+    }
+
+    pub fn max(&self) -> f64 {
+        match self {
+            Xi::Uniform(x) => *x,
+            Xi::PerCoord(v) => v.iter().fold(0.0f64, |a, &b| a.max(b)),
+        }
+    }
+}
+
+/// GD-SEC configuration.
+#[derive(Debug, Clone)]
+pub struct GdSecConfig {
+    /// Step size α.
+    pub alpha: f64,
+    /// State-variable smoothing β ∈ (0, 1].
+    pub beta: f64,
+    /// Censoring thresholds.
+    pub xi: Xi,
+    /// Error correction on (off ⇒ the paper's GD-SOEC ablation).
+    pub error_correction: bool,
+    /// Worker/server state variables on (off ⇒ Fig 4's "without state
+    /// variables" ablation: h ≡ 0 and the server uses only Σ Δ̂).
+    pub state_variable: bool,
+    /// Evaluate/record f(θ) every `eval_every` iterations (1 = each).
+    pub eval_every: usize,
+    /// Known/precomputed f* (skips the internal estimate when set).
+    pub fstar: Option<f64>,
+}
+
+impl Default for GdSecConfig {
+    fn default() -> Self {
+        GdSecConfig {
+            alpha: 0.01,
+            beta: 0.01,
+            xi: Xi::Uniform(0.0),
+            error_correction: true,
+            state_variable: true,
+            eval_every: 1,
+            fstar: None,
+        }
+    }
+}
+
+/// Per-worker GD-SEC state (h_m, e_m) plus reusable scratch.
+#[derive(Debug, Clone)]
+pub struct WorkerState {
+    pub h: Vec<f64>,
+    pub e: Vec<f64>,
+    grad: Vec<f64>,
+}
+
+impl WorkerState {
+    pub fn new(d: usize) -> WorkerState {
+        WorkerState { h: vec![0.0; d], e: vec![0.0; d], grad: vec![0.0; d] }
+    }
+
+    /// Mutable access to the gradient buffer (filled by the caller before
+    /// `sparsify_step`, e.g. from a stochastic or XLA-computed gradient).
+    pub fn grad_mut(&mut self) -> &mut [f64] {
+        &mut self.grad
+    }
+
+    /// After-the-fact correction when the transmitted values change again
+    /// post-sparsification (QSGD-SEC quantizes the survivors): rewrites h
+    /// and e as if `wire` (the dequantized message) had been transmitted
+    /// instead of `original`. Keeps the worker/server h-mirror and the EC
+    /// identity `Δ = wire + e` exact.
+    pub fn requantize_fixup(
+        &mut self,
+        cfg: &GdSecConfig,
+        original: &SparseUpdate,
+        wire: &SparseUpdate,
+    ) {
+        let orig_dense = original.to_dense();
+        let wire_dense = wire.to_dense();
+        for &i in &original.idx {
+            let i = i as usize;
+            let delta_wire = wire_dense[i] - orig_dense[i];
+            if cfg.state_variable {
+                self.h[i] += cfg.beta * delta_wire;
+            }
+            if cfg.error_correction {
+                self.e[i] -= delta_wire;
+            }
+        }
+    }
+
+    /// Run the worker-side step on an already-computed gradient
+    /// (`self.grad` must hold ∇f_m(θ^k)): censor, update h/e, and return
+    /// the wire update. `theta_diff[i] = θ^k_i − θ^{k−1}_i`.
+    ///
+    /// This is the L3 hot path mirrored by the Pallas kernel
+    /// `gdsec_sparsify` at L1 (same math, same outputs).
+    pub fn sparsify_step(
+        &mut self,
+        cfg: &GdSecConfig,
+        m_workers: usize,
+        theta_diff: &[f64],
+    ) -> SparseUpdate {
+        let minv = 1.0 / m_workers as f64;
+        // Hoist the ξ representation out of the hot loop (uniform ξ is the
+        // common case; per-coordinate pays one extra load per element).
+        match &cfg.xi {
+            Xi::Uniform(x) => self.sparsify_inner::<false>(cfg, *x * minv, &[], theta_diff),
+            Xi::PerCoord(v) => {
+                assert_eq!(v.len(), self.h.len(), "per-coord ξ length");
+                self.sparsify_inner::<true>(cfg, minv, v, theta_diff)
+            }
+        }
+    }
+
+    #[inline]
+    fn sparsify_inner<const PER_COORD: bool>(
+        &mut self,
+        cfg: &GdSecConfig,
+        scale: f64,
+        xi_per: &[f64],
+        theta_diff: &[f64],
+    ) -> SparseUpdate {
+        let d = self.h.len();
+        let mut up = SparseUpdate::empty(d);
+        let ec = cfg.error_correction;
+        let sv = cfg.state_variable;
+        let beta = cfg.beta;
+        for i in 0..d {
+            // Δ_i = g_i − h_i + e_i  (e ≡ 0 when EC disabled)
+            let delta = self.grad[i] - self.h[i] + if ec { self.e[i] } else { 0.0 };
+            let xi_scaled = if PER_COORD { xi_per[i] * scale } else { scale };
+            let tau = xi_scaled * theta_diff[i].abs();
+            if delta.abs() > tau {
+                // transmit: wire value is the f32 rounding of Δ_i
+                let wire = delta as f32;
+                up.idx.push(i as u32);
+                up.val.push(wire);
+                let wire64 = wire as f64;
+                if sv {
+                    self.h[i] += beta * wire64;
+                }
+                if ec {
+                    self.e[i] = delta - wire64;
+                }
+            } else if ec {
+                // suppressed: error memory keeps the whole component
+                self.e[i] = delta;
+            }
+        }
+        up
+    }
+}
+
+/// Server-side state: θ, θ^{k−1}, mirrored h, aggregation scratch.
+#[derive(Debug, Clone)]
+pub struct ServerState {
+    pub theta: Vec<f64>,
+    pub theta_prev: Vec<f64>,
+    pub h: Vec<f64>,
+    agg: Vec<f64>,
+}
+
+impl ServerState {
+    pub fn new(d: usize) -> ServerState {
+        ServerState {
+            theta: vec![0.0; d],
+            theta_prev: vec![0.0; d],
+            h: vec![0.0; d],
+            agg: vec![0.0; d],
+        }
+    }
+
+    /// θ^k − θ^{k−1} into `out`.
+    pub fn theta_diff(&self, out: &mut [f64]) {
+        linalg::sub(&self.theta, &self.theta_prev, out);
+    }
+
+    /// Apply one aggregated round: θ^{k+1} = θ^k − α(h + Δ̂), h += β·Δ̂.
+    pub fn apply_round(&mut self, cfg: &GdSecConfig, updates: &[SparseUpdate]) {
+        linalg::zero(&mut self.agg);
+        for u in updates {
+            u.add_into(&mut self.agg);
+        }
+        self.theta_prev.copy_from_slice(&self.theta);
+        let d = self.theta.len();
+        if cfg.state_variable {
+            for i in 0..d {
+                self.theta[i] -= cfg.alpha * (self.h[i] + self.agg[i]);
+                self.h[i] += cfg.beta * self.agg[i];
+            }
+        } else {
+            for i in 0..d {
+                self.theta[i] -= cfg.alpha * self.agg[i];
+            }
+        }
+    }
+}
+
+/// Run GD-SEC for `iters` iterations with all workers participating.
+pub fn run(prob: &Problem, cfg: &GdSecConfig, iters: usize) -> Trace {
+    run_scheduled(prob, cfg, iters, |_k| None)
+}
+
+/// Run GD-SEC with a participation schedule: `active(k)` returns the set
+/// of participating worker ids at iteration k (None = all). Inactive
+/// workers keep h/e frozen (they neither compute nor transmit), matching
+/// the paper's bandwidth-limited extension (§IV-G1).
+pub fn run_scheduled<F>(prob: &Problem, cfg: &GdSecConfig, iters: usize, mut active: F) -> Trace
+where
+    F: FnMut(usize) -> Option<Vec<usize>>,
+{
+    let d = prob.d;
+    let m = prob.m();
+    let fstar = cfg.fstar.unwrap_or_else(|| prob.estimate_fstar(fstar_iters(iters)));
+    let mut trace = Trace::new("GD-SEC", &prob.name, fstar);
+    let mut server = ServerState::new(d);
+    let mut workers: Vec<WorkerState> = (0..m).map(|_| WorkerState::new(d)).collect();
+    let mut theta_diff = vec![0.0; d];
+    let mut bits: u64 = 0;
+    let mut transmissions: u64 = 0;
+    let mut entries: u64 = 0;
+
+    record(&mut trace, prob, &server.theta, 0, bits, transmissions, entries);
+    for k in 1..=iters {
+        server.theta_diff(&mut theta_diff);
+        let act = active(k);
+        let mut updates: Vec<SparseUpdate> = Vec::with_capacity(m);
+        for (w, ws) in workers.iter_mut().enumerate() {
+            if let Some(set) = &act {
+                if !set.contains(&w) {
+                    continue;
+                }
+            }
+            prob.locals[w].grad(&server.theta, &mut ws.grad);
+            let up = ws.sparsify_step(cfg, m, &theta_diff);
+            if up.nnz() > 0 {
+                bits += compress::sparse_bits(&up) as u64;
+                transmissions += 1;
+                entries += up.nnz() as u64;
+                updates.push(up);
+            }
+        }
+        server.apply_round(cfg, &updates);
+        if k % cfg.eval_every == 0 || k == iters {
+            record(&mut trace, prob, &server.theta, k, bits, transmissions, entries);
+        }
+    }
+    trace
+}
+
+/// Heuristic horizon for the f* estimate: far past the experiment length.
+pub fn fstar_iters(iters: usize) -> usize {
+    (iters * 4).max(3000)
+}
+
+pub fn record(
+    trace: &mut Trace,
+    prob: &Problem,
+    theta: &[f64],
+    iter: usize,
+    bits: u64,
+    transmissions: u64,
+    entries: u64,
+) {
+    trace.push(TraceRow { iter, fval: prob.value(theta), bits, transmissions, entries });
+}
+
+/// Per-(worker, coordinate) transmission counts — the Fig 6 heatmap.
+pub fn transmission_heatmap(prob: &Problem, cfg: &GdSecConfig, iters: usize) -> Vec<Vec<u64>> {
+    let d = prob.d;
+    let m = prob.m();
+    let mut counts = vec![vec![0u64; d]; m];
+    let mut server = ServerState::new(d);
+    let mut workers: Vec<WorkerState> = (0..m).map(|_| WorkerState::new(d)).collect();
+    let mut theta_diff = vec![0.0; d];
+    for _k in 1..=iters {
+        server.theta_diff(&mut theta_diff);
+        let mut updates = Vec::with_capacity(m);
+        for (w, ws) in workers.iter_mut().enumerate() {
+            prob.locals[w].grad(&server.theta, &mut ws.grad);
+            let up = ws.sparsify_step(cfg, m, &theta_diff);
+            for &i in &up.idx {
+                counts[w][i as usize] += 1;
+            }
+            if up.nnz() > 0 {
+                updates.push(up);
+            }
+        }
+        server.apply_round(cfg, &updates);
+    }
+    counts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+    use crate::objectives::Problem;
+
+    fn small_problem() -> Problem {
+        Problem::logistic(synthetic::dna_like(3, 60), 3, 0.05)
+    }
+
+    #[test]
+    fn xi_accessors() {
+        let u = Xi::Uniform(2.0);
+        assert_eq!(u.get(5), 2.0);
+        assert_eq!(u.max(), 2.0);
+        let p = Xi::PerCoord(vec![1.0, 3.0]);
+        assert_eq!(p.get(1), 3.0);
+        assert_eq!(p.max(), 3.0);
+        let s = Xi::scaled_by_lipschitz(6.0, &[2.0, 3.0]);
+        assert_eq!(s.get(0), 3.0);
+        assert_eq!(s.get(1), 2.0);
+    }
+
+    #[test]
+    fn reduces_to_gd_when_xi_zero_beta_zero() {
+        // ξ ≤ 0 ⇒ condition (2) only suppresses exact-zero components with
+        // zero threshold; with β=0 and h¹=0 the trajectory equals GD up to
+        // f32 wire rounding.
+        let prob = small_problem();
+        let alpha = 1.0 / prob.lipschitz();
+        let cfg = GdSecConfig {
+            alpha,
+            beta: 0.0,
+            xi: Xi::Uniform(-1.0),
+            ..Default::default()
+        };
+        let trace = run(&prob, &cfg, 30);
+        // Explicit GD with f32-rounded per-worker gradients:
+        let mut theta = vec![0.0; prob.d];
+        let mut fvals = vec![prob.value(&theta)];
+        let mut e: Vec<Vec<f64>> = vec![vec![0.0; prob.d]; prob.m()];
+        let mut g = vec![0.0; prob.d];
+        for _ in 0..30 {
+            let mut agg = vec![0.0; prob.d];
+            for (w, l) in prob.locals.iter().enumerate() {
+                l.grad(&theta, &mut g);
+                for i in 0..prob.d {
+                    let delta = g[i] + e[w][i];
+                    let wire = delta as f32;
+                    e[w][i] = delta - wire as f64;
+                    agg[i] += wire as f64;
+                }
+            }
+            linalg::axpy(-alpha, &agg, &mut theta);
+            fvals.push(prob.value(&theta));
+        }
+        for (row, expect) in trace.rows.iter().zip(&fvals) {
+            assert!(
+                (row.fval - expect).abs() < 1e-9 * expect.abs().max(1.0),
+                "iter {}: {} vs {}",
+                row.iter,
+                row.fval,
+                expect
+            );
+        }
+    }
+
+    #[test]
+    fn converges_and_saves_bits() {
+        let prob = small_problem();
+        let alpha = 1.0 / prob.lipschitz();
+        let gd_like = run(
+            &prob,
+            &GdSecConfig { alpha, beta: 0.0, xi: Xi::Uniform(-1.0), ..Default::default() },
+            300,
+        );
+        let sec = run(
+            &prob,
+            &GdSecConfig { alpha, beta: 0.01, xi: Xi::Uniform(30.0), ..Default::default() },
+            300,
+        );
+        let eps = 1e-6;
+        let e_gd = gd_like.final_error();
+        let e_sec = sec.final_error();
+        assert!(e_sec < 1e-4, "GD-SEC stalls: err {e_sec}");
+        assert!(e_sec <= e_gd * 50.0 + eps, "convergence badly degraded");
+        assert!(
+            sec.total_bits() < gd_like.total_bits() / 2,
+            "no savings: {} vs {}",
+            sec.total_bits(),
+            gd_like.total_bits()
+        );
+    }
+
+    #[test]
+    fn first_iteration_transmits_everything() {
+        // θ^1 = θ^0 ⇒ thresholds all zero ⇒ every non-zero Δ component
+        // transmits at k=1.
+        let prob = small_problem();
+        let cfg = GdSecConfig {
+            alpha: 1.0 / prob.lipschitz(),
+            xi: Xi::Uniform(1e6),
+            ..Default::default()
+        };
+        let trace = run(&prob, &cfg, 1);
+        let last = trace.rows.last().unwrap();
+        assert_eq!(last.transmissions, prob.m() as u64);
+        assert!(last.entries > 0);
+    }
+
+    #[test]
+    fn huge_xi_suppresses_later_rounds() {
+        let prob = small_problem();
+        let cfg = GdSecConfig {
+            alpha: 1.0 / prob.lipschitz(),
+            beta: 0.01,
+            xi: Xi::Uniform(1e9),
+            ..Default::default()
+        };
+        let trace = run(&prob, &cfg, 50);
+        // After the first full round the enormous threshold censors almost
+        // everything.
+        let last = trace.rows.last().unwrap();
+        let first_round_entries = trace.rows[1].entries;
+        assert!(
+            last.entries < first_round_entries * 3,
+            "censoring ineffective: {} vs {}",
+            last.entries,
+            first_round_entries
+        );
+    }
+
+    #[test]
+    fn sparsify_invariants() {
+        // Δ̂ + e' == Δ exactly (EC) and h moves only on transmitted comps.
+        let prob = small_problem();
+        let d = prob.d;
+        let cfg = GdSecConfig { xi: Xi::Uniform(50.0), beta: 0.3, ..Default::default() };
+        let mut ws = WorkerState::new(d);
+        let theta = vec![0.1; d];
+        prob.locals[0].grad(&theta, &mut ws.grad);
+        let h_before = ws.h.clone();
+        let diff: Vec<f64> = (0..d).map(|i| (i as f64 - 3.0) * 1e-4).collect();
+        let e_before = ws.e.clone();
+        let up = ws.sparsify_step(&cfg, prob.m(), &diff);
+        let dense = up.to_dense();
+        for i in 0..d {
+            let delta = ws.grad[i] - h_before[i] + e_before[i];
+            // reconstructed: wire + error == delta
+            assert!(
+                (dense[i] + ws.e[i] - delta).abs() < 1e-12,
+                "EC identity violated at {i}"
+            );
+            if dense[i] == 0.0 {
+                assert_eq!(ws.h[i], h_before[i], "h moved on suppressed comp");
+            }
+        }
+    }
+
+    #[test]
+    fn heatmap_shape_and_totals() {
+        let prob = Problem::linear(synthetic::coord_lipschitz(3), 10, 0.0);
+        let cfg = GdSecConfig {
+            alpha: 1.0 / prob.lipschitz(),
+            beta: 0.01,
+            xi: Xi::Uniform(50_000.0 * 10.0),
+            ..Default::default()
+        };
+        let hm = transmission_heatmap(&prob, &cfg, 50);
+        assert_eq!(hm.len(), 10);
+        assert_eq!(hm[0].len(), 50);
+        let total: u64 = hm.iter().flat_map(|r| r.iter()).sum();
+        assert!(total > 0);
+        assert!(hm.iter().flat_map(|r| r.iter()).all(|&c| c <= 50));
+    }
+
+    #[test]
+    fn scheduled_half_participation_runs() {
+        let prob = small_problem();
+        let cfg = GdSecConfig {
+            alpha: 1.0 / prob.lipschitz(),
+            beta: 0.01,
+            xi: Xi::Uniform(10.0),
+            ..Default::default()
+        };
+        let m = prob.m();
+        let trace = run_scheduled(&prob, &cfg, 100, |k| {
+            // round robin halves
+            let half = m / 2 + 1;
+            Some((0..m).filter(|w| (w + k) % 2 == 0).take(half).collect())
+        });
+        assert!(trace.final_error().is_finite());
+        assert!(trace.total_bits() > 0);
+    }
+
+    #[test]
+    fn soec_variant_differs() {
+        let prob = small_problem();
+        let alpha = 1.0 / prob.lipschitz();
+        let with_ec = run(
+            &prob,
+            &GdSecConfig { alpha, xi: Xi::Uniform(100.0), ..Default::default() },
+            150,
+        );
+        let no_ec = run(
+            &prob,
+            &GdSecConfig {
+                alpha,
+                xi: Xi::Uniform(100.0),
+                error_correction: false,
+                ..Default::default()
+            },
+            150,
+        );
+        // EC should not be worse in final error (usually much better).
+        assert!(with_ec.final_error() <= no_ec.final_error() * 1.5 + 1e-12);
+    }
+}

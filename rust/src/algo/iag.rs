@@ -1,0 +1,106 @@
+//! NoUnif-IAG — nonuniform sampling of incremental aggregated gradient
+//! (Schmidt et al. [57]): one worker per iteration transmits a fresh
+//! gradient (chosen with probability ∝ L_m); the server aggregates it with
+//! the stale gradients of the others.
+
+use super::gdsec::{fstar_iters, record};
+use super::trace::Trace;
+use crate::compress;
+use crate::linalg;
+use crate::objectives::Problem;
+use crate::util::rng::Pcg64;
+
+#[derive(Debug, Clone)]
+pub struct IagConfig {
+    pub alpha: f64,
+    pub seed: u64,
+    pub eval_every: usize,
+    /// Known/precomputed f* (skips the internal estimate when set).
+    pub fstar: Option<f64>,
+}
+
+pub fn run(prob: &Problem, cfg: &IagConfig, iters: usize) -> Trace {
+    let d = prob.d;
+    let m = prob.m();
+    let fstar = cfg.fstar.unwrap_or_else(|| prob.estimate_fstar(fstar_iters(iters)));
+    let mut trace = Trace::new("NoUnif-IAG", &prob.name, fstar);
+    let mut rng = Pcg64::seeded(cfg.seed);
+    let weights = prob.worker_lipschitz();
+    let mut theta = vec![0.0; d];
+    let mut g = vec![0.0; d];
+    let mut memory: Vec<Vec<f64>> = vec![vec![0.0; d]; m];
+    let (mut bits, mut tx, mut entries) = (0u64, 0u64, 0u64);
+    record(&mut trace, prob, &theta, 0, bits, tx, entries);
+    // Initialization round: every worker seeds the server memory once
+    // (bits counted — the aggregate needs all M gradients before IAG can
+    // make its first sensible step).
+    for (w, l) in prob.locals.iter().enumerate() {
+        l.grad(&theta, &mut g);
+        for i in 0..d {
+            memory[w][i] = g[i] as f32 as f64;
+        }
+        bits += compress::dense_bits(d) as u64;
+        tx += 1;
+        entries += d as u64;
+    }
+    for k in 1..=iters {
+        let w = rng.categorical(&weights);
+        prob.locals[w].grad(&theta, &mut g);
+        for i in 0..d {
+            memory[w][i] = g[i] as f32 as f64;
+        }
+        bits += compress::dense_bits(d) as u64;
+        tx += 1;
+        entries += d as u64;
+        // Aggregate all stored gradients.
+        let mut agg = vec![0.0; d];
+        for mem in &memory {
+            linalg::axpy(1.0, mem, &mut agg);
+        }
+        linalg::axpy(-cfg.alpha, &agg, &mut theta);
+        if k % cfg.eval_every == 0 || k == iters {
+            record(&mut trace, prob, &theta, k, bits, tx, entries);
+        }
+    }
+    trace
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+
+    #[test]
+    fn one_transmission_per_iteration() {
+        let prob = Problem::linear(synthetic::dna_like(3, 60), 5, 0.1);
+        let cfg = IagConfig { alpha: 1.0 / (2.0 * 5.0 * prob.lipschitz()), seed: 1, eval_every: 1, fstar: None };
+        let t = run(&prob, &cfg, 50);
+        // M init + 50 rounds
+        assert_eq!(t.total_transmissions(), 55);
+        assert_eq!(t.total_bits(), (55 * 32 * prob.d) as u64);
+    }
+
+    #[test]
+    fn converges_with_conservative_step() {
+        let prob = Problem::logistic(synthetic::dna_like(3, 60), 5, 0.1);
+        // paper: alpha' = alpha/(2ML) style for stability
+        let cfg = IagConfig {
+            alpha: 1.0 / (2.0 * 5.0 * prob.lipschitz()),
+            seed: 3,
+            eval_every: 1,
+            fstar: None,
+        };
+        let t = run(&prob, &cfg, 600);
+        let errs = t.errors();
+        assert!(errs[600] < errs[0] * 0.5, "{} -> {}", errs[0], errs[600]);
+    }
+
+    #[test]
+    fn sampling_follows_lipschitz() {
+        // Workers with larger L_m get picked more — indirectly visible via
+        // deterministic seeding: just verify categorical weights order.
+        let prob = Problem::linear(synthetic::coord_lipschitz(5), 10, 0.0);
+        let w = prob.worker_lipschitz();
+        assert!(w[9] > w[0], "worker L ordering violated");
+    }
+}

@@ -1,0 +1,26 @@
+//! Algorithm implementations: GD-SEC (the paper's contribution) and every
+//! baseline from the evaluation section, all emitting [`trace::Trace`]
+//! rows with byte-exact uplink bit accounting.
+//!
+//! | Module | Algorithm | Paper role |
+//! |---|---|---|
+//! | [`gdsec`] | GD-SEC (+ GD-SOEC / no-state-variable ablations) | contribution |
+//! | [`gd`] | classical distributed GD | baseline |
+//! | [`cgd`] | censoring GD (LAG-style) with RLE | baseline |
+//! | [`topj`] | top-j + error correction, decreasing step | baseline |
+//! | [`qgd`] | quantized GD (QSGD quantizer) | baseline |
+//! | [`iag`] | NoUnif-IAG | baseline |
+//! | [`sgdsec`] | SGD, SGD-SEC, QSGD-SEC | extensions (§IV-G) |
+
+pub mod cgd;
+pub mod gd;
+pub mod gdsec;
+pub mod iag;
+pub mod qgd;
+pub mod sgdsec;
+pub mod topj;
+pub mod trace;
+
+/// Canonical list of algorithm names the CLI accepts.
+pub const ALGORITHMS: &[&str] =
+    &["gd", "gdsec", "gdsoec", "cgd", "topj", "qgd", "iag", "sgd", "sgdsec", "qsgdsec"];

@@ -1,0 +1,218 @@
+//! Stochastic extensions (paper §IV-G2): SGD baseline, SGD-SEC, and
+//! QSGD-SEC (sparsify-then-quantize). All use the decreasing step schedule
+//! `α_k = γ₀(1 + γ₀λk)^{-1}` from the paper's Fig 9 setup, and minibatch
+//! gradients drawn uniformly from each worker's shard (scaled to be
+//! unbiased for the local data term).
+
+use super::gdsec::{fstar_iters, record, GdSecConfig, ServerState, WorkerState, Xi};
+use super::trace::Trace;
+use crate::compress::{self, quantize, SparseUpdate};
+use crate::linalg;
+use crate::objectives::Problem;
+use crate::util::rng::{Pcg64, SplitMix64};
+
+#[derive(Debug, Clone)]
+pub struct SgdSecConfig {
+    pub gamma0: f64,
+    pub lambda: f64,
+    pub beta: f64,
+    pub xi: Xi,
+    pub batch: usize,
+    pub seed: u64,
+    /// None ⇒ SGD-SEC; Some(s) ⇒ QSGD-SEC with s quantization bins.
+    pub quantize_s: Option<u8>,
+    pub eval_every: usize,
+    /// Known/precomputed f* (skips the internal estimate when set).
+    pub fstar: Option<f64>,
+}
+
+/// Plain distributed SGD baseline (dense transmissions).
+pub fn run_sgd(prob: &Problem, cfg: &SgdSecConfig, iters: usize) -> Trace {
+    let d = prob.d;
+    let fstar = cfg.fstar.unwrap_or_else(|| prob.estimate_fstar(fstar_iters(iters)));
+    let mut trace = Trace::new("SGD", &prob.name, fstar);
+    let mut theta = vec![0.0; d];
+    let mut g = vec![0.0; d];
+    let mut agg = vec![0.0; d];
+    let mut rngs: Vec<Pcg64> =
+        (0..prob.m()).map(|w| Pcg64::seeded(SplitMix64::child(cfg.seed, w as u64))).collect();
+    let (mut bits, mut tx, mut entries) = (0u64, 0u64, 0u64);
+    record(&mut trace, prob, &theta, 0, bits, tx, entries);
+    for k in 1..=iters {
+        let alpha_k = cfg.gamma0 / (1.0 + cfg.gamma0 * cfg.lambda * k as f64);
+        linalg::zero(&mut agg);
+        for (w, l) in prob.locals.iter().enumerate() {
+            stochastic_grad(l, &theta, cfg.batch, &mut rngs[w], &mut g);
+            for i in 0..d {
+                agg[i] += g[i] as f32 as f64;
+            }
+            bits += compress::dense_bits(d) as u64;
+            tx += 1;
+            entries += d as u64;
+        }
+        linalg::axpy(-alpha_k, &agg, &mut theta);
+        if k % cfg.eval_every == 0 || k == iters {
+            record(&mut trace, prob, &theta, k, bits, tx, entries);
+        }
+    }
+    trace
+}
+
+/// SGD-SEC / QSGD-SEC.
+pub fn run_sgdsec(prob: &Problem, cfg: &SgdSecConfig, iters: usize) -> Trace {
+    let d = prob.d;
+    let m = prob.m();
+    let fstar = cfg.fstar.unwrap_or_else(|| prob.estimate_fstar(fstar_iters(iters)));
+    let name = if cfg.quantize_s.is_some() { "QSGD-SEC" } else { "SGD-SEC" };
+    let mut trace = Trace::new(name, &prob.name, fstar);
+    let mut server = ServerState::new(d);
+    let mut workers: Vec<WorkerState> = (0..m).map(|_| WorkerState::new(d)).collect();
+    let mut rngs: Vec<Pcg64> =
+        (0..m).map(|w| Pcg64::seeded(SplitMix64::child(cfg.seed, w as u64))).collect();
+    let mut theta_diff = vec![0.0; d];
+    let mut grad = vec![0.0; d];
+    let (mut bits, mut tx, mut entries) = (0u64, 0u64, 0u64);
+    record(&mut trace, prob, &server.theta, 0, bits, tx, entries);
+    for k in 1..=iters {
+        let alpha_k = cfg.gamma0 / (1.0 + cfg.gamma0 * cfg.lambda * k as f64);
+        let step_cfg = GdSecConfig {
+            alpha: alpha_k,
+            beta: cfg.beta,
+            xi: cfg.xi.clone(),
+            error_correction: true,
+            state_variable: true,
+            eval_every: cfg.eval_every,
+            fstar: None,
+        };
+        server.theta_diff(&mut theta_diff);
+        let mut updates: Vec<SparseUpdate> = Vec::with_capacity(m);
+        for (w, ws) in workers.iter_mut().enumerate() {
+            stochastic_grad(&prob.locals[w], &server.theta, cfg.batch, &mut rngs[w], &mut grad);
+            ws.grad_mut().copy_from_slice(&grad);
+            let up = ws.sparsify_step(&step_cfg, m, &theta_diff);
+            if up.nnz() == 0 {
+                continue;
+            }
+            match cfg.quantize_s {
+                None => {
+                    bits += compress::sparse_bits(&up) as u64;
+                    tx += 1;
+                    entries += up.nnz() as u64;
+                    updates.push(up);
+                }
+                Some(s) => {
+                    // Quantize the surviving values; EC + h must track the
+                    // *dequantized* wire values so worker and server stay
+                    // mirrored.
+                    let dense = up.to_dense();
+                    let q = quantize::quantize(&dense, s, &mut rngs[w]);
+                    bits += quantize::quantized_bits(&q) as u64;
+                    tx += 1;
+                    entries += q.idx.len() as u64;
+                    let dq = quantize::dequantize(&q);
+                    let wire = SparseUpdate::from_dense(&dq);
+                    ws.requantize_fixup(&step_cfg, &up, &wire);
+                    updates.push(wire);
+                }
+            }
+        }
+        server.apply_round(&step_cfg, &updates);
+        if k % cfg.eval_every == 0 || k == iters {
+            record(&mut trace, prob, &server.theta, k, bits, tx, entries);
+        }
+    }
+    trace
+}
+
+/// Unbiased minibatch gradient of the local objective.
+fn stochastic_grad(
+    l: &crate::objectives::LocalObjective,
+    theta: &[f64],
+    batch: usize,
+    rng: &mut Pcg64,
+    out: &mut [f64],
+) {
+    let nm = l.shard.n();
+    if nm == 0 {
+        linalg::zero(out);
+        return;
+    }
+    let b = batch.min(nm);
+    let idx: Vec<usize> = (0..b).map(|_| rng.index(nm)).collect();
+    let scale = nm as f64 / b as f64;
+    l.grad_indices(theta, &idx, scale, out);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+
+    fn base_cfg(seed: u64) -> SgdSecConfig {
+        SgdSecConfig {
+            gamma0: 0.01,
+            lambda: 0.01,
+            beta: 0.01,
+            xi: Xi::Uniform(50.0),
+            batch: 1,
+            seed,
+            quantize_s: None,
+            eval_every: 5,
+            fstar: None,
+        }
+    }
+
+    #[test]
+    fn sgd_makes_progress() {
+        let prob = Problem::linear(synthetic::mnist_like(4, 300), 10, 1.0 / 300.0);
+        let mut cfg = base_cfg(1);
+        cfg.gamma0 = 0.05;
+        let t = run_sgd(&prob, &cfg, 400);
+        let errs = t.errors();
+        assert!(
+            errs.last().unwrap() < &(errs[0] * 0.5),
+            "{} -> {}",
+            errs[0],
+            errs.last().unwrap()
+        );
+    }
+
+    #[test]
+    fn sgdsec_saves_bits_vs_sgd() {
+        let prob = Problem::linear(synthetic::mnist_like(4, 300), 10, 1.0 / 300.0);
+        let mut cfg = base_cfg(2);
+        cfg.gamma0 = 0.05;
+        let sgd = run_sgd(&prob, &cfg, 200);
+        let sec = run_sgdsec(&prob, &cfg, 200);
+        assert!(sec.total_bits() < sgd.total_bits(), "{} vs {}", sec.total_bits(), sgd.total_bits());
+        // still converging in the same ballpark
+        assert!(sec.final_error() < sgd.final_error() * 10.0 + 1e-9);
+    }
+
+    #[test]
+    fn qsgdsec_cheaper_than_sgdsec() {
+        let prob = Problem::linear(synthetic::mnist_like(4, 200), 5, 1.0 / 200.0);
+        let mut cfg = base_cfg(3);
+        cfg.gamma0 = 0.05;
+        let sec = run_sgdsec(&prob, &cfg, 150);
+        cfg.quantize_s = Some(255);
+        let qsec = run_sgdsec(&prob, &cfg, 150);
+        assert!(
+            qsec.total_bits() < sec.total_bits(),
+            "{} vs {}",
+            qsec.total_bits(),
+            sec.total_bits()
+        );
+        assert!(qsec.final_error().is_finite());
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let prob = Problem::linear(synthetic::mnist_like(4, 100), 5, 0.01);
+        let cfg = base_cfg(9);
+        let a = run_sgdsec(&prob, &cfg, 50);
+        let b = run_sgdsec(&prob, &cfg, 50);
+        assert_eq!(a.total_bits(), b.total_bits());
+        assert_eq!(a.rows.last().unwrap().fval.to_bits(), b.rows.last().unwrap().fval.to_bits());
+    }
+}

@@ -1,0 +1,134 @@
+//! Convergence/communication traces — the data behind every figure.
+
+use crate::util::csv::CsvWriter;
+use std::path::Path;
+
+/// One recorded iteration.
+#[derive(Debug, Clone, Copy)]
+pub struct TraceRow {
+    pub iter: usize,
+    /// Objective value f(θ^k).
+    pub fval: f64,
+    /// Cumulative uplink payload bits through this iteration.
+    pub bits: u64,
+    /// Cumulative worker→server transmissions (suppressed rounds absent).
+    pub transmissions: u64,
+    /// Cumulative non-zero entries put on the wire.
+    pub entries: u64,
+}
+
+/// A full run trace for one algorithm on one problem.
+#[derive(Debug, Clone)]
+pub struct Trace {
+    pub algo: String,
+    pub problem: String,
+    pub rows: Vec<TraceRow>,
+    /// Estimated optimum for objective-error plots.
+    pub fstar: f64,
+}
+
+impl Trace {
+    pub fn new(algo: &str, problem: &str, fstar: f64) -> Trace {
+        Trace { algo: algo.to_string(), problem: problem.to_string(), rows: Vec::new(), fstar }
+    }
+
+    pub fn push(&mut self, row: TraceRow) {
+        self.rows.push(row);
+    }
+
+    pub fn total_bits(&self) -> u64 {
+        self.rows.last().map_or(0, |r| r.bits)
+    }
+
+    pub fn total_transmissions(&self) -> u64 {
+        self.rows.last().map_or(0, |r| r.transmissions)
+    }
+
+    pub fn final_error(&self) -> f64 {
+        self.rows.last().map_or(f64::NAN, |r| r.fval - self.fstar)
+    }
+
+    /// Objective error series (f(θ^k) − f*).
+    pub fn errors(&self) -> Vec<f64> {
+        self.rows.iter().map(|r| r.fval - self.fstar).collect()
+    }
+
+    /// First iteration whose objective error ≤ eps.
+    pub fn iters_to_reach(&self, eps: f64) -> Option<usize> {
+        self.rows.iter().find(|r| r.fval - self.fstar <= eps).map(|r| r.iter)
+    }
+
+    /// Cumulative bits at the first iteration whose error ≤ eps.
+    pub fn bits_to_reach(&self, eps: f64) -> Option<u64> {
+        self.rows.iter().find(|r| r.fval - self.fstar <= eps).map(|r| r.bits)
+    }
+
+    /// Write CSV: iter, err, fval, bits, transmissions, entries.
+    pub fn write_csv<P: AsRef<Path>>(&self, path: P) -> std::io::Result<()> {
+        let mut w =
+            CsvWriter::create(path, &["iter", "err", "fval", "bits", "transmissions", "entries"])?;
+        for r in &self.rows {
+            w.row_f64(&[
+                r.iter as f64,
+                r.fval - self.fstar,
+                r.fval,
+                r.bits as f64,
+                r.transmissions as f64,
+                r.entries as f64,
+            ])?;
+        }
+        w.flush()
+    }
+
+    /// Bit savings vs a reference trace at target error eps:
+    /// 1 − bits_self/bits_ref (NaN when either never reaches eps).
+    pub fn savings_vs(&self, reference: &Trace, eps: f64) -> f64 {
+        match (self.bits_to_reach(eps), reference.bits_to_reach(eps)) {
+            (Some(a), Some(b)) if b > 0 => 1.0 - a as f64 / b as f64,
+            _ => f64::NAN,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk(rows: &[(usize, f64, u64)]) -> Trace {
+        let mut t = Trace::new("test", "prob", 1.0);
+        for &(iter, fval, bits) in rows {
+            t.push(TraceRow { iter, fval, bits, transmissions: iter as u64, entries: 0 });
+        }
+        t
+    }
+
+    #[test]
+    fn reach_queries() {
+        let t = mk(&[(0, 3.0, 0), (1, 2.0, 100), (2, 1.5, 150), (3, 1.01, 190)]);
+        assert_eq!(t.iters_to_reach(1.0), Some(1)); // err = 2.0-1.0 = 1.0
+        assert_eq!(t.bits_to_reach(0.5), Some(150));
+        assert_eq!(t.iters_to_reach(1e-9), None);
+        assert_eq!(t.total_bits(), 190);
+    }
+
+    #[test]
+    fn savings() {
+        let a = mk(&[(0, 3.0, 0), (1, 1.1, 10)]);
+        let b = mk(&[(0, 3.0, 0), (1, 1.1, 100)]);
+        let s = a.savings_vs(&b, 0.2);
+        assert!((s - 0.9).abs() < 1e-12);
+        assert!(a.savings_vs(&b, 1e-12).is_nan());
+    }
+
+    #[test]
+    fn csv_writes() {
+        let t = mk(&[(0, 3.0, 0), (1, 2.0, 64)]);
+        let dir = std::env::temp_dir().join(format!("gdsec_trace_{}", std::process::id()));
+        let p = dir.join("t.csv");
+        t.write_csv(&p).unwrap();
+        let text = std::fs::read_to_string(&p).unwrap();
+        assert!(text.starts_with("iter,err,fval,bits"));
+        assert_eq!(text.lines().count(), 3);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,90 @@
+//! Top-j sparsifier — the fixed-budget baseline (Stich et al. 2018,
+//! "Sparsified SGD with Memory") the paper compares against: keep the j
+//! largest-magnitude components, zero the rest, accumulate the residual in
+//! local memory.
+
+use super::SparseUpdate;
+
+/// Indices of the `j` largest-|v| components, returned sorted ascending.
+/// O(d) selection via `select_nth_unstable` (no full sort).
+pub fn top_j_indices(v: &[f64], j: usize) -> Vec<u32> {
+    let d = v.len();
+    if j == 0 {
+        return Vec::new();
+    }
+    if j >= d {
+        return (0..d as u32).collect();
+    }
+    let mut order: Vec<u32> = (0..d as u32).collect();
+    order.select_nth_unstable_by(j - 1, |&a, &b| {
+        v[b as usize]
+            .abs()
+            .partial_cmp(&v[a as usize].abs())
+            .unwrap_or(std::cmp::Ordering::Equal)
+    });
+    let mut keep = order[..j].to_vec();
+    keep.sort_unstable();
+    keep
+}
+
+/// Sparsify `v` to its top-j components as a wire update.
+pub fn top_j_update(v: &[f64], j: usize) -> SparseUpdate {
+    let idx = top_j_indices(v, j);
+    let val = idx.iter().map(|&i| v[i as usize] as f32).collect();
+    SparseUpdate { dim: v.len() as u32, idx, val }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn picks_largest_magnitudes() {
+        let v = vec![0.1, -5.0, 2.0, 0.0, 3.0];
+        let idx = top_j_indices(&v, 2);
+        assert_eq!(idx, vec![1, 4]);
+    }
+
+    #[test]
+    fn j_zero_and_j_ge_d() {
+        let v = vec![1.0, 2.0];
+        assert!(top_j_indices(&v, 0).is_empty());
+        assert_eq!(top_j_indices(&v, 2), vec![0, 1]);
+        assert_eq!(top_j_indices(&v, 10), vec![0, 1]);
+    }
+
+    #[test]
+    fn update_carries_values() {
+        let v = vec![0.0, -4.0, 1.0];
+        let u = top_j_update(&v, 1);
+        assert_eq!(u.idx, vec![1]);
+        assert_eq!(u.val, vec![-4.0f32]);
+        assert_eq!(u.dim, 3);
+    }
+
+    #[test]
+    fn selection_matches_sort(){
+        let mut rng = Pcg64::seeded(42);
+        for _ in 0..50 {
+            let d = 1 + rng.index(200);
+            let j = rng.index(d + 1);
+            let v: Vec<f64> = (0..d).map(|_| rng.normal()).collect();
+            let fast = top_j_indices(&v, j);
+            let mut order: Vec<u32> = (0..d as u32).collect();
+            order.sort_by(|&a, &b| {
+                v[b as usize].abs().partial_cmp(&v[a as usize].abs()).unwrap()
+            });
+            let mut slow = order[..j].to_vec();
+            slow.sort_unstable();
+            // With ties the *sets of magnitudes* must agree even if index
+            // choices differ.
+            let mag = |ix: &[u32]| {
+                let mut m: Vec<f64> = ix.iter().map(|&i| v[i as usize].abs()).collect();
+                m.sort_by(|a, b| a.partial_cmp(b).unwrap());
+                m
+            };
+            assert_eq!(mag(&fast), mag(&slow));
+        }
+    }
+}

@@ -1,0 +1,192 @@
+//! Experiment configuration: typed structs parsed from CLI options and/or
+//! simple `key = value` config files (no TOML dependency in the offline
+//! image; the subset we parse is TOML-compatible for flat scalar keys).
+
+use crate::algo::gdsec::Xi;
+use crate::objectives::ObjectiveKind;
+use crate::util::cli::{Args, CliError};
+use std::collections::BTreeMap;
+
+/// Fully-resolved run configuration for the `gdsec train` subcommand.
+#[derive(Debug, Clone)]
+pub struct RunConfig {
+    pub algo: String,
+    pub objective: ObjectiveKind,
+    pub dataset: String,
+    pub data_path: Option<String>,
+    pub workers: usize,
+    pub iters: usize,
+    pub seed: u64,
+    /// Step size; None = auto (1/L).
+    pub alpha: Option<f64>,
+    pub beta: f64,
+    /// ξ as the paper reports it (we store ξ, thresholds use ξ/M).
+    pub xi: f64,
+    /// Scale ξ_i = ξ/L^i per coordinate (Fig 7 mode).
+    pub xi_per_coord: bool,
+    pub lambda: Option<f64>,
+    pub batch: usize,
+    pub eval_every: usize,
+    pub out_csv: Option<String>,
+    /// Participation fraction (1.0 = all workers each round).
+    pub participation: f64,
+    pub scheduler: String,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            algo: "gdsec".to_string(),
+            objective: ObjectiveKind::LogReg,
+            dataset: "paper-logreg".to_string(),
+            data_path: None,
+            workers: 5,
+            iters: 500,
+            seed: 42,
+            alpha: None,
+            beta: 0.01,
+            xi: 400.0,
+            xi_per_coord: false,
+            lambda: None,
+            batch: 0,
+            eval_every: 1,
+            out_csv: None,
+            participation: 1.0,
+            scheduler: "all".to_string(),
+        }
+    }
+}
+
+impl RunConfig {
+    /// Overlay CLI options onto this config.
+    pub fn apply_args(&mut self, args: &Args) -> Result<(), CliError> {
+        if let Some(v) = args.get("algo") {
+            self.algo = v.to_string();
+        }
+        if let Some(v) = args.get("objective") {
+            self.objective = ObjectiveKind::parse(v)
+                .ok_or_else(|| CliError(format!("unknown objective '{v}'")))?;
+        }
+        if let Some(v) = args.get("dataset") {
+            self.dataset = v.to_string();
+        }
+        if let Some(v) = args.get("data") {
+            self.data_path = Some(v.to_string());
+        }
+        self.workers = args.get_usize("workers", self.workers)?;
+        self.iters = args.get_usize("iters", self.iters)?;
+        self.seed = args.get_u64("seed", self.seed)?;
+        if let Some(v) = args.get("alpha") {
+            self.alpha = Some(
+                v.parse().map_err(|_| CliError(format!("--alpha: bad number '{v}'")))?,
+            );
+        }
+        self.beta = args.get_f64("beta", self.beta)?;
+        self.xi = args.get_f64("xi", self.xi)?;
+        if args.flag("xi-per-coord") {
+            self.xi_per_coord = true;
+        }
+        if let Some(v) = args.get("lambda") {
+            self.lambda = Some(
+                v.parse().map_err(|_| CliError(format!("--lambda: bad number '{v}'")))?,
+            );
+        }
+        self.batch = args.get_usize("batch", self.batch)?;
+        self.eval_every = args.get_usize("eval-every", self.eval_every)?;
+        if let Some(v) = args.get("out") {
+            self.out_csv = Some(v.to_string());
+        }
+        self.participation = args.get_f64("participation", self.participation)?;
+        if let Some(v) = args.get("scheduler") {
+            self.scheduler = v.to_string();
+        }
+        Ok(())
+    }
+
+    /// Resolve the ξ thresholds for a problem (uniform or Lipschitz-scaled).
+    pub fn resolve_xi(&self, prob: &crate::objectives::Problem) -> Xi {
+        if self.xi_per_coord {
+            Xi::scaled_by_lipschitz(self.xi, &prob.coord_lipschitz())
+        } else {
+            Xi::Uniform(self.xi)
+        }
+    }
+}
+
+/// Parse a flat `key = value` config file (comments with `#`).
+pub fn parse_kv(text: &str) -> Result<BTreeMap<String, String>, String> {
+    let mut map = BTreeMap::new();
+    for (lineno, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') || line.starts_with('[') {
+            continue;
+        }
+        let (k, v) = line
+            .split_once('=')
+            .ok_or_else(|| format!("line {}: expected key = value", lineno + 1))?;
+        map.insert(
+            k.trim().to_string(),
+            v.trim().trim_matches('"').to_string(),
+        );
+    }
+    Ok(map)
+}
+
+/// Load a config file and overlay it on defaults, then CLI args on top.
+pub fn load(path: Option<&str>, args: &Args) -> Result<RunConfig, String> {
+    let mut cfg = RunConfig::default();
+    if let Some(p) = path {
+        let text = std::fs::read_to_string(p).map_err(|e| format!("{p}: {e}"))?;
+        let kv = parse_kv(&text)?;
+        let mut synth: Vec<String> = Vec::new();
+        for (k, v) in &kv {
+            synth.push(format!("--{k}={v}"));
+        }
+        let file_args = Args::parse(&synth, false).map_err(|e| e.to_string())?;
+        cfg.apply_args(&file_args).map_err(|e| e.to_string())?;
+    }
+    cfg.apply_args(args).map_err(|e| e.to_string())?;
+    Ok(cfg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::cli::Args;
+
+    #[test]
+    fn defaults_then_cli_overlay() {
+        let args = Args::parse(
+            &["--algo=gd".into(), "--iters".into(), "100".into(), "--xi".into(), "80".into()],
+            false,
+        )
+        .unwrap();
+        let mut cfg = RunConfig::default();
+        cfg.apply_args(&args).unwrap();
+        assert_eq!(cfg.algo, "gd");
+        assert_eq!(cfg.iters, 100);
+        assert_eq!(cfg.xi, 80.0);
+        assert_eq!(cfg.workers, 5); // default untouched
+    }
+
+    #[test]
+    fn kv_file_parses() {
+        let kv = parse_kv("# comment\nalgo = \"gdsec\"\niters = 250\n\n[section]\nxi = 9\n")
+            .unwrap();
+        assert_eq!(kv.get("algo").unwrap(), "gdsec");
+        assert_eq!(kv.get("iters").unwrap(), "250");
+        assert_eq!(kv.get("xi").unwrap(), "9");
+    }
+
+    #[test]
+    fn kv_rejects_garbage() {
+        assert!(parse_kv("not a kv line\n").is_err());
+    }
+
+    #[test]
+    fn bad_objective_rejected() {
+        let args = Args::parse(&["--objective=banana".into()], false).unwrap();
+        let mut cfg = RunConfig::default();
+        assert!(cfg.apply_args(&args).is_err());
+    }
+}

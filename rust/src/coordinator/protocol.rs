@@ -1,0 +1,246 @@
+//! Wire protocol between server and workers.
+//!
+//! Every message is a framed byte buffer; the transport counts frame bytes
+//! per link, and the figures use the *uplink payload* bits (the paper's
+//! metric) while header/control bytes are reported separately as protocol
+//! overhead.
+//!
+//! Frame layout (little endian):
+//! ```text
+//! magic  u8   = 0xG5 (0xA5)
+//! kind   u8   (MsgKind)
+//! round  u32
+//! sender u32  (worker id, or u32::MAX for server)
+//! len    u32  (payload byte length)
+//! payload[len]
+//! ```
+
+use crate::compress::{self, SparseUpdate};
+
+pub const MAGIC: u8 = 0xA5;
+pub const SERVER_ID: u32 = u32::MAX;
+pub const HEADER_LEN: usize = 1 + 1 + 4 + 4 + 4;
+
+/// Message kinds.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u8)]
+pub enum MsgKind {
+    /// Server → workers: new iterate θ^k (f64 payload) + active flag.
+    Broadcast = 1,
+    /// Worker → server: sparsified update Δ̂_m (RLE payload) + local f_m.
+    Update = 2,
+    /// Worker → server: nothing survived censoring this round
+    /// (payload: local f_m only). Payload *bits* for the paper metric: 0.
+    Silence = 3,
+    /// Server → workers: stop.
+    Shutdown = 4,
+}
+
+impl MsgKind {
+    pub fn from_u8(v: u8) -> Option<MsgKind> {
+        match v {
+            1 => Some(MsgKind::Broadcast),
+            2 => Some(MsgKind::Update),
+            3 => Some(MsgKind::Silence),
+            4 => Some(MsgKind::Shutdown),
+            _ => None,
+        }
+    }
+}
+
+/// A decoded message.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Msg {
+    /// θ carried in f64 so the distributed trajectory is bit-identical to
+    /// the serial reference (the downlink is not the paper's metric).
+    Broadcast { round: u32, theta: Vec<f64>, active: bool },
+    Update { round: u32, worker: u32, update: SparseUpdate, local_f: f64 },
+    Silence { round: u32, worker: u32, local_f: f64 },
+    Shutdown,
+}
+
+/// Encode a frame.
+pub fn encode(msg: &Msg, dim: u32) -> Vec<u8> {
+    let (kind, round, sender, payload) = match msg {
+        Msg::Broadcast { round, theta, active } => {
+            let mut p = Vec::with_capacity(1 + theta.len() * 8);
+            p.push(u8::from(*active));
+            for &v in theta {
+                p.extend_from_slice(&v.to_le_bytes());
+            }
+            (MsgKind::Broadcast, *round, SERVER_ID, p)
+        }
+        Msg::Update { round, worker, update, local_f } => {
+            debug_assert_eq!(update.dim, dim);
+            let mut p = Vec::new();
+            p.extend_from_slice(&local_f.to_le_bytes());
+            compress::encode_sparse(update, &mut p);
+            (MsgKind::Update, *round, *worker, p)
+        }
+        Msg::Silence { round, worker, local_f } => {
+            (MsgKind::Silence, *round, *worker, local_f.to_le_bytes().to_vec())
+        }
+        Msg::Shutdown => (MsgKind::Shutdown, 0, SERVER_ID, Vec::new()),
+    };
+    let mut out = Vec::with_capacity(HEADER_LEN + payload.len());
+    out.push(MAGIC);
+    out.push(kind as u8);
+    out.extend_from_slice(&round.to_le_bytes());
+    out.extend_from_slice(&sender.to_le_bytes());
+    out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    out.extend_from_slice(&payload);
+    out
+}
+
+#[derive(Debug, thiserror::Error, PartialEq)]
+pub enum ProtoError {
+    #[error("frame too short")]
+    Truncated,
+    #[error("bad magic byte {0:#x}")]
+    BadMagic(u8),
+    #[error("unknown message kind {0}")]
+    BadKind(u8),
+    #[error("payload malformed")]
+    BadPayload,
+}
+
+/// Decode a frame. `dim` is the model dimension (known to both ends).
+pub fn decode(buf: &[u8], dim: u32) -> Result<Msg, ProtoError> {
+    if buf.len() < HEADER_LEN {
+        return Err(ProtoError::Truncated);
+    }
+    if buf[0] != MAGIC {
+        return Err(ProtoError::BadMagic(buf[0]));
+    }
+    let kind = MsgKind::from_u8(buf[1]).ok_or(ProtoError::BadKind(buf[1]))?;
+    let round = u32::from_le_bytes([buf[2], buf[3], buf[4], buf[5]]);
+    let sender = u32::from_le_bytes([buf[6], buf[7], buf[8], buf[9]]);
+    let len = u32::from_le_bytes([buf[10], buf[11], buf[12], buf[13]]) as usize;
+    if buf.len() != HEADER_LEN + len {
+        return Err(ProtoError::Truncated);
+    }
+    let p = &buf[HEADER_LEN..];
+    match kind {
+        MsgKind::Broadcast => {
+            if p.is_empty() || (p.len() - 1) % 8 != 0 {
+                return Err(ProtoError::BadPayload);
+            }
+            let active = p[0] != 0;
+            let n = (p.len() - 1) / 8;
+            let mut theta = Vec::with_capacity(n);
+            for k in 0..n {
+                let b = &p[1 + 8 * k..1 + 8 * k + 8];
+                theta.push(f64::from_le_bytes([
+                    b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7],
+                ]));
+            }
+            Ok(Msg::Broadcast { round, theta, active })
+        }
+        MsgKind::Update => {
+            if p.len() < 8 {
+                return Err(ProtoError::BadPayload);
+            }
+            let local_f = f64::from_le_bytes([p[0], p[1], p[2], p[3], p[4], p[5], p[6], p[7]]);
+            let (update, used) =
+                compress::decode_sparse(&p[8..], dim).ok_or(ProtoError::BadPayload)?;
+            if 8 + used != p.len() {
+                return Err(ProtoError::BadPayload);
+            }
+            Ok(Msg::Update { round, worker: sender, update, local_f })
+        }
+        MsgKind::Silence => {
+            if p.len() != 8 {
+                return Err(ProtoError::BadPayload);
+            }
+            let local_f = f64::from_le_bytes([p[0], p[1], p[2], p[3], p[4], p[5], p[6], p[7]]);
+            Ok(Msg::Silence { round, worker: sender, local_f })
+        }
+        MsgKind::Shutdown => Ok(Msg::Shutdown),
+    }
+}
+
+/// The paper-metric payload bits carried by an uplink frame: the encoded
+/// sparse update only (silence and headers cost 0 in the paper's model).
+pub fn uplink_payload_bits(msg: &Msg) -> u64 {
+    match msg {
+        Msg::Update { update, .. } => compress::sparse_bits(update) as u64,
+        _ => 0,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn broadcast_roundtrip() {
+        let m = Msg::Broadcast { round: 7, theta: vec![1.5, -2.25, 1e-300], active: true };
+        let buf = encode(&m, 3);
+        assert_eq!(decode(&buf, 3).unwrap(), m);
+    }
+
+    #[test]
+    fn update_roundtrip() {
+        let mut v = vec![0.0f64; 50];
+        v[3] = 0.5;
+        v[49] = -1.0;
+        let u = SparseUpdate::from_dense(&v);
+        let m = Msg::Update { round: 2, worker: 4, update: u, local_f: 0.125 };
+        let buf = encode(&m, 50);
+        assert_eq!(decode(&buf, 50).unwrap(), m);
+    }
+
+    #[test]
+    fn silence_roundtrip_zero_payload_bits() {
+        let m = Msg::Silence { round: 9, worker: 1, local_f: 2.5 };
+        let buf = encode(&m, 10);
+        let back = decode(&buf, 10).unwrap();
+        assert_eq!(back, m);
+        assert_eq!(uplink_payload_bits(&back), 0);
+    }
+
+    #[test]
+    fn shutdown_roundtrip() {
+        let buf = encode(&Msg::Shutdown, 1);
+        assert_eq!(decode(&buf, 1).unwrap(), Msg::Shutdown);
+    }
+
+    #[test]
+    fn payload_bits_match_codec() {
+        let mut v = vec![0.0f64; 100];
+        for i in (0..100).step_by(7) {
+            v[i] = i as f64;
+        }
+        let u = SparseUpdate::from_dense(&v);
+        let expect = crate::compress::sparse_bits(&u) as u64;
+        let m = Msg::Update { round: 1, worker: 0, update: u, local_f: 0.0 };
+        assert_eq!(uplink_payload_bits(&m), expect);
+    }
+
+    #[test]
+    fn rejects_corruption() {
+        let m = Msg::Silence { round: 1, worker: 2, local_f: 1.0 };
+        let mut buf = encode(&m, 10);
+        assert_eq!(decode(&buf[..5], 10), Err(ProtoError::Truncated));
+        buf[0] = 0x00;
+        assert!(matches!(decode(&buf, 10), Err(ProtoError::BadMagic(0))));
+        buf[0] = MAGIC;
+        buf[1] = 99;
+        assert!(matches!(decode(&buf, 10), Err(ProtoError::BadKind(99))));
+        // wrong length
+        let m2 = Msg::Broadcast { round: 1, theta: vec![1.0], active: false };
+        let mut b2 = encode(&m2, 1);
+        b2.push(0);
+        assert_eq!(decode(&b2, 1), Err(ProtoError::Truncated));
+    }
+
+    #[test]
+    fn update_with_out_of_range_index_rejected() {
+        let mut v = vec![0.0f64; 20];
+        v[19] = 1.0;
+        let u = SparseUpdate::from_dense(&v);
+        let m = Msg::Update { round: 1, worker: 0, update: u, local_f: 0.0 };
+        let buf = encode(&m, 20);
+        assert!(decode(&buf, 10).is_err());
+    }
+}

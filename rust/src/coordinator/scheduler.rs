@@ -1,0 +1,138 @@
+//! Worker participation schedulers (paper §IV-G1: bandwidth-limited
+//! operation where the server schedules only a fraction of workers each
+//! round).
+
+use crate::util::rng::Pcg64;
+
+/// Scheduling policy.
+#[derive(Debug, Clone)]
+pub enum Scheduler {
+    /// Every worker, every round.
+    All,
+    /// Round-robin over a rotating window of ⌈fraction·M⌉ workers — the
+    /// paper's RR policy ([62]).
+    RoundRobin { fraction: f64 },
+    /// Uniformly random ⌈fraction·M⌉ workers per round.
+    Random { fraction: f64, rng: Pcg64 },
+}
+
+impl Scheduler {
+    pub fn parse(name: &str, fraction: f64, seed: u64) -> Option<Scheduler> {
+        match name {
+            "all" => Some(Scheduler::All),
+            "rr" | "round-robin" => Some(Scheduler::RoundRobin { fraction }),
+            "random" => Some(Scheduler::Random { fraction, rng: Pcg64::seeded(seed) }),
+            _ => None,
+        }
+    }
+
+    /// Number of workers active per round for M total.
+    pub fn active_count(&self, m: usize) -> usize {
+        match self {
+            Scheduler::All => m,
+            Scheduler::RoundRobin { fraction } | Scheduler::Random { fraction, .. } => {
+                ((fraction * m as f64).ceil() as usize).clamp(1, m)
+            }
+        }
+    }
+
+    /// Active worker set for round `k` (1-based), sorted ascending.
+    pub fn active(&mut self, k: usize, m: usize) -> Vec<usize> {
+        let c = self.active_count(m);
+        match self {
+            Scheduler::All => (0..m).collect(),
+            Scheduler::RoundRobin { .. } => {
+                let start = ((k - 1) * c) % m;
+                let mut set: Vec<usize> = (0..c).map(|i| (start + i) % m).collect();
+                set.sort_unstable();
+                set
+            }
+            Scheduler::Random { rng, .. } => {
+                let mut set = rng.sample_indices(m, c);
+                set.sort_unstable();
+                set
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_selects_everyone() {
+        let mut s = Scheduler::All;
+        assert_eq!(s.active(1, 4), vec![0, 1, 2, 3]);
+        assert_eq!(s.active(9, 4), vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn rr_half_covers_all_in_two_rounds() {
+        let mut s = Scheduler::RoundRobin { fraction: 0.5 };
+        let m = 10;
+        let r1 = s.active(1, m);
+        let r2 = s.active(2, m);
+        assert_eq!(r1.len(), 5);
+        assert_eq!(r2.len(), 5);
+        let mut all: Vec<usize> = r1.iter().chain(r2.iter()).copied().collect();
+        all.sort_unstable();
+        all.dedup();
+        assert_eq!(all, (0..10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn rr_fairness_over_cycle() {
+        // Every worker appears exactly fraction·rounds times over a full
+        // cycle, for any m / fraction combination.
+        let mut s = Scheduler::RoundRobin { fraction: 0.3 };
+        let m = 7;
+        let c = s.active_count(m); // ceil(2.1) = 3
+        assert_eq!(c, 3);
+        let mut counts = vec![0usize; m];
+        // lcm-ish long horizon
+        for k in 1..=7 * 3 * 4 {
+            for w in s.active(k, m) {
+                counts[w] += 1;
+            }
+        }
+        let min = counts.iter().min().unwrap();
+        let max = counts.iter().max().unwrap();
+        assert!(max - min <= 1, "unfair RR: {counts:?}");
+    }
+
+    #[test]
+    fn random_selects_distinct_fraction() {
+        let mut s = Scheduler::Random { fraction: 0.25, rng: Pcg64::seeded(1) };
+        for k in 1..20 {
+            let set = s.active(k, 16);
+            assert_eq!(set.len(), 4);
+            let mut d = set.clone();
+            d.dedup();
+            assert_eq!(d.len(), 4);
+            assert!(set.iter().all(|&w| w < 16));
+        }
+    }
+
+    #[test]
+    fn active_count_clamps() {
+        let s = Scheduler::RoundRobin { fraction: 0.01 };
+        assert_eq!(s.active_count(5), 1);
+        let s = Scheduler::RoundRobin { fraction: 2.0 };
+        assert_eq!(s.active_count(5), 5);
+    }
+
+    #[test]
+    fn parse_names() {
+        assert!(matches!(Scheduler::parse("all", 1.0, 0), Some(Scheduler::All)));
+        assert!(matches!(
+            Scheduler::parse("rr", 0.5, 0),
+            Some(Scheduler::RoundRobin { .. })
+        ));
+        assert!(matches!(
+            Scheduler::parse("random", 0.5, 0),
+            Some(Scheduler::Random { .. })
+        ));
+        assert!(Scheduler::parse("bogus", 0.5, 0).is_none());
+    }
+}

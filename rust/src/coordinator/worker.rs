@@ -1,0 +1,203 @@
+//! Worker-side loop: receive θ broadcasts, compute the local gradient via
+//! a pluggable [`GradProvider`] (native Rust objective or a PJRT-loaded
+//! XLA executable), run the GD-SEC censor/EC step, and reply.
+
+use super::protocol::{self, Msg};
+use super::transport::{Recv, WorkerEnd};
+use crate::algo::gdsec::{GdSecConfig, WorkerState};
+use crate::linalg;
+
+/// Source of local loss/gradient computation — the seam between L3 and the
+/// compiled L2/L1 artifacts.
+///
+/// Deliberately NOT `Send`: PJRT wrappers hold raw pointers. Providers are
+/// constructed *inside* their worker thread via [`ProviderFactory`].
+pub trait GradProvider {
+    fn dim(&self) -> usize;
+    /// Compute f_m(θ) and ∇f_m(θ) (gradient into `out`); returns the loss.
+    fn loss_grad(&mut self, theta: &[f64], out: &mut [f64]) -> f64;
+}
+
+/// Native (pure Rust) provider over a [`crate::objectives::LocalObjective`].
+pub struct NativeProvider {
+    pub local: crate::objectives::LocalObjective,
+}
+
+impl GradProvider for NativeProvider {
+    fn dim(&self) -> usize {
+        self.local.dim()
+    }
+
+    fn loss_grad(&mut self, theta: &[f64], out: &mut [f64]) -> f64 {
+        self.local.grad(theta, out);
+        self.local.value(theta)
+    }
+}
+
+/// Constructor for a worker's provider, run on the worker thread itself
+/// (so non-`Send` PJRT state never crosses threads).
+pub type ProviderFactory = Box<dyn FnOnce() -> Box<dyn GradProvider> + Send>;
+
+/// Failure plan for chaos testing: the worker stops responding from the
+/// given round on (it still drains broadcasts so channels stay open, like
+/// a straggler rather than a closed socket).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct FailurePlan {
+    pub silent_from_round: Option<u32>,
+}
+
+/// Run the worker loop until Shutdown (or link loss). `factory` is invoked
+/// on this thread to build the provider.
+pub fn worker_loop(
+    id: u32,
+    m_workers: usize,
+    cfg: GdSecConfig,
+    factory: ProviderFactory,
+    end: WorkerEnd,
+    failure: FailurePlan,
+) {
+    let mut provider = factory();
+    let d = provider.dim();
+    let mut state = WorkerState::new(d);
+    let mut theta_prev = vec![0.0; d];
+    let mut theta_diff = vec![0.0; d];
+    loop {
+        let frame = match end.rx.recv() {
+            Recv::Frame(f) => f,
+            _ => return,
+        };
+        let msg = match protocol::decode(&frame, d as u32) {
+            Ok(m) => m,
+            Err(_) => continue, // corrupt frame: drop, stay alive
+        };
+        match msg {
+            Msg::Shutdown => return,
+            Msg::Broadcast { round, theta, active } => {
+                if failure.silent_from_round.is_some_and(|r| round >= r) {
+                    theta_prev.copy_from_slice(&theta);
+                    continue;
+                }
+                if !active {
+                    // Not scheduled this round: track iterate history only.
+                    theta_prev.copy_from_slice(&theta);
+                    continue;
+                }
+                linalg::sub(&theta, &theta_prev, &mut theta_diff);
+                let local_f = provider.loss_grad(&theta, state.grad_mut());
+                let update = state.sparsify_step(&cfg, m_workers, &theta_diff);
+                let reply = if update.nnz() > 0 {
+                    Msg::Update { round, worker: id, update, local_f }
+                } else {
+                    Msg::Silence { round, worker: id, local_f }
+                };
+                theta_prev.copy_from_slice(&theta);
+                if !end.tx.send(protocol::encode(&reply, d as u32)) {
+                    return;
+                }
+            }
+            // Workers ignore uplink-kind messages.
+            Msg::Update { .. } | Msg::Silence { .. } => {}
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::gdsec::Xi;
+    use crate::coordinator::transport::duplex;
+    use crate::data::synthetic;
+    use crate::objectives::Problem;
+
+    fn spawn_one(
+        cfg: GdSecConfig,
+        failure: FailurePlan,
+    ) -> (crate::coordinator::transport::ServerEnd, std::thread::JoinHandle<()>, usize) {
+        let prob = Problem::linear(synthetic::dna_like(1, 30), 1, 0.1);
+        let d = prob.d;
+        let local = prob.locals[0].clone();
+        let factory: ProviderFactory =
+            Box::new(move || Box::new(NativeProvider { local }) as Box<dyn GradProvider>);
+        let (server, worker) = duplex();
+        let h =
+            std::thread::spawn(move || worker_loop(0, 1, cfg, factory, worker, failure));
+        (server, h, d)
+    }
+
+    #[test]
+    fn first_broadcast_gets_full_update() {
+        let cfg = GdSecConfig { xi: Xi::Uniform(1.0), ..Default::default() };
+        let (server, h, d) = spawn_one(cfg, FailurePlan::default());
+        let theta = vec![0.0; d];
+        server.tx.send(protocol::encode(
+            &Msg::Broadcast { round: 1, theta, active: true },
+            d as u32,
+        ));
+        match server.rx.recv() {
+            Recv::Frame(f) => match protocol::decode(&f, d as u32).unwrap() {
+                Msg::Update { round, worker, update, local_f } => {
+                    assert_eq!(round, 1);
+                    assert_eq!(worker, 0);
+                    assert!(update.nnz() > 0);
+                    assert!(local_f.is_finite());
+                }
+                other => panic!("expected update, got {other:?}"),
+            },
+            other => panic!("{other:?}"),
+        }
+        server.tx.send(protocol::encode(&Msg::Shutdown, d as u32));
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn inactive_worker_stays_silent() {
+        let cfg = GdSecConfig { xi: Xi::Uniform(1.0), ..Default::default() };
+        let (server, h, d) = spawn_one(cfg, FailurePlan::default());
+        server.tx.send(protocol::encode(
+            &Msg::Broadcast { round: 1, theta: vec![0.0; d], active: false },
+            d as u32,
+        ));
+        match server.rx.recv_timeout(std::time::Duration::from_millis(50)) {
+            Recv::Timeout => {}
+            other => panic!("expected no reply, got {other:?}"),
+        }
+        server.tx.send(protocol::encode(&Msg::Shutdown, d as u32));
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn failed_worker_goes_dark_but_drains() {
+        let cfg = GdSecConfig { xi: Xi::Uniform(1.0), ..Default::default() };
+        let (server, h, d) =
+            spawn_one(cfg, FailurePlan { silent_from_round: Some(2) });
+        server.tx.send(protocol::encode(
+            &Msg::Broadcast { round: 1, theta: vec![0.0; d], active: true },
+            d as u32,
+        ));
+        assert!(matches!(server.rx.recv(), Recv::Frame(_)));
+        server.tx.send(protocol::encode(
+            &Msg::Broadcast { round: 2, theta: vec![0.1; d], active: true },
+            d as u32,
+        ));
+        match server.rx.recv_timeout(std::time::Duration::from_millis(50)) {
+            Recv::Timeout => {}
+            other => panic!("expected dark worker, got {other:?}"),
+        }
+        server.tx.send(protocol::encode(&Msg::Shutdown, d as u32));
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn corrupt_frame_survivable() {
+        let cfg = GdSecConfig { xi: Xi::Uniform(1.0), ..Default::default() };
+        let (server, h, d) = spawn_one(cfg, FailurePlan::default());
+        server.tx.send(vec![0xde, 0xad]);
+        server.tx.send(protocol::encode(
+            &Msg::Broadcast { round: 1, theta: vec![0.0; d], active: true },
+            d as u32,
+        ));
+        assert!(matches!(server.rx.recv(), Recv::Frame(_)));
+        server.tx.send(protocol::encode(&Msg::Shutdown, d as u32));
+        h.join().unwrap();
+    }
+}

@@ -1,0 +1,325 @@
+//! Datasets: storage, worker sharding, standardization, loading.
+//!
+//! The paper evaluates on MNIST, CIFAR-10 and four LIBSVM sets (DNA,
+//! COLON-CANCER, W2A, RCV1-train). The build image is offline, so
+//! `synthetic` provides seeded generators that match each dataset's
+//! (N, d), sparsity pattern and feature-scale profile — the properties
+//! that drive GD-SEC's censoring behaviour (see DESIGN.md §6). `libsvm`
+//! parses the real files when they are available (`--data file.libsvm`).
+
+pub mod libsvm;
+pub mod synthetic;
+
+use crate::linalg::DenseMat;
+use crate::sparse::CsrMat;
+
+/// Feature matrix: dense row-major or CSR.
+#[derive(Debug, Clone)]
+pub enum Features {
+    Dense(DenseMat),
+    Sparse(CsrMat),
+}
+
+impl Features {
+    pub fn rows(&self) -> usize {
+        match self {
+            Features::Dense(m) => m.rows,
+            Features::Sparse(m) => m.rows,
+        }
+    }
+
+    pub fn cols(&self) -> usize {
+        match self {
+            Features::Dense(m) => m.cols,
+            Features::Sparse(m) => m.cols,
+        }
+    }
+
+    /// out = X * theta
+    pub fn matvec(&self, theta: &[f64], out: &mut [f64]) {
+        match self {
+            Features::Dense(m) => m.gemv(theta, out),
+            Features::Sparse(m) => m.spmv(theta, out),
+        }
+    }
+
+    /// out += alpha * X^T * r
+    pub fn matvec_t_acc(&self, alpha: f64, r: &[f64], out: &mut [f64]) {
+        match self {
+            Features::Dense(m) => m.gemv_t_acc(alpha, r, out),
+            Features::Sparse(m) => m.spmv_t_acc(alpha, r, out),
+        }
+    }
+
+    /// Fused full-batch gradient pass: for every row i compute
+    /// `z_i = x_i·θ`, then `out += weight(i, z_i) · x_i` — ONE streaming
+    /// pass over X instead of matvec + transposed matvec (halves the
+    /// memory traffic of the objective gradient, the workers' hot loop).
+    pub fn fused_grad_pass<F: FnMut(usize, f64) -> f64>(
+        &self,
+        theta: &[f64],
+        out: &mut [f64],
+        mut weight: F,
+    ) {
+        match self {
+            Features::Dense(m) => {
+                for i in 0..m.rows {
+                    let row = m.row(i);
+                    let z = crate::linalg::dot(row, theta);
+                    let w = weight(i, z);
+                    if w != 0.0 {
+                        crate::linalg::axpy(w, row, out);
+                    }
+                }
+            }
+            Features::Sparse(m) => {
+                for i in 0..m.rows {
+                    let (cols, vals) = m.row(i);
+                    let mut z = 0.0;
+                    for k in 0..cols.len() {
+                        z += vals[k] * theta[cols[k] as usize];
+                    }
+                    let w = weight(i, z);
+                    if w != 0.0 {
+                        for k in 0..cols.len() {
+                            out[cols[k] as usize] += w * vals[k];
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// sigma_max(X)^2 via power iteration.
+    pub fn spectral_sq(&self, iters: usize) -> f64 {
+        match self {
+            Features::Dense(m) => crate::linalg::power_iter_ata(m, iters),
+            Features::Sparse(m) => m.power_iter_ata(iters),
+        }
+    }
+
+    /// Per-column sums of squared entries (coordinate-wise smoothness).
+    pub fn col_sq_sums(&self) -> Vec<f64> {
+        match self {
+            Features::Dense(m) => {
+                let mut out = vec![0.0; m.cols];
+                for i in 0..m.rows {
+                    let row = m.row(i);
+                    for j in 0..m.cols {
+                        out[j] += row[j] * row[j];
+                    }
+                }
+                out
+            }
+            Features::Sparse(m) => m.col_sq_sums(),
+        }
+    }
+
+    /// Max squared row norm (logistic-loss smoothness bound ingredient).
+    pub fn max_row_nrm2_sq(&self) -> f64 {
+        match self {
+            Features::Dense(m) => {
+                (0..m.rows).map(|i| crate::linalg::nrm2_sq(m.row(i))).fold(0.0, f64::max)
+            }
+            Features::Sparse(m) => (0..m.rows).map(|i| m.row_nrm2_sq(i)).fold(0.0, f64::max),
+        }
+    }
+
+    /// Contiguous row slice.
+    pub fn row_slice(&self, start: usize, end: usize) -> Features {
+        match self {
+            Features::Dense(m) => {
+                let mut out = DenseMat::zeros(end - start, m.cols);
+                out.data.copy_from_slice(&m.data[start * m.cols..end * m.cols]);
+                Features::Dense(out)
+            }
+            Features::Sparse(m) => Features::Sparse(m.row_slice(start, end)),
+        }
+    }
+}
+
+/// A labeled dataset.
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    pub name: String,
+    pub x: Features,
+    pub y: Vec<f64>,
+}
+
+impl Dataset {
+    pub fn new(name: &str, x: Features, y: Vec<f64>) -> Dataset {
+        assert_eq!(x.rows(), y.len(), "feature/label length mismatch");
+        Dataset { name: name.to_string(), x, y }
+    }
+
+    pub fn n(&self) -> usize {
+        self.y.len()
+    }
+
+    pub fn d(&self) -> usize {
+        self.x.cols()
+    }
+
+    /// Standardize columns in place: dense → zero-mean unit-std per column;
+    /// sparse → scale-only (unit column RMS) to preserve sparsity, as is
+    /// standard for RCV1-style data.
+    pub fn standardize(&mut self) {
+        match &mut self.x {
+            Features::Dense(m) => {
+                for j in 0..m.cols {
+                    let mut mean = 0.0;
+                    for i in 0..m.rows {
+                        mean += m.row(i)[j];
+                    }
+                    mean /= m.rows as f64;
+                    let mut var = 0.0;
+                    for i in 0..m.rows {
+                        let v = m.row(i)[j] - mean;
+                        var += v * v;
+                    }
+                    var /= m.rows as f64;
+                    let std = var.sqrt().max(1e-12);
+                    for i in 0..m.rows {
+                        let v = &mut m.row_mut(i)[j];
+                        *v = (*v - mean) / std;
+                    }
+                }
+            }
+            Features::Sparse(m) => {
+                let n = m.rows as f64;
+                let mut scale = m.col_sq_sums();
+                for s in scale.iter_mut() {
+                    *s = if *s > 0.0 { (n / *s).sqrt() } else { 1.0 };
+                }
+                for k in 0..m.values.len() {
+                    m.values[k] *= scale[m.indices[k] as usize];
+                }
+            }
+        }
+    }
+
+    /// Split evenly into `m` contiguous shards (first `n % m` shards get one
+    /// extra sample), mirroring the paper's "evenly split among workers".
+    pub fn shard(&self, m: usize) -> Vec<Shard> {
+        assert!(m >= 1);
+        let n = self.n();
+        let base = n / m;
+        let extra = n % m;
+        let mut shards = Vec::with_capacity(m);
+        let mut start = 0;
+        for w in 0..m {
+            let len = base + usize::from(w < extra);
+            let end = start + len;
+            shards.push(Shard {
+                worker: w,
+                x: self.x.row_slice(start, end),
+                y: self.y[start..end].to_vec(),
+            });
+            start = end;
+        }
+        assert_eq!(start, n);
+        shards
+    }
+}
+
+/// One worker's local data shard.
+#[derive(Debug, Clone)]
+pub struct Shard {
+    pub worker: usize,
+    pub x: Features,
+    pub y: Vec<f64>,
+}
+
+impl Shard {
+    pub fn n(&self) -> usize {
+        self.y.len()
+    }
+
+    pub fn d(&self) -> usize {
+        self.x.cols()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_dense() -> Dataset {
+        let m = DenseMat::from_rows(&[
+            vec![1.0, 10.0],
+            vec![2.0, 20.0],
+            vec![3.0, 30.0],
+            vec![4.0, 40.0],
+            vec![5.0, 50.0],
+        ]);
+        Dataset::new("tiny", Features::Dense(m), vec![1.0, -1.0, 1.0, -1.0, 1.0])
+    }
+
+    #[test]
+    fn sharding_covers_all_rows() {
+        let d = tiny_dense();
+        let shards = d.shard(2);
+        assert_eq!(shards[0].n(), 3);
+        assert_eq!(shards[1].n(), 2);
+        assert_eq!(shards.iter().map(|s| s.n()).sum::<usize>(), d.n());
+        // shard 1 rows are rows 3,4 of the original
+        if let Features::Dense(m) = &shards[1].x {
+            assert_eq!(m.row(0), &[4.0, 40.0]);
+        } else {
+            panic!("expected dense");
+        }
+    }
+
+    #[test]
+    fn shard_more_workers_than_rows() {
+        let d = tiny_dense();
+        let shards = d.shard(7);
+        assert_eq!(shards.len(), 7);
+        assert_eq!(shards.iter().map(|s| s.n()).sum::<usize>(), 5);
+        assert_eq!(shards[6].n(), 0);
+    }
+
+    #[test]
+    fn standardize_dense() {
+        let mut d = tiny_dense();
+        d.standardize();
+        if let Features::Dense(m) = &d.x {
+            for j in 0..2 {
+                let mean: f64 = (0..5).map(|i| m.row(i)[j]).sum::<f64>() / 5.0;
+                let var: f64 = (0..5).map(|i| (m.row(i)[j] - mean).powi(2)).sum::<f64>() / 5.0;
+                assert!(mean.abs() < 1e-12);
+                assert!((var - 1.0).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn standardize_sparse_preserves_zeros() {
+        let m = CsrMat::from_rows(3, &[vec![(0, 2.0)], vec![(0, 2.0), (2, 4.0)], vec![]]);
+        let mut d =
+            Dataset::new("sp", Features::Sparse(m), vec![1.0, 1.0, -1.0]);
+        d.standardize();
+        if let Features::Sparse(m) = &d.x {
+            assert_eq!(m.nnz(), 3);
+            // col 0: sum sq = 8, n=3 -> scale sqrt(3/8); values 2*sqrt(3/8)
+            let expect = 2.0 * (3.0f64 / 8.0).sqrt();
+            assert!((m.values[0] - expect).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn matvec_roundtrip_dense_vs_sparse() {
+        let dense = DenseMat::from_rows(&[vec![1.0, 0.0, 2.0], vec![0.0, 3.0, 0.0]]);
+        let sparse = CsrMat::from_rows(3, &[vec![(0, 1.0), (2, 2.0)], vec![(1, 3.0)]]);
+        let fd = Features::Dense(dense);
+        let fs = Features::Sparse(sparse);
+        let theta = vec![0.5, -1.0, 2.0];
+        let mut o1 = vec![0.0; 2];
+        let mut o2 = vec![0.0; 2];
+        fd.matvec(&theta, &mut o1);
+        fs.matvec(&theta, &mut o2);
+        assert_eq!(o1, o2);
+        assert_eq!(fd.col_sq_sums(), fs.col_sq_sums());
+        assert_eq!(fd.max_row_nrm2_sq(), fs.max_row_nrm2_sq());
+    }
+}

@@ -1,0 +1,512 @@
+//! Seeded synthetic dataset generators.
+//!
+//! Each generator mirrors a dataset from the paper's evaluation. GD-SEC's
+//! censoring dynamics are driven by per-coordinate gradient scale profiles
+//! and per-worker heterogeneity, so generators reproduce those explicitly
+//! (documented per function). All generators are deterministic in `seed`.
+
+use super::{Dataset, Features};
+use crate::linalg::DenseMat;
+use crate::sparse::CsrMat;
+use crate::util::rng::Pcg64;
+
+/// MNIST-like regression set (Fig 1 / Fig 9 substitute).
+///
+/// Real MNIST properties that matter here: 784 pixel features in [0,1],
+/// strong center/border variance disparity (border pixels are almost always
+/// 0 → tiny coordinate-wise Lipschitz constants → censored early by
+/// GD-SEC), and a 10-class label used directly as the regression target.
+/// We synthesize 10 smooth "digit prototypes" on the 28×28 grid and add
+/// pixel noise modulated by a center-weighted envelope.
+pub fn mnist_like(seed: u64, n: usize) -> Dataset {
+    let d = 784usize;
+    let side = 28usize;
+    let mut rng = Pcg64::new(seed, 1);
+    // Center-weighted envelope: w(r) = exp(-(r/9)^2), r = distance to center.
+    let mut envelope = vec![0.0f64; d];
+    for i in 0..side {
+        for j in 0..side {
+            let dy = i as f64 - 13.5;
+            let dx = j as f64 - 13.5;
+            let r2 = dx * dx + dy * dy;
+            envelope[i * side + j] = (-r2 / 81.0).exp();
+        }
+    }
+    // Ten smooth prototypes: random low-frequency cosine mixtures.
+    let mut protos = Vec::with_capacity(10);
+    for _ in 0..10 {
+        let mut p = vec![0.0f64; d];
+        for _ in 0..6 {
+            let fx = rng.uniform_in(0.5, 3.0);
+            let fy = rng.uniform_in(0.5, 3.0);
+            let px = rng.uniform_in(0.0, std::f64::consts::TAU);
+            let py = rng.uniform_in(0.0, std::f64::consts::TAU);
+            let amp = rng.uniform_in(0.2, 0.6);
+            for i in 0..side {
+                for j in 0..side {
+                    let v = amp
+                        * ((fx * j as f64 / side as f64 * std::f64::consts::TAU + px).cos()
+                            * (fy * i as f64 / side as f64 * std::f64::consts::TAU + py).cos());
+                    p[i * side + j] += v;
+                }
+            }
+        }
+        for k in 0..d {
+            p[k] = (p[k].max(0.0) * envelope[k]).min(1.0);
+        }
+        protos.push(p);
+    }
+    let mut rows = Vec::with_capacity(n);
+    let mut y = Vec::with_capacity(n);
+    for _ in 0..n {
+        let c = rng.index(10);
+        let mut row = vec![0.0f64; d];
+        for k in 0..d {
+            let noise = rng.normal() * 0.15 * envelope[k];
+            row[k] = (protos[c][k] + noise).clamp(0.0, 1.0);
+        }
+        rows.push(row);
+        y.push(c as f64);
+    }
+    Dataset::new("mnist-like", Features::Dense(DenseMat::from_rows(&rows)), y)
+}
+
+/// The paper's own synthetic logistic-regression recipe (Fig 2), verbatim:
+/// M workers, `n_per` samples each, d-dimensional features. For worker `m`
+/// (1-indexed), coordinates `50m-49..=50m` ~ U(0,1) (worker-specific
+/// features), coordinates `251..=300` ~ U(0,10) (shared high-scale
+/// features), all others ~ U(0,0.01). Labels ±1 equiprobable.
+/// Samples are laid out worker-contiguously so `Dataset::shard(M)` gives
+/// each worker its own block.
+pub fn paper_logreg(seed: u64, m_workers: usize, n_per: usize, d: usize) -> Dataset {
+    assert!(d >= 300, "paper recipe needs d >= 300");
+    let mut rng = Pcg64::new(seed, 2);
+    let mut rows = Vec::with_capacity(m_workers * n_per);
+    let mut y = Vec::with_capacity(m_workers * n_per);
+    for m in 1..=m_workers {
+        let lo = 50 * m - 50; // 0-indexed inclusive start of worker block
+        let hi = 50 * m; // exclusive end
+        for _ in 0..n_per {
+            let mut row = vec![0.0f64; d];
+            for (j, item) in row.iter_mut().enumerate() {
+                *item = if j >= lo && j < hi {
+                    rng.uniform_in(0.0, 1.0)
+                } else if j >= 250 && j < 300 {
+                    rng.uniform_in(0.0, 10.0)
+                } else {
+                    rng.uniform_in(0.0, 0.01)
+                };
+            }
+            rows.push(row);
+            y.push(rng.sign());
+        }
+    }
+    Dataset::new("paper-logreg", Features::Dense(DenseMat::from_rows(&rows)), y)
+}
+
+/// DNA-like set (Fig 3 substitute): LIBSVM `dna` is 2000 train samples,
+/// 180 binary features (60 positions × 3-letter one-hot-ish encoding),
+/// 3 classes. We keep the binary block structure — exactly one hot feature
+/// per 3-wide group — and emit a ±1 regression target from a sparse ground
+/// truth over a few motif positions plus label noise.
+pub fn dna_like(seed: u64, n: usize) -> Dataset {
+    let groups = 60usize;
+    let d = groups * 3;
+    let mut rng = Pcg64::new(seed, 3);
+    // Ground-truth weights over 12 motif positions.
+    let motif: Vec<usize> = rng.sample_indices(d, 12);
+    let w: Vec<f64> = (0..12).map(|_| rng.normal() * 1.5).collect();
+    let mut rows = Vec::with_capacity(n);
+    let mut y = Vec::with_capacity(n);
+    for _ in 0..n {
+        let mut row = vec![0.0f64; d];
+        for g in 0..groups {
+            row[g * 3 + rng.index(3)] = 1.0;
+        }
+        let score: f64 = motif.iter().zip(&w).map(|(&j, &wj)| wj * row[j]).sum();
+        rows.push(row);
+        y.push(if score + rng.normal() * 0.5 > 0.0 { 1.0 } else { -1.0 });
+    }
+    Dataset::new("dna-like", Features::Dense(DenseMat::from_rows(&rows)), y)
+}
+
+/// COLON-CANCER-like set (Fig 4 substitute): 62 samples × 2000 dense
+/// gene-expression features, heavily correlated columns (genes co-express
+/// in pathways) and n ≪ d. Correlation comes from a rank-8 factor model:
+/// X = F·G + noise, features log-scaled like expression data.
+pub fn colon_like(seed: u64) -> Dataset {
+    let n = 62usize;
+    let d = 2000usize;
+    let rank = 8usize;
+    let mut rng = Pcg64::new(seed, 4);
+    let f: Vec<Vec<f64>> = (0..n).map(|_| rng.normal_vec(rank)).collect();
+    let g: Vec<Vec<f64>> = (0..rank).map(|_| rng.normal_vec(d)).collect();
+    let mut rows = Vec::with_capacity(n);
+    let mut y = Vec::with_capacity(n);
+    for fi in f.iter() {
+        let mut row = vec![0.0f64; d];
+        for (j, item) in row.iter_mut().enumerate() {
+            let mut v = 0.0;
+            for r in 0..rank {
+                v += fi[r] * g[r][j];
+            }
+            *item = v + rng.normal() * 0.3;
+        }
+        // Label from the first factor (a "tumor pathway").
+        y.push(if fi[0] > 0.0 { 1.0 } else { -1.0 });
+        rows.push(row);
+    }
+    let mut ds = Dataset::new("colon-like", Features::Dense(DenseMat::from_rows(&rows)), y);
+    ds.standardize();
+    ds
+}
+
+/// W2A-like set (Fig 5 substitute): LIBSVM `w2a` is 3470 samples × 300
+/// sparse binary features (~11 nnz/row) with ~97%/3% class imbalance.
+pub fn w2a_like(seed: u64, n: usize) -> Dataset {
+    let d = 300usize;
+    let avg_nnz = 11usize;
+    let mut rng = Pcg64::new(seed, 5);
+    // Popular features get picked more (zipf-ish weights).
+    let weights: Vec<f64> = (0..d).map(|j| 1.0 / (1.0 + j as f64).powf(0.8)).collect();
+    let truth: Vec<f64> = (0..d).map(|_| rng.normal()).collect();
+    let mut rows = Vec::with_capacity(n);
+    let mut y = Vec::with_capacity(n);
+    for _ in 0..n {
+        let k = 1 + rng.index(2 * avg_nnz - 1);
+        let mut row = vec![0.0f64; d];
+        for _ in 0..k {
+            row[rng.categorical(&weights)] = 1.0;
+        }
+        let score: f64 = row.iter().zip(&truth).map(|(x, w)| x * w).sum();
+        // Shifted threshold → class imbalance like w2a.
+        y.push(if score > 2.5 { 1.0 } else { -1.0 });
+        rows.push(row);
+    }
+    Dataset::new("w2a-like", Features::Dense(DenseMat::from_rows(&rows)), y)
+}
+
+/// RCV1-like sparse set (Fig 7 substitute): text tf-idf with power-law
+/// feature frequencies. Defaults mirror RCV1-train: d = 47236, ~50 nnz per
+/// document. Column popularity ~ Zipf(1.1); values are tf-idf-ish positive
+/// reals; stored CSR. The wildly heterogeneous per-coordinate smoothness
+/// L^i this induces is exactly what Fig 7's ξ_i = ξ/L^i scaling exploits.
+pub fn rcv1_like(seed: u64, n: usize, d: usize, avg_nnz: usize) -> Dataset {
+    let mut rng = Pcg64::new(seed, 6);
+    // Zipf column sampler via inverse-CDF over precomputed cumulative
+    // weights (O(log d) per draw).
+    let mut cum = Vec::with_capacity(d);
+    let mut total = 0.0f64;
+    for j in 0..d {
+        total += 1.0 / (1.0 + j as f64).powf(1.1);
+        cum.push(total);
+    }
+    // Sparse ground truth over frequent features.
+    let truth_nnz = 200.min(d);
+    let truth_idx: Vec<usize> = (0..truth_nnz).map(|_| zipf_draw(&mut rng, &cum)).collect();
+    let truth_w: Vec<f64> = (0..truth_nnz).map(|_| rng.normal()).collect();
+    let mut rows: Vec<Vec<(u32, f64)>> = Vec::with_capacity(n);
+    let mut y = Vec::with_capacity(n);
+    for _ in 0..n {
+        let k = 1 + rng.index(2 * avg_nnz - 1);
+        let mut cols: Vec<u32> = (0..k).map(|_| zipf_draw(&mut rng, &cum) as u32).collect();
+        cols.sort_unstable();
+        cols.dedup();
+        let mut row: Vec<(u32, f64)> =
+            cols.iter().map(|&c| (c, rng.uniform_in(0.05, 1.0))).collect();
+        let mut score = 0.0;
+        for &(c, v) in &row {
+            for (t, &ti) in truth_idx.iter().enumerate() {
+                if ti == c as usize {
+                    score += truth_w[t] * v;
+                }
+            }
+        }
+        y.push(if score + rng.normal() * 0.1 > 0.0 { 1.0 } else { -1.0 });
+        // Row-normalize to unit L2 norm, like the real RCV1 (cosine
+        // normalization). Column scale disparity — popular features carry
+        // far more mass → heterogeneous L^i — is preserved, which is what
+        // Fig 7's ξ_i = ξ/L^i scaling exploits.
+        let norm = row.iter().map(|&(_, v)| v * v).sum::<f64>().sqrt();
+        if norm > 0.0 {
+            for item in row.iter_mut() {
+                item.1 /= norm;
+            }
+        }
+        rows.push(row);
+    }
+    Dataset::new("rcv1-like", Features::Sparse(CsrMat::from_rows(d, &rows)), y)
+}
+
+fn zipf_draw(rng: &mut Pcg64, cum: &[f64]) -> usize {
+    let t = rng.uniform() * cum[cum.len() - 1];
+    match cum.binary_search_by(|c| c.partial_cmp(&t).unwrap()) {
+        Ok(i) | Err(i) => i.min(cum.len() - 1),
+    }
+}
+
+/// CIFAR-10-like regression set (Fig 8 substitute): 3072 dense features
+/// (3×32×32), spatially correlated within channels (neighbouring pixels
+/// correlate), standardized, labels 0..9 used as regression targets.
+pub fn cifar_like(seed: u64, n: usize) -> Dataset {
+    let d = 3072usize;
+    let side = 32usize;
+    let mut rng = Pcg64::new(seed, 7);
+    // Class prototypes: per-channel low-frequency fields.
+    let mut protos: Vec<Vec<f64>> = Vec::with_capacity(10);
+    for _ in 0..10 {
+        let mut p = vec![0.0f64; d];
+        for ch in 0..3 {
+            let fx = rng.uniform_in(0.5, 2.0);
+            let fy = rng.uniform_in(0.5, 2.0);
+            let ph = rng.uniform_in(0.0, std::f64::consts::TAU);
+            let amp = rng.uniform_in(0.5, 1.0);
+            for i in 0..side {
+                for j in 0..side {
+                    p[ch * 1024 + i * side + j] = amp
+                        * ((fx * j as f64 / 32.0 * std::f64::consts::TAU
+                            + fy * i as f64 / 32.0 * std::f64::consts::TAU
+                            + ph)
+                            .sin());
+                }
+            }
+        }
+        protos.push(p);
+    }
+    let mut rows = Vec::with_capacity(n);
+    let mut y = Vec::with_capacity(n);
+    for _ in 0..n {
+        let c = rng.index(10);
+        let mut row = vec![0.0f64; d];
+        // Smooth noise: average of iid noise with neighbour (cheap 1D blur).
+        let mut prev = 0.0;
+        for k in 0..d {
+            let e = rng.normal();
+            let sm = 0.6 * prev + 0.4 * e;
+            prev = sm;
+            row[k] = protos[c][k] + 0.5 * sm;
+        }
+        rows.push(row);
+        y.push(c as f64);
+    }
+    let mut ds = Dataset::new("cifar-like", Features::Dense(DenseMat::from_rows(&rows)), y);
+    ds.standardize();
+    ds
+}
+
+/// Fig 6's engineered coordinate-wise-Lipschitz set, verbatim from the
+/// paper: 10 workers × 50 samples, d = 50. Entries ~ U(0, 0.01), then the
+/// n-th sample of worker m has its n-th entry replaced by `m · 1.1^n`
+/// (1-indexed), producing `L_m^1 < ... < L_m^50` and `L_1 < ... < L_10`.
+/// Labels ±1 equiprobable. Samples worker-contiguous for `shard(10)`.
+pub fn coord_lipschitz(seed: u64) -> Dataset {
+    let m_workers = 10usize;
+    let n_per = 50usize;
+    let d = 50usize;
+    let mut rng = Pcg64::new(seed, 8);
+    let mut rows = Vec::with_capacity(m_workers * n_per);
+    let mut y = Vec::with_capacity(m_workers * n_per);
+    for m in 1..=m_workers {
+        for n in 1..=n_per {
+            let mut row: Vec<f64> = (0..d).map(|_| rng.uniform_in(0.0, 0.01)).collect();
+            row[n - 1] = m as f64 * 1.1f64.powi(n as i32);
+            rows.push(row);
+            y.push(rng.sign());
+        }
+    }
+    Dataset::new("coord-lipschitz", Features::Dense(DenseMat::from_rows(&rows)), y)
+}
+
+/// Synthetic corpus for the end-to-end transformer example: token
+/// sequences from a 2nd-order Markov chain with a planted periodic
+/// structure, so a small LM has real signal to fit (loss decreases well
+/// below the uniform-entropy baseline).
+pub fn token_corpus(seed: u64, n_seqs: usize, seq_len: usize, vocab: usize) -> Vec<Vec<u32>> {
+    let mut rng = Pcg64::new(seed, 9);
+    // Random sparse transition table: each (prev2, prev1) prefers ~4 tokens.
+    let table: Vec<[u32; 4]> = (0..vocab * vocab)
+        .map(|_| {
+            [
+                rng.index(vocab) as u32,
+                rng.index(vocab) as u32,
+                rng.index(vocab) as u32,
+                rng.index(vocab) as u32,
+            ]
+        })
+        .collect();
+    (0..n_seqs)
+        .map(|_| {
+            let mut seq = Vec::with_capacity(seq_len);
+            let mut p2 = rng.index(vocab);
+            let mut p1 = rng.index(vocab);
+            for _ in 0..seq_len {
+                let next = if rng.bernoulli(0.85) {
+                    table[p2 * vocab + p1][rng.index(4)] as usize
+                } else {
+                    rng.index(vocab)
+                };
+                seq.push(next as u32);
+                p2 = p1;
+                p1 = next;
+            }
+            seq
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Features;
+
+    #[test]
+    fn mnist_like_shapes_and_range() {
+        let ds = mnist_like(1, 200);
+        assert_eq!(ds.n(), 200);
+        assert_eq!(ds.d(), 784);
+        if let Features::Dense(m) = &ds.x {
+            assert!(m.data.iter().all(|&v| (0.0..=1.0).contains(&v)));
+        }
+        assert!(ds.y.iter().all(|&c| (0.0..10.0).contains(&c)));
+        // Border pixels have much lower variance than center pixels.
+        if let Features::Dense(m) = &ds.x {
+            let var = |j: usize| {
+                let mean: f64 = (0..m.rows).map(|i| m.row(i)[j]).sum::<f64>() / m.rows as f64;
+                (0..m.rows).map(|i| (m.row(i)[j] - mean).powi(2)).sum::<f64>() / m.rows as f64
+            };
+            let center = var(13 * 28 + 13);
+            let corner = var(0);
+            assert!(center > 10.0 * corner.max(1e-12), "center={center} corner={corner}");
+        }
+    }
+
+    #[test]
+    fn paper_logreg_block_structure() {
+        let ds = paper_logreg(7, 5, 50, 300);
+        assert_eq!(ds.n(), 250);
+        let shards = ds.shard(5);
+        // Worker 2 (0-indexed 1): its block coords 50..100 are U(0,1);
+        // coords 0..50 should be U(0,0.01).
+        if let Features::Dense(m) = &shards[1].x {
+            let mean_own: f64 =
+                (0..m.rows).map(|i| m.row(i)[60]).sum::<f64>() / m.rows as f64;
+            let mean_other: f64 =
+                (0..m.rows).map(|i| m.row(i)[10]).sum::<f64>() / m.rows as f64;
+            let mean_shared: f64 =
+                (0..m.rows).map(|i| m.row(i)[270]).sum::<f64>() / m.rows as f64;
+            assert!((mean_own - 0.5).abs() < 0.15, "own={mean_own}");
+            assert!(mean_other < 0.01, "other={mean_other}");
+            assert!((mean_shared - 5.0).abs() < 1.5, "shared={mean_shared}");
+        }
+    }
+
+    #[test]
+    fn dna_like_one_hot_groups() {
+        let ds = dna_like(3, 100);
+        assert_eq!(ds.d(), 180);
+        if let Features::Dense(m) = &ds.x {
+            for i in 0..m.rows {
+                let row = m.row(i);
+                for g in 0..60 {
+                    let s: f64 = row[g * 3..g * 3 + 3].iter().sum();
+                    assert_eq!(s, 1.0);
+                }
+            }
+        }
+        assert!(ds.y.iter().all(|&v| v == 1.0 || v == -1.0));
+    }
+
+    #[test]
+    fn colon_like_dims() {
+        let ds = colon_like(4);
+        assert_eq!(ds.n(), 62);
+        assert_eq!(ds.d(), 2000);
+    }
+
+    #[test]
+    fn w2a_like_sparse_binary_imbalanced() {
+        let ds = w2a_like(5, 1000);
+        assert_eq!(ds.d(), 300);
+        let pos = ds.y.iter().filter(|&&v| v > 0.0).count();
+        let frac = pos as f64 / 1000.0;
+        assert!(frac < 0.25, "positive fraction {frac} should be small (w2a-like imbalance)");
+        if let Features::Dense(m) = &ds.x {
+            let nnz: usize = m.data.iter().filter(|&&v| v != 0.0).count();
+            let per_row = nnz as f64 / 1000.0;
+            assert!((5.0..20.0).contains(&per_row), "nnz/row={per_row}");
+        }
+    }
+
+    #[test]
+    fn rcv1_like_sparse_powerlaw() {
+        let ds = rcv1_like(6, 500, 5000, 50);
+        assert_eq!(ds.d(), 5000);
+        if let Features::Sparse(m) = &ds.x {
+            let per_row = m.nnz() as f64 / 500.0;
+            assert!((20.0..80.0).contains(&per_row), "nnz/row={per_row}");
+            // power law: first 1% of columns should hold a large share
+            let sums = m.col_sq_sums();
+            let head: f64 = sums[..50].iter().sum();
+            let total: f64 = sums.iter().sum();
+            assert!(head / total > 0.15, "head share {}", head / total);
+        } else {
+            panic!("expected sparse");
+        }
+    }
+
+    #[test]
+    fn coord_lipschitz_structure() {
+        let ds = coord_lipschitz(2);
+        assert_eq!(ds.n(), 500);
+        assert_eq!(ds.d(), 50);
+        if let Features::Dense(m) = &ds.x {
+            // worker 3 (1-indexed), sample 10: row index 2*50+9, entry 9 = 3*1.1^10
+            let v = m.row(2 * 50 + 9)[9];
+            assert!((v - 3.0 * 1.1f64.powi(10)).abs() < 1e-9);
+        }
+        // coordinate-wise smoothness increases along coordinates
+        let l = ds.x.col_sq_sums();
+        assert!(l[49] > l[10] && l[10] > l[0]);
+    }
+
+    #[test]
+    fn cifar_like_standardized() {
+        let ds = cifar_like(8, 100);
+        assert_eq!(ds.d(), 3072);
+        if let Features::Dense(m) = &ds.x {
+            let j = 512;
+            let mean: f64 = (0..m.rows).map(|i| m.row(i)[j]).sum::<f64>() / m.rows as f64;
+            assert!(mean.abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn token_corpus_has_structure() {
+        let seqs = token_corpus(1, 50, 64, 32);
+        assert_eq!(seqs.len(), 50);
+        assert!(seqs.iter().all(|s| s.len() == 64 && s.iter().all(|&t| t < 32)));
+        // Bigram repetition should exceed uniform chance substantially.
+        let mut counts = std::collections::HashMap::new();
+        for s in &seqs {
+            for w in s.windows(3) {
+                *counts.entry((w[0], w[1], w[2])).or_insert(0usize) += 1;
+            }
+        }
+        let max = counts.values().max().copied().unwrap_or(0);
+        assert!(max >= 3, "max trigram count {max}");
+    }
+
+    #[test]
+    fn generators_deterministic() {
+        let a = mnist_like(42, 20);
+        let b = mnist_like(42, 20);
+        if let (Features::Dense(ma), Features::Dense(mb)) = (&a.x, &b.x) {
+            assert_eq!(ma.data, mb.data);
+        }
+        assert_eq!(a.y, b.y);
+        let c = mnist_like(43, 20);
+        if let (Features::Dense(ma), Features::Dense(mc)) = (&a.x, &c.x) {
+            assert_ne!(ma.data, mc.data);
+        }
+    }
+}

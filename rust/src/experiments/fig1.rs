@@ -1,0 +1,113 @@
+//! Fig 1 — regularized linear regression on MNIST (2000 samples, M = 5):
+//! objective error vs iterations and vs transmitted bits for GD, GD-SEC,
+//! top-j, CGD, QGD and NoUnif-IAG.
+//!
+//! Paper setup: λ = 1/N, α = 1/L tuned for GD and shared (except top-j's
+//! decreasing schedule and IAG's α/(2ML)), ξ/M = 800 for GD-SEC, ξ̃/M = 1
+//! for CGD, top-100 with γ₀ = 0.01. Headline: GD-SEC saves ≈99.34% of the
+//! bits at objective error 5.4e-3.
+
+use super::{common_eps, compare_table, write_traces, ExpContext, FigReport};
+use crate::algo::gdsec::{GdSecConfig, Xi};
+use crate::algo::{cgd, gd, gdsec, iag, qgd, topj};
+use crate::data::synthetic;
+use crate::objectives::Problem;
+use anyhow::Result;
+
+pub fn run(ctx: &ExpContext) -> Result<FigReport> {
+    let n = ctx.samples(2000);
+    let m = 5;
+    let data = synthetic::mnist_like(ctx.seed, n);
+    let lambda = 1.0 / n as f64;
+    let prob = Problem::linear(data, m, lambda);
+    let iters = ctx.iters(500);
+    let l = prob.lipschitz();
+    let alpha = 1.0 / l;
+    let fstar = prob.estimate_fstar(gdsec::fstar_iters(iters));
+
+    let t_gd = gd::run(&prob, &gd::GdConfig { alpha, eval_every: 1, fstar: Some(fstar) }, iters);
+    let t_sec = gdsec::run(
+        &prob,
+        &GdSecConfig {
+            alpha,
+            beta: 0.01,
+            // Paper uses ξ/M = 800 on real MNIST; the synthetic substitute
+            // has hotter gradient coordinates, ξ/M = 200 is the largest
+            // threshold that keeps GD-SEC on GD's convergence curve.
+            xi: Xi::Uniform(200.0 * m as f64),
+            fstar: Some(fstar),
+            ..Default::default()
+        },
+        iters,
+    );
+    let t_topj = topj::run(
+        &prob,
+        &topj::TopJConfig {
+            j: 100,
+            gamma0: 0.01,
+            lambda,
+            eval_every: 1,
+            fstar: Some(fstar),
+        },
+        iters,
+    );
+    let t_cgd = cgd::run(
+        &prob,
+        &cgd::CgdConfig { alpha, xi: m as f64, eval_every: 1, fstar: Some(fstar) },
+        iters,
+    );
+    let t_qgd = qgd::run(
+        &prob,
+        &qgd::QgdConfig { alpha, s: 255, seed: ctx.seed, eval_every: 1, fstar: Some(fstar) },
+        iters,
+    );
+    let t_iag = iag::run(
+        &prob,
+        &iag::IagConfig {
+            alpha: alpha / (2.0 * m as f64),
+            seed: ctx.seed,
+            eval_every: 1,
+            fstar: Some(fstar),
+        },
+        iters,
+    );
+
+    let traces = [&t_gd, &t_sec, &t_topj, &t_cgd, &t_qgd, &t_iag];
+    // Paper target 5.4e-3 is specific to real MNIST scaling; use it when
+    // reachable, else a common reachable target.
+    let eps = if t_gd.iters_to_reach(5.4e-3).is_some() && t_sec.iters_to_reach(5.4e-3).is_some() {
+        5.4e-3
+    } else {
+        common_eps(&[&t_gd, &t_sec], 2.0)
+    };
+    let (rendered, headline) = compare_table(&traces, eps);
+    let csv_files = write_traces(ctx, "fig1", &traces)?;
+    Ok(FigReport {
+        fig: "fig1".into(),
+        title: format!("linreg / mnist-like (n={n}, d=784, M={m}), eps={eps:.2e}"),
+        rendered,
+        csv_files,
+        headline,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quick_run_shape() {
+        let dir = std::env::temp_dir().join(format!("gdsec_fig1_{}", std::process::id()));
+        let ctx = ExpContext::quick(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let r = run(&ctx).unwrap();
+        assert_eq!(r.csv_files.len(), 6);
+        assert!(r.rendered.contains("GD-SEC"));
+        // GD-SEC must save bits vs GD at the common target.
+        let sec = r.headline.iter().find(|(k, _)| k.starts_with("GD-SEC"));
+        if let Some((_, s)) = sec {
+            assert!(*s > 0.5, "GD-SEC savings too small: {s}");
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,74 @@
+//! Fig 5 — impact of ξ: nonconvex nonlinear least squares on W2A-like
+//! data (d = 300). GD vs GD-SEC with ξ/M ∈ {500, 2000, 5000}. Paper
+//! headline: ξ/M = 5000 reaches objective error 0.0112 with ≈0.38% of
+//! GD's bits; larger ξ trades a few extra iterations for fewer bits.
+
+use super::{common_eps, compare_table, write_traces, ExpContext, FigReport};
+use crate::algo::gdsec::{GdSecConfig, Xi};
+use crate::algo::{gd, gdsec};
+use crate::data::synthetic;
+use crate::objectives::Problem;
+use anyhow::Result;
+
+pub fn run(ctx: &ExpContext) -> Result<FigReport> {
+    let n = ctx.samples(3470);
+    let m = 5;
+    let data = synthetic::w2a_like(ctx.seed, n);
+    let lambda = 1.0 / n as f64;
+    let prob = Problem::nlls(data, m, lambda);
+    let iters = ctx.iters(1500);
+    let alpha = 1.0 / prob.lipschitz();
+    let fstar = prob.estimate_fstar(gdsec::fstar_iters(iters));
+
+    let t_gd = gd::run(&prob, &gd::GdConfig { alpha, eval_every: 1, fstar: Some(fstar) }, iters);
+    let mut variants = Vec::new();
+    for xi_over_m in [500.0, 2000.0, 5000.0] {
+        let mut t = gdsec::run(
+            &prob,
+            &GdSecConfig {
+                alpha,
+                beta: 0.01,
+                xi: Xi::Uniform(xi_over_m * m as f64),
+                fstar: Some(fstar),
+                ..Default::default()
+            },
+            iters,
+        );
+        t.algo = format!("GD-SEC(ξ/M={xi_over_m})");
+        variants.push(t);
+    }
+    let mut traces: Vec<&crate::algo::trace::Trace> = vec![&t_gd];
+    traces.extend(variants.iter());
+    let eps = common_eps(&traces, 2.0);
+    let (rendered, mut headline) = compare_table(&traces, eps);
+    // Bits monotonically decrease with xi.
+    headline.push((
+        "bits_ratio_xi5000_vs_gd".into(),
+        variants[2].total_bits() as f64 / t_gd.total_bits() as f64,
+    ));
+    let csv_files = write_traces(ctx, "fig5", &traces)?;
+    Ok(FigReport {
+        fig: "fig5".into(),
+        title: format!("nlls / w2a-like (n={n}, d=300, M={m}), eps={eps:.2e}"),
+        rendered,
+        csv_files,
+        headline,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quick_bits_decrease_with_xi() {
+        let dir = std::env::temp_dir().join(format!("gdsec_fig5_{}", std::process::id()));
+        let ctx = ExpContext::quick(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let r = run(&ctx).unwrap();
+        let ratio =
+            r.headline.iter().find(|(k, _)| k == "bits_ratio_xi5000_vs_gd").unwrap().1;
+        assert!(ratio < 0.5, "xi=5000 should spend far fewer bits than GD: {ratio}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

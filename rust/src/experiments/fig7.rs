@@ -1,0 +1,114 @@
+//! Fig 7 — coordinate-scaled thresholds on RCV1-like sparse data
+//! (logistic regression, d = 47236): ξ_i = ξ/L^i vs uniform ξ_i = ξ,
+//! objective value vs total transmitted entries. Scaling by the
+//! coordinate-wise smoothness lets slow coordinates carry much larger
+//! thresholds → fewer transmitted entries at equal objective.
+
+use super::{write_traces, ExpContext, FigReport};
+use crate::algo::gdsec::{GdSecConfig, Xi};
+use crate::algo::gdsec;
+use crate::data::synthetic;
+use crate::objectives::Problem;
+use crate::util::tablefmt::{sci, Table};
+use anyhow::Result;
+
+pub fn run(ctx: &ExpContext) -> Result<FigReport> {
+    // Full RCV1-train is 15181×47236; quick mode shrinks n and d.
+    let (n, d) = if ctx.quick { (800, 4000) } else { (6000, 47236) };
+    let m = 5;
+    let data = synthetic::rcv1_like(ctx.seed, n, d, 50);
+    let lambda = 1.0 / n as f64;
+    let prob = Problem::logistic(data, m, lambda);
+    let iters = ctx.iters(1000);
+    // 0.5/L: the power-iteration L estimate is slightly loose at d=47k
+    // and GD-SEC's state dynamics sit near the stability edge at 1/L.
+    let alpha = 0.5 / prob.lipschitz();
+    let fstar = prob.estimate_fstar(ctx.iters(2000));
+    // Grid-searched scale (paper does a full 2^a grid; the shape of the
+    // result — scaled beats uniform — is what we reproduce).
+    let xi = 1.0 * m as f64;
+
+    let mut t_uniform = gdsec::run(
+        &prob,
+        &GdSecConfig {
+            alpha,
+            beta: 0.01,
+            xi: Xi::Uniform(xi),
+            eval_every: 5,
+            fstar: Some(fstar),
+            ..Default::default()
+        },
+        iters,
+    );
+    t_uniform.algo = "GD-SEC(ξ_i=ξ)".into();
+    let coord_l = prob.coord_lipschitz();
+    // Normalize by the geometric mean of L^i so the typical threshold
+    // matches the uniform run (the arithmetic mean is dominated by the
+    // few very popular features under the power-law profile).
+    let l_mean = (coord_l.iter().map(|l| l.max(1e-300).ln()).sum::<f64>()
+        / coord_l.len() as f64)
+        .exp();
+    let mut t_scaled = gdsec::run(
+        &prob,
+        &GdSecConfig {
+            alpha,
+            beta: 0.01,
+            xi: Xi::scaled_by_lipschitz(xi * l_mean, &coord_l),
+            eval_every: 5,
+            fstar: Some(fstar),
+            ..Default::default()
+        },
+        iters,
+    );
+    t_scaled.algo = "GD-SEC(ξ_i=ξ/L^i)".into();
+
+    let traces = [&t_uniform, &t_scaled];
+    let mut table = Table::new(&["variant", "final err", "entries sent", "bits"]);
+    for t in &traces {
+        let last = t.rows.last().unwrap();
+        table.row(vec![
+            t.algo.clone(),
+            sci(t.final_error()),
+            last.entries.to_string(),
+            last.bits.to_string(),
+        ]);
+    }
+    let e_uniform = t_uniform.rows.last().unwrap().entries;
+    let e_scaled = t_scaled.rows.last().unwrap().entries;
+    let csv_files = write_traces(ctx, "fig7", &traces)?;
+    Ok(FigReport {
+        fig: "fig7".into(),
+        title: format!("logreg / rcv1-like (n={n}, d={d}, M={m})"),
+        rendered: table.render(),
+        csv_files,
+        headline: vec![
+            ("entries_scaled_over_uniform".into(), e_scaled as f64 / e_uniform.max(1) as f64),
+            ("uniform_final_err".into(), t_uniform.final_error()),
+            ("scaled_final_err".into(), t_scaled.final_error()),
+        ],
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quick_scaled_sends_fewer_entries_at_similar_error() {
+        let dir = std::env::temp_dir().join(format!("gdsec_fig7_{}", std::process::id()));
+        let ctx = ExpContext::quick(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let r = run(&ctx).unwrap();
+        let ratio =
+            r.headline.iter().find(|(k, _)| k == "entries_scaled_over_uniform").unwrap().1;
+        let e_u = r.headline.iter().find(|(k, _)| k == "uniform_final_err").unwrap().1;
+        let e_s = r.headline.iter().find(|(k, _)| k == "scaled_final_err").unwrap().1;
+        // Pareto criterion (paper Fig 7): scaled must be at least as good
+        // on one axis without losing on the other.
+        assert!(
+            (ratio <= 1.05 && e_s <= e_u * 1.05) || (ratio < 0.9) || (e_s < e_u * 0.9),
+            "scaled not Pareto-comparable: entries ratio {ratio}, err {e_s} vs {e_u}"
+        );
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,83 @@
+//! Fig 9 — stochastic extension: linear regression on MNIST-like data
+//! (6000 samples, M = 100, minibatch 1, step schedule
+//! α_k = γ₀(1+γ₀λk)^{-1} with γ₀ = 0.01): SGD vs SGD-SEC vs QSGD-SEC,
+//! ξ/M = 100. SGD-SEC tracks SGD's convergence with far fewer bits, and
+//! quantizing the survivors (QSGD-SEC) compounds the savings.
+
+use super::{compare_table, write_traces, ExpContext, FigReport};
+use crate::algo::gdsec::Xi;
+use crate::algo::sgdsec::{self, SgdSecConfig};
+use crate::data::synthetic;
+use crate::objectives::Problem;
+use anyhow::Result;
+
+pub fn run(ctx: &ExpContext) -> Result<FigReport> {
+    let n = ctx.samples(6000);
+    let m = if ctx.quick { 20 } else { 100 };
+    let data = synthetic::mnist_like(ctx.seed, n);
+    let lambda = 1.0 / n as f64;
+    let prob = Problem::linear(data, m, lambda);
+    let iters = ctx.iters(1000);
+    let fstar = prob.estimate_fstar(ctx.iters(3000));
+
+    let base = SgdSecConfig {
+        gamma0: 0.01,
+        lambda,
+        beta: 0.01,
+        xi: Xi::Uniform(100.0 * m as f64),
+        batch: 1,
+        seed: ctx.seed,
+        quantize_s: None,
+        eval_every: 5,
+        fstar: Some(fstar),
+    };
+    let t_sgd = sgdsec::run_sgd(&prob, &base, iters);
+    let t_sec = sgdsec::run_sgdsec(&prob, &base, iters);
+    let mut qcfg = base.clone();
+    qcfg.quantize_s = Some(255);
+    let t_qsec = sgdsec::run_sgdsec(&prob, &qcfg, iters);
+
+    let traces = [&t_sgd, &t_sec, &t_qsec];
+    // Stochastic noise floor: target = 2x the best final error.
+    let eps = traces
+        .iter()
+        .map(|t| t.final_error())
+        .fold(f64::INFINITY, f64::min)
+        .max(1e-12)
+        * 2.0;
+    let (rendered, mut headline) = compare_table(&traces, eps);
+    headline.push((
+        "sgdsec_bits_over_sgd".into(),
+        t_sec.total_bits() as f64 / t_sgd.total_bits().max(1) as f64,
+    ));
+    headline.push((
+        "qsgdsec_bits_over_sgdsec".into(),
+        t_qsec.total_bits() as f64 / t_sec.total_bits().max(1) as f64,
+    ));
+    let csv_files = write_traces(ctx, "fig9", &traces)?;
+    Ok(FigReport {
+        fig: "fig9".into(),
+        title: format!("SGD variants / mnist-like (n={n}, d=784, M={m}, batch=1)"),
+        rendered,
+        csv_files,
+        headline,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quick_savings_compound() {
+        let dir = std::env::temp_dir().join(format!("gdsec_fig9_{}", std::process::id()));
+        let ctx = ExpContext::quick(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let r = run(&ctx).unwrap();
+        let sec = r.headline.iter().find(|(k, _)| k == "sgdsec_bits_over_sgd").unwrap().1;
+        let q = r.headline.iter().find(|(k, _)| k == "qsgdsec_bits_over_sgdsec").unwrap().1;
+        assert!(sec < 1.0, "SGD-SEC should beat SGD on bits: {sec}");
+        assert!(q < 1.0, "QSGD-SEC should beat SGD-SEC on bits: {q}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,176 @@
+//! Figure-regeneration harness: one runner per figure of the paper's
+//! evaluation (§IV). Each runner builds the workload (synthetic substitute
+//! per DESIGN.md §6), runs GD-SEC and the figure's baselines, writes the
+//! plotted series to `results/figN_*.csv`, and prints a paper-style
+//! summary table (who wins, by what factor).
+//!
+//! `quick` mode shrinks iteration counts ~10× so the whole suite runs in
+//! CI / `cargo test`; the bench targets (`cargo bench`) run full size.
+
+pub mod fig1;
+pub mod fig2;
+pub mod fig3;
+pub mod fig4;
+pub mod fig5;
+pub mod fig6;
+pub mod fig7;
+pub mod fig8;
+pub mod fig9;
+
+use crate::algo::trace::Trace;
+use crate::util::tablefmt::{bits, pct, sci, Table};
+use anyhow::Result;
+use std::path::{Path, PathBuf};
+
+/// Shared experiment context.
+#[derive(Debug, Clone)]
+pub struct ExpContext {
+    pub out_dir: PathBuf,
+    pub quick: bool,
+    pub seed: u64,
+}
+
+impl ExpContext {
+    pub fn new<P: AsRef<Path>>(out_dir: P) -> ExpContext {
+        ExpContext { out_dir: out_dir.as_ref().to_path_buf(), quick: false, seed: 42 }
+    }
+
+    pub fn quick<P: AsRef<Path>>(out_dir: P) -> ExpContext {
+        ExpContext { quick: true, ..ExpContext::new(out_dir) }
+    }
+
+    /// Scale an iteration budget for quick mode.
+    pub fn iters(&self, full: usize) -> usize {
+        if self.quick {
+            (full / 10).clamp(20, 200)
+        } else {
+            full
+        }
+    }
+
+    /// Scale a sample count for quick mode.
+    pub fn samples(&self, full: usize) -> usize {
+        if self.quick {
+            (full / 5).max(50)
+        } else {
+            full
+        }
+    }
+
+    pub fn csv_path(&self, name: &str) -> PathBuf {
+        self.out_dir.join(name)
+    }
+}
+
+/// The output of one figure runner.
+#[derive(Debug, Clone)]
+pub struct FigReport {
+    pub fig: String,
+    pub title: String,
+    /// Rendered summary table (printed by the CLI / benches).
+    pub rendered: String,
+    pub csv_files: Vec<String>,
+    /// Headline numbers for EXPERIMENTS.md (name, value).
+    pub headline: Vec<(String, f64)>,
+}
+
+impl FigReport {
+    pub fn print(&self) {
+        println!("== {}: {} ==", self.fig, self.title);
+        println!("{}", self.rendered);
+        for (k, v) in &self.headline {
+            println!("  {k}: {v:.4}");
+        }
+        if !self.csv_files.is_empty() {
+            println!("  csv: {}", self.csv_files.join(", "));
+        }
+    }
+}
+
+/// Run a figure by id ("fig1".."fig9" or "all").
+pub fn run_figure(fig: &str, ctx: &ExpContext) -> Result<Vec<FigReport>> {
+    std::fs::create_dir_all(&ctx.out_dir)?;
+    let one = |r: FigReport| Ok(vec![r]);
+    match fig {
+        "fig1" | "1" => one(fig1::run(ctx)?),
+        "fig2" | "2" => one(fig2::run(ctx)?),
+        "fig3" | "3" => one(fig3::run(ctx)?),
+        "fig4" | "4" => one(fig4::run(ctx)?),
+        "fig5" | "5" => one(fig5::run(ctx)?),
+        "fig6" | "6" => one(fig6::run(ctx)?),
+        "fig7" | "7" => one(fig7::run(ctx)?),
+        "fig8" | "8" => one(fig8::run(ctx)?),
+        "fig9" | "9" => one(fig9::run(ctx)?),
+        "all" => {
+            let mut out = Vec::new();
+            for f in ["fig1", "fig2", "fig3", "fig4", "fig5", "fig6", "fig7", "fig8", "fig9"] {
+                out.extend(run_figure(f, ctx)?);
+            }
+            Ok(out)
+        }
+        other => anyhow::bail!("unknown figure '{other}' (fig1..fig9 or all)"),
+    }
+}
+
+/// Standard comparison table: per algorithm, iterations and bits to reach
+/// the target error, total bits, and savings vs the first (reference,
+/// usually GD) trace.
+pub fn compare_table(traces: &[&Trace], eps: f64) -> (String, Vec<(String, f64)>) {
+    let mut table = Table::new(&[
+        "algorithm",
+        "final err",
+        &format!("iters→{eps:.0e}"),
+        &format!("bits→{eps:.0e}"),
+        "total bits",
+        "tx",
+        "savings vs ref",
+    ]);
+    let reference = traces[0];
+    let mut headline = Vec::new();
+    for t in traces {
+        let iters = t.iters_to_reach(eps).map(|v| v.to_string()).unwrap_or("-".into());
+        let b = t.bits_to_reach(eps);
+        let savings = t.savings_vs(reference, eps);
+        table.row(vec![
+            t.algo.clone(),
+            sci(t.final_error()),
+            iters,
+            b.map(|v| bits(v as f64)).unwrap_or("-".into()),
+            bits(t.total_bits() as f64),
+            t.total_transmissions().to_string(),
+            if savings.is_nan() { "-".into() } else { pct(savings) },
+        ]);
+        if !savings.is_nan() {
+            headline.push((format!("{} savings@{eps:.0e}", t.algo), savings));
+        }
+    }
+    (table.render(), headline)
+}
+
+/// Write every trace's CSV under the context dir with a figure prefix.
+pub fn write_traces(ctx: &ExpContext, prefix: &str, traces: &[&Trace]) -> Result<Vec<String>> {
+    let mut files = Vec::new();
+    for t in traces {
+        let slug: String = t
+            .algo
+            .chars()
+            .map(|c| if c.is_alphanumeric() { c.to_ascii_lowercase() } else { '_' })
+            .collect();
+        let name = format!("{prefix}_{slug}.csv");
+        t.write_csv(ctx.csv_path(&name))?;
+        files.push(name);
+    }
+    Ok(files)
+}
+
+/// Pick a target error that every converging trace reaches: a small
+/// multiple of the worst final error among `traces` (robust to quick mode
+/// where absolute targets like 1e-10 are unreachable).
+pub fn common_eps(traces: &[&Trace], slack: f64) -> f64 {
+    traces
+        .iter()
+        .map(|t| t.final_error())
+        .filter(|e| e.is_finite() && *e > 0.0)
+        .fold(0.0f64, f64::max)
+        * slack
+}

@@ -1,0 +1,42 @@
+//! # gdsec — Distributed Learning with Sparsified Gradient Differences
+//!
+//! A production-grade reproduction of **GD-SEC** (Chen, Blum, Takáč, Sadler,
+//! IEEE 2022): communication-efficient distributed gradient descent where
+//! each worker transmits an adaptively **sparsified gradient difference**
+//! with **error correction** and dual **state variables** (worker + server).
+//!
+//! The library is the L3 (coordinator) layer of a three-layer stack:
+//!
+//! * **L1** — Pallas kernels (`python/compile/kernels/`) for the fused
+//!   censor + error-correction step and the shard gradient.
+//! * **L2** — JAX worker-step functions and a small transformer LM
+//!   (`python/compile/model.py`), AOT-lowered once to `artifacts/*.hlo.txt`.
+//! * **L3** — this crate: the synchronous worker–server coordinator, the
+//!   wire codecs (RLE / QSGD), every baseline algorithm from the paper's
+//!   evaluation, the experiment harness that regenerates Figures 1–9, and
+//!   a PJRT runtime (`runtime`) that loads the AOT artifacts so Python is
+//!   never on the request path.
+//!
+//! See `examples/quickstart.rs` for a 20-line end-to-end run.
+
+pub mod algo;
+pub mod compress;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod experiments;
+pub mod linalg;
+pub mod objectives;
+pub mod runtime;
+pub mod sparse;
+pub mod testing;
+pub mod util;
+
+/// Convenience re-exports for examples and binaries.
+pub mod prelude {
+    pub use crate::algo::gdsec::{GdSecConfig, Xi};
+    pub use crate::algo::trace::Trace;
+    pub use crate::data::Dataset;
+    pub use crate::objectives::Problem;
+    pub use crate::util::rng::Pcg64;
+}

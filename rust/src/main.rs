@@ -1,0 +1,285 @@
+//! `gdsec` — launcher for the GD-SEC distributed learning framework.
+//!
+//! Subcommands:
+//!   train       run one algorithm on one workload (native engine)
+//!   experiment  regenerate one or all of the paper's figures
+//!   coordinate  run the threaded coordinator (GD-SEC protocol) end to end
+//!   info        show platform / artifact inventory
+//!
+//! Examples:
+//!   gdsec train --algo gdsec --objective logreg --dataset paper-logreg \
+//!       --xi 400 --beta 0.01 --iters 500 --out results/run.csv
+//!   gdsec experiment --fig all --out results
+//!   gdsec coordinate --workers 5 --iters 200 --scheduler rr --participation 0.5
+//!   gdsec info
+
+use anyhow::{anyhow, bail, Result};
+use gdsec::algo::gdsec::GdSecConfig;
+use gdsec::algo::{cgd, gd, gdsec as gdsec_algo, iag, qgd, sgdsec, topj};
+use gdsec::config::RunConfig;
+use gdsec::coordinator::scheduler::Scheduler;
+use gdsec::data::{libsvm, synthetic, Dataset};
+use gdsec::experiments::{run_figure, ExpContext};
+use gdsec::objectives::Problem;
+use gdsec::runtime::Manifest;
+use gdsec::util::cli::{opt, usage, Args};
+
+fn main() {
+    let args = match Args::from_env(true) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    };
+    if let Some(v) = args.get("verbosity") {
+        gdsec::util::set_verbosity(v.parse().unwrap_or(2));
+    }
+    let result = match args.subcommand.as_deref() {
+        Some("train") => cmd_train(&args),
+        Some("experiment") => cmd_experiment(&args),
+        Some("coordinate") => cmd_coordinate(&args),
+        Some("info") => cmd_info(),
+        _ => {
+            print!("{}", help());
+            Ok(())
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn help() -> String {
+    usage(
+        "gdsec",
+        "GD-SEC: distributed learning with sparsified gradient differences",
+        &[
+            ("train", "run one algorithm on one workload"),
+            ("experiment", "regenerate paper figures (--fig fig1..fig9|all)"),
+            ("coordinate", "run the threaded GD-SEC coordinator"),
+            ("info", "platform and artifact inventory"),
+        ],
+        &[
+            opt("algo", "gd|gdsec|gdsoec|cgd|topj|qgd|iag|sgd|sgdsec|qsgdsec", Some("gdsec")),
+            opt("objective", "linreg|logreg|lasso|nlls", Some("logreg")),
+            opt(
+                "dataset",
+                "mnist|paper-logreg|dna|colon|w2a|rcv1|cifar|coord-lipschitz",
+                Some("paper-logreg"),
+            ),
+            opt("data", "path to a LIBSVM file (overrides --dataset)", None),
+            opt("workers", "number of workers M", Some("5")),
+            opt("iters", "iterations", Some("500")),
+            opt("alpha", "step size (default 1/L)", None),
+            opt("beta", "state-variable smoothing", Some("0.01")),
+            opt("xi", "censoring threshold ξ (condition uses ξ/M)", Some("400")),
+            opt("xi-per-coord", "scale ξ_i = ξ/L^i (flag)", None),
+            opt("lambda", "regularization (default 1/N)", None),
+            opt("seed", "rng seed", Some("42")),
+            opt("out", "CSV output path / results dir", None),
+            opt("fig", "experiment figure id", Some("all")),
+            opt("quick", "reduced-size experiment run (flag)", None),
+            opt("scheduler", "all|rr|random", Some("all")),
+            opt("participation", "fraction of workers per round", Some("1.0")),
+        ],
+    )
+}
+
+fn build_dataset(cfg: &RunConfig) -> Result<Dataset> {
+    if let Some(path) = &cfg.data_path {
+        return Ok(libsvm::load(path, 0)?);
+    }
+    Ok(match cfg.dataset.as_str() {
+        "mnist" | "mnist-like" => synthetic::mnist_like(cfg.seed, 2000),
+        "paper-logreg" => synthetic::paper_logreg(cfg.seed, cfg.workers, 50, 300),
+        "dna" | "dna-like" => synthetic::dna_like(cfg.seed, 2000),
+        "colon" | "colon-like" => synthetic::colon_like(cfg.seed),
+        "w2a" | "w2a-like" => synthetic::w2a_like(cfg.seed, 3470),
+        "rcv1" | "rcv1-like" => synthetic::rcv1_like(cfg.seed, 6000, 47236, 50),
+        "cifar" | "cifar-like" => synthetic::cifar_like(cfg.seed, 2000),
+        "coord-lipschitz" => synthetic::coord_lipschitz(cfg.seed),
+        other => bail!("unknown dataset '{other}'"),
+    })
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let mut cfg = RunConfig::default();
+    cfg.apply_args(args).map_err(|e| anyhow!("{e}"))?;
+    let data = build_dataset(&cfg)?;
+    let lambda = cfg.lambda.unwrap_or(1.0 / data.n() as f64);
+    let prob = Problem::new(cfg.objective, data, cfg.workers, lambda);
+    let alpha = cfg.alpha.unwrap_or_else(|| 1.0 / prob.lipschitz());
+    let iters = cfg.iters;
+    let xi = cfg.resolve_xi(&prob);
+    println!(
+        "problem {} | n={} d={} M={} | alpha={alpha:.6} lambda={lambda:.6}",
+        prob.name,
+        prob.n_total,
+        prob.d,
+        prob.m()
+    );
+    let trace = match cfg.algo.as_str() {
+        "gd" => gd::run(
+            &prob,
+            &gd::GdConfig { alpha, eval_every: cfg.eval_every, fstar: None },
+            iters,
+        ),
+        "gdsec" | "gdsoec" => gdsec_algo::run(
+            &prob,
+            &GdSecConfig {
+                alpha,
+                beta: cfg.beta,
+                xi,
+                error_correction: cfg.algo == "gdsec",
+                eval_every: cfg.eval_every,
+                ..Default::default()
+            },
+            iters,
+        ),
+        "cgd" => cgd::run(
+            &prob,
+            &cgd::CgdConfig { alpha, xi: cfg.xi, eval_every: cfg.eval_every, fstar: None },
+            iters,
+        ),
+        "topj" => topj::run(
+            &prob,
+            &topj::TopJConfig {
+                j: 100.min(prob.d),
+                gamma0: alpha,
+                lambda,
+                eval_every: cfg.eval_every,
+                fstar: None,
+            },
+            iters,
+        ),
+        "qgd" => qgd::run(
+            &prob,
+            &qgd::QgdConfig {
+                alpha,
+                s: 255,
+                seed: cfg.seed,
+                eval_every: cfg.eval_every,
+                fstar: None,
+            },
+            iters,
+        ),
+        "iag" => iag::run(
+            &prob,
+            &iag::IagConfig {
+                alpha: alpha / (2.0 * prob.m() as f64),
+                seed: cfg.seed,
+                eval_every: cfg.eval_every,
+                fstar: None,
+            },
+            iters,
+        ),
+        "sgd" | "sgdsec" | "qsgdsec" => {
+            let scfg = sgdsec::SgdSecConfig {
+                gamma0: alpha,
+                lambda,
+                beta: cfg.beta,
+                xi,
+                batch: cfg.batch.max(1),
+                seed: cfg.seed,
+                quantize_s: (cfg.algo == "qsgdsec").then_some(255),
+                eval_every: cfg.eval_every,
+                fstar: None,
+            };
+            if cfg.algo == "sgd" {
+                sgdsec::run_sgd(&prob, &scfg, iters)
+            } else {
+                sgdsec::run_sgdsec(&prob, &scfg, iters)
+            }
+        }
+        other => bail!("unknown algorithm '{other}'"),
+    };
+    let last = trace.rows.last().unwrap();
+    println!(
+        "{}: f-f* = {:.4e} | bits = {} | transmissions = {}",
+        trace.algo,
+        trace.final_error(),
+        last.bits,
+        last.transmissions
+    );
+    if let Some(out) = &cfg.out_csv {
+        trace.write_csv(out)?;
+        println!("trace -> {out}");
+    }
+    Ok(())
+}
+
+fn cmd_experiment(args: &Args) -> Result<()> {
+    let fig = args.get_or("fig", "all");
+    let out = args.get_or("out", "results");
+    let mut ctx = ExpContext::new(out);
+    ctx.quick = args.flag("quick");
+    ctx.seed = args.get_u64("seed", 42).map_err(|e| anyhow!("{e}"))?;
+    let reports = run_figure(fig, &ctx)?;
+    for r in &reports {
+        r.print();
+        println!();
+    }
+    Ok(())
+}
+
+fn cmd_coordinate(args: &Args) -> Result<()> {
+    let mut cfg = RunConfig::default();
+    cfg.apply_args(args).map_err(|e| anyhow!("{e}"))?;
+    let data = build_dataset(&cfg)?;
+    let lambda = cfg.lambda.unwrap_or(1.0 / data.n() as f64);
+    let prob = Problem::new(cfg.objective, data, cfg.workers, lambda);
+    let alpha = cfg.alpha.unwrap_or_else(|| 1.0 / prob.lipschitz());
+    let xi = cfg.resolve_xi(&prob);
+    let sched = Scheduler::parse(&cfg.scheduler, cfg.participation, cfg.seed)
+        .ok_or_else(|| anyhow!("unknown scheduler '{}'", cfg.scheduler))?;
+    let gcfg = GdSecConfig { alpha, beta: cfg.beta, xi, ..Default::default() };
+    println!(
+        "coordinator: {} workers, {} rounds, scheduler {}",
+        prob.m(),
+        cfg.iters,
+        cfg.scheduler
+    );
+    let out = gdsec::coordinator::run_native(&prob, gcfg, cfg.iters, sched);
+    let payload: u64 = out.rounds.iter().map(|r| r.payload_bits).sum();
+    let overhead: u64 = out.rounds.iter().map(|r| r.overhead_bits).sum();
+    let down: u64 = out.rounds.iter().map(|r| r.downlink_bits).sum();
+    println!(
+        "final f-f* = {:.4e}\nuplink payload {payload} bits | protocol overhead {overhead} bits | downlink {down} bits",
+        out.trace.final_error(),
+    );
+    println!(
+        "mean round time {:.1} µs | dead workers: {:?}",
+        out.rounds.iter().map(|r| r.wall_us as f64).sum::<f64>() / out.rounds.len() as f64,
+        out.dead_workers
+    );
+    if let Some(path) = &cfg.out_csv {
+        out.trace.write_csv(path)?;
+        println!("trace -> {path}");
+    }
+    Ok(())
+}
+
+fn cmd_info() -> Result<()> {
+    println!("gdsec {} — three-layer GD-SEC stack", env!("CARGO_PKG_VERSION"));
+    match Manifest::load(Manifest::default_dir()) {
+        Ok(m) => {
+            println!("artifacts ({}):", m.dir.display());
+            let mut names: Vec<_> = m.artifacts.keys().collect();
+            names.sort();
+            for n in names {
+                let a = &m.artifacts[n];
+                println!("  {n}: {} inputs, {} outputs", a.inputs.len(), a.outputs.len());
+            }
+            match gdsec::runtime::Runtime::new(m) {
+                Ok(rt) => println!("PJRT platform: {}", rt.platform()),
+                Err(e) => println!("PJRT unavailable: {e:#}"),
+            }
+        }
+        Err(e) => println!("no artifacts: {e:#}"),
+    }
+    println!("objectives: linreg logreg lasso nlls");
+    println!("algorithms: {}", gdsec::algo::ALGORITHMS.join(" "));
+    Ok(())
+}

@@ -1,0 +1,596 @@
+//! The paper's four objective families (Eqs. 19–23) and the distributed
+//! `Problem` abstraction: `f(θ) = Σ_m f_m(θ)` with worker-local shards.
+//!
+//! Scaling follows the paper exactly: data terms carry the *global* `1/N`,
+//! regularizers carry `λ/(2M)` (or `λ/M` for lasso's ℓ1), so summing the M
+//! local functions reproduces the centralized objective.
+
+use crate::data::{Dataset, Shard};
+use crate::linalg;
+use std::sync::Arc;
+
+/// Which loss (paper equation in parens).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ObjectiveKind {
+    /// Regularized linear regression (19): 1/(2N)·Σ(y−xᵀθ)² + λ/(2M)‖θ‖².
+    LinReg,
+    /// Regularized logistic regression (20): 1/N·Σ log(1+e^{−y xᵀθ}) + λ/(2M)‖θ‖².
+    LogReg,
+    /// Lasso (21): 1/(2N)·Σ(y−xᵀθ)² + λ/M·‖θ‖₁ (subgradient (22)).
+    Lasso,
+    /// Nonlinear least squares (23), nonconvex: 1/(2N)·Σ(y−σ(xᵀθ))² + λ/(2M)‖θ‖².
+    Nlls,
+}
+
+impl ObjectiveKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ObjectiveKind::LinReg => "linreg",
+            ObjectiveKind::LogReg => "logreg",
+            ObjectiveKind::Lasso => "lasso",
+            ObjectiveKind::Nlls => "nlls",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<ObjectiveKind> {
+        match s {
+            "linreg" => Some(ObjectiveKind::LinReg),
+            "logreg" => Some(ObjectiveKind::LogReg),
+            "lasso" => Some(ObjectiveKind::Lasso),
+            "nlls" => Some(ObjectiveKind::Nlls),
+            _ => None,
+        }
+    }
+}
+
+#[inline]
+fn sigmoid(z: f64) -> f64 {
+    if z >= 0.0 {
+        1.0 / (1.0 + (-z).exp())
+    } else {
+        let e = z.exp();
+        e / (1.0 + e)
+    }
+}
+
+/// Numerically-stable log(1 + e^z).
+#[inline]
+fn log1pexp(z: f64) -> f64 {
+    if z > 30.0 {
+        z
+    } else if z < -30.0 {
+        z.exp()
+    } else {
+        z.exp().ln_1p()
+    }
+}
+
+/// One worker's local objective `f_m`.
+#[derive(Debug, Clone)]
+pub struct LocalObjective {
+    pub shard: Shard,
+    pub kind: ObjectiveKind,
+    /// Regularization weight λ (shared across workers).
+    pub lambda: f64,
+    /// Global sample count N (data terms are 1/N-scaled).
+    pub n_total: usize,
+    /// Worker count M (regularizer is 1/M-scaled).
+    pub m_workers: usize,
+}
+
+impl LocalObjective {
+    pub fn dim(&self) -> usize {
+        self.shard.d()
+    }
+
+    /// f_m(θ).
+    pub fn value(&self, theta: &[f64]) -> f64 {
+        let nm = self.shard.n();
+        let n = self.n_total as f64;
+        let m = self.m_workers as f64;
+        let mut z = vec![0.0; nm];
+        self.shard.x.matvec(theta, &mut z);
+        let data_term = match self.kind {
+            ObjectiveKind::LinReg | ObjectiveKind::Lasso => {
+                let mut s = 0.0;
+                for i in 0..nm {
+                    let r = self.shard.y[i] - z[i];
+                    s += r * r;
+                }
+                s / (2.0 * n)
+            }
+            ObjectiveKind::LogReg => {
+                let mut s = 0.0;
+                for i in 0..nm {
+                    s += log1pexp(-self.shard.y[i] * z[i]);
+                }
+                s / n
+            }
+            ObjectiveKind::Nlls => {
+                let mut s = 0.0;
+                for i in 0..nm {
+                    let r = self.shard.y[i] - sigmoid(z[i]);
+                    s += r * r;
+                }
+                s / (2.0 * n)
+            }
+        };
+        let reg = match self.kind {
+            ObjectiveKind::Lasso => self.lambda / m * linalg::nrm1(theta),
+            _ => self.lambda / (2.0 * m) * linalg::nrm2_sq(theta),
+        };
+        data_term + reg
+    }
+
+    /// ∇f_m(θ) (subgradient for lasso), overwriting `out`.
+    ///
+    /// Full-batch fast path: one fused streaming pass over the shard
+    /// (z = x·θ and the X^T accumulation in the same row visit) instead of
+    /// the two-pass matvec/matvec^T of `grad_indices` — ~2× less memory
+    /// traffic on the worker hot loop (EXPERIMENTS.md §Perf).
+    pub fn grad(&self, theta: &[f64], out: &mut [f64]) {
+        let n = self.n_total as f64;
+        let m = self.m_workers as f64;
+        linalg::zero(out);
+        let kind = self.kind;
+        let y = &self.shard.y;
+        self.shard.x.fused_grad_pass(theta, out, |i, z| {
+            let wi = match kind {
+                ObjectiveKind::LinReg | ObjectiveKind::Lasso => z - y[i],
+                ObjectiveKind::LogReg => {
+                    let yi = y[i];
+                    -yi * sigmoid(-yi * z)
+                }
+                ObjectiveKind::Nlls => {
+                    let p = sigmoid(z);
+                    -(y[i] - p) * p * (1.0 - p)
+                }
+            };
+            wi / n
+        });
+        match self.kind {
+            ObjectiveKind::Lasso => {
+                let lm = self.lambda / m;
+                for j in 0..theta.len() {
+                    out[j] += lm * sign(theta[j]);
+                }
+            }
+            _ => {
+                let lm = self.lambda / m;
+                linalg::axpy(lm, theta, out);
+            }
+        }
+    }
+
+    /// Gradient over a subset of local samples, with the data term scaled
+    /// by `scale` (for minibatch SGD the caller passes N_m/|B| so the
+    /// estimate is unbiased for the full local data term). Regularizer is
+    /// always exact. Overwrites `out`.
+    pub fn grad_indices(&self, theta: &[f64], idx: &[usize], scale: f64, out: &mut [f64]) {
+        let n = self.n_total as f64;
+        let m = self.m_workers as f64;
+        linalg::zero(out);
+        // Residual weights per selected sample, then one X^T pass.
+        // For dense shards a row-gather keeps the pass cache-friendly;
+        // CSR rows are gathered the same way.
+        let mut z = vec![0.0; self.shard.n()];
+        self.shard.x.matvec(theta, &mut z);
+        let mut w = vec![0.0; self.shard.n()];
+        for &i in idx {
+            let wi = match self.kind {
+                ObjectiveKind::LinReg | ObjectiveKind::Lasso => z[i] - self.shard.y[i],
+                ObjectiveKind::LogReg => {
+                    let yi = self.shard.y[i];
+                    -yi * sigmoid(-yi * z[i])
+                }
+                ObjectiveKind::Nlls => {
+                    let p = sigmoid(z[i]);
+                    -(self.shard.y[i] - p) * p * (1.0 - p)
+                }
+            };
+            w[i] = wi * scale / n;
+        }
+        self.shard.x.matvec_t_acc(1.0, &w, out);
+        match self.kind {
+            ObjectiveKind::Lasso => {
+                let lm = self.lambda / m;
+                for j in 0..theta.len() {
+                    out[j] += lm * sign(theta[j]);
+                }
+            }
+            _ => {
+                let lm = self.lambda / m;
+                linalg::axpy(lm, theta, out);
+            }
+        }
+    }
+
+    /// Smoothness constant L_m of the *smooth part* of f_m (used for
+    /// NoUnif-IAG sampling probabilities and step-size heuristics).
+    pub fn lipschitz(&self) -> f64 {
+        let n = self.n_total as f64;
+        let m = self.m_workers as f64;
+        let sigma_sq = self.shard.x.spectral_sq(60);
+        let curv = loss_curvature_bound(self.kind);
+        let reg = match self.kind {
+            ObjectiveKind::Lasso => 0.0, // ℓ1 is not smooth; only data term
+            _ => self.lambda / m,
+        };
+        curv * sigma_sq / n + reg
+    }
+}
+
+#[inline]
+fn sign(v: f64) -> f64 {
+    if v > 0.0 {
+        1.0
+    } else if v < 0.0 {
+        -1.0
+    } else {
+        0.0
+    }
+}
+
+/// Upper bound on the second derivative of the scalar loss wrt the linear
+/// predictor z (the `c` in L ≤ c·σ²_max/N):
+/// linreg/lasso: ℓ(z)=½(y−z)² → ℓ''=1. logreg: ℓ''=σ(1−σ) ≤ 1/4.
+/// nlls: |d²/dz² ½(y−σ(z))²| ≤ 0.25 over y∈[−1,1] (loose but safe bound
+/// covering the |σ'|²+|r·σ''| terms).
+fn loss_curvature_bound(kind: ObjectiveKind) -> f64 {
+    match kind {
+        ObjectiveKind::LinReg | ObjectiveKind::Lasso => 1.0,
+        ObjectiveKind::LogReg => 0.25,
+        ObjectiveKind::Nlls => 0.25,
+    }
+}
+
+/// A distributed optimization problem: M workers, each holding `f_m`.
+#[derive(Clone)]
+pub struct Problem {
+    pub name: String,
+    pub kind: ObjectiveKind,
+    pub locals: Arc<Vec<LocalObjective>>,
+    pub lambda: f64,
+    pub d: usize,
+    pub n_total: usize,
+}
+
+impl Problem {
+    /// Build from a dataset sharded over `m` workers.
+    pub fn new(kind: ObjectiveKind, data: Dataset, m: usize, lambda: f64) -> Problem {
+        let n_total = data.n();
+        let d = data.d();
+        let name = format!("{}/{}", kind.name(), data.name);
+        let locals: Vec<LocalObjective> = data
+            .shard(m)
+            .into_iter()
+            .map(|shard| LocalObjective { shard, kind, lambda, n_total, m_workers: m })
+            .collect();
+        Problem { name, kind, locals: Arc::new(locals), lambda, d, n_total }
+    }
+
+    pub fn linear(data: Dataset, m: usize, lambda: f64) -> Problem {
+        Problem::new(ObjectiveKind::LinReg, data, m, lambda)
+    }
+
+    pub fn logistic(data: Dataset, m: usize, lambda: f64) -> Problem {
+        Problem::new(ObjectiveKind::LogReg, data, m, lambda)
+    }
+
+    pub fn lasso(data: Dataset, m: usize, lambda: f64) -> Problem {
+        Problem::new(ObjectiveKind::Lasso, data, m, lambda)
+    }
+
+    pub fn nlls(data: Dataset, m: usize, lambda: f64) -> Problem {
+        Problem::new(ObjectiveKind::Nlls, data, m, lambda)
+    }
+
+    pub fn m(&self) -> usize {
+        self.locals.len()
+    }
+
+    /// Global objective f(θ) = Σ_m f_m(θ).
+    pub fn value(&self, theta: &[f64]) -> f64 {
+        self.locals.iter().map(|l| l.value(theta)).sum()
+    }
+
+    /// Global gradient into `out`.
+    pub fn grad(&self, theta: &[f64], out: &mut [f64]) {
+        linalg::zero(out);
+        let mut g = vec![0.0; self.d];
+        for l in self.locals.iter() {
+            l.grad(theta, &mut g);
+            linalg::axpy(1.0, &g, out);
+        }
+    }
+
+    /// Global smoothness constant L of f (smooth part).
+    /// Computed from the *pooled* data matrix spectral norm: since all data
+    /// terms share the 1/N scale, L = c·σ_max(X)²/N + λ. We bound
+    /// σ_max(X)² ≤ Σ_m σ_max(X_m)², and tighten with a short power
+    /// iteration over the stacked operator implemented shard-wise.
+    pub fn lipschitz(&self) -> f64 {
+        let n = self.n_total as f64;
+        let curv = loss_curvature_bound(self.kind);
+        let reg = match self.kind {
+            ObjectiveKind::Lasso => 0.0,
+            _ => self.lambda,
+        };
+        curv * self.pooled_spectral_sq(80) / n + reg
+    }
+
+    /// Power iteration for σ_max(X)² where X is the row-stacked shard data.
+    fn pooled_spectral_sq(&self, iters: usize) -> f64 {
+        let d = self.d;
+        let mut v = vec![1.0 / (d as f64).sqrt(); d];
+        let mut atav = vec![0.0; d];
+        let mut lambda = 0.0;
+        for _ in 0..iters {
+            linalg::zero(&mut atav);
+            for l in self.locals.iter() {
+                let nm = l.shard.n();
+                if nm == 0 {
+                    continue;
+                }
+                let mut av = vec![0.0; nm];
+                l.shard.x.matvec(&v, &mut av);
+                l.shard.x.matvec_t_acc(1.0, &av, &mut atav);
+            }
+            lambda = linalg::nrm2(&atav);
+            if lambda <= 1e-300 {
+                return 0.0;
+            }
+            for i in 0..d {
+                v[i] = atav[i] / lambda;
+            }
+        }
+        lambda
+    }
+
+    /// Coordinate-wise smoothness constants L^i of the global smooth part:
+    /// L^i = c·(Σ_n x_{n,i}²)/N + λ (exact for quadratic, bound for
+    /// logistic/nlls). Used for the Fig 7 scaling ξ_i = ξ/L^i.
+    pub fn coord_lipschitz(&self) -> Vec<f64> {
+        let n = self.n_total as f64;
+        let curv = loss_curvature_bound(self.kind);
+        let reg = match self.kind {
+            ObjectiveKind::Lasso => 0.0,
+            _ => self.lambda,
+        };
+        let mut acc = vec![0.0; self.d];
+        for l in self.locals.iter() {
+            let cs = l.shard.x.col_sq_sums();
+            for j in 0..self.d {
+                acc[j] += cs[j];
+            }
+        }
+        acc.iter().map(|&s| curv * s / n + reg).collect()
+    }
+
+    /// Per-worker smoothness constants (NoUnif-IAG sampling weights).
+    pub fn worker_lipschitz(&self) -> Vec<f64> {
+        self.locals.iter().map(|l| l.lipschitz()).collect()
+    }
+
+    /// Strong-convexity modulus μ when known (≥ λ for ℓ2-regularized
+    /// convex losses; 0 otherwise).
+    pub fn strong_convexity(&self) -> f64 {
+        match self.kind {
+            ObjectiveKind::LinReg | ObjectiveKind::LogReg => self.lambda,
+            _ => 0.0,
+        }
+    }
+
+    /// Estimate f* := min f(θ) by running (sub)gradient descent far past
+    /// the horizon the experiments use. For smooth objectives uses α=1/L
+    /// fixed; for lasso a decreasing step with best-value tracking.
+    pub fn estimate_fstar(&self, iters: usize) -> f64 {
+        let d = self.d;
+        let l = self.lipschitz().max(1e-12);
+        let mut theta = vec![0.0; d];
+        let mut g = vec![0.0; d];
+        let mut best = self.value(&theta);
+        match self.kind {
+            ObjectiveKind::Lasso => {
+                let gamma0 = 1.0 / l;
+                for k in 0..iters {
+                    self.grad(&theta, &mut g);
+                    let alpha = gamma0 / (1.0 + 0.05 * k as f64).sqrt();
+                    linalg::axpy(-alpha, &g, &mut theta);
+                    let v = self.value(&theta);
+                    if v < best {
+                        best = v;
+                    }
+                }
+            }
+            _ => {
+                let alpha = 1.0 / l;
+                for _ in 0..iters {
+                    self.grad(&theta, &mut g);
+                    linalg::axpy(-alpha, &g, &mut theta);
+                }
+                best = best.min(self.value(&theta));
+            }
+        }
+        best
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+    use crate::util::rng::Pcg64;
+
+    fn fd_grad(l: &LocalObjective, theta: &[f64]) -> Vec<f64> {
+        let eps = 1e-6;
+        let mut out = vec![0.0; theta.len()];
+        let mut tp = theta.to_vec();
+        for j in 0..theta.len() {
+            let orig = tp[j];
+            tp[j] = orig + eps;
+            let fp = l.value(&tp);
+            tp[j] = orig - eps;
+            let fm = l.value(&tp);
+            tp[j] = orig;
+            out[j] = (fp - fm) / (2.0 * eps);
+        }
+        out
+    }
+
+    fn check_grad(kind: ObjectiveKind) {
+        let data = synthetic::paper_logreg(11, 2, 10, 300);
+        let prob = Problem::new(kind, data, 2, 0.05);
+        let mut rng = Pcg64::seeded(3);
+        // Keep theta away from lasso's kink at 0.
+        let theta: Vec<f64> =
+            (0..prob.d).map(|_| rng.normal() * 0.05 + 0.2 * rng.sign()).collect();
+        for l in prob.locals.iter() {
+            let mut g = vec![0.0; prob.d];
+            l.grad(&theta, &mut g);
+            let fd = fd_grad(l, &theta);
+            for j in (0..prob.d).step_by(37) {
+                let denom = fd[j].abs().max(1e-6);
+                assert!(
+                    (g[j] - fd[j]).abs() / denom < 1e-3,
+                    "{:?} coord {j}: analytic {} vs fd {}",
+                    kind,
+                    g[j],
+                    fd[j]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn grad_matches_fd_linreg() {
+        check_grad(ObjectiveKind::LinReg);
+    }
+
+    #[test]
+    fn grad_matches_fd_logreg() {
+        check_grad(ObjectiveKind::LogReg);
+    }
+
+    #[test]
+    fn grad_matches_fd_lasso() {
+        check_grad(ObjectiveKind::Lasso);
+    }
+
+    #[test]
+    fn grad_matches_fd_nlls() {
+        check_grad(ObjectiveKind::Nlls);
+    }
+
+    #[test]
+    fn locals_sum_to_global() {
+        let data = synthetic::dna_like(5, 60);
+        let prob = Problem::linear(data, 4, 0.1);
+        let mut rng = Pcg64::seeded(7);
+        let theta: Vec<f64> = (0..prob.d).map(|_| rng.normal()).collect();
+        let total: f64 = prob.locals.iter().map(|l| l.value(&theta)).sum();
+        assert!((total - prob.value(&theta)).abs() < 1e-10);
+        // Centralized objective computed directly:
+        let one = Problem::linear(synthetic::dna_like(5, 60), 1, 0.1);
+        assert!((one.value(&theta) - prob.value(&theta)).abs() < 1e-8);
+    }
+
+    #[test]
+    fn descent_reduces_value() {
+        for kind in [
+            ObjectiveKind::LinReg,
+            ObjectiveKind::LogReg,
+            ObjectiveKind::Lasso,
+            ObjectiveKind::Nlls,
+        ] {
+            let data = synthetic::dna_like(9, 100);
+            let prob = Problem::new(kind, data, 3, 0.01);
+            let alpha = 1.0 / prob.lipschitz().max(1e-9);
+            let mut theta = vec![0.0; prob.d];
+            let mut g = vec![0.0; prob.d];
+            let f0 = prob.value(&theta);
+            for _ in 0..20 {
+                prob.grad(&theta, &mut g);
+                linalg::axpy(-alpha, &g, &mut theta);
+            }
+            let f1 = prob.value(&theta);
+            assert!(f1 < f0, "{kind:?}: {f1} !< {f0}");
+        }
+    }
+
+    #[test]
+    fn lipschitz_bounds_hessian_action() {
+        // For linreg, ‖∇f(a)−∇f(b)‖ ≤ L‖a−b‖ exactly testable.
+        let data = synthetic::dna_like(13, 80);
+        let prob = Problem::linear(data, 2, 0.05);
+        let l = prob.lipschitz();
+        let mut rng = Pcg64::seeded(5);
+        for _ in 0..10 {
+            let a: Vec<f64> = (0..prob.d).map(|_| rng.normal()).collect();
+            let b: Vec<f64> = (0..prob.d).map(|_| rng.normal()).collect();
+            let mut ga = vec![0.0; prob.d];
+            let mut gb = vec![0.0; prob.d];
+            prob.grad(&a, &mut ga);
+            prob.grad(&b, &mut gb);
+            let mut diff_g = vec![0.0; prob.d];
+            linalg::sub(&ga, &gb, &mut diff_g);
+            let mut diff_x = vec![0.0; prob.d];
+            linalg::sub(&a, &b, &mut diff_x);
+            assert!(
+                linalg::nrm2(&diff_g) <= l * linalg::nrm2(&diff_x) * (1.0 + 1e-6),
+                "L violated"
+            );
+        }
+    }
+
+    #[test]
+    fn coord_lipschitz_exact_for_linreg() {
+        let data = synthetic::coord_lipschitz(3);
+        let prob = Problem::linear(data, 10, 0.0);
+        let li = prob.coord_lipschitz();
+        // Monotone increasing per construction.
+        assert!(li[49] > li[25] && li[25] > li[0]);
+        // For linreg with λ=0: L^i = (Σ x_i²)/N exactly.
+        let data2 = synthetic::coord_lipschitz(3);
+        let cs = data2.x.col_sq_sums();
+        for j in (0..50).step_by(9) {
+            let expect = cs[j] / 500.0;
+            assert!((li[j] - expect).abs() < 1e-9 * expect.max(1.0));
+        }
+    }
+
+    #[test]
+    fn minibatch_unbiased_full_batch_identity() {
+        // grad_indices over ALL indices with scale 1 == grad.
+        let data = synthetic::dna_like(21, 40);
+        let prob = Problem::logistic(data, 2, 0.02);
+        let mut rng = Pcg64::seeded(9);
+        let theta: Vec<f64> = (0..prob.d).map(|_| rng.normal() * 0.1).collect();
+        let l = &prob.locals[0];
+        let idx: Vec<usize> = (0..l.shard.n()).collect();
+        let mut g1 = vec![0.0; prob.d];
+        let mut g2 = vec![0.0; prob.d];
+        l.grad(&theta, &mut g1);
+        l.grad_indices(&theta, &idx, 1.0, &mut g2);
+        for j in 0..prob.d {
+            assert!((g1[j] - g2[j]).abs() < 1e-14);
+        }
+    }
+
+    #[test]
+    fn fstar_below_trajectory() {
+        let data = synthetic::dna_like(31, 100);
+        let prob = Problem::linear(data, 2, 0.1);
+        let fstar = prob.estimate_fstar(2000);
+        assert!(fstar <= prob.value(&vec![0.0; prob.d]));
+        assert!(fstar.is_finite());
+    }
+
+    #[test]
+    fn sigmoid_stability() {
+        assert!(sigmoid(1000.0) <= 1.0 && sigmoid(1000.0) > 0.999);
+        assert!(sigmoid(-1000.0) >= 0.0 && sigmoid(-1000.0) < 1e-10);
+        assert!((log1pexp(-1000.0)).abs() < 1e-10);
+        assert!((log1pexp(1000.0) - 1000.0).abs() < 1e-10);
+    }
+}

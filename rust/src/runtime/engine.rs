@@ -1,0 +1,214 @@
+//! Execution engines bridging the coordinator to compiled artifacts.
+//!
+//! * [`XlaWorkerStep`] — the fused Algorithm-1 worker iteration
+//!   (objective gradient + Pallas censor/EC) as ONE PJRT execution.
+//! * [`XlaGradProvider`] — adapts a worker-step artifact to the
+//!   coordinator's [`GradProvider`] seam (h = e = ξ = 0 turns the fused
+//!   step into a plain loss+gradient evaluation).
+//! * [`TfmEngine`] — transformer init / loss+grad for the e2e example.
+
+use super::{Manifest, Runtime};
+use crate::coordinator::worker::GradProvider;
+use anyhow::{anyhow, Result};
+
+/// Scalars layout shared with `python/compile/model.py::make_worker_step`.
+#[derive(Debug, Clone, Copy)]
+pub struct WorkerScalars {
+    pub beta: f64,
+    pub m_inv: f64,
+    pub n_inv: f64,
+    pub lambda: f64,
+}
+
+impl WorkerScalars {
+    fn to_f32(self) -> [f32; 4] {
+        [self.beta as f32, self.m_inv as f32, self.n_inv as f32, self.lambda as f32]
+    }
+}
+
+/// Output of one fused worker step.
+pub struct WorkerStepOut {
+    /// Dense Δ̂ (zeros where censored) — L3 RLE-encodes this.
+    pub wire: Vec<f32>,
+    pub h_new: Vec<f32>,
+    pub e_new: Vec<f32>,
+    pub loss: f64,
+}
+
+/// One worker's compiled fused step over a fixed shard.
+pub struct XlaWorkerStep {
+    rt: Runtime,
+    artifact: String,
+    x_lit: xla::Literal,
+    y_lit: xla::Literal,
+    pub n: usize,
+    pub d: usize,
+}
+
+impl XlaWorkerStep {
+    /// Build for an artifact named `worker_step_<kind>_<n>x<d>` with the
+    /// given shard data (row-major X).
+    pub fn new(manifest: Manifest, artifact: &str, x: &[f64], y: &[f64]) -> Result<XlaWorkerStep> {
+        let mut rt = Runtime::new(manifest)?;
+        let spec = rt.manifest().get(artifact)?.clone();
+        let n = spec.inputs[0].shape[0];
+        let d = spec.inputs[0].shape[1];
+        if x.len() != n * d || y.len() != n {
+            return Err(anyhow!(
+                "shard shape mismatch: artifact wants {n}x{d}, got x={} y={}",
+                x.len(),
+                y.len()
+            ));
+        }
+        let x_lit = Runtime::lit_from_f64(x, &[n as i64, d as i64])?;
+        let y_lit = Runtime::lit_from_f64(y, &[n as i64])?;
+        rt.load(artifact)?;
+        Ok(XlaWorkerStep { rt, artifact: artifact.to_string(), x_lit, y_lit, n, d })
+    }
+
+    /// Run the fused step.
+    pub fn step(
+        &mut self,
+        theta: &[f64],
+        theta_prev: &[f64],
+        h: &[f32],
+        e: &[f32],
+        xi: &[f64],
+        scalars: WorkerScalars,
+    ) -> Result<WorkerStepOut> {
+        let d = self.d as i64;
+        let inputs = vec![
+            self.x_lit.clone(),
+            self.y_lit.clone(),
+            Runtime::lit_from_f64(theta, &[d])?,
+            Runtime::lit_from_f64(theta_prev, &[d])?,
+            Runtime::lit_f32(h, &[d])?,
+            Runtime::lit_f32(e, &[d])?,
+            Runtime::lit_from_f64(xi, &[d])?,
+            Runtime::lit_f32(&scalars.to_f32(), &[4])?,
+        ];
+        let mut out = self.rt.exec(&self.artifact, &inputs)?;
+        let loss = out[3][0] as f64;
+        let e_new = out.remove(2);
+        let h_new = out.remove(1);
+        let wire = out.remove(0);
+        Ok(WorkerStepOut { wire, h_new, e_new, loss })
+    }
+}
+
+/// Adapts a worker-step artifact into a plain loss+gradient provider:
+/// with h = e = 0 and ξ = 0 the fused step's `wire` equals the local
+/// gradient (every non-zero survives a zero threshold).
+pub struct XlaGradProvider {
+    step: XlaWorkerStep,
+    scalars: WorkerScalars,
+    zeros32: Vec<f32>,
+    zeros64: Vec<f64>,
+}
+
+impl XlaGradProvider {
+    pub fn new(
+        manifest: Manifest,
+        artifact: &str,
+        x: &[f64],
+        y: &[f64],
+        scalars: WorkerScalars,
+    ) -> Result<XlaGradProvider> {
+        let step = XlaWorkerStep::new(manifest, artifact, x, y)?;
+        let d = step.d;
+        Ok(XlaGradProvider { step, scalars, zeros32: vec![0.0; d], zeros64: vec![0.0; d] })
+    }
+}
+
+impl GradProvider for XlaGradProvider {
+    fn dim(&self) -> usize {
+        self.step.d
+    }
+
+    fn loss_grad(&mut self, theta: &[f64], out: &mut [f64]) -> f64 {
+        // β=0 keeps the artifact's internal h update inert; h=e=ξ=0 makes
+        // wire == gradient.
+        let scal = WorkerScalars { beta: 0.0, ..self.scalars };
+        let res = self
+            .step
+            .step(theta, theta, &self.zeros32, &self.zeros32, &self.zeros64, scal)
+            .expect("xla worker step failed");
+        for (o, w) in out.iter_mut().zip(&res.wire) {
+            *o = *w as f64;
+        }
+        res.loss
+    }
+}
+
+/// Transformer engine for the e2e example: compiled init + loss/grad +
+/// the standalone Pallas sparsify artifact over the flat parameter vector.
+pub struct TfmEngine {
+    rt: Runtime,
+    pub n_params: usize,
+    pub batch: usize,
+    pub seq: usize,
+    pub vocab: usize,
+    sparsify_name: String,
+}
+
+impl TfmEngine {
+    pub fn new(manifest: Manifest) -> Result<TfmEngine> {
+        let spec = manifest.get("tfm_loss_grad")?.clone();
+        let n_params = spec.inputs[0].shape[0];
+        let batch = spec.inputs[1].shape[0];
+        let seq = spec.inputs[1].shape[1];
+        let vocab = *spec.meta.get("vocab").unwrap_or(&256.0) as usize;
+        let sparsify_name = manifest
+            .find_prefix("gdsec_sparsify_")
+            .map(|a| a.name.clone())
+            .ok_or_else(|| anyhow!("no gdsec_sparsify artifact"))?;
+        let rt = Runtime::new(manifest)?;
+        Ok(TfmEngine { rt, n_params, batch, seq, vocab, sparsify_name })
+    }
+
+    /// Materialize the jax initialization (identical across workers/server).
+    pub fn init_params(&mut self, seed: i32) -> Result<Vec<f32>> {
+        let seed_lit = Runtime::lit_i32(&[seed], &[1])?;
+        let mut out = self.rt.exec("tfm_init", &[seed_lit])?;
+        Ok(out.remove(0))
+    }
+
+    /// Loss + gradient on a token batch (i32[batch, seq]).
+    pub fn loss_grad(&mut self, params: &[f32], tokens: &[i32]) -> Result<(f64, Vec<f32>)> {
+        let p = Runtime::lit_f32(params, &[self.n_params as i64])?;
+        let t = Runtime::lit_i32(tokens, &[self.batch as i64, self.seq as i64])?;
+        let mut out = self.rt.exec("tfm_loss_grad", &[p, t])?;
+        let grad = out.remove(1);
+        let loss = out[0][0] as f64;
+        Ok((loss, grad))
+    }
+
+    /// The L1 Pallas censor/EC kernel over the flat parameter vector.
+    #[allow(clippy::too_many_arguments)]
+    pub fn sparsify(
+        &mut self,
+        grad: &[f32],
+        h: &[f32],
+        e: &[f32],
+        theta_diff: &[f32],
+        xi: f32,
+        beta: f32,
+        m_inv: f32,
+    ) -> Result<(Vec<f32>, Vec<f32>, Vec<f32>)> {
+        let d = self.n_params as i64;
+        let xi_vec = vec![xi; self.n_params];
+        let inputs = vec![
+            Runtime::lit_f32(grad, &[d])?,
+            Runtime::lit_f32(h, &[d])?,
+            Runtime::lit_f32(e, &[d])?,
+            Runtime::lit_f32(theta_diff, &[d])?,
+            Runtime::lit_f32(&xi_vec, &[d])?,
+            Runtime::lit_f32(&[beta, m_inv], &[2])?,
+        ];
+        let mut out = self.rt.exec(&self.sparsify_name, &inputs)?;
+        let e_new = out.remove(2);
+        let h_new = out.remove(1);
+        let wire = out.remove(0);
+        Ok((wire, h_new, e_new))
+    }
+}

@@ -1,0 +1,249 @@
+//! PJRT runtime: load the AOT artifacts produced by `python/compile/aot.py`
+//! and execute them from the Rust request path. Python is never invoked at
+//! run time — the interchange is HLO *text* (see DESIGN.md and
+//! /opt/xla-example/README.md for why text, not serialized protos).
+
+pub mod engine;
+
+use crate::util::json::{self, Json};
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// One artifact's manifest entry.
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+    pub meta: HashMap<String, f64>,
+}
+
+#[derive(Debug, Clone)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// Parsed `artifacts/manifest.json`.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: HashMap<String, ArtifactSpec>,
+}
+
+impl Manifest {
+    /// Load from an artifacts directory.
+    pub fn load<P: AsRef<Path>>(dir: P) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts`?)", path.display()))?;
+        let v = json::parse(&text).map_err(|e| anyhow!("manifest: {e}"))?;
+        let mut artifacts = HashMap::new();
+        for a in v
+            .get("artifacts")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("manifest: missing artifacts[]"))?
+        {
+            let spec = parse_artifact(a)?;
+            artifacts.insert(spec.name.clone(), spec);
+        }
+        Ok(Manifest { dir, artifacts })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.artifacts
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact '{name}' not in manifest"))
+    }
+
+    /// Find the first artifact (alphabetically) whose name has the prefix.
+    pub fn find_prefix(&self, prefix: &str) -> Option<&ArtifactSpec> {
+        let mut names: Vec<&String> = self.artifacts.keys().collect();
+        names.sort();
+        names
+            .into_iter()
+            .find(|n| n.starts_with(prefix))
+            .map(|n| &self.artifacts[n])
+    }
+
+    /// Default artifacts directory: $GDSEC_ARTIFACTS or ./artifacts.
+    pub fn default_dir() -> PathBuf {
+        std::env::var("GDSEC_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+}
+
+fn parse_artifact(a: &Json) -> Result<ArtifactSpec> {
+    let name = a
+        .get("name")
+        .and_then(Json::as_str)
+        .ok_or_else(|| anyhow!("artifact missing name"))?
+        .to_string();
+    let file = a
+        .get("file")
+        .and_then(Json::as_str)
+        .ok_or_else(|| anyhow!("artifact {name}: missing file"))?
+        .to_string();
+    let tensors = |key: &str| -> Vec<TensorSpec> {
+        let mut out = Vec::new();
+        for t in a.get(key).and_then(Json::as_arr).unwrap_or(&[]) {
+            out.push(TensorSpec {
+                name: t.get("name").and_then(Json::as_str).unwrap_or_default().to_string(),
+                shape: t
+                    .get("shape")
+                    .and_then(Json::as_arr)
+                    .map(|s| s.iter().filter_map(Json::as_usize).collect())
+                    .unwrap_or_default(),
+                dtype: t.get("dtype").and_then(Json::as_str).unwrap_or("float32").to_string(),
+            });
+        }
+        out
+    };
+    let mut meta = HashMap::new();
+    if let Some(m) = a.get("meta").and_then(Json::as_obj) {
+        for (k, v) in m {
+            if let Some(x) = v.as_f64() {
+                meta.insert(k.clone(), x);
+            }
+        }
+    }
+    Ok(ArtifactSpec { name, file, inputs: tensors("inputs"), outputs: tensors("outputs"), meta })
+}
+
+/// A PJRT CPU client with a compiled-executable cache.
+///
+/// NOT `Send` (the underlying PJRT wrappers hold raw pointers); create one
+/// per thread via [`Runtime::new`] inside the thread. Compilation is
+/// per-instance; the HLO text load + compile for the artifacts in this
+/// repo takes tens of milliseconds.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    exes: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Runtime {
+    pub fn new(manifest: Manifest) -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Runtime { client, manifest, exes: HashMap::new() })
+    }
+
+    pub fn from_dir<P: AsRef<Path>>(dir: P) -> Result<Runtime> {
+        Runtime::new(Manifest::load(dir)?)
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch from cache) an artifact by manifest name.
+    pub fn load(&mut self, name: &str) -> Result<()> {
+        if self.exes.contains_key(name) {
+            return Ok(());
+        }
+        let spec = self.manifest.get(name)?.clone();
+        let path = self.manifest.dir.join(&spec.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        self.exes.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Execute an artifact. Outputs come back as f32 vectors.
+    pub fn exec(&mut self, name: &str, inputs: &[xla::Literal]) -> Result<Vec<Vec<f32>>> {
+        self.load(name)?;
+        let spec = self.manifest.get(name)?;
+        if inputs.len() != spec.inputs.len() {
+            bail!(
+                "artifact {name}: expected {} inputs, got {}",
+                spec.inputs.len(),
+                inputs.len()
+            );
+        }
+        let n_outputs = spec.outputs.len();
+        let exe = &self.exes[name];
+        let result = exe.execute::<xla::Literal>(inputs)?[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True: decompose.
+        let parts = result.to_tuple()?;
+        if parts.len() != n_outputs {
+            bail!("artifact {name}: expected {n_outputs} outputs, got {}", parts.len());
+        }
+        let mut out = Vec::with_capacity(parts.len());
+        for p in parts {
+            out.push(p.to_vec::<f32>()?);
+        }
+        Ok(out)
+    }
+
+    /// f32 literal with the given dims.
+    pub fn lit_f32(values: &[f32], dims: &[i64]) -> Result<xla::Literal> {
+        Ok(xla::Literal::vec1(values).reshape(dims)?)
+    }
+
+    /// f32 literal from f64 values (wire/compute precision boundary).
+    pub fn lit_from_f64(values: &[f64], dims: &[i64]) -> Result<xla::Literal> {
+        let v32: Vec<f32> = values.iter().map(|&x| x as f32).collect();
+        Self::lit_f32(&v32, dims)
+    }
+
+    /// i32 literal.
+    pub fn lit_i32(values: &[i32], dims: &[i64]) -> Result<xla::Literal> {
+        Ok(xla::Literal::vec1(values).reshape(dims)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn manifest_json() -> &'static str {
+        r#"{
+          "format": "hlo-text",
+          "artifacts": [
+            {"name": "a", "file": "a.hlo.txt",
+             "inputs": [{"name": "x", "shape": [2, 3], "dtype": "float32"}],
+             "outputs": [{"name": "out0", "shape": [3], "dtype": "float32"}],
+             "meta": {"d": 3}}
+          ]
+        }"#
+    }
+
+    #[test]
+    fn manifest_parses() {
+        let dir = std::env::temp_dir().join(format!("gdsec_manifest_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), manifest_json()).unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        let a = m.get("a").unwrap();
+        assert_eq!(a.inputs[0].shape, vec![2, 3]);
+        assert_eq!(a.inputs[0].elements(), 6);
+        assert_eq!(a.meta["d"], 3.0);
+        assert!(m.get("zzz").is_err());
+        assert!(m.find_prefix("a").is_some());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_manifest_is_context_error() {
+        let err = Manifest::load("/nonexistent/dir").unwrap_err();
+        assert!(format!("{err:#}").contains("make artifacts"));
+    }
+}

@@ -1,0 +1,234 @@
+//! Compressed sparse row (CSR) matrix — substrate for the RCV1-scale
+//! experiment (Fig 7: 15181×47236, ~0.1% density), where dense storage
+//! would be ~5.7 GB.
+
+use crate::linalg;
+
+/// CSR matrix with f64 values.
+#[derive(Debug, Clone)]
+pub struct CsrMat {
+    pub rows: usize,
+    pub cols: usize,
+    /// Row start offsets into `indices`/`values`; length rows+1.
+    pub indptr: Vec<usize>,
+    /// Column indices, strictly increasing within a row.
+    pub indices: Vec<u32>,
+    pub values: Vec<f64>,
+}
+
+impl CsrMat {
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+
+    /// Build from per-row (col, value) lists; each row list must be sorted
+    /// by column with unique columns.
+    pub fn from_rows(cols: usize, rows_data: &[Vec<(u32, f64)>]) -> CsrMat {
+        let rows = rows_data.len();
+        let mut indptr = Vec::with_capacity(rows + 1);
+        let mut indices = Vec::new();
+        let mut values = Vec::new();
+        indptr.push(0);
+        for row in rows_data {
+            let mut last: i64 = -1;
+            for &(c, v) in row {
+                assert!((c as usize) < cols, "col out of range");
+                assert!((c as i64) > last, "row cols must be sorted unique");
+                last = c as i64;
+                indices.push(c);
+                values.push(v);
+            }
+            indptr.push(indices.len());
+        }
+        CsrMat { rows, cols, indptr, indices, values }
+    }
+
+    /// Row accessor: (cols, values).
+    #[inline]
+    pub fn row(&self, i: usize) -> (&[u32], &[f64]) {
+        let (s, e) = (self.indptr[i], self.indptr[i + 1]);
+        (&self.indices[s..e], &self.values[s..e])
+    }
+
+    /// out = A * x (dense x).
+    pub fn spmv(&self, x: &[f64], out: &mut [f64]) {
+        assert_eq!(x.len(), self.cols);
+        assert_eq!(out.len(), self.rows);
+        for i in 0..self.rows {
+            let (cols, vals) = self.row(i);
+            let mut acc = 0.0;
+            for k in 0..cols.len() {
+                acc += vals[k] * x[cols[k] as usize];
+            }
+            out[i] = acc;
+        }
+    }
+
+    /// out += alpha * A^T * r.
+    pub fn spmv_t_acc(&self, alpha: f64, r: &[f64], out: &mut [f64]) {
+        assert_eq!(r.len(), self.rows);
+        assert_eq!(out.len(), self.cols);
+        for i in 0..self.rows {
+            let a = alpha * r[i];
+            if a == 0.0 {
+                continue;
+            }
+            let (cols, vals) = self.row(i);
+            for k in 0..cols.len() {
+                out[cols[k] as usize] += a * vals[k];
+            }
+        }
+    }
+
+    /// Squared L2 norm of row i.
+    pub fn row_nrm2_sq(&self, i: usize) -> f64 {
+        let (_, vals) = self.row(i);
+        linalg::nrm2_sq(vals)
+    }
+
+    /// Per-column sum of squared values — used for coordinate-wise
+    /// Lipschitz constants of quadratic/logistic losses.
+    pub fn col_sq_sums(&self) -> Vec<f64> {
+        let mut out = vec![0.0; self.cols];
+        for k in 0..self.values.len() {
+            let c = self.indices[k] as usize;
+            out[c] += self.values[k] * self.values[k];
+        }
+        out
+    }
+
+    /// Upper bound on sigma_max(A)^2 via power iteration on A^T A.
+    pub fn power_iter_ata(&self, iters: usize) -> f64 {
+        let d = self.cols;
+        if d == 0 || self.rows == 0 || self.nnz() == 0 {
+            return 0.0;
+        }
+        let mut v = vec![1.0 / (d as f64).sqrt(); d];
+        let mut av = vec![0.0; self.rows];
+        let mut atav = vec![0.0; d];
+        let mut lambda = 0.0;
+        for _ in 0..iters {
+            self.spmv(&v, &mut av);
+            linalg::zero(&mut atav);
+            self.spmv_t_acc(1.0, &av, &mut atav);
+            lambda = linalg::nrm2(&atav);
+            if lambda <= 1e-300 {
+                return 0.0;
+            }
+            for i in 0..d {
+                v[i] = atav[i] / lambda;
+            }
+        }
+        lambda
+    }
+
+    /// Slice out a contiguous row range as a new CSR (worker sharding).
+    pub fn row_slice(&self, start: usize, end: usize) -> CsrMat {
+        assert!(start <= end && end <= self.rows);
+        let s = self.indptr[start];
+        let e = self.indptr[end];
+        let indptr = self.indptr[start..=end].iter().map(|p| p - s).collect();
+        CsrMat {
+            rows: end - start,
+            cols: self.cols,
+            indptr,
+            indices: self.indices[s..e].to_vec(),
+            values: self.values[s..e].to_vec(),
+        }
+    }
+
+    /// Densify (tests / tiny matrices only).
+    pub fn to_dense(&self) -> linalg::DenseMat {
+        let mut m = linalg::DenseMat::zeros(self.rows, self.cols);
+        for i in 0..self.rows {
+            let (cols, vals) = self.row(i);
+            for k in 0..cols.len() {
+                m.row_mut(i)[cols[k] as usize] = vals[k];
+            }
+        }
+        m
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> CsrMat {
+        // [[1, 0, 2],
+        //  [0, 0, 0],
+        //  [0, 3, 4]]
+        CsrMat::from_rows(3, &[vec![(0, 1.0), (2, 2.0)], vec![], vec![(1, 3.0), (2, 4.0)]])
+    }
+
+    #[test]
+    fn structure() {
+        let a = sample();
+        assert_eq!(a.nnz(), 4);
+        assert_eq!(a.indptr, vec![0, 2, 2, 4]);
+        assert_eq!(a.row(1).0.len(), 0);
+    }
+
+    #[test]
+    fn spmv_matches_dense() {
+        let a = sample();
+        let x = vec![1.0, -1.0, 0.5];
+        let mut out = vec![0.0; 3];
+        a.spmv(&x, &mut out);
+        assert_eq!(out, vec![2.0, 0.0, -1.0]);
+
+        let dense = a.to_dense();
+        let mut out2 = vec![0.0; 3];
+        dense.gemv(&x, &mut out2);
+        assert_eq!(out, out2);
+    }
+
+    #[test]
+    fn spmv_t_matches_dense() {
+        let a = sample();
+        let r = vec![2.0, 5.0, -1.0];
+        let mut out = vec![0.0; 3];
+        a.spmv_t_acc(1.0, &r, &mut out);
+        let dense = a.to_dense();
+        let mut out2 = vec![0.0; 3];
+        dense.gemv_t_acc(1.0, &r, &mut out2);
+        assert_eq!(out, out2);
+    }
+
+    #[test]
+    fn col_sq_sums_correct() {
+        let a = sample();
+        assert_eq!(a.col_sq_sums(), vec![1.0, 9.0, 20.0]);
+    }
+
+    #[test]
+    fn row_slice_preserves_rows() {
+        let a = sample();
+        let b = a.row_slice(1, 3);
+        assert_eq!(b.rows, 2);
+        assert_eq!(b.row(0).0.len(), 0);
+        assert_eq!(b.row(1).1, &[3.0, 4.0]);
+        assert_eq!(b.indptr, vec![0, 0, 2]);
+    }
+
+    #[test]
+    fn power_iter_matches_dense() {
+        let a = sample();
+        let ld = linalg::power_iter_ata(&a.to_dense(), 200);
+        let ls = a.power_iter_ata(200);
+        assert!((ld - ls).abs() < 1e-6 * ld.max(1.0));
+    }
+
+    #[test]
+    #[should_panic]
+    fn unsorted_cols_rejected() {
+        CsrMat::from_rows(3, &[vec![(2, 1.0), (0, 1.0)]]);
+    }
+
+    #[test]
+    fn empty_matrix() {
+        let a = CsrMat::from_rows(5, &[]);
+        assert_eq!(a.rows, 0);
+        assert_eq!(a.power_iter_ata(5), 0.0);
+    }
+}

@@ -1,0 +1,169 @@
+//! Mini property-based testing framework (no `proptest` in the offline
+//! image). Randomized inputs from seeded generators, many cases per
+//! property, and a failure report that prints the seed + case index so a
+//! failure is exactly reproducible.
+//!
+//! Used by `rust/tests/prop_invariants.rs` for coordinator/codec/algorithm
+//! invariants, mirroring the guide's "proptest on coordinator invariants"
+//! requirement with an in-tree substrate.
+
+use crate::util::rng::{Pcg64, SplitMix64};
+
+/// Configuration of a property run.
+#[derive(Debug, Clone)]
+pub struct PropConfig {
+    pub cases: usize,
+    pub seed: u64,
+}
+
+impl Default for PropConfig {
+    fn default() -> Self {
+        // Seed can be overridden for reproduction: GDSEC_PROP_SEED=...
+        let seed = std::env::var("GDSEC_PROP_SEED")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(0xC0FFEE);
+        let cases = std::env::var("GDSEC_PROP_CASES")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(64);
+        PropConfig { cases, seed }
+    }
+}
+
+/// Run `prop` against `cases` independently-seeded RNGs. On failure (panic
+/// or Err), re-raises with the case seed embedded in the message.
+pub fn check<F>(name: &str, prop: F)
+where
+    F: FnMut(&mut Pcg64) -> Result<(), String>,
+{
+    check_with(PropConfig::default(), name, prop)
+}
+
+pub fn check_with<F>(cfg: PropConfig, name: &str, mut prop: F)
+where
+    F: FnMut(&mut Pcg64) -> Result<(), String>,
+{
+    for case in 0..cfg.cases {
+        let case_seed = SplitMix64::child(cfg.seed, case as u64);
+        let mut rng = Pcg64::seeded(case_seed);
+        let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| prop(&mut rng)));
+        match outcome {
+            Ok(Ok(())) => {}
+            Ok(Err(msg)) => panic!(
+                "property '{name}' failed at case {case}/{} (seed {case_seed:#x}): {msg}\n\
+                 reproduce with GDSEC_PROP_SEED={} (master seed)",
+                cfg.cases, cfg.seed
+            ),
+            Err(payload) => {
+                let msg = payload
+                    .downcast_ref::<String>()
+                    .cloned()
+                    .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+                    .unwrap_or_else(|| "panic".to_string());
+                panic!(
+                    "property '{name}' panicked at case {case}/{} (seed {case_seed:#x}): {msg}",
+                    cfg.cases
+                );
+            }
+        }
+    }
+}
+
+/// Common generators.
+pub mod gen {
+    use crate::util::rng::Pcg64;
+
+    /// Vector length in [1, max_len].
+    pub fn len(rng: &mut Pcg64, max_len: usize) -> usize {
+        1 + rng.index(max_len)
+    }
+
+    /// Dense vector with mixed magnitudes, exact zeros and sign flips —
+    /// the nasty-but-realistic distribution for codec tests.
+    pub fn vec_mixed(rng: &mut Pcg64, n: usize) -> Vec<f64> {
+        (0..n)
+            .map(|_| match rng.index(5) {
+                0 => 0.0,
+                1 => rng.normal() * 1e-8,
+                2 => rng.normal(),
+                3 => rng.normal() * 1e6,
+                _ => rng.sign() * rng.uniform(),
+            })
+            .collect()
+    }
+
+    /// Sparse-ish vector: each component zero with probability `p_zero`.
+    pub fn vec_sparse(rng: &mut Pcg64, n: usize, p_zero: f64) -> Vec<f64> {
+        (0..n).map(|_| if rng.bernoulli(p_zero) { 0.0 } else { rng.normal() }).collect()
+    }
+
+    /// f32-exact vector (values that survive f64→f32→f64 roundtrip), since
+    /// the wire format is 32-bit per the paper.
+    pub fn vec_f32_exact(rng: &mut Pcg64, n: usize) -> Vec<f64> {
+        (0..n).map(|_| (rng.normal() as f32) as f64).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let counter = std::sync::atomic::AtomicUsize::new(0);
+        check_with(PropConfig { cases: 10, seed: 1 }, "trivial", |rng| {
+            counter.fetch_add(1, std::sync::atomic::Ordering::SeqCst);
+            let _ = rng.next_u64();
+            Ok(())
+        });
+        assert_eq!(counter.load(std::sync::atomic::Ordering::SeqCst), 10);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'fails'")]
+    fn failing_property_reports() {
+        check_with(PropConfig { cases: 5, seed: 2 }, "fails", |rng| {
+            if rng.uniform() >= 0.0 {
+                Err("always".to_string())
+            } else {
+                Ok(())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "panicked")]
+    fn panicking_property_reports() {
+        check_with(PropConfig { cases: 3, seed: 3 }, "boom", |_rng| {
+            panic!("boom inner");
+        });
+    }
+
+    #[test]
+    fn generators_shapes() {
+        let mut rng = Pcg64::seeded(5);
+        let v = gen::vec_mixed(&mut rng, 100);
+        assert_eq!(v.len(), 100);
+        let s = gen::vec_sparse(&mut rng, 1000, 0.9);
+        let zeros = s.iter().filter(|&&x| x == 0.0).count();
+        assert!(zeros > 800, "zeros={zeros}");
+        let f = gen::vec_f32_exact(&mut rng, 50);
+        assert!(f.iter().all(|&x| (x as f32) as f64 == x));
+    }
+
+    #[test]
+    fn cases_are_deterministic() {
+        let mut first = Vec::new();
+        check_with(PropConfig { cases: 4, seed: 42 }, "record", |rng| {
+            first.push(rng.next_u64());
+            Ok(())
+        });
+        let mut second = Vec::new();
+        check_with(PropConfig { cases: 4, seed: 42 }, "record", |rng| {
+            second.push(rng.next_u64());
+            Ok(())
+        });
+        assert_eq!(first, second);
+    }
+}

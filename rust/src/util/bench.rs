@@ -1,0 +1,230 @@
+//! Micro/endtoend benchmark harness (no `criterion` in the offline image).
+//!
+//! Provides warmup + timed iterations with robust summary statistics
+//! (mean, median, p95, min/max, std) and throughput reporting. Bench
+//! binaries under `rust/benches/` are `harness = false` and call into this.
+
+use std::time::{Duration, Instant};
+
+/// Summary statistics over per-iteration wall times.
+#[derive(Debug, Clone)]
+pub struct BenchStats {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub median_ns: f64,
+    pub p95_ns: f64,
+    pub min_ns: f64,
+    pub max_ns: f64,
+    pub std_ns: f64,
+    /// Optional user-supplied work units per iteration (elements, bytes...).
+    pub units_per_iter: Option<f64>,
+    pub unit_name: Option<String>,
+}
+
+impl BenchStats {
+    /// Work-units per second, if units were declared.
+    pub fn throughput(&self) -> Option<f64> {
+        self.units_per_iter.map(|u| u / (self.mean_ns * 1e-9))
+    }
+
+    pub fn report(&self) -> String {
+        let mut s = format!(
+            "{:<40} {:>10} {:>12} {:>12} {:>12}",
+            self.name,
+            format!("n={}", self.iters),
+            format!("mean {}", fmt_ns(self.mean_ns)),
+            format!("p50 {}", fmt_ns(self.median_ns)),
+            format!("p95 {}", fmt_ns(self.p95_ns)),
+        );
+        if let (Some(tp), Some(unit)) = (self.throughput(), &self.unit_name) {
+            s.push_str(&format!("  [{}/s: {}]", unit, fmt_count(tp)));
+        }
+        s
+    }
+}
+
+/// Format a nanosecond quantity with a readable unit.
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0}ns")
+    } else if ns < 1e6 {
+        format!("{:.2}µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2}ms", ns / 1e6)
+    } else {
+        format!("{:.3}s", ns / 1e9)
+    }
+}
+
+/// Format a big count (e.g. throughput) with SI prefix.
+pub fn fmt_count(x: f64) -> String {
+    if x >= 1e9 {
+        format!("{:.2}G", x / 1e9)
+    } else if x >= 1e6 {
+        format!("{:.2}M", x / 1e6)
+    } else if x >= 1e3 {
+        format!("{:.2}k", x / 1e3)
+    } else {
+        format!("{x:.1}")
+    }
+}
+
+/// Benchmark runner configuration.
+#[derive(Debug, Clone)]
+pub struct Bencher {
+    pub warmup: Duration,
+    pub measure: Duration,
+    pub min_iters: usize,
+    pub max_iters: usize,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher {
+            warmup: Duration::from_millis(200),
+            measure: Duration::from_millis(900),
+            min_iters: 5,
+            max_iters: 100_000,
+        }
+    }
+}
+
+impl Bencher {
+    /// Quick mode for CI / smoke runs (env `GDSEC_BENCH_QUICK=1`).
+    pub fn from_env() -> Self {
+        if std::env::var("GDSEC_BENCH_QUICK").ok().as_deref() == Some("1") {
+            Bencher {
+                warmup: Duration::from_millis(20),
+                measure: Duration::from_millis(80),
+                min_iters: 2,
+                max_iters: 1_000,
+            }
+        } else {
+            Bencher::default()
+        }
+    }
+
+    /// Run `f` repeatedly, timing each call.
+    pub fn run<F: FnMut()>(&self, name: &str, mut f: F) -> BenchStats {
+        // Warmup.
+        let start = Instant::now();
+        while start.elapsed() < self.warmup {
+            f();
+        }
+        // Measure.
+        let mut samples: Vec<f64> = Vec::new();
+        let start = Instant::now();
+        while (start.elapsed() < self.measure || samples.len() < self.min_iters)
+            && samples.len() < self.max_iters
+        {
+            let t0 = Instant::now();
+            f();
+            samples.push(t0.elapsed().as_nanos() as f64);
+        }
+        stats_from(name, &mut samples, None, None)
+    }
+
+    /// Run with declared throughput units (e.g. elements processed/iter).
+    pub fn run_units<F: FnMut()>(
+        &self,
+        name: &str,
+        units_per_iter: f64,
+        unit_name: &str,
+        mut f: F,
+    ) -> BenchStats {
+        let mut s = self.run(name, &mut f);
+        s.units_per_iter = Some(units_per_iter);
+        s.unit_name = Some(unit_name.to_string());
+        s
+    }
+
+    /// Time a single long-running call (end-to-end experiments): no warmup,
+    /// one sample, reported as-is.
+    pub fn run_once<F: FnOnce()>(&self, name: &str, f: F) -> BenchStats {
+        let t0 = Instant::now();
+        f();
+        let ns = t0.elapsed().as_nanos() as f64;
+        stats_from(name, &mut vec![ns], None, None)
+    }
+}
+
+fn stats_from(
+    name: &str,
+    samples: &mut Vec<f64>,
+    units: Option<f64>,
+    unit_name: Option<String>,
+) -> BenchStats {
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = samples.len();
+    let mean = samples.iter().sum::<f64>() / n as f64;
+    let var = samples.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / n as f64;
+    BenchStats {
+        name: name.to_string(),
+        iters: n,
+        mean_ns: mean,
+        median_ns: samples[n / 2],
+        p95_ns: samples[((n as f64 * 0.95) as usize).min(n - 1)],
+        min_ns: samples[0],
+        max_ns: samples[n - 1],
+        std_ns: var.sqrt(),
+        units_per_iter: units,
+        unit_name,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_and_reports() {
+        let b = Bencher {
+            warmup: Duration::from_millis(5),
+            measure: Duration::from_millis(20),
+            min_iters: 3,
+            max_iters: 10_000,
+        };
+        let mut acc = 0u64;
+        let s = b.run("noop-ish", || {
+            acc = acc.wrapping_add(std::hint::black_box(1));
+        });
+        assert!(s.iters >= 3);
+        assert!(s.mean_ns > 0.0);
+        assert!(s.min_ns <= s.median_ns && s.median_ns <= s.max_ns);
+        assert!(s.report().contains("noop-ish"));
+    }
+
+    #[test]
+    fn throughput_computed() {
+        let b = Bencher {
+            warmup: Duration::from_millis(1),
+            measure: Duration::from_millis(10),
+            min_iters: 2,
+            max_iters: 1000,
+        };
+        let v = vec![1.0f64; 1024];
+        let s = b.run_units("sum1k", 1024.0, "elem", || {
+            std::hint::black_box(v.iter().sum::<f64>());
+        });
+        assert!(s.throughput().unwrap() > 0.0);
+        assert!(s.report().contains("elem/s"));
+    }
+
+    #[test]
+    fn fmt_helpers() {
+        assert_eq!(fmt_ns(500.0), "500ns");
+        assert!(fmt_ns(1500.0).contains("µs"));
+        assert!(fmt_ns(2.5e6).contains("ms"));
+        assert!(fmt_ns(3.0e9).contains('s'));
+        assert!(fmt_count(2.0e6).contains('M'));
+    }
+
+    #[test]
+    fn run_once_single_sample() {
+        let b = Bencher::default();
+        let s = b.run_once("single", || std::thread::sleep(Duration::from_millis(1)));
+        assert_eq!(s.iters, 1);
+        assert!(s.mean_ns >= 1e6);
+    }
+}

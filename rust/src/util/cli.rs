@@ -1,0 +1,211 @@
+//! Tiny command-line argument parser (no `clap` in the offline image).
+//!
+//! Supports `program <subcommand> --flag --key value --key=value` with typed
+//! accessors, defaults, and generated usage text. Enough for the `gdsec`
+//! launcher and the bench binaries.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone)]
+pub struct CliError(pub String);
+
+impl std::fmt::Display for CliError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for CliError {}
+
+/// Declared option for usage text.
+#[derive(Debug, Clone)]
+pub struct OptSpec {
+    pub name: String,
+    pub help: String,
+    pub default: Option<String>,
+}
+
+/// Parsed arguments: a subcommand, key→value options, bare flags, and
+/// positional arguments.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub opts: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse an argv slice (excluding the program name). The first token
+    /// not starting with `-` is the subcommand if `expect_subcommand`.
+    pub fn parse(argv: &[String], expect_subcommand: bool) -> Result<Args, CliError> {
+        let mut args = Args::default();
+        let mut i = 0;
+        while i < argv.len() {
+            let tok = &argv[i];
+            if let Some(stripped) = tok.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    args.opts.insert(k.to_string(), v.to_string());
+                } else if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                    args.opts.insert(stripped.to_string(), argv[i + 1].clone());
+                    i += 1;
+                } else {
+                    args.flags.push(stripped.to_string());
+                }
+            } else if expect_subcommand && args.subcommand.is_none() {
+                args.subcommand = Some(tok.clone());
+            } else {
+                args.positional.push(tok.clone());
+            }
+            i += 1;
+        }
+        Ok(args)
+    }
+
+    /// Parse from `std::env::args()`.
+    pub fn from_env(expect_subcommand: bool) -> Result<Args, CliError> {
+        let argv: Vec<String> = std::env::args().skip(1).collect();
+        Self::parse(&argv, expect_subcommand)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> Result<usize, CliError> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| CliError(format!("--{name}: expected integer, got '{v}'"))),
+        }
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> Result<u64, CliError> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| CliError(format!("--{name}: expected integer, got '{v}'"))),
+        }
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> Result<f64, CliError> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| CliError(format!("--{name}: expected number, got '{v}'"))),
+        }
+    }
+
+    /// Required string option.
+    pub fn require(&self, name: &str) -> Result<&str, CliError> {
+        self.get(name).ok_or_else(|| CliError(format!("missing required option --{name}")))
+    }
+}
+
+/// Render a usage block from option specs.
+pub fn usage(program: &str, about: &str, subcommands: &[(&str, &str)], opts: &[OptSpec]) -> String {
+    let mut out = String::new();
+    out.push_str(&format!("{program} — {about}\n\nUSAGE:\n  {program}"));
+    if !subcommands.is_empty() {
+        out.push_str(" <subcommand>");
+    }
+    out.push_str(" [options]\n");
+    if !subcommands.is_empty() {
+        out.push_str("\nSUBCOMMANDS:\n");
+        for (name, help) in subcommands {
+            out.push_str(&format!("  {name:<16} {help}\n"));
+        }
+    }
+    if !opts.is_empty() {
+        out.push_str("\nOPTIONS:\n");
+        for o in opts {
+            let left = format!("--{}", o.name);
+            match &o.default {
+                Some(d) => out.push_str(&format!("  {left:<22} {} [default: {d}]\n", o.help)),
+                None => out.push_str(&format!("  {left:<22} {}\n", o.help)),
+            }
+        }
+    }
+    out
+}
+
+/// Convenience to declare an `OptSpec`.
+pub fn opt(name: &str, help: &str, default: Option<&str>) -> OptSpec {
+    OptSpec {
+        name: name.to_string(),
+        help: help.to_string(),
+        default: default.map(|s| s.to_string()),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(items: &[&str]) -> Vec<String> {
+        items.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_and_opts() {
+        let a = Args::parse(&sv(&["train", "--alpha", "0.01", "--iters=500", "--verbose"]), true)
+            .unwrap();
+        assert_eq!(a.subcommand.as_deref(), Some("train"));
+        assert_eq!(a.get("alpha"), Some("0.01"));
+        assert_eq!(a.get_usize("iters", 0).unwrap(), 500);
+        assert!(a.flag("verbose"));
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = Args::parse(&sv(&["run"]), true).unwrap();
+        assert_eq!(a.get_f64("alpha", 0.5).unwrap(), 0.5);
+        assert_eq!(a.get_or("mode", "fast"), "fast");
+    }
+
+    #[test]
+    fn typed_errors() {
+        let a = Args::parse(&sv(&["--iters", "abc"]), false).unwrap();
+        assert!(a.get_usize("iters", 0).is_err());
+        assert!(a.require("missing").is_err());
+    }
+
+    #[test]
+    fn positional_after_subcommand() {
+        let a = Args::parse(&sv(&["bench", "fig1", "fig2", "--quick"]), true).unwrap();
+        assert_eq!(a.subcommand.as_deref(), Some("bench"));
+        assert_eq!(a.positional, vec!["fig1", "fig2"]);
+        assert!(a.flag("quick"));
+    }
+
+    #[test]
+    fn negative_number_as_value() {
+        // `--xi -1` parses the -1 as a value because it doesn't start with --.
+        let a = Args::parse(&sv(&["--xi", "-1"]), false).unwrap();
+        assert_eq!(a.get_f64("xi", 0.0).unwrap(), -1.0);
+    }
+
+    #[test]
+    fn usage_renders() {
+        let u = usage(
+            "gdsec",
+            "GD-SEC launcher",
+            &[("train", "run a training job")],
+            &[opt("alpha", "step size", Some("1/L"))],
+        );
+        assert!(u.contains("SUBCOMMANDS"));
+        assert!(u.contains("--alpha"));
+        assert!(u.contains("[default: 1/L]"));
+    }
+}

@@ -1,0 +1,94 @@
+//! CSV writing/reading for experiment traces (`results/*.csv`).
+//!
+//! The figure-regeneration harness emits one CSV per paper figure with the
+//! exact series plotted; plotting is external (any CSV tool), the repo's
+//! contract is the data.
+
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::Path;
+
+/// Streaming CSV writer with a fixed header.
+pub struct CsvWriter {
+    out: BufWriter<File>,
+    cols: usize,
+}
+
+impl CsvWriter {
+    pub fn create<P: AsRef<Path>>(path: P, header: &[&str]) -> std::io::Result<CsvWriter> {
+        if let Some(parent) = path.as_ref().parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut out = BufWriter::new(File::create(path)?);
+        writeln!(out, "{}", header.join(","))?;
+        Ok(CsvWriter { out, cols: header.len() })
+    }
+
+    /// Write a row of f64s (formatted with full precision).
+    pub fn row_f64(&mut self, row: &[f64]) -> std::io::Result<()> {
+        debug_assert_eq!(row.len(), self.cols);
+        let cells: Vec<String> = row.iter().map(|v| format_cell(*v)).collect();
+        writeln!(self.out, "{}", cells.join(","))
+    }
+
+    /// Write a row of mixed string cells.
+    pub fn row(&mut self, row: &[String]) -> std::io::Result<()> {
+        debug_assert_eq!(row.len(), self.cols);
+        writeln!(self.out, "{}", row.join(","))
+    }
+
+    pub fn flush(&mut self) -> std::io::Result<()> {
+        self.out.flush()
+    }
+}
+
+fn format_cell(v: f64) -> String {
+    if v.is_finite() && v == v.trunc() && v.abs() < 1e15 {
+        format!("{}", v as i64)
+    } else {
+        format!("{v:.10e}")
+    }
+}
+
+/// Parse a simple CSV file (no quoted fields needed for our outputs).
+pub fn read_csv<P: AsRef<Path>>(path: P) -> std::io::Result<(Vec<String>, Vec<Vec<String>>)> {
+    let text = std::fs::read_to_string(path)?;
+    let mut lines = text.lines();
+    let header = lines
+        .next()
+        .map(|h| h.split(',').map(|s| s.to_string()).collect())
+        .unwrap_or_default();
+    let rows = lines
+        .filter(|l| !l.trim().is_empty())
+        .map(|l| l.split(',').map(|s| s.to_string()).collect())
+        .collect();
+    Ok((header, rows))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let dir = std::env::temp_dir().join(format!("gdsec_csv_{}", std::process::id()));
+        let path = dir.join("t.csv");
+        let mut w = CsvWriter::create(&path, &["iter", "err", "bits"]).unwrap();
+        w.row_f64(&[0.0, 1.5e-3, 32000.0]).unwrap();
+        w.row_f64(&[1.0, 7.2e-4, 64000.0]).unwrap();
+        w.flush().unwrap();
+        let (header, rows) = read_csv(&path).unwrap();
+        assert_eq!(header, vec!["iter", "err", "bits"]);
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0][0], "0");
+        assert!(rows[0][1].contains('e'));
+        assert_eq!(rows[1][2], "64000");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn integers_written_plain() {
+        assert_eq!(format_cell(42.0), "42");
+        assert!(format_cell(0.125).starts_with("1.25"));
+    }
+}

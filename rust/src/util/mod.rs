@@ -1,0 +1,104 @@
+//! Foundation utilities built from scratch for the offline environment:
+//! PRNG, JSON, CLI parsing, bench harness, CSV/table output, timing.
+
+pub mod bench;
+pub mod cli;
+pub mod csv;
+pub mod json;
+pub mod rng;
+pub mod tablefmt;
+
+use std::time::Instant;
+
+/// Simple scoped wall-clock timer.
+pub struct Timer {
+    start: Instant,
+}
+
+impl Timer {
+    pub fn start() -> Self {
+        Timer { start: Instant::now() }
+    }
+
+    pub fn elapsed_secs(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    pub fn elapsed_ms(&self) -> f64 {
+        self.start.elapsed().as_secs_f64() * 1e3
+    }
+}
+
+/// Log level for the built-in logger (no `log`/`env_logger` runtime deps on
+/// the hot path; this is plain stderr with a level gate).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+}
+
+static VERBOSITY: std::sync::atomic::AtomicU8 = std::sync::atomic::AtomicU8::new(2);
+
+/// Set the global log verbosity (0=error..3=debug).
+pub fn set_verbosity(level: u8) {
+    VERBOSITY.store(level.min(3), std::sync::atomic::Ordering::Relaxed);
+}
+
+/// Whether a message at `level` should be emitted.
+pub fn enabled(level: Level) -> bool {
+    (level as u8) <= VERBOSITY.load(std::sync::atomic::Ordering::Relaxed)
+}
+
+/// Log a line to stderr if the level is enabled.
+pub fn log(level: Level, msg: &str) {
+    if enabled(level) {
+        let tag = match level {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN ",
+            Level::Info => "INFO ",
+            Level::Debug => "DEBUG",
+        };
+        eprintln!("[{tag}] {msg}");
+    }
+}
+
+#[macro_export]
+macro_rules! info {
+    ($($arg:tt)*) => { $crate::util::log($crate::util::Level::Info, &format!($($arg)*)) };
+}
+
+#[macro_export]
+macro_rules! warnln {
+    ($($arg:tt)*) => { $crate::util::log($crate::util::Level::Warn, &format!($($arg)*)) };
+}
+
+#[macro_export]
+macro_rules! debugln {
+    ($($arg:tt)*) => { $crate::util::log($crate::util::Level::Debug, &format!($($arg)*)) };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timer_monotonic() {
+        let t = Timer::start();
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        assert!(t.elapsed_ms() >= 1.0);
+        assert!(t.elapsed_secs() > 0.0);
+    }
+
+    #[test]
+    fn verbosity_gate() {
+        set_verbosity(1);
+        assert!(enabled(Level::Error));
+        assert!(enabled(Level::Warn));
+        assert!(!enabled(Level::Info));
+        set_verbosity(2);
+        assert!(enabled(Level::Info));
+        assert!(!enabled(Level::Debug));
+    }
+}

@@ -1,0 +1,112 @@
+//! Plain-text table rendering for experiment/bench reports — the harness
+//! prints "the same rows/series the paper reports" through this.
+
+/// A simple column-aligned table.
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(header: &[&str]) -> Table {
+        Table { header: header.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.header.len(), "table row width mismatch");
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let ncols = self.header.len();
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |cells: &[String], widths: &[usize], out: &mut String| {
+            for i in 0..ncols {
+                if i > 0 {
+                    out.push_str("  ");
+                }
+                out.push_str(&format!("{:<width$}", cells[i], width = widths[i]));
+            }
+            out.push('\n');
+        };
+        fmt_row(&self.header, &widths, &mut out);
+        let total: usize = widths.iter().sum::<usize>() + 2 * (ncols - 1);
+        out.push_str(&"-".repeat(total));
+        out.push('\n');
+        for row in &self.rows {
+            fmt_row(row, &widths, &mut out);
+        }
+        out
+    }
+}
+
+/// Scientific notation with fixed significant digits, `-` for NaN.
+pub fn sci(v: f64) -> String {
+    if v.is_nan() {
+        "-".to_string()
+    } else {
+        format!("{v:.3e}")
+    }
+}
+
+/// Human-readable bit count (b, kb, Mb, Gb — decimal, matching the paper's
+/// "total transmitted bits" axis).
+pub fn bits(v: f64) -> String {
+    if v >= 1e9 {
+        format!("{:.2}Gb", v / 1e9)
+    } else if v >= 1e6 {
+        format!("{:.2}Mb", v / 1e6)
+    } else if v >= 1e3 {
+        format!("{:.2}kb", v / 1e3)
+    } else {
+        format!("{v:.0}b")
+    }
+}
+
+/// Percent with 2 decimals.
+pub fn pct(v: f64) -> String {
+    format!("{:.2}%", v * 100.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = Table::new(&["algo", "bits", "err"]);
+        t.row(vec!["GD".into(), "1.2Mb".into(), "1e-3".into()]);
+        t.row(vec!["GD-SEC".into(), "8.1kb".into(), "1e-3".into()]);
+        let r = t.render();
+        assert!(r.contains("GD-SEC"));
+        let lines: Vec<&str> = r.lines().collect();
+        assert_eq!(lines.len(), 4);
+        // header and rows aligned: 'bits' column starts at same offset
+        let off = lines[0].find("bits").unwrap();
+        assert_eq!(lines[2].find("1.2Mb").unwrap(), off);
+    }
+
+    #[test]
+    #[should_panic]
+    fn row_width_checked() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(vec!["only-one".into()]);
+    }
+
+    #[test]
+    fn formatters() {
+        assert_eq!(bits(500.0), "500b");
+        assert_eq!(bits(2_500.0), "2.50kb");
+        assert_eq!(bits(3.2e6), "3.20Mb");
+        assert_eq!(bits(1.5e9), "1.50Gb");
+        assert_eq!(pct(0.9934), "99.34%");
+        assert_eq!(sci(f64::NAN), "-");
+        assert!(sci(5.4e-3).contains("e-3"));
+    }
+}

@@ -1,0 +1,75 @@
+//! Experiment-harness integration: every figure runner completes in quick
+//! mode, writes parseable CSVs, and reproduces the paper's qualitative
+//! claims (who wins, roughly by how much).
+
+use gdsec::experiments::{run_figure, ExpContext};
+use gdsec::util::csv::read_csv;
+
+fn ctx(tag: &str) -> ExpContext {
+    let dir = std::env::temp_dir().join(format!("gdsec_expit_{tag}_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    ExpContext::quick(&dir)
+}
+
+#[test]
+fn all_figures_run_quick_and_write_csvs() {
+    let ctx = ctx("all");
+    let reports = run_figure("all", &ctx).unwrap();
+    assert_eq!(reports.len(), 9);
+    for r in &reports {
+        assert!(!r.rendered.is_empty(), "{} produced no table", r.fig);
+        for f in &r.csv_files {
+            let (header, rows) = read_csv(ctx.csv_path(f)).unwrap();
+            assert!(!header.is_empty(), "{f}: empty header");
+            assert!(!rows.is_empty(), "{f}: no rows");
+            for row in &rows {
+                assert_eq!(row.len(), header.len(), "{f}: ragged row");
+            }
+        }
+    }
+    std::fs::remove_dir_all(&ctx.out_dir).ok();
+}
+
+#[test]
+fn unknown_figure_rejected() {
+    let ctx = ctx("bad");
+    assert!(run_figure("fig99", &ctx).is_err());
+    std::fs::remove_dir_all(&ctx.out_dir).ok();
+}
+
+#[test]
+fn fig1_gdsec_wins_bits_race() {
+    let ctx = ctx("f1");
+    let r = &run_figure("fig1", &ctx).unwrap()[0];
+    // Paper: GD-SEC has by far the fewest bits to target among all six.
+    let sec = r
+        .headline
+        .iter()
+        .find(|(k, _)| k.starts_with("GD-SEC"))
+        .map(|(_, v)| *v)
+        .unwrap_or(f64::NAN);
+    assert!(sec > 0.5, "GD-SEC savings at target too small: {sec}");
+    std::fs::remove_dir_all(&ctx.out_dir).ok();
+}
+
+#[test]
+fn traces_have_monotone_bits_and_iters() {
+    let ctx = ctx("mono");
+    let r = &run_figure("fig2", &ctx).unwrap()[0];
+    for f in &r.csv_files {
+        let (header, rows) = read_csv(ctx.csv_path(f)).unwrap();
+        let bit_col = header.iter().position(|h| h == "bits").unwrap();
+        let iter_col = header.iter().position(|h| h == "iter").unwrap();
+        let mut prev_bits = -1.0;
+        let mut prev_iter = -1.0;
+        for row in &rows {
+            let b: f64 = row[bit_col].parse().unwrap();
+            let i: f64 = row[iter_col].parse().unwrap();
+            assert!(b >= prev_bits, "{f}: bits not monotone");
+            assert!(i > prev_iter, "{f}: iters not strictly increasing");
+            prev_bits = b;
+            prev_iter = i;
+        }
+    }
+    std::fs::remove_dir_all(&ctx.out_dir).ok();
+}

@@ -1,0 +1,210 @@
+//! Algorithm-level integration tests: convergence-theory checks
+//! (Theorems 1–3), cross-algorithm consistency, and end-to-end behaviour
+//! of the full baseline suite on shared workloads.
+
+use gdsec::algo::gdsec::{GdSecConfig, Xi};
+use gdsec::algo::gdsec as gdsec_algo;
+use gdsec::algo::{cgd, gd, iag, qgd, sgdsec, topj};
+use gdsec::data::synthetic;
+use gdsec::objectives::{ObjectiveKind, Problem};
+
+fn logreg_problem(seed: u64) -> Problem {
+    Problem::logistic(synthetic::paper_logreg(seed, 5, 50, 300), 5, 1.0 / 250.0)
+}
+
+#[test]
+fn theorem1_linear_rate_strongly_convex() {
+    // Under (13) with α = 1/L the error must contract geometrically:
+    // stable per-iteration contraction ratio over the trajectory.
+    // Well-conditioned strongly-convex problem (dna-like, λ=0.1) — the
+    // paper-recipe synthetic has κ ~ 1e5 and converges too slowly to
+    // resolve a rate within a test budget.
+    let prob = Problem::logistic(synthetic::dna_like(1, 120), 3, 0.1);
+    let cfg = GdSecConfig {
+        alpha: 1.0 / prob.lipschitz(),
+        beta: 0.01,
+        xi: Xi::Uniform(30.0),
+        ..Default::default()
+    };
+    let t = gdsec_algo::run(&prob, &cfg, 800);
+    let errs = t.errors();
+    let e100 = errs[100];
+    let e400 = errs[400];
+    let e700 = errs[700];
+    assert!(e400 < e100 * 0.5, "not contracting: {e100} -> {e400}");
+    assert!(e700 < e400 * 0.7, "stalls: {e400} -> {e700}");
+    let r1 = (e400 / e100).powf(1.0 / 300.0);
+    let r2 = (e700 / e400).powf(1.0 / 300.0);
+    assert!(r1 < 1.0 && r2 < 1.0);
+    assert!((r1 - r2).abs() < 0.05, "rate not geometric: {r1} vs {r2}");
+}
+
+#[test]
+fn theorem3_nonconvex_objective_decreases() {
+    let data = synthetic::w2a_like(3, 600);
+    let prob = Problem::nlls(data, 5, 1.0 / 600.0);
+    let cfg = GdSecConfig {
+        alpha: 1.0 / prob.lipschitz(),
+        beta: 0.01,
+        xi: Xi::Uniform(2000.0 * 5.0),
+        ..Default::default()
+    };
+    let t = gdsec_algo::run(&prob, &cfg, 400);
+    // Lyapunov-style: objective decreases overall; tiny oscillations are
+    // tolerated (the Lyapunov function, not f itself, is monotone).
+    let f0 = t.rows[0].fval;
+    let fend = t.rows.last().unwrap().fval;
+    assert!(fend < f0, "{f0} -> {fend}");
+    let worst_bump = t
+        .rows
+        .windows(2)
+        .map(|w| w[1].fval - w[0].fval)
+        .fold(f64::NEG_INFINITY, f64::max);
+    assert!(worst_bump < (f0 - fend) * 0.05, "large non-monotonicity {worst_bump}");
+}
+
+#[test]
+fn gdsec_beats_every_baseline_on_bits_paper_fig2_setup() {
+    // Well-conditioned logistic problem so all algorithms reach a tight
+    // common target within the test budget; at tight targets GD-SEC's
+    // adaptive censoring dominates every baseline (paper Figs 1-2).
+    let prob = Problem::logistic(synthetic::dna_like(7, 240), 4, 0.05);
+    let alpha = 1.0 / prob.lipschitz();
+    let lambda = prob.lambda;
+    let iters = 600;
+    let fstar = prob.estimate_fstar(4000);
+    let t_gd =
+        gd::run(&prob, &gd::GdConfig { alpha, eval_every: 1, fstar: Some(fstar) }, iters);
+    let t_sec = gdsec_algo::run(
+        &prob,
+        &GdSecConfig {
+            alpha,
+            beta: 0.01,
+            xi: Xi::Uniform(200.0),
+            fstar: Some(fstar),
+            ..Default::default()
+        },
+        iters,
+    );
+    let t_cgd = cgd::run(
+        &prob,
+        &cgd::CgdConfig { alpha, xi: 4.0, eval_every: 1, fstar: Some(fstar) },
+        iters,
+    );
+    let t_qgd = qgd::run(
+        &prob,
+        &qgd::QgdConfig { alpha, s: 255, seed: 1, eval_every: 1, fstar: Some(fstar) },
+        iters,
+    );
+    let t_topj = topj::run(
+        &prob,
+        &topj::TopJConfig { j: 10, gamma0: 0.01, lambda, eval_every: 1, fstar: Some(fstar) },
+        iters,
+    );
+    // target: what both GD and GD-SEC comfortably reach
+    let eps = t_gd.final_error().max(t_sec.final_error()) * 3.0;
+    let sec_bits = t_sec.bits_to_reach(eps).expect("GD-SEC must reach eps");
+    for other in [&t_gd, &t_cgd, &t_qgd, &t_topj] {
+        if let Some(b) = other.bits_to_reach(eps) {
+            assert!(
+                sec_bits < b,
+                "GD-SEC ({sec_bits}) not cheaper than {} ({b}) at eps {eps:.2e}",
+                other.algo
+            );
+        } // baseline never reaching the target counts as a GD-SEC win
+    }
+}
+
+#[test]
+fn all_objectives_converge_under_gdsec() {
+    for kind in
+        [ObjectiveKind::LinReg, ObjectiveKind::LogReg, ObjectiveKind::Lasso, ObjectiveKind::Nlls]
+    {
+        let prob = Problem::new(kind, synthetic::dna_like(11, 300), 4, 0.02);
+        let cfg = GdSecConfig {
+            alpha: 1.0 / prob.lipschitz(),
+            beta: 0.01,
+            xi: Xi::Uniform(50.0),
+            ..Default::default()
+        };
+        let t = gdsec_algo::run(&prob, &cfg, 250);
+        let errs = t.errors();
+        assert!(
+            errs.last().unwrap() < &(errs[0] * 0.3),
+            "{kind:?}: {} -> {}",
+            errs[0],
+            errs.last().unwrap()
+        );
+    }
+}
+
+#[test]
+fn iag_and_stochastic_paths_run_on_shared_problem() {
+    let prob = logreg_problem(13);
+    let alpha = 1.0 / prob.lipschitz();
+    let t_iag = iag::run(
+        &prob,
+        &iag::IagConfig { alpha: alpha / 10.0, seed: 5, eval_every: 2, fstar: None },
+        200,
+    );
+    assert!(t_iag.final_error().is_finite());
+    let scfg = sgdsec::SgdSecConfig {
+        gamma0: 0.01,
+        lambda: prob.lambda,
+        beta: 0.01,
+        xi: Xi::Uniform(400.0),
+        batch: 5,
+        seed: 5,
+        quantize_s: None,
+        eval_every: 5,
+        fstar: None,
+    };
+    let t_sec = sgdsec::run_sgdsec(&prob, &scfg, 200);
+    let t_sgd = sgdsec::run_sgd(&prob, &scfg, 200);
+    assert!(t_sec.total_bits() < t_sgd.total_bits());
+}
+
+#[test]
+fn eval_every_subsamples_trace() {
+    let prob = logreg_problem(17);
+    let cfg = GdSecConfig {
+        alpha: 1.0 / prob.lipschitz(),
+        eval_every: 10,
+        xi: Xi::Uniform(100.0),
+        ..Default::default()
+    };
+    let t = gdsec_algo::run(&prob, &cfg, 100);
+    // rows: iter 0 + every 10th
+    assert_eq!(t.rows.len(), 11);
+    assert_eq!(t.rows[1].iter, 10);
+    assert_eq!(t.rows.last().unwrap().iter, 100);
+}
+
+#[test]
+fn more_workers_than_samples() {
+    // Some shards are empty; nothing panics and empty-shard workers
+    // contribute only the regularizer gradient.
+    let prob = Problem::linear(synthetic::dna_like(19, 5), 8, 0.1);
+    let cfg = GdSecConfig {
+        alpha: 1.0 / prob.lipschitz().max(1e-9),
+        xi: Xi::Uniform(1.0),
+        ..Default::default()
+    };
+    let t = gdsec_algo::run(&prob, &cfg, 30);
+    assert!(t.final_error().is_finite());
+}
+
+#[test]
+fn diverging_run_keeps_bit_accounting_sane() {
+    // An absurd step size diverges numerically, but the bit counters must
+    // stay monotone and finite.
+    let prob = logreg_problem(23);
+    let cfg =
+        GdSecConfig { alpha: 1e6, beta: 1.0, xi: Xi::Uniform(0.0), ..Default::default() };
+    let t = gdsec_algo::run(&prob, &cfg, 20);
+    let mut prev = 0;
+    for r in &t.rows {
+        assert!(r.bits >= prev);
+        prev = r.bits;
+    }
+}

@@ -1,0 +1,255 @@
+//! PJRT runtime integration: load the jax/Pallas AOT artifacts, execute
+//! them from Rust, and pin the compiled worker step against the native
+//! Rust implementation.
+//!
+//! These tests need `make artifacts` to have run; they are skipped (with a
+//! loud message) when the manifest is absent so `cargo test` stays usable
+//! before the Python toolchain has produced artifacts.
+
+use gdsec::algo::gdsec::{GdSecConfig, WorkerState, Xi};
+use gdsec::coordinator::scheduler::Scheduler;
+use gdsec::coordinator::worker::{FailurePlan, GradProvider, ProviderFactory};
+use gdsec::coordinator::{CoordConfig, Coordinator};
+use gdsec::data::{synthetic, Features};
+use gdsec::objectives::{LocalObjective, ObjectiveKind, Problem};
+use gdsec::runtime::engine::{TfmEngine, WorkerScalars, XlaGradProvider, XlaWorkerStep};
+use gdsec::runtime::Manifest;
+use std::sync::Arc;
+
+fn manifest() -> Option<Manifest> {
+    match Manifest::load(Manifest::default_dir()) {
+        Ok(m) => Some(m),
+        Err(e) => {
+            eprintln!("SKIP runtime tests: {e:#}");
+            None
+        }
+    }
+}
+
+/// Build a problem exactly matching the compiled 30x180 shard artifacts:
+/// 3 workers x 30 samples, d=180 (dna-like), lambda=0.05.
+fn artifact_problem(kind: ObjectiveKind) -> Problem {
+    let n = if kind == ObjectiveKind::Nlls { 60 } else { 90 };
+    Problem::new(kind, synthetic::dna_like(23, n), 3, 0.05)
+}
+
+fn shard_dense(l: &LocalObjective) -> (Vec<f64>, Vec<f64>) {
+    match &l.shard.x {
+        Features::Dense(m) => (m.data.clone(), l.shard.y.clone()),
+        _ => panic!("dense shard expected"),
+    }
+}
+
+fn scalars_for(prob: &Problem) -> WorkerScalars {
+    WorkerScalars {
+        beta: 0.02,
+        m_inv: 1.0 / prob.m() as f64,
+        n_inv: 1.0 / prob.n_total as f64,
+        lambda: prob.lambda,
+    }
+}
+
+#[test]
+fn xla_worker_step_matches_native_gradient() {
+    let Some(man) = manifest() else { return };
+    for (kind, artifact) in [
+        (ObjectiveKind::LogReg, "worker_step_logreg_30x180"),
+        (ObjectiveKind::LinReg, "worker_step_linreg_30x180"),
+        (ObjectiveKind::Nlls, "worker_step_nlls_20x180"),
+    ] {
+        let prob = artifact_problem(kind);
+        let l = &prob.locals[0];
+        let (x, y) = shard_dense(l);
+        let mut step = XlaWorkerStep::new(man.clone(), artifact, &x, &y).unwrap();
+        let d = prob.d;
+        let theta: Vec<f64> = (0..d).map(|i| ((i % 13) as f64 - 6.0) * 0.02).collect();
+        let zeros32 = vec![0.0f32; d];
+        let zeros64 = vec![0.0f64; d];
+        // xi = 0, h = e = 0, beta = 0 => wire == local gradient.
+        let out = step
+            .step(
+                &theta,
+                &theta,
+                &zeros32,
+                &zeros32,
+                &zeros64,
+                WorkerScalars { beta: 0.0, ..scalars_for(&prob) },
+            )
+            .unwrap();
+        let mut native = vec![0.0; d];
+        l.grad(&theta, &mut native);
+        let native_loss = l.value(&theta);
+        assert!(
+            (out.loss - native_loss).abs() < 1e-4 * native_loss.abs().max(1.0),
+            "{kind:?} loss: xla {} vs native {}",
+            out.loss,
+            native_loss
+        );
+        for i in 0..d {
+            let w = out.wire[i] as f64;
+            assert!(
+                (w - native[i]).abs() < 2e-4 * native[i].abs().max(1e-3),
+                "{kind:?} grad[{i}]: xla {w} vs native {}",
+                native[i]
+            );
+        }
+    }
+}
+
+#[test]
+fn xla_sparsify_matches_native_worker_state() {
+    // Full censoring path: run the compiled fused step with non-trivial
+    // h, e, xi and compare against the native WorkerState on the SAME f32
+    // gradient.
+    let Some(man) = manifest() else { return };
+    let prob = artifact_problem(ObjectiveKind::LogReg);
+    let l = &prob.locals[1];
+    let (x, y) = shard_dense(l);
+    let mut step = XlaWorkerStep::new(man, "worker_step_logreg_30x180", &x, &y).unwrap();
+    let d = prob.d;
+    let m = prob.m();
+    let theta: Vec<f64> = (0..d).map(|i| (i as f64 * 0.37).sin() * 0.1).collect();
+    let theta_prev: Vec<f64> = theta.iter().map(|v| v - 1e-3).collect();
+    let h: Vec<f32> = (0..d).map(|i| ((i * 7 % 11) as f32 - 5.0) * 0.001).collect();
+    let e: Vec<f32> = (0..d).map(|i| ((i * 3 % 5) as f32 - 2.0) * 0.0005).collect();
+    let xi = vec![200.0f64; d];
+    let scal = scalars_for(&prob);
+    let out = step.step(&theta, &theta_prev, &h, &e, &xi, scal).unwrap();
+
+    // Native mirror, fed the XLA gradient to isolate the sparsify logic.
+    // Reconstruct grad = wire + e_new + h − e  (EC identity: Δ = wire +
+    // e_new and Δ = grad − h + e).
+    let mut ws = WorkerState::new(d);
+    for i in 0..d {
+        ws.h[i] = h[i] as f64;
+        ws.e[i] = e[i] as f64;
+        ws.grad_mut()[i] =
+            (out.wire[i] as f64) + (out.e_new[i] as f64) + (h[i] as f64) - (e[i] as f64);
+    }
+    let cfg = GdSecConfig {
+        alpha: 0.0,
+        beta: scal.beta,
+        xi: Xi::Uniform(200.0),
+        ..Default::default()
+    };
+    let diff: Vec<f64> = theta.iter().zip(&theta_prev).map(|(a, b)| a - b).collect();
+    let up = ws.sparsify_step(&cfg, m, &diff);
+    let dense = up.to_dense();
+    let mut n_transmitted = 0;
+    for i in 0..d {
+        let native_wire = dense[i] as f32;
+        assert!(
+            (native_wire - out.wire[i]).abs()
+                <= 4.0 * f32::EPSILON * native_wire.abs().max(1e-3),
+            "wire[{i}]: native {native_wire} vs xla {}",
+            out.wire[i]
+        );
+        if out.wire[i] != 0.0 {
+            n_transmitted += 1;
+        }
+        assert!(
+            (ws.h[i] - out.h_new[i] as f64).abs() < 1e-6,
+            "h[{i}]: native {} vs xla {}",
+            ws.h[i],
+            out.h_new[i]
+        );
+    }
+    // The threshold actually censored something and kept something.
+    assert!(n_transmitted > 0, "everything censored");
+    assert!(n_transmitted < d, "nothing censored (xi too small for test)");
+}
+
+#[test]
+fn coordinator_runs_on_xla_engine_end_to_end() {
+    // The full L3 coordinator with PJRT-backed providers created inside
+    // worker threads: 3 workers, logreg, a handful of rounds. Trajectory
+    // must track the native-provider run closely (f32 gradient rounding is
+    // the only difference).
+    let Some(man) = manifest() else { return };
+    let prob = artifact_problem(ObjectiveKind::LogReg);
+    let gd_cfg = GdSecConfig {
+        alpha: 1.0 / prob.lipschitz(),
+        beta: 0.05,
+        xi: Xi::Uniform(40.0),
+        ..Default::default()
+    };
+    let iters = 15;
+    let scal = scalars_for(&prob);
+    let factories: Vec<ProviderFactory> = prob
+        .locals
+        .iter()
+        .map(|l| {
+            let (x, y) = shard_dense(l);
+            let man = man.clone();
+            Box::new(move || {
+                Box::new(
+                    XlaGradProvider::new(man, "worker_step_logreg_30x180", &x, &y, scal)
+                        .expect("xla provider"),
+                ) as Box<dyn GradProvider>
+            }) as ProviderFactory
+        })
+        .collect();
+    let prob2 = prob.clone();
+    let mut ccfg = CoordConfig::new(gd_cfg.clone(), iters);
+    ccfg.scheduler = Scheduler::All;
+    ccfg.problem_name = prob.name.clone();
+    ccfg.fstar = prob.estimate_fstar(2000);
+    ccfg.evaluator = Some(Arc::new(move |t: &[f64]| prob2.value(t)));
+    let failures = vec![FailurePlan::default(); prob.m()];
+    let out = Coordinator::spawn(ccfg, prob.d, factories, failures).run();
+
+    let native = gdsec::algo::gdsec::run(&prob, &gd_cfg, iters);
+    assert_eq!(out.trace.rows.len(), native.rows.len());
+    for (x, n) in out.trace.rows.iter().zip(native.rows.iter()) {
+        assert!(
+            (x.fval - n.fval).abs() < 2e-3 * n.fval.abs().max(1.0),
+            "iter {}: xla {} vs native {}",
+            x.iter,
+            x.fval,
+            n.fval
+        );
+    }
+    // Optimization actually progressed.
+    let errs = out.trace.errors();
+    assert!(errs.last().unwrap() < &(errs[0] * 0.9));
+}
+
+#[test]
+fn tfm_engine_loss_decreases_under_gd() {
+    let Some(man) = manifest() else { return };
+    let mut eng = TfmEngine::new(man).unwrap();
+    let mut params = eng.init_params(7).unwrap();
+    let corpus = synthetic::token_corpus(3, eng.batch, eng.seq, eng.vocab);
+    let tokens: Vec<i32> = corpus.iter().flat_map(|s| s.iter().map(|&t| t as i32)).collect();
+    let (l0, g0) = eng.loss_grad(&params, &tokens).unwrap();
+    assert!(l0.is_finite() && l0 > 0.0);
+    assert_eq!(g0.len(), eng.n_params);
+    for _ in 0..5 {
+        let (_, g) = eng.loss_grad(&params, &tokens).unwrap();
+        for (p, gi) in params.iter_mut().zip(&g) {
+            *p -= 0.25 * gi;
+        }
+    }
+    let (l1, _) = eng.loss_grad(&params, &tokens).unwrap();
+    assert!(l1 < l0, "loss did not decrease: {l0} -> {l1}");
+}
+
+#[test]
+fn tfm_sparsify_artifact_censors() {
+    let Some(man) = manifest() else { return };
+    let mut eng = TfmEngine::new(man).unwrap();
+    let d = eng.n_params;
+    let grad: Vec<f32> = (0..d).map(|i| if i % 100 == 0 { 1.0 } else { 1e-6 }).collect();
+    let zeros = vec![0.0f32; d];
+    let tdiff = vec![0.01f32; d];
+    // tau = 1000 * 0.25 * 0.01 = 2.5 > 1.0: everything censored.
+    let (wire, h_new, e_new) =
+        eng.sparsify(&grad, &zeros, &zeros, &tdiff, 1000.0, 0.5, 0.25).unwrap();
+    assert!(wire.iter().all(|&w| w == 0.0));
+    assert!(h_new.iter().all(|&x| x == 0.0));
+    assert_eq!(e_new[0], 1.0); // error memory holds the full delta
+    // With a small threshold (tau = 1*0.25*0.01) the 1.0 spikes survive:
+    let (wire2, _, _) = eng.sparsify(&grad, &zeros, &zeros, &tdiff, 1.0, 0.5, 0.25).unwrap();
+    let nnz = wire2.iter().filter(|&&w| w != 0.0).count();
+    assert_eq!(nnz, d.div_ceil(100));
+}

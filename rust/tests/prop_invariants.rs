@@ -1,0 +1,319 @@
+//! Property-based invariants (in-tree mini-framework, `gdsec::testing`):
+//! codec roundtrips, sparsifier identities, server/worker state mirrors,
+//! and scheduler fairness — the coordinator invariants of DESIGN.md §8.
+
+use gdsec::algo::gdsec::{GdSecConfig, ServerState, WorkerState, Xi};
+use gdsec::compress::{self, quantize, rle, SparseUpdate};
+use gdsec::coordinator::protocol::{self, Msg};
+use gdsec::coordinator::scheduler::Scheduler;
+use gdsec::testing::{check, gen};
+use gdsec::util::rng::Pcg64;
+
+#[test]
+fn prop_rle_gap_roundtrip_arbitrary_index_sets() {
+    check("rle roundtrip", |rng| {
+        let n = 1 + rng.index(500);
+        let mut idx: Vec<u32> = (0..n).map(|_| rng.below(1 << 22) as u32).collect();
+        idx.sort_unstable();
+        idx.dedup();
+        let mut buf = Vec::new();
+        rle::encode_gaps(&idx, &mut buf);
+        if buf.len() * 8 != rle::gap_bits(&idx) {
+            return Err("gap_bits != encoded length".into());
+        }
+        let mut back = Vec::new();
+        let used =
+            rle::decode_gaps(&buf, idx.len(), &mut back).ok_or("decode failed")?;
+        if used != buf.len() || back != idx {
+            return Err("roundtrip mismatch".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_sparse_codec_roundtrip_mixed_values() {
+    check("sparse codec roundtrip", |rng| {
+        let d = gen::len(rng, 3000);
+        let v = gen::vec_sparse(rng, d, 0.7);
+        let u = SparseUpdate::from_dense(&v);
+        let mut buf = Vec::new();
+        compress::encode_sparse(&u, &mut buf);
+        if buf.len() * 8 != compress::sparse_bits(&u) {
+            return Err("bit accounting mismatch".into());
+        }
+        let (back, used) = compress::decode_sparse(&buf, d as u32).ok_or("decode")?;
+        if used != buf.len() || back != u {
+            return Err("roundtrip mismatch".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_quantizer_roundtrip_and_level_bounds() {
+    check("qsgd roundtrip", |rng| {
+        let d = gen::len(rng, 800);
+        let v = gen::vec_mixed(rng, d);
+        let s = 1 + rng.index(255) as u8;
+        let q = quantize::quantize(&v, s, rng);
+        if q.levels.iter().any(|&l| l == 0 || l.unsigned_abs() > s as u16) {
+            return Err("level out of bounds".into());
+        }
+        let mut buf = Vec::new();
+        quantize::encode(&q, &mut buf);
+        let (back, used) = quantize::decode(&buf, d as u32).ok_or("decode")?;
+        if used != buf.len() || back != q {
+            return Err("roundtrip mismatch".into());
+        }
+        // dequantized magnitudes bounded by the norm
+        let dq = quantize::dequantize(&q);
+        let norm = q.norm as f64;
+        if dq.iter().any(|x| x.abs() > norm * (1.0 + 1e-5)) {
+            return Err("dequantized value exceeds norm".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_sparsify_ec_identity_and_threshold() {
+    // For every coordinate: wire + e_new == delta exactly; suppressed
+    // coords satisfy |delta| <= tau; transmitted coords satisfy
+    // |delta| > tau; h moves only on transmitted coords (by beta*wire).
+    check("sparsify invariants", |rng| {
+        let d = gen::len(rng, 600);
+        let m = 1 + rng.index(10);
+        let mut ws = WorkerState::new(d);
+        for i in 0..d {
+            ws.h[i] = rng.normal() * 0.1;
+            ws.e[i] = rng.normal() * 0.05;
+        }
+        let h_before = ws.h.clone();
+        let e_before = ws.e.clone();
+        let grad = gen::vec_mixed(rng, d);
+        ws.grad_mut().copy_from_slice(&grad);
+        let diff = gen::vec_mixed(rng, d);
+        let xi_val = rng.uniform_in(0.0, 200.0);
+        let cfg = GdSecConfig {
+            beta: rng.uniform_in(0.0, 1.0),
+            xi: Xi::Uniform(xi_val),
+            ..Default::default()
+        };
+        let up = ws.sparsify_step(&cfg, m, &diff);
+        let dense = up.to_dense();
+        for i in 0..d {
+            let delta = grad[i] - h_before[i] + e_before[i];
+            let tau = xi_val / m as f64 * diff[i].abs();
+            let transmitted = dense[i] != 0.0 || (delta.abs() > tau && delta as f32 == 0.0);
+            if delta.abs() > tau && !transmitted {
+                return Err(format!("coord {i}: should transmit (|Δ|={} > τ={tau})", delta.abs()));
+            }
+            if delta.abs() <= tau && dense[i] != 0.0 {
+                return Err(format!("coord {i}: censored coord on wire"));
+            }
+            // EC identity
+            if (dense[i] + ws.e[i] - delta).abs() > 1e-12 {
+                return Err(format!("coord {i}: EC identity broken"));
+            }
+            // h update rule
+            let expect_h = h_before[i] + cfg.beta * dense[i];
+            if (ws.h[i] - expect_h).abs() > 1e-12 {
+                return Err(format!("coord {i}: h update wrong"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_server_h_mirrors_worker_h_sum() {
+    // After arbitrary censor patterns over several rounds, the server's
+    // state variable equals the sum of worker state variables exactly
+    // (both integrate beta * the same wire values).
+    check("h mirror", |rng| {
+        let d = 1 + rng.index(200);
+        let m = 1 + rng.index(6);
+        let rounds = 1 + rng.index(10);
+        let cfg = GdSecConfig {
+            alpha: 0.001,
+            beta: rng.uniform_in(0.01, 1.0),
+            xi: Xi::Uniform(rng.uniform_in(0.0, 50.0)),
+            ..Default::default()
+        };
+        let mut server = ServerState::new(d);
+        let mut workers: Vec<WorkerState> = (0..m).map(|_| WorkerState::new(d)).collect();
+        let mut diff = vec![0.0; d];
+        for _round in 0..rounds {
+            server.theta_diff(&mut diff);
+            let mut ups = Vec::new();
+            for ws in workers.iter_mut() {
+                let g = gen::vec_mixed(rng, d);
+                ws.grad_mut().copy_from_slice(&g);
+                let up = ws.sparsify_step(&cfg, m, &diff);
+                if up.nnz() > 0 {
+                    ups.push(up);
+                }
+            }
+            server.apply_round(&cfg, &ups);
+            for i in 0..d {
+                let sum_h: f64 = workers.iter().map(|w| w.h[i]).sum();
+                if (server.h[i] - sum_h).abs() > 1e-9 * sum_h.abs().max(1.0) {
+                    return Err(format!(
+                        "mirror broken at coord {i}: server {} vs sum {sum_h}",
+                        server.h[i]
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_scheduler_rr_covers_all_workers() {
+    check("rr coverage", |rng| {
+        let m = 2 + rng.index(40);
+        let fraction = rng.uniform_in(0.05, 1.0);
+        let mut s = Scheduler::RoundRobin { fraction };
+        let c = s.active_count(m);
+        let mut seen = vec![false; m];
+        // one full cycle is ceil(m/c) rounds; run 2 cycles
+        let rounds = 2 * m.div_ceil(c);
+        for k in 1..=rounds {
+            for w in s.active(k, m) {
+                if w >= m {
+                    return Err("worker out of range".into());
+                }
+                seen[w] = true;
+            }
+        }
+        if !seen.iter().all(|&s| s) {
+            return Err(format!("not all workers scheduled in {rounds} rounds (c={c})"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_protocol_frames_roundtrip() {
+    check("protocol roundtrip", |rng| {
+        let d = gen::len(rng, 1000) as u32;
+        let msg = match rng.index(4) {
+            0 => Msg::Broadcast {
+                round: rng.below(1 << 30) as u32,
+                theta: gen::vec_mixed(rng, d as usize),
+                active: rng.bernoulli(0.5),
+            },
+            1 => {
+                let v = gen::vec_sparse(rng, d as usize, 0.8);
+                Msg::Update {
+                    round: rng.below(1 << 30) as u32,
+                    worker: rng.below(1000) as u32,
+                    update: SparseUpdate::from_dense(&v),
+                    local_f: rng.normal(),
+                }
+            }
+            2 => Msg::Silence {
+                round: rng.below(1 << 30) as u32,
+                worker: rng.below(1000) as u32,
+                local_f: rng.normal(),
+            },
+            _ => Msg::Shutdown,
+        };
+        let buf = protocol::encode(&msg, d);
+        let back = protocol::decode(&buf, d).map_err(|e| e.to_string())?;
+        if back != msg {
+            return Err("frame roundtrip mismatch".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_protocol_rejects_random_corruption() {
+    check("protocol corruption", |rng| {
+        let v = gen::vec_sparse(rng, 64, 0.5);
+        let msg = Msg::Update {
+            round: 1,
+            worker: 0,
+            update: SparseUpdate::from_dense(&v),
+            local_f: 0.5,
+        };
+        let mut buf = protocol::encode(&msg, 64);
+        // Either truncate or flip the magic/kind byte — must error or
+        // decode to *something* (never panic); flipped payload bytes may
+        // still parse (values change), which is fine.
+        match rng.index(3) {
+            0 => {
+                let cut = rng.index(buf.len());
+                if protocol::decode(&buf[..cut], 64).is_ok() {
+                    return Err("truncated frame decoded".into());
+                }
+            }
+            1 => {
+                buf[0] ^= 0xff;
+                if protocol::decode(&buf, 64).is_ok() {
+                    return Err("bad magic decoded".into());
+                }
+            }
+            _ => {
+                buf[1] = 200;
+                if protocol::decode(&buf, 64).is_ok() {
+                    return Err("bad kind decoded".into());
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_topj_keeps_exactly_j_largest() {
+    check("topj selection", |rng| {
+        let d = gen::len(rng, 400);
+        let j = rng.index(d + 1);
+        let v = gen::vec_mixed(rng, d);
+        let idx = compress::topj::top_j_indices(&v, j);
+        if idx.len() != j.min(d) {
+            return Err("wrong count".into());
+        }
+        let kept_min = idx.iter().map(|&i| v[i as usize].abs()).fold(f64::INFINITY, f64::min);
+        let dropped_max = (0..d as u32)
+            .filter(|i| !idx.contains(i))
+            .map(|i| v[i as usize].abs())
+            .fold(0.0f64, f64::max);
+        if j > 0 && j < d && kept_min + 1e-15 < dropped_max {
+            return Err(format!("kept {kept_min} < dropped {dropped_max}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_quantizer_unbiased_mean() {
+    // Coarse unbiasedness over repeated draws for a random small vector.
+    let mut outer = Pcg64::seeded(0xBEEF);
+    for _case in 0..5 {
+        let d = 1 + outer.index(8);
+        let v: Vec<f64> = (0..d).map(|_| outer.normal()).collect();
+        let trials = 4000;
+        let mut acc = vec![0.0; d];
+        for _ in 0..trials {
+            let q = quantize::quantize(&v, 8, &mut outer);
+            for (a, x) in acc.iter_mut().zip(quantize::dequantize(&q)) {
+                *a += x;
+            }
+        }
+        let norm: f64 = v.iter().map(|x| x * x).sum::<f64>().sqrt();
+        for i in 0..d {
+            let mean = acc[i] / trials as f64;
+            assert!(
+                (mean - v[i]).abs() < 0.08 * norm.max(0.1),
+                "biased: {} vs {}",
+                mean,
+                v[i]
+            );
+        }
+    }
+}
