@@ -1,36 +1,99 @@
 //! Hot-path microbenchmarks (custom harness — no criterion offline).
 //!
 //! Covers every operation on the per-round critical path:
-//!   worker: gradient (gemv), sparsify_step (censor+EC), RLE encode
+//!   worker: gradient (gemv / fused pass), sparsify (censor+EC), RLE
 //!   server: decode, aggregate, apply_round
 //!   codecs: QSGD quantize/dequantize, protocol frame encode/decode
+//! plus "seed-baseline" replicas of the pre-optimization scalar kernels,
+//! so each run reports the blocked/unrolled kernels' speedup, and an
+//! end-to-end serial-vs-parallel GD-SEC run at fig1 scale.
 //!
-//! These are the numbers behind EXPERIMENTS.md §Perf.
+//! Results are printed AND written to `BENCH_hotpath.json` at the repo
+//! root (override with `GDSEC_BENCH_OUT`), schema `gdsec-bench-v1` — the
+//! PR-over-PR perf trajectory behind EXPERIMENTS.md §Perf. Set
+//! `GDSEC_BENCH_QUICK=1` for the CI smoke run.
 
+use gdsec::algo::gdsec as gdsec_algo;
 use gdsec::algo::gdsec::{GdSecConfig, ServerState, WorkerState, Xi};
 use gdsec::compress::{self, quantize, SparseUpdate};
 use gdsec::coordinator::protocol::{self, Msg};
 use gdsec::data::synthetic;
-use gdsec::linalg;
+use gdsec::linalg::{self, DenseMat};
 use gdsec::objectives::Problem;
-use gdsec::util::bench::Bencher;
+use gdsec::util::bench::{self, BenchStats, Bencher};
+use gdsec::util::json::Json;
+use gdsec::util::pool::Pool;
 use gdsec::util::rng::Pcg64;
+use std::path::PathBuf;
+
+/// The seed's scalar axpy (indexed loop, bounds checks intact) — kept as
+/// the baseline the blocked kernels are measured against.
+fn seed_axpy(a: f64, x: &[f64], y: &mut [f64]) {
+    for i in 0..x.len() {
+        y[i] += a * x[i];
+    }
+}
+
+/// The seed's row-streaming transposed GEMV: one full-length axpy over
+/// the d-wide accumulator per row.
+fn seed_gemv_t_acc(m: &DenseMat, alpha: f64, r: &[f64], out: &mut [f64]) {
+    for i in 0..m.rows {
+        let a = alpha * r[i];
+        if a != 0.0 {
+            seed_axpy(a, m.row(i), out);
+        }
+    }
+}
+
+/// The seed's 4-accumulator dot product.
+fn seed_dot(x: &[f64], y: &[f64]) -> f64 {
+    let n = x.len();
+    let chunks = n / 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0, 0.0, 0.0, 0.0);
+    for c in 0..chunks {
+        let i = c * 4;
+        s0 += x[i] * y[i];
+        s1 += x[i + 1] * y[i + 1];
+        s2 += x[i + 2] * y[i + 2];
+        s3 += x[i + 3] * y[i + 3];
+    }
+    let mut tail = 0.0;
+    for i in chunks * 4..n {
+        tail += x[i] * y[i];
+    }
+    (s0 + s1) + (s2 + s3) + tail
+}
+
+fn out_path() -> PathBuf {
+    if let Ok(p) = std::env::var("GDSEC_BENCH_OUT") {
+        return PathBuf::from(p);
+    }
+    // rust/ -> repo root
+    let manifest = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+    manifest.parent().unwrap_or(&manifest).join("BENCH_hotpath.json")
+}
 
 fn main() {
     let b = Bencher::from_env();
-    let mut reports = Vec::new();
+    let quick = std::env::var("GDSEC_BENCH_QUICK").ok().as_deref() == Some("1");
+    let mut reports: Vec<BenchStats> = Vec::new();
+    let mut context: Vec<(&str, Json)> = vec![
+        ("bench", Json::str("hotpath_micro")),
+        ("quick", Json::Bool(quick)),
+        ("threads", Json::num(Pool::from_env().threads() as f64)),
+    ];
 
-    // --- sparsify_step at the paper's dimensions ---
+    // --- sparsify at the paper's dimensions (reused buffer = hot path) ---
     for &d in &[784usize, 3072, 47236] {
         let mut rng = Pcg64::seeded(d as u64);
         let mut ws = WorkerState::new(d);
         let grad: Vec<f64> = (0..d).map(|_| rng.normal() * 0.1).collect();
         let diff: Vec<f64> = (0..d).map(|_| rng.normal() * 1e-3).collect();
         let cfg = GdSecConfig { xi: Xi::Uniform(100.0), beta: 0.01, ..Default::default() };
-        ws.grad_mut().copy_from_slice(&grad);
-        reports.push(b.run_units(&format!("sparsify_step d={d}"), d as f64, "elem", || {
+        let mut up = SparseUpdate::empty(d);
+        reports.push(b.run_units(&format!("sparsify_into d={d}"), d as f64, "elem", || {
             ws.grad_mut().copy_from_slice(&grad);
-            let up = ws.sparsify_step(&cfg, 5, &diff);
+            ws.sparsify_into(&cfg, 5, &diff, &mut up);
             std::hint::black_box(up.nnz());
         }));
     }
@@ -44,6 +107,68 @@ fn main() {
     reports.push(b.run_units("local grad linreg 400x784", elems, "madd", || {
         l.grad(&theta, &mut g);
         std::hint::black_box(g[0]);
+    }));
+
+    // --- blocked linalg kernels at RCV1 scale, vs the seed baselines ---
+    let (rows, d) = (if quick { 32 } else { 96 }, 47236usize);
+    let mut rng = Pcg64::seeded(47);
+    let a = DenseMat {
+        rows,
+        cols: d,
+        data: (0..rows * d).map(|_| rng.normal()).collect(),
+    };
+    let x47: Vec<f64> = (0..d).map(|_| rng.normal()).collect();
+    let r47: Vec<f64> = (0..rows).map(|_| rng.normal()).collect();
+    let mut out_d = vec![0.0; d];
+    let mut out_r = vec![0.0; rows];
+    let madds = (rows * d) as f64;
+
+    let gemv_t_new = b.run_units(&format!("gemv_t_acc {rows}x{d} blocked"), madds, "madd", || {
+        linalg::zero(&mut out_d);
+        a.gemv_t_acc(1.0, &r47, &mut out_d);
+        std::hint::black_box(out_d[0]);
+    });
+    let gemv_t_seed =
+        b.run_units(&format!("gemv_t_acc {rows}x{d} seed-baseline"), madds, "madd", || {
+            linalg::zero(&mut out_d);
+            seed_gemv_t_acc(&a, 1.0, &r47, &mut out_d);
+            std::hint::black_box(out_d[0]);
+        });
+    context.push((
+        "gemv_t_acc_47236_speedup_vs_seed",
+        Json::num(gemv_t_seed.mean_ns / gemv_t_new.mean_ns),
+    ));
+    reports.push(gemv_t_new);
+    reports.push(gemv_t_seed);
+
+    let gemv_new = b.run_units(&format!("gemv {rows}x{d} row-paired"), madds, "madd", || {
+        a.gemv(&x47, &mut out_r);
+        std::hint::black_box(out_r[0]);
+    });
+    let gemv_seed = b.run_units(&format!("gemv {rows}x{d} seed-baseline"), madds, "madd", || {
+        for i in 0..a.rows {
+            out_r[i] = seed_dot(a.row(i), &x47);
+        }
+        std::hint::black_box(out_r[0]);
+    });
+    context.push(("gemv_47236_speedup_vs_seed", Json::num(gemv_seed.mean_ns / gemv_new.mean_ns)));
+    reports.push(gemv_new);
+    reports.push(gemv_seed);
+
+    let dot_new = b.run_units("dot 47236 8-wide", d as f64, "madd", || {
+        std::hint::black_box(linalg::dot(&x47, &x47));
+    });
+    let dot_seed = b.run_units("dot 47236 seed-baseline", d as f64, "madd", || {
+        std::hint::black_box(seed_dot(&x47, &x47));
+    });
+    context.push(("dot_47236_speedup_vs_seed", Json::num(dot_seed.mean_ns / dot_new.mean_ns)));
+    reports.push(dot_new);
+    reports.push(dot_seed);
+
+    // --- fused server-side helpers ---
+    let y47: Vec<f64> = (0..d).map(|_| rng.normal()).collect();
+    reports.push(b.run_units("sub_abs_max 47236 fused", d as f64, "elem", || {
+        std::hint::black_box(linalg::sub_abs_max(&x47, &y47, &mut out_d));
     }));
 
     // --- RLE codec ---
@@ -82,14 +207,13 @@ fn main() {
         std::hint::black_box(q.idx.len());
     }));
 
-    // --- server aggregate + apply ---
+    // --- server aggregate + apply (fused, agg re-zeroed in-pass) ---
     let d = 3072;
     let mut server = ServerState::new(d);
     let updates: Vec<SparseUpdate> = (0..100)
         .map(|w| {
-            let vv: Vec<f64> = (0..d)
-                .map(|i| if (i + w) % 10 == 0 { 0.5 } else { 0.0 })
-                .collect();
+            let vv: Vec<f64> =
+                (0..d).map(|i| if (i + w) % 10 == 0 { 0.5 } else { 0.0 }).collect();
             SparseUpdate::from_dense(&vv)
         })
         .collect();
@@ -109,14 +233,69 @@ fn main() {
         std::hint::black_box(matches!(m, Msg::Update { .. }));
     }));
 
-    // --- dot product roofline reference ---
-    let x: Vec<f64> = (0..4096).map(|i| i as f64).collect();
-    reports.push(b.run_units("dot 4096", 4096.0, "madd", || {
-        std::hint::black_box(linalg::dot(&x, &x));
-    }));
+    // --- end-to-end: serial vs pooled GD-SEC at fig1 scale, M=8 ---
+    let m_workers = 8;
+    let e2e_iters = if quick { 8 } else { 60 };
+    let prob = Problem::linear(synthetic::mnist_like(3, 2000), m_workers, 1.0 / 2000.0);
+    let e2e_cfg = GdSecConfig {
+        alpha: 1.0 / prob.lipschitz(),
+        beta: 0.01,
+        xi: Xi::Uniform(200.0 * m_workers as f64),
+        fstar: Some(0.0),
+        eval_every: 10,
+        ..Default::default()
+    };
+    let par_pool = Pool::from_env();
+    // Warm caches/page tables once before the timed runs.
+    let _ = gdsec_algo::run_scheduled_pooled(&prob, &e2e_cfg, 2, |_k| None, &par_pool);
+    let mut serial_trace = None;
+    let e2e_serial = b.run_once(
+        &format!("e2e gdsec fig1-scale M={m_workers} iters={e2e_iters} threads=1"),
+        || {
+            let pool1 = Pool::new(1);
+            serial_trace = Some(gdsec_algo::run_scheduled_pooled(
+                &prob, &e2e_cfg, e2e_iters, |_k| None, &pool1,
+            ));
+        },
+    );
+    let mut par_trace = None;
+    let e2e_par = b.run_once(
+        &format!(
+            "e2e gdsec fig1-scale M={m_workers} iters={e2e_iters} threads={}",
+            par_pool.threads()
+        ),
+        || {
+            par_trace = Some(gdsec_algo::run_scheduled_pooled(
+                &prob, &e2e_cfg, e2e_iters, |_k| None, &par_pool,
+            ));
+        },
+    );
+    let (st, pt) = (serial_trace.unwrap(), par_trace.unwrap());
+    assert_eq!(st.total_bits(), pt.total_bits(), "serial/parallel bit parity broke");
+    assert_eq!(
+        st.rows.last().unwrap().fval.to_bits(),
+        pt.rows.last().unwrap().fval.to_bits(),
+        "serial/parallel trajectory parity broke"
+    );
+    context.push((
+        "e2e_gdsec_speedup_parallel",
+        Json::num(e2e_serial.mean_ns / e2e_par.mean_ns),
+    ));
+    reports.push(e2e_serial);
+    reports.push(e2e_par);
 
     println!("\n== hotpath microbenchmarks ==");
     for r in &reports {
         println!("{}", r.report());
+    }
+    for (k, v) in &context {
+        if let Some(x) = v.as_f64() {
+            println!("{k}: {x:.2}");
+        }
+    }
+    let path = out_path();
+    match bench::write_json(&path, context, &reports) {
+        Ok(()) => println!("bench artifact -> {}", path.display()),
+        Err(e) => eprintln!("could not write {}: {e}", path.display()),
     }
 }

@@ -8,11 +8,12 @@
 //! RLE-encoded (structural zeros from sparse data are skipped), per the
 //! paper's "CGD with RLE" variant.
 
-use super::gdsec::{fstar_iters, record};
+use super::gdsec::{fstar_iters, record_pooled};
 use super::trace::Trace;
 use crate::compress::{self, SparseUpdate};
 use crate::linalg;
 use crate::objectives::Problem;
+use crate::util::pool::Pool;
 
 #[derive(Debug, Clone)]
 pub struct CgdConfig {
@@ -25,47 +26,84 @@ pub struct CgdConfig {
 }
 
 pub fn run(prob: &Problem, cfg: &CgdConfig, iters: usize) -> Trace {
+    run_pooled(prob, cfg, iters, &Pool::from_env())
+}
+
+/// CGD with the per-worker gradient + censor test + RLE cost fanned out
+/// over `pool`. Each lane owns its gradient scratch, wire-update buffer
+/// and last-transmitted memory; the server folds the (possibly stale)
+/// memories in worker-id order, so the trajectory matches the serial one
+/// bit-for-bit.
+pub fn run_pooled(prob: &Problem, cfg: &CgdConfig, iters: usize, pool: &Pool) -> Trace {
     let d = prob.d;
     let m = prob.m();
     let fstar = cfg.fstar.unwrap_or_else(|| prob.estimate_fstar(fstar_iters(iters)));
     let mut trace = Trace::new("CGD", &prob.name, fstar);
     let mut theta = vec![0.0; d];
     let mut theta_prev = vec![0.0; d];
-    let mut g = vec![0.0; d];
     let mut diff = vec![0.0; d];
-    // Server-side memory of each worker's last transmitted gradient.
-    let mut last: Vec<Vec<f64>> = vec![vec![0.0; d]; m];
+    let mut agg = vec![0.0; d];
+    struct Lane {
+        g: Vec<f64>,
+        up: SparseUpdate,
+        /// Server-side memory of this worker's last transmitted gradient.
+        last: Vec<f64>,
+        sent_bits: u64,
+        sent_entries: u64,
+        sent: bool,
+    }
+    let mut lanes: Vec<Lane> = (0..m)
+        .map(|_| Lane {
+            g: vec![0.0; d],
+            up: SparseUpdate::empty(d),
+            last: vec![0.0; d],
+            sent_bits: 0,
+            sent_entries: 0,
+            sent: false,
+        })
+        .collect();
     let (mut bits, mut tx, mut entries) = (0u64, 0u64, 0u64);
-    record(&mut trace, prob, &theta, 0, bits, tx, entries);
+    record_pooled(&mut trace, prob, &theta, pool, 0, bits, tx, entries);
     for k in 1..=iters {
         linalg::sub(&theta, &theta_prev, &mut diff);
         let thresh = cfg.xi / m as f64 * linalg::nrm2(&diff);
-        for (w, l) in prob.locals.iter().enumerate() {
-            l.grad(&theta, &mut g);
-            let mut dist_sq = 0.0;
-            for i in 0..d {
-                let dgi = g[i] - last[w][i];
-                dist_sq += dgi * dgi;
-            }
-            if dist_sq.sqrt() > thresh {
-                // Transmit the full gradient, RLE-coding structural zeros.
-                let up = SparseUpdate::from_dense(&g);
-                bits += compress::sparse_bits(&up) as u64;
-                tx += 1;
-                entries += up.nnz() as u64;
-                // Server stores the f32-rounded wire values.
-                let dense = up.to_dense();
-                last[w].copy_from_slice(&dense);
-            }
+        {
+            let theta = &theta;
+            pool.scatter(&mut lanes, |w, lane| {
+                lane.sent = false;
+                prob.locals[w].grad(theta, &mut lane.g);
+                let mut dist_sq = 0.0;
+                for (gi, li) in lane.g.iter().zip(&lane.last) {
+                    let dgi = gi - li;
+                    dist_sq += dgi * dgi;
+                }
+                if dist_sq.sqrt() > thresh {
+                    // Transmit the full gradient, RLE-coding structural
+                    // zeros; the server stores the f32-rounded wire values.
+                    lane.up.gather_from(&lane.g);
+                    lane.sent_bits = compress::sparse_bits(&lane.up) as u64;
+                    lane.sent_entries = lane.up.nnz() as u64;
+                    lane.sent = true;
+                    linalg::zero(&mut lane.last);
+                    lane.up.add_into(&mut lane.last);
+                }
+            });
         }
-        // θ update from the (possibly stale) gradient memory.
+        // Deterministic fold: bit accounting and the θ update from the
+        // (possibly stale) gradient memories, in worker-id order.
+        for lane in lanes.iter().filter(|l| l.sent) {
+            bits += lane.sent_bits;
+            tx += 1;
+            entries += lane.sent_entries;
+        }
+        linalg::zero(&mut agg);
+        for lane in &lanes {
+            linalg::axpy(1.0, &lane.last, &mut agg);
+        }
         theta_prev.copy_from_slice(&theta);
-        for i in 0..d {
-            let total: f64 = last.iter().map(|lw| lw[i]).sum();
-            theta[i] -= cfg.alpha * total;
-        }
+        linalg::axpy(-cfg.alpha, &agg, &mut theta);
         if k % cfg.eval_every == 0 || k == iters {
-            record(&mut trace, prob, &theta, k, bits, tx, entries);
+            record_pooled(&mut trace, prob, &theta, pool, k, bits, tx, entries);
         }
     }
     trace

@@ -1,11 +1,17 @@
 //! Classical distributed GD — the paper's baseline. Every worker
 //! transmits its full gradient every iteration (32·d bits each).
+//!
+//! Worker gradients fan out over the [`Pool`]; each lane owns a reusable
+//! gradient buffer and rounds it to the f32 wire precision in-thread, and
+//! the server folds lanes in worker-id order — bit-for-bit identical to
+//! the serial trajectory for any thread count.
 
-use super::gdsec::{fstar_iters, record};
+use super::gdsec::{fstar_iters, record_pooled};
 use super::trace::Trace;
 use crate::compress;
 use crate::linalg;
 use crate::objectives::Problem;
+use crate::util::pool::Pool;
 
 #[derive(Debug, Clone)]
 pub struct GdConfig {
@@ -20,10 +26,24 @@ pub fn run(prob: &Problem, cfg: &GdConfig, iters: usize) -> Trace {
     run_scheduled(prob, cfg, iters, |_k| None)
 }
 
+/// [`run`] with a participation schedule (threads from [`Pool::from_env`]).
+pub fn run_scheduled<F>(prob: &Problem, cfg: &GdConfig, iters: usize, active: F) -> Trace
+where
+    F: FnMut(usize) -> Option<Vec<usize>>,
+{
+    run_scheduled_pooled(prob, cfg, iters, active, &Pool::from_env())
+}
+
 /// GD with a participation schedule (Fig 8's "GD with half transmissions"):
 /// only active workers compute + transmit; the server aggregates what it
 /// receives (no rescaling, matching the paper's setup).
-pub fn run_scheduled<F>(prob: &Problem, cfg: &GdConfig, iters: usize, mut active: F) -> Trace
+pub fn run_scheduled_pooled<F>(
+    prob: &Problem,
+    cfg: &GdConfig,
+    iters: usize,
+    mut active: F,
+    pool: &Pool,
+) -> Trace
 where
     F: FnMut(usize) -> Option<Vec<usize>>,
 {
@@ -31,31 +51,43 @@ where
     let fstar = cfg.fstar.unwrap_or_else(|| prob.estimate_fstar(fstar_iters(iters)));
     let mut trace = Trace::new("GD", &prob.name, fstar);
     let mut theta = vec![0.0; d];
-    let mut g = vec![0.0; d];
     let mut agg = vec![0.0; d];
+    struct Lane {
+        g: Vec<f64>,
+        active: bool,
+    }
+    let mut lanes: Vec<Lane> =
+        (0..prob.m()).map(|_| Lane { g: vec![0.0; d], active: true }).collect();
     let (mut bits, mut tx, mut entries) = (0u64, 0u64, 0u64);
-    record(&mut trace, prob, &theta, 0, bits, tx, entries);
+    record_pooled(&mut trace, prob, &theta, pool, 0, bits, tx, entries);
     for k in 1..=iters {
         let act = active(k);
-        linalg::zero(&mut agg);
-        for (w, l) in prob.locals.iter().enumerate() {
-            if let Some(set) = &act {
-                if !set.contains(&w) {
-                    continue;
+        for (w, lane) in lanes.iter_mut().enumerate() {
+            lane.active = act.as_ref().map_or(true, |set| set.contains(&w));
+        }
+        {
+            let theta = &theta;
+            pool.scatter(&mut lanes, |w, lane| {
+                if !lane.active {
+                    return;
                 }
-            }
-            l.grad(&theta, &mut g);
-            // Wire: dense f32 vector, 32·d bits.
-            for i in 0..d {
-                agg[i] += g[i] as f32 as f64;
-            }
+                prob.locals[w].grad(theta, &mut lane.g);
+                // Wire: dense f32 vector, 32·d bits — round in-thread.
+                for v in lane.g.iter_mut() {
+                    *v = *v as f32 as f64;
+                }
+            });
+        }
+        linalg::zero(&mut agg);
+        for lane in lanes.iter().filter(|l| l.active) {
+            linalg::axpy(1.0, &lane.g, &mut agg);
             bits += compress::dense_bits(d) as u64;
             tx += 1;
             entries += d as u64;
         }
         linalg::axpy(-cfg.alpha, &agg, &mut theta);
         if k % cfg.eval_every == 0 || k == iters {
-            record(&mut trace, prob, &theta, k, bits, tx, entries);
+            record_pooled(&mut trace, prob, &theta, pool, k, bits, tx, entries);
         }
     }
     trace

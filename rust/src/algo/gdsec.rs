@@ -17,11 +17,26 @@
 //! This module is the single-process reference implementation. The
 //! threaded, byte-on-the-wire version lives in [`crate::coordinator`]; an
 //! integration test pins both to identical trajectories.
+//!
+//! ## Parallel zero-alloc engine
+//!
+//! [`run_scheduled_pooled`] fans the per-worker gradient + sparsify step
+//! out across a [`Pool`] of scoped threads and reduces in worker-id
+//! order, so the trajectory is **bit-for-bit identical for any thread
+//! count** (pinned by `tests/prop_parallel_parity.rs`). Per-worker lanes
+//! own their [`WorkerState`] and a reusable [`SparseUpdate`] buffer
+//! (arena-style `reset()` + capacity reuse), and the server's fused
+//! [`ServerState::apply_round`] re-zeroes its aggregation scratch inside
+//! the update pass — after warm-up, an optimizer round performs **zero
+//! heap allocations** on the serial path (pinned by
+//! `tests/alloc_free_round.rs`; with >1 thread the scoped spawns are the
+//! only remaining allocation).
 
 use super::trace::{Trace, TraceRow};
 use crate::compress::{self, SparseUpdate};
 use crate::linalg;
 use crate::objectives::Problem;
+use crate::util::pool::Pool;
 
 /// Censoring thresholds ξ_i. The paper's experiments report ξ/M; configs
 /// here carry ξ (the threshold used is ξ_i/M · |θ_i diff|).
@@ -119,11 +134,23 @@ impl WorkerState {
         original: &SparseUpdate,
         wire: &SparseUpdate,
     ) {
-        let orig_dense = original.to_dense();
-        let wire_dense = wire.to_dense();
-        for &i in &original.idx {
+        // Walk the two strictly-increasing index lists directly (the old
+        // dense round-trip allocated two full-d vectors per call). `wire`
+        // holds values at a subset of `original`'s indices — quantizing a
+        // survivor to level 0 drops it — so an index missing from `wire`
+        // means "wire value 0".
+        let mut kw = 0;
+        for (ko, &i) in original.idx.iter().enumerate() {
+            while kw < wire.idx.len() && wire.idx[kw] < i {
+                kw += 1;
+            }
+            let wire_val = if kw < wire.idx.len() && wire.idx[kw] == i {
+                wire.val[kw] as f64
+            } else {
+                0.0
+            };
+            let delta_wire = wire_val - original.val[ko] as f64;
             let i = i as usize;
-            let delta_wire = wire_dense[i] - orig_dense[i];
             if cfg.state_variable {
                 self.h[i] += cfg.beta * delta_wire;
             }
@@ -145,14 +172,31 @@ impl WorkerState {
         m_workers: usize,
         theta_diff: &[f64],
     ) -> SparseUpdate {
+        let mut up = SparseUpdate::empty(self.h.len());
+        self.sparsify_into(cfg, m_workers, theta_diff, &mut up);
+        up
+    }
+
+    /// [`sparsify_step`](Self::sparsify_step) into a caller-owned buffer:
+    /// `up` is reset (dimension set, indices/values cleared) but keeps
+    /// its allocations, so a lane that reuses one buffer across rounds
+    /// allocates nothing once capacity has grown to the largest update.
+    pub fn sparsify_into(
+        &mut self,
+        cfg: &GdSecConfig,
+        m_workers: usize,
+        theta_diff: &[f64],
+        up: &mut SparseUpdate,
+    ) {
+        up.reset(self.h.len());
         let minv = 1.0 / m_workers as f64;
         // Hoist the ξ representation out of the hot loop (uniform ξ is the
         // common case; per-coordinate pays one extra load per element).
         match &cfg.xi {
-            Xi::Uniform(x) => self.sparsify_inner::<false>(cfg, *x * minv, &[], theta_diff),
+            Xi::Uniform(x) => self.sparsify_inner::<false>(cfg, *x * minv, &[], theta_diff, up),
             Xi::PerCoord(v) => {
                 assert_eq!(v.len(), self.h.len(), "per-coord ξ length");
-                self.sparsify_inner::<true>(cfg, minv, v, theta_diff)
+                self.sparsify_inner::<true>(cfg, minv, v, theta_diff, up)
             }
         }
     }
@@ -164,9 +208,9 @@ impl WorkerState {
         scale: f64,
         xi_per: &[f64],
         theta_diff: &[f64],
-    ) -> SparseUpdate {
+        up: &mut SparseUpdate,
+    ) {
         let d = self.h.len();
-        let mut up = SparseUpdate::empty(d);
         let ec = cfg.error_correction;
         let sv = cfg.state_variable;
         let beta = cfg.beta;
@@ -192,7 +236,6 @@ impl WorkerState {
                 self.e[i] = delta;
             }
         }
-        up
     }
 }
 
@@ -220,37 +263,119 @@ impl ServerState {
         linalg::sub(&self.theta, &self.theta_prev, out);
     }
 
-    /// Apply one aggregated round: θ^{k+1} = θ^k − α(h + Δ̂), h += β·Δ̂.
-    pub fn apply_round(&mut self, cfg: &GdSecConfig, updates: &[SparseUpdate]) {
-        linalg::zero(&mut self.agg);
+    /// θ^k − θ^{k−1} into `out` plus `max_i |out_i|` in the same fused
+    /// pass — the stationarity measure behind the censoring thresholds,
+    /// surfaced by the engine's per-round debug telemetry.
+    pub fn theta_diff_max(&self, out: &mut [f64]) -> f64 {
+        linalg::sub_abs_max(&self.theta, &self.theta_prev, out)
+    }
+
+    /// Apply one aggregated round: θ^{k+1} = θ^k − α(h + Δ̂), h += β·Δ̂
+    /// (Eq. 6), accepting any in-order sequence of update references.
+    ///
+    /// The server step is ONE fused pass over d: it snapshots θ into
+    /// θ_prev, applies the θ and h updates, and re-zeroes the aggregation
+    /// scratch for the next round in the same loop — `agg` is all-zeros
+    /// between calls (established by `new`, maintained here), which is
+    /// what makes the steady-state round sweep- and allocation-free.
+    pub fn apply_round<'a, I>(&mut self, cfg: &GdSecConfig, updates: I)
+    where
+        I: IntoIterator<Item = &'a SparseUpdate>,
+    {
         for u in updates {
             u.add_into(&mut self.agg);
         }
-        self.theta_prev.copy_from_slice(&self.theta);
         let d = self.theta.len();
         if cfg.state_variable {
             for i in 0..d {
-                self.theta[i] -= cfg.alpha * (self.h[i] + self.agg[i]);
-                self.h[i] += cfg.beta * self.agg[i];
+                let a = self.agg[i];
+                let t = self.theta[i];
+                self.theta_prev[i] = t;
+                self.theta[i] = t - cfg.alpha * (self.h[i] + a);
+                self.h[i] += cfg.beta * a;
+                self.agg[i] = 0.0;
             }
         } else {
             for i in 0..d {
-                self.theta[i] -= cfg.alpha * self.agg[i];
+                let a = self.agg[i];
+                let t = self.theta[i];
+                self.theta_prev[i] = t;
+                self.theta[i] = t - cfg.alpha * a;
+                self.agg[i] = 0.0;
             }
         }
     }
 }
 
-/// Run GD-SEC for `iters` iterations with all workers participating.
+/// One worker's slot in the round fan-out: its GD-SEC state, a reusable
+/// wire-update buffer, and this round's participation flag. Lanes are the
+/// unit [`Pool::scatter`] distributes across threads; everything a lane
+/// touches in the parallel section is lane-local.
+#[derive(Debug, Clone)]
+pub struct WorkerLane {
+    pub ws: WorkerState,
+    pub up: SparseUpdate,
+    active: bool,
+}
+
+impl WorkerLane {
+    pub fn new(d: usize) -> WorkerLane {
+        WorkerLane { ws: WorkerState::new(d), up: SparseUpdate::empty(d), active: true }
+    }
+}
+
+/// Full output of a GD-SEC run — final server and worker states alongside
+/// the trace, so tests can pin serial/parallel parity bit-for-bit.
+#[derive(Debug, Clone)]
+pub struct GdSecRun {
+    pub trace: Trace,
+    pub server: ServerState,
+    pub workers: Vec<WorkerState>,
+}
+
+/// Run GD-SEC for `iters` iterations with all workers participating,
+/// fanning worker steps across [`Pool::from_env`] threads.
 pub fn run(prob: &Problem, cfg: &GdSecConfig, iters: usize) -> Trace {
     run_scheduled(prob, cfg, iters, |_k| None)
+}
+
+/// [`run`] with a participation schedule (threads from [`Pool::from_env`]).
+pub fn run_scheduled<F>(prob: &Problem, cfg: &GdSecConfig, iters: usize, active: F) -> Trace
+where
+    F: FnMut(usize) -> Option<Vec<usize>>,
+{
+    run_scheduled_pooled(prob, cfg, iters, active, &Pool::from_env())
 }
 
 /// Run GD-SEC with a participation schedule: `active(k)` returns the set
 /// of participating worker ids at iteration k (None = all). Inactive
 /// workers keep h/e frozen (they neither compute nor transmit), matching
 /// the paper's bandwidth-limited extension (§IV-G1).
-pub fn run_scheduled<F>(prob: &Problem, cfg: &GdSecConfig, iters: usize, mut active: F) -> Trace
+///
+/// Worker gradient + sparsify steps fan out over `pool`; reduction
+/// (bit accounting and server aggregation) happens on the calling thread
+/// in worker-id order, so the result is identical for every thread count.
+pub fn run_scheduled_pooled<F>(
+    prob: &Problem,
+    cfg: &GdSecConfig,
+    iters: usize,
+    active: F,
+    pool: &Pool,
+) -> Trace
+where
+    F: FnMut(usize) -> Option<Vec<usize>>,
+{
+    run_states(prob, cfg, iters, active, pool).trace
+}
+
+/// [`run_scheduled_pooled`] returning the final states as well.
+pub fn run_states<F>(
+    prob: &Problem,
+    cfg: &GdSecConfig,
+    iters: usize,
+    mut active: F,
+    pool: &Pool,
+) -> GdSecRun
 where
     F: FnMut(usize) -> Option<Vec<usize>>,
 {
@@ -259,55 +384,91 @@ where
     let fstar = cfg.fstar.unwrap_or_else(|| prob.estimate_fstar(fstar_iters(iters)));
     let mut trace = Trace::new("GD-SEC", &prob.name, fstar);
     let mut server = ServerState::new(d);
-    let mut workers: Vec<WorkerState> = (0..m).map(|_| WorkerState::new(d)).collect();
+    let mut lanes: Vec<WorkerLane> = (0..m).map(|_| WorkerLane::new(d)).collect();
     let mut theta_diff = vec![0.0; d];
     let mut bits: u64 = 0;
     let mut transmissions: u64 = 0;
     let mut entries: u64 = 0;
 
-    record(&mut trace, prob, &server.theta, 0, bits, transmissions, entries);
+    record_pooled(&mut trace, prob, &server.theta, pool, 0, bits, transmissions, entries);
     for k in 1..=iters {
-        server.theta_diff(&mut theta_diff);
-        let act = active(k);
-        let mut updates: Vec<SparseUpdate> = Vec::with_capacity(m);
-        for (w, ws) in workers.iter_mut().enumerate() {
-            if let Some(set) = &act {
-                if !set.contains(&w) {
-                    continue;
-                }
-            }
-            prob.locals[w].grad(&server.theta, &mut ws.grad);
-            let up = ws.sparsify_step(cfg, m, &theta_diff);
-            if up.nnz() > 0 {
-                bits += compress::sparse_bits(&up) as u64;
-                transmissions += 1;
-                entries += up.nnz() as u64;
-                updates.push(up);
-            }
+        // Fused diff + stationarity max: the max is the quantity the
+        // censoring thresholds scale with — free round telemetry. The
+        // explicit `enabled` gate keeps the disabled path format- and
+        // allocation-free (the zero-alloc round invariant).
+        let diff_max = server.theta_diff_max(&mut theta_diff);
+        if crate::util::enabled(crate::util::Level::Debug) {
+            crate::debugln!("gd-sec k={k}: max|Δθ| = {diff_max:.3e}");
         }
-        server.apply_round(cfg, &updates);
+        let act = active(k);
+        for (w, lane) in lanes.iter_mut().enumerate() {
+            lane.active = act.as_ref().map_or(true, |set| set.contains(&w));
+        }
+        worker_round(prob, cfg, &server.theta, &theta_diff, &mut lanes, pool);
+        for lane in lanes.iter().filter(|l| l.active && l.up.nnz() > 0) {
+            bits += compress::sparse_bits(&lane.up) as u64;
+            transmissions += 1;
+            entries += lane.up.nnz() as u64;
+        }
+        server.apply_round(
+            cfg,
+            lanes.iter().filter(|l| l.active && l.up.nnz() > 0).map(|l| &l.up),
+        );
         if k % cfg.eval_every == 0 || k == iters {
-            record(&mut trace, prob, &server.theta, k, bits, transmissions, entries);
+            record_pooled(&mut trace, prob, &server.theta, pool, k, bits, transmissions, entries);
         }
     }
-    trace
+    GdSecRun { trace, server, workers: lanes.into_iter().map(|l| l.ws).collect() }
 }
 
-/// Heuristic horizon for the f* estimate: far past the experiment length.
-pub fn fstar_iters(iters: usize) -> usize {
-    (iters * 4).max(3000)
+/// The parallel half-round: every active lane computes its local gradient
+/// and censors it into the lane's reusable update buffer. Lane `w` reads
+/// only shared immutable state (θ, θ-diff, shard `w`) and writes only
+/// lane `w` — the reduction order is entirely the caller's.
+fn worker_round(
+    prob: &Problem,
+    cfg: &GdSecConfig,
+    theta: &[f64],
+    theta_diff: &[f64],
+    lanes: &mut [WorkerLane],
+    pool: &Pool,
+) {
+    let m = lanes.len();
+    pool.scatter(lanes, |w, lane| {
+        if !lane.active {
+            return;
+        }
+        prob.locals[w].grad(theta, &mut lane.ws.grad);
+        lane.ws.sparsify_into(cfg, m, theta_diff, &mut lane.up);
+    });
 }
 
-pub fn record(
+/// Record a trace row, evaluating f(θ) with per-worker local values
+/// fanned out over `pool` and summed in worker order (bitwise equal to
+/// the serial evaluation).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn record_pooled(
     trace: &mut Trace,
     prob: &Problem,
     theta: &[f64],
+    pool: &Pool,
     iter: usize,
     bits: u64,
     transmissions: u64,
     entries: u64,
 ) {
-    trace.push(TraceRow { iter, fval: prob.value(theta), bits, transmissions, entries });
+    trace.push(TraceRow {
+        iter,
+        fval: prob.value_pooled(theta, pool),
+        bits,
+        transmissions,
+        entries,
+    });
+}
+
+/// Heuristic horizon for the f* estimate: far past the experiment length.
+pub fn fstar_iters(iters: usize) -> usize {
+    (iters * 4).max(3000)
 }
 
 /// Per-(worker, coordinate) transmission counts — the Fig 6 heatmap.
@@ -529,6 +690,98 @@ mod tests {
         });
         assert!(trace.final_error().is_finite());
         assert!(trace.total_bits() > 0);
+    }
+
+    #[test]
+    fn sparsify_into_reuses_buffer_and_matches_step() {
+        let prob = small_problem();
+        let d = prob.d;
+        let cfg = GdSecConfig { xi: Xi::Uniform(20.0), beta: 0.1, ..Default::default() };
+        let diff: Vec<f64> = (0..d).map(|i| (i as f64) * 1e-4).collect();
+        let mut a = WorkerState::new(d);
+        let mut b = WorkerState::new(d);
+        let theta = vec![0.05; d];
+        let mut reused = SparseUpdate::empty(d);
+        for round in 0..3 {
+            prob.locals[0].grad(&theta, a.grad_mut());
+            prob.locals[0].grad(&theta, b.grad_mut());
+            let fresh = a.sparsify_step(&cfg, prob.m(), &diff);
+            b.sparsify_into(&cfg, prob.m(), &diff, &mut reused);
+            assert_eq!(fresh, reused, "round {round}");
+            assert_eq!(a.h, b.h);
+            assert_eq!(a.e, b.e);
+        }
+        // Reuse keeps capacity: re-running the FIRST round's inputs on a
+        // fresh state (same nnz as round 0) must not grow the buffer.
+        let cap = (reused.idx.capacity(), reused.val.capacity());
+        let mut c = WorkerState::new(d);
+        prob.locals[0].grad(&theta, c.grad_mut());
+        c.sparsify_into(&cfg, prob.m(), &diff, &mut reused);
+        assert_eq!((reused.idx.capacity(), reused.val.capacity()), cap, "capacity churned");
+    }
+
+    #[test]
+    fn requantize_fixup_matches_dense_reference() {
+        // The sparse two-pointer walk must reproduce the old dense
+        // round-trip exactly, including survivors quantized to level 0
+        // (present in `original`, absent from `wire`).
+        let d = 50;
+        let cfg = GdSecConfig { beta: 0.3, ..Default::default() };
+        let mut original = SparseUpdate::empty(d);
+        let mut wire = SparseUpdate::empty(d);
+        for (i, v) in [(3u32, 1.5f32), (7, -0.25), (20, 3.0), (21, 0.125), (49, -2.0)] {
+            original.idx.push(i);
+            original.val.push(v);
+        }
+        // wire: index 7 dropped (level 0), others re-quantized.
+        for (i, v) in [(3u32, 1.25f32), (20, 3.5), (21, 0.125), (49, -1.75)] {
+            wire.idx.push(i);
+            wire.val.push(v);
+        }
+        let mut ws = WorkerState::new(d);
+        for i in 0..d {
+            ws.h[i] = (i as f64) * 0.01;
+            ws.e[i] = -(i as f64) * 0.02;
+        }
+        let mut reference = ws.clone();
+        ws.requantize_fixup(&cfg, &original, &wire);
+        // Dense reference (the pre-optimization implementation).
+        let orig_dense = original.to_dense();
+        let wire_dense = wire.to_dense();
+        for &i in &original.idx {
+            let i = i as usize;
+            let delta_wire = wire_dense[i] - orig_dense[i];
+            reference.h[i] += cfg.beta * delta_wire;
+            reference.e[i] -= delta_wire;
+        }
+        for i in 0..d {
+            assert_eq!(ws.h[i].to_bits(), reference.h[i].to_bits(), "h[{i}]");
+            assert_eq!(ws.e[i].to_bits(), reference.e[i].to_bits(), "e[{i}]");
+        }
+    }
+
+    #[test]
+    fn pooled_run_matches_serial_bitwise() {
+        use crate::util::pool::Pool;
+        let prob = small_problem();
+        let cfg = GdSecConfig {
+            alpha: 1.0 / prob.lipschitz(),
+            beta: 0.05,
+            xi: Xi::Uniform(40.0),
+            fstar: Some(0.0),
+            ..Default::default()
+        };
+        let serial = run_states(&prob, &cfg, 40, |_k| None, &Pool::new(1));
+        let pooled = run_states(&prob, &cfg, 40, |_k| None, &Pool::new(4));
+        for (a, b) in serial.trace.rows.iter().zip(&pooled.trace.rows) {
+            assert_eq!(a.fval.to_bits(), b.fval.to_bits(), "iter {}", a.iter);
+            assert_eq!(a.bits, b.bits);
+            assert_eq!(a.entries, b.entries);
+        }
+        for i in 0..prob.d {
+            assert_eq!(serial.server.theta[i].to_bits(), pooled.server.theta[i].to_bits());
+            assert_eq!(serial.server.h[i].to_bits(), pooled.server.h[i].to_bits());
+        }
     }
 
     #[test]

@@ -3,11 +3,12 @@
 //! gradient (chosen with probability ∝ L_m); the server aggregates it with
 //! the stale gradients of the others.
 
-use super::gdsec::{fstar_iters, record};
+use super::gdsec::{fstar_iters, record_pooled};
 use super::trace::Trace;
 use crate::compress;
 use crate::linalg;
 use crate::objectives::Problem;
+use crate::util::pool::Pool;
 use crate::util::rng::Pcg64;
 
 #[derive(Debug, Clone)]
@@ -20,6 +21,17 @@ pub struct IagConfig {
 }
 
 pub fn run(prob: &Problem, cfg: &IagConfig, iters: usize) -> Trace {
+    run_pooled(prob, cfg, iters, &Pool::from_env())
+}
+
+/// NoUnif-IAG. Only one worker computes a fresh gradient per iteration,
+/// so unlike the synchronous baselines there is no per-worker fan-out in
+/// the steady state; the pool instead parallelizes the two O(M·d) parts —
+/// the initialization round (per-worker lanes) and the per-iteration
+/// aggregation of all M stored gradients (column blocks, each block
+/// summed over workers in ascending order ⇒ bitwise equal to the serial
+/// fold for any thread count).
+pub fn run_pooled(prob: &Problem, cfg: &IagConfig, iters: usize, pool: &Pool) -> Trace {
     let d = prob.d;
     let m = prob.m();
     let fstar = cfg.fstar.unwrap_or_else(|| prob.estimate_fstar(fstar_iters(iters)));
@@ -29,20 +41,24 @@ pub fn run(prob: &Problem, cfg: &IagConfig, iters: usize) -> Trace {
     let mut theta = vec![0.0; d];
     let mut g = vec![0.0; d];
     let mut memory: Vec<Vec<f64>> = vec![vec![0.0; d]; m];
+    let mut agg = vec![0.0; d];
     let (mut bits, mut tx, mut entries) = (0u64, 0u64, 0u64);
-    record(&mut trace, prob, &theta, 0, bits, tx, entries);
+    record_pooled(&mut trace, prob, &theta, pool, 0, bits, tx, entries);
     // Initialization round: every worker seeds the server memory once
     // (bits counted — the aggregate needs all M gradients before IAG can
-    // make its first sensible step).
-    for (w, l) in prob.locals.iter().enumerate() {
-        l.grad(&theta, &mut g);
-        for i in 0..d {
-            memory[w][i] = g[i] as f32 as f64;
-        }
-        bits += compress::dense_bits(d) as u64;
-        tx += 1;
-        entries += d as u64;
+    // make its first sensible step). Fanned out per worker.
+    {
+        let theta = &theta;
+        pool.scatter(&mut memory, |w, mem| {
+            prob.locals[w].grad(theta, mem);
+            for v in mem.iter_mut() {
+                *v = *v as f32 as f64;
+            }
+        });
     }
+    bits += (m * compress::dense_bits(d)) as u64;
+    tx += m as u64;
+    entries += (m * d) as u64;
     for k in 1..=iters {
         let w = rng.categorical(&weights);
         prob.locals[w].grad(&theta, &mut g);
@@ -52,17 +68,38 @@ pub fn run(prob: &Problem, cfg: &IagConfig, iters: usize) -> Trace {
         bits += compress::dense_bits(d) as u64;
         tx += 1;
         entries += d as u64;
-        // Aggregate all stored gradients.
-        let mut agg = vec![0.0; d];
-        for mem in &memory {
-            linalg::axpy(1.0, mem, &mut agg);
-        }
+        sum_memories(&memory, &mut agg, pool);
         linalg::axpy(-cfg.alpha, &agg, &mut theta);
         if k % cfg.eval_every == 0 || k == iters {
-            record(&mut trace, prob, &theta, k, bits, tx, entries);
+            record_pooled(&mut trace, prob, &theta, pool, k, bits, tx, entries);
         }
     }
     trace
+}
+
+/// agg = Σ_w memory[w], parallelized over column blocks. Every element is
+/// summed over workers in ascending order regardless of which thread owns
+/// its block, so the result is bitwise identical to the serial fold.
+fn sum_memories(memory: &[Vec<f64>], agg: &mut [f64], pool: &Pool) {
+    let d = agg.len();
+    if pool.threads() == 1 || d == 0 {
+        linalg::zero(agg);
+        for mem in memory {
+            linalg::axpy(1.0, mem, agg);
+        }
+        return;
+    }
+    let chunk = d.div_ceil(pool.threads());
+    let mut blocks: Vec<(usize, &mut [f64])> =
+        agg.chunks_mut(chunk).enumerate().map(|(b, s)| (b * chunk, s)).collect();
+    pool.scatter(&mut blocks, |_, item| {
+        let j0 = item.0;
+        let block: &mut [f64] = &mut *item.1;
+        linalg::zero(block);
+        for mem in memory {
+            linalg::axpy(1.0, &mem[j0..j0 + block.len()], block);
+        }
+    });
 }
 
 #[cfg(test)]
@@ -73,7 +110,12 @@ mod tests {
     #[test]
     fn one_transmission_per_iteration() {
         let prob = Problem::linear(synthetic::dna_like(3, 60), 5, 0.1);
-        let cfg = IagConfig { alpha: 1.0 / (2.0 * 5.0 * prob.lipschitz()), seed: 1, eval_every: 1, fstar: None };
+        let cfg = IagConfig {
+            alpha: 1.0 / (2.0 * 5.0 * prob.lipschitz()),
+            seed: 1,
+            eval_every: 1,
+            fstar: None,
+        };
         let t = run(&prob, &cfg, 50);
         // M init + 50 rounds
         assert_eq!(t.total_transmissions(), 55);

@@ -1,13 +1,19 @@
 //! Quantized GD (QGD) — QSGD-style unbiased quantization of the full
 //! gradient, per the paper's baseline ([30], [56]): 8-bit magnitude +
 //! 1 sign bit per non-zero component + 32 bits for the norm.
+//!
+//! Stochastic rounding draws come from **per-worker** seeded streams
+//! (`SplitMix64::child(seed, w)`, the same scheme the SGD extensions
+//! use), so the worker fan-out over the [`Pool`] is deterministic and
+//! thread-count independent.
 
-use super::gdsec::{fstar_iters, record};
+use super::gdsec::{fstar_iters, record_pooled};
 use super::trace::Trace;
 use crate::compress::quantize;
 use crate::linalg;
 use crate::objectives::Problem;
-use crate::util::rng::Pcg64;
+use crate::util::pool::Pool;
+use crate::util::rng::{Pcg64, SplitMix64};
 
 #[derive(Debug, Clone)]
 pub struct QgdConfig {
@@ -21,29 +27,56 @@ pub struct QgdConfig {
 }
 
 pub fn run(prob: &Problem, cfg: &QgdConfig, iters: usize) -> Trace {
+    run_pooled(prob, cfg, iters, &Pool::from_env())
+}
+
+/// QGD with per-worker gradient + quantization fanned out over `pool`;
+/// dequantized lanes are folded in worker-id order.
+pub fn run_pooled(prob: &Problem, cfg: &QgdConfig, iters: usize, pool: &Pool) -> Trace {
     let d = prob.d;
     let fstar = cfg.fstar.unwrap_or_else(|| prob.estimate_fstar(fstar_iters(iters)));
     let mut trace = Trace::new("QGD", &prob.name, fstar);
-    let mut rng = Pcg64::seeded(cfg.seed);
     let mut theta = vec![0.0; d];
-    let mut g = vec![0.0; d];
     let mut agg = vec![0.0; d];
+    struct Lane {
+        g: Vec<f64>,
+        dq: Vec<f64>,
+        rng: Pcg64,
+        q_bits: u64,
+        q_entries: u64,
+    }
+    let mut lanes: Vec<Lane> = (0..prob.m())
+        .map(|w| Lane {
+            g: vec![0.0; d],
+            dq: vec![0.0; d],
+            rng: Pcg64::seeded(SplitMix64::child(cfg.seed, w as u64)),
+            q_bits: 0,
+            q_entries: 0,
+        })
+        .collect();
     let (mut bits, mut tx, mut entries) = (0u64, 0u64, 0u64);
-    record(&mut trace, prob, &theta, 0, bits, tx, entries);
+    record_pooled(&mut trace, prob, &theta, pool, 0, bits, tx, entries);
     for k in 1..=iters {
+        {
+            let theta = &theta;
+            pool.scatter(&mut lanes, |w, lane| {
+                prob.locals[w].grad(theta, &mut lane.g);
+                let q = quantize::quantize(&lane.g, cfg.s, &mut lane.rng);
+                lane.q_bits = quantize::quantized_bits(&q) as u64;
+                lane.q_entries = q.idx.len() as u64;
+                quantize::dequantize_into(&q, &mut lane.dq);
+            });
+        }
         linalg::zero(&mut agg);
-        for l in prob.locals.iter() {
-            l.grad(&theta, &mut g);
-            let q = quantize::quantize(&g, cfg.s, &mut rng);
-            bits += quantize::quantized_bits(&q) as u64;
+        for lane in &lanes {
+            linalg::axpy(1.0, &lane.dq, &mut agg);
+            bits += lane.q_bits;
             tx += 1;
-            entries += q.idx.len() as u64;
-            let dq = quantize::dequantize(&q);
-            linalg::axpy(1.0, &dq, &mut agg);
+            entries += lane.q_entries;
         }
         linalg::axpy(-cfg.alpha, &agg, &mut theta);
         if k % cfg.eval_every == 0 || k == iters {
-            record(&mut trace, prob, &theta, k, bits, tx, entries);
+            record_pooled(&mut trace, prob, &theta, pool, k, bits, tx, entries);
         }
     }
     trace
@@ -57,7 +90,13 @@ mod tests {
     #[test]
     fn converges_noisily() {
         let prob = Problem::logistic(synthetic::dna_like(2, 80), 3, 0.1);
-        let cfg = QgdConfig { alpha: 1.0 / prob.lipschitz(), s: 255, seed: 1, eval_every: 1, fstar: None };
+        let cfg = QgdConfig {
+            alpha: 1.0 / prob.lipschitz(),
+            s: 255,
+            seed: 1,
+            eval_every: 1,
+            fstar: None,
+        };
         let t = run(&prob, &cfg, 300);
         let errs = t.errors();
         assert!(errs[300] < errs[0] * 0.05, "{} -> {}", errs[0], errs[300]);
@@ -66,7 +105,13 @@ mod tests {
     #[test]
     fn cheaper_per_round_than_dense_gd() {
         let prob = Problem::linear(synthetic::dna_like(2, 80), 3, 0.1);
-        let cfg = QgdConfig { alpha: 1.0 / prob.lipschitz(), s: 255, seed: 2, eval_every: 1, fstar: None };
+        let cfg = QgdConfig {
+            alpha: 1.0 / prob.lipschitz(),
+            s: 255,
+            seed: 2,
+            eval_every: 1,
+            fstar: None,
+        };
         let t = run(&prob, &cfg, 10);
         let gd_bits = (10 * 3 * 32 * prob.d) as u64;
         // 9 bits/component + RLE gaps ≈ 17/32 of dense cost.
@@ -76,7 +121,13 @@ mod tests {
     #[test]
     fn deterministic_given_seed() {
         let prob = Problem::linear(synthetic::dna_like(2, 40), 2, 0.1);
-        let cfg = QgdConfig { alpha: 1.0 / prob.lipschitz(), s: 100, seed: 7, eval_every: 1, fstar: None };
+        let cfg = QgdConfig {
+            alpha: 1.0 / prob.lipschitz(),
+            s: 100,
+            seed: 7,
+            eval_every: 1,
+            fstar: None,
+        };
         let a = run(&prob, &cfg, 20);
         let b = run(&prob, &cfg, 20);
         assert_eq!(a.total_bits(), b.total_bits());

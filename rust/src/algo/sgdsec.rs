@@ -4,11 +4,12 @@
 //! gradients drawn uniformly from each worker's shard (scaled to be
 //! unbiased for the local data term).
 
-use super::gdsec::{fstar_iters, record, GdSecConfig, ServerState, WorkerState, Xi};
+use super::gdsec::{fstar_iters, record_pooled, GdSecConfig, ServerState, WorkerState, Xi};
 use super::trace::Trace;
 use crate::compress::{self, quantize, SparseUpdate};
 use crate::linalg;
 use crate::objectives::Problem;
+use crate::util::pool::Pool;
 use crate::util::rng::{Pcg64, SplitMix64};
 
 #[derive(Debug, Clone)]
@@ -28,31 +29,52 @@ pub struct SgdSecConfig {
 
 /// Plain distributed SGD baseline (dense transmissions).
 pub fn run_sgd(prob: &Problem, cfg: &SgdSecConfig, iters: usize) -> Trace {
+    run_sgd_pooled(prob, cfg, iters, &Pool::from_env())
+}
+
+/// [`run_sgd`] with the per-worker minibatch gradients fanned out over
+/// `pool` (per-worker seeded RNG streams keep the draw sequence — and so
+/// the trajectory — identical for any thread count).
+pub fn run_sgd_pooled(prob: &Problem, cfg: &SgdSecConfig, iters: usize, pool: &Pool) -> Trace {
     let d = prob.d;
     let fstar = cfg.fstar.unwrap_or_else(|| prob.estimate_fstar(fstar_iters(iters)));
     let mut trace = Trace::new("SGD", &prob.name, fstar);
     let mut theta = vec![0.0; d];
-    let mut g = vec![0.0; d];
     let mut agg = vec![0.0; d];
-    let mut rngs: Vec<Pcg64> =
-        (0..prob.m()).map(|w| Pcg64::seeded(SplitMix64::child(cfg.seed, w as u64))).collect();
+    struct Lane {
+        g: Vec<f64>,
+        rng: Pcg64,
+    }
+    let mut lanes: Vec<Lane> = (0..prob.m())
+        .map(|w| Lane {
+            g: vec![0.0; d],
+            rng: Pcg64::seeded(SplitMix64::child(cfg.seed, w as u64)),
+        })
+        .collect();
     let (mut bits, mut tx, mut entries) = (0u64, 0u64, 0u64);
-    record(&mut trace, prob, &theta, 0, bits, tx, entries);
+    record_pooled(&mut trace, prob, &theta, pool, 0, bits, tx, entries);
     for k in 1..=iters {
         let alpha_k = cfg.gamma0 / (1.0 + cfg.gamma0 * cfg.lambda * k as f64);
+        {
+            let theta = &theta;
+            pool.scatter(&mut lanes, |w, lane| {
+                stochastic_grad(&prob.locals[w], theta, cfg.batch, &mut lane.rng, &mut lane.g);
+                // Wire: dense f32 vector — round in-thread.
+                for v in lane.g.iter_mut() {
+                    *v = *v as f32 as f64;
+                }
+            });
+        }
         linalg::zero(&mut agg);
-        for (w, l) in prob.locals.iter().enumerate() {
-            stochastic_grad(l, &theta, cfg.batch, &mut rngs[w], &mut g);
-            for i in 0..d {
-                agg[i] += g[i] as f32 as f64;
-            }
+        for lane in &lanes {
+            linalg::axpy(1.0, &lane.g, &mut agg);
             bits += compress::dense_bits(d) as u64;
             tx += 1;
             entries += d as u64;
         }
         linalg::axpy(-alpha_k, &agg, &mut theta);
         if k % cfg.eval_every == 0 || k == iters {
-            record(&mut trace, prob, &theta, k, bits, tx, entries);
+            record_pooled(&mut trace, prob, &theta, pool, k, bits, tx, entries);
         }
     }
     trace
@@ -60,19 +82,48 @@ pub fn run_sgd(prob: &Problem, cfg: &SgdSecConfig, iters: usize) -> Trace {
 
 /// SGD-SEC / QSGD-SEC.
 pub fn run_sgdsec(prob: &Problem, cfg: &SgdSecConfig, iters: usize) -> Trace {
+    run_sgdsec_pooled(prob, cfg, iters, &Pool::from_env())
+}
+
+/// [`run_sgdsec`] with the per-worker minibatch gradient + censor (+
+/// optional QSGD re-quantization) fanned out over `pool`. Each lane owns
+/// its worker state, RNG stream and wire buffers; the server folds lanes
+/// in worker-id order — bit-for-bit thread-count independent.
+pub fn run_sgdsec_pooled(prob: &Problem, cfg: &SgdSecConfig, iters: usize, pool: &Pool) -> Trace {
     let d = prob.d;
     let m = prob.m();
     let fstar = cfg.fstar.unwrap_or_else(|| prob.estimate_fstar(fstar_iters(iters)));
     let name = if cfg.quantize_s.is_some() { "QSGD-SEC" } else { "SGD-SEC" };
     let mut trace = Trace::new(name, &prob.name, fstar);
     let mut server = ServerState::new(d);
-    let mut workers: Vec<WorkerState> = (0..m).map(|_| WorkerState::new(d)).collect();
-    let mut rngs: Vec<Pcg64> =
-        (0..m).map(|w| Pcg64::seeded(SplitMix64::child(cfg.seed, w as u64))).collect();
+    struct Lane {
+        ws: WorkerState,
+        rng: Pcg64,
+        /// Censored update Δ̂ (pre-quantization).
+        up: SparseUpdate,
+        /// What actually goes on the wire (== `up` unless quantizing).
+        wire: SparseUpdate,
+        dense: Vec<f64>,
+        sent_bits: u64,
+        sent_entries: u64,
+        sent: bool,
+    }
+    let mut lanes: Vec<Lane> = (0..m)
+        .map(|w| Lane {
+            ws: WorkerState::new(d),
+            rng: Pcg64::seeded(SplitMix64::child(cfg.seed, w as u64)),
+            up: SparseUpdate::empty(d),
+            wire: SparseUpdate::empty(d),
+            dense: vec![0.0; d],
+            sent_bits: 0,
+            sent_entries: 0,
+            sent: false,
+        })
+        .collect();
     let mut theta_diff = vec![0.0; d];
-    let mut grad = vec![0.0; d];
     let (mut bits, mut tx, mut entries) = (0u64, 0u64, 0u64);
-    record(&mut trace, prob, &server.theta, 0, bits, tx, entries);
+    let quantizing = cfg.quantize_s.is_some();
+    record_pooled(&mut trace, prob, &server.theta, pool, 0, bits, tx, entries);
     for k in 1..=iters {
         let alpha_k = cfg.gamma0 / (1.0 + cfg.gamma0 * cfg.lambda * k as f64);
         let step_cfg = GdSecConfig {
@@ -85,40 +136,54 @@ pub fn run_sgdsec(prob: &Problem, cfg: &SgdSecConfig, iters: usize) -> Trace {
             fstar: None,
         };
         server.theta_diff(&mut theta_diff);
-        let mut updates: Vec<SparseUpdate> = Vec::with_capacity(m);
-        for (w, ws) in workers.iter_mut().enumerate() {
-            stochastic_grad(&prob.locals[w], &server.theta, cfg.batch, &mut rngs[w], &mut grad);
-            ws.grad_mut().copy_from_slice(&grad);
-            let up = ws.sparsify_step(&step_cfg, m, &theta_diff);
-            if up.nnz() == 0 {
-                continue;
-            }
-            match cfg.quantize_s {
-                None => {
-                    bits += compress::sparse_bits(&up) as u64;
-                    tx += 1;
-                    entries += up.nnz() as u64;
-                    updates.push(up);
+        {
+            let theta = &server.theta;
+            let theta_diff = &theta_diff;
+            let step_cfg = &step_cfg;
+            pool.scatter(&mut lanes, |w, lane| {
+                let (ws, rng) = (&mut lane.ws, &mut lane.rng);
+                stochastic_grad(&prob.locals[w], theta, cfg.batch, rng, ws.grad_mut());
+                lane.ws.sparsify_into(step_cfg, m, theta_diff, &mut lane.up);
+                if lane.up.nnz() == 0 {
+                    lane.sent = false;
+                    return;
                 }
-                Some(s) => {
-                    // Quantize the surviving values; EC + h must track the
-                    // *dequantized* wire values so worker and server stay
-                    // mirrored.
-                    let dense = up.to_dense();
-                    let q = quantize::quantize(&dense, s, &mut rngs[w]);
-                    bits += quantize::quantized_bits(&q) as u64;
-                    tx += 1;
-                    entries += q.idx.len() as u64;
-                    let dq = quantize::dequantize(&q);
-                    let wire = SparseUpdate::from_dense(&dq);
-                    ws.requantize_fixup(&step_cfg, &up, &wire);
-                    updates.push(wire);
+                lane.sent = true;
+                match cfg.quantize_s {
+                    None => {
+                        lane.sent_bits = compress::sparse_bits(&lane.up) as u64;
+                        lane.sent_entries = lane.up.nnz() as u64;
+                    }
+                    Some(s) => {
+                        // Quantize the surviving values; EC + h must track
+                        // the *dequantized* wire values so worker and
+                        // server stay mirrored.
+                        linalg::zero(&mut lane.dense);
+                        lane.up.add_into(&mut lane.dense);
+                        let q = quantize::quantize(&lane.dense, s, &mut lane.rng);
+                        lane.sent_bits = quantize::quantized_bits(&q) as u64;
+                        lane.sent_entries = q.idx.len() as u64;
+                        quantize::dequantize_into(&q, &mut lane.dense);
+                        lane.wire.gather_from(&lane.dense);
+                        lane.ws.requantize_fixup(step_cfg, &lane.up, &lane.wire);
+                    }
                 }
-            }
+            });
         }
-        server.apply_round(&step_cfg, &updates);
+        for lane in lanes.iter().filter(|l| l.sent) {
+            bits += lane.sent_bits;
+            tx += 1;
+            entries += lane.sent_entries;
+        }
+        server.apply_round(
+            &step_cfg,
+            lanes
+                .iter()
+                .filter(|l| l.sent)
+                .map(|l| if quantizing { &l.wire } else { &l.up }),
+        );
         if k % cfg.eval_every == 0 || k == iters {
-            record(&mut trace, prob, &server.theta, k, bits, tx, entries);
+            record_pooled(&mut trace, prob, &server.theta, pool, k, bits, tx, entries);
         }
     }
     trace
@@ -184,7 +249,8 @@ mod tests {
         cfg.gamma0 = 0.05;
         let sgd = run_sgd(&prob, &cfg, 200);
         let sec = run_sgdsec(&prob, &cfg, 200);
-        assert!(sec.total_bits() < sgd.total_bits(), "{} vs {}", sec.total_bits(), sgd.total_bits());
+        let (a, b) = (sec.total_bits(), sgd.total_bits());
+        assert!(a < b, "{a} vs {b}");
         // still converging in the same ballpark
         assert!(sec.final_error() < sgd.final_error() * 10.0 + 1e-9);
     }

@@ -4,11 +4,12 @@
 //! and accumulates the residual. Converges only with a decreasing step
 //! size `α_k = γ₀(1 + γ₀λk)^{-1}` (paper §IV), which we use.
 
-use super::gdsec::{fstar_iters, record};
+use super::gdsec::{fstar_iters, record_pooled};
 use super::trace::Trace;
-use crate::compress::{self, topj};
+use crate::compress::{self, topj, SparseUpdate};
 use crate::linalg;
 use crate::objectives::Problem;
+use crate::util::pool::Pool;
 
 #[derive(Debug, Clone)]
 pub struct TopJConfig {
@@ -23,44 +24,65 @@ pub struct TopJConfig {
 }
 
 pub fn run(prob: &Problem, cfg: &TopJConfig, iters: usize) -> Trace {
+    run_pooled(prob, cfg, iters, &Pool::from_env())
+}
+
+/// Top-j with the per-worker gradient + selection + error-memory update
+/// fanned out over `pool`; lane updates are folded into the aggregate in
+/// worker-id order (bit-for-bit equal to the serial trajectory).
+pub fn run_pooled(prob: &Problem, cfg: &TopJConfig, iters: usize, pool: &Pool) -> Trace {
     let d = prob.d;
     let m = prob.m();
     let fstar = cfg.fstar.unwrap_or_else(|| prob.estimate_fstar(fstar_iters(iters)));
     let mut trace = Trace::new(&format!("top-{}", cfg.j), &prob.name, fstar);
     let mut theta = vec![0.0; d];
-    let mut g = vec![0.0; d];
-    let mut delta = vec![0.0; d];
     let mut agg = vec![0.0; d];
-    let mut err: Vec<Vec<f64>> = vec![vec![0.0; d]; m];
+    struct Lane {
+        g: Vec<f64>,
+        delta: Vec<f64>,
+        err: Vec<f64>,
+        up: SparseUpdate,
+    }
+    let mut lanes: Vec<Lane> = (0..m)
+        .map(|_| Lane {
+            g: vec![0.0; d],
+            delta: vec![0.0; d],
+            err: vec![0.0; d],
+            up: SparseUpdate::empty(d),
+        })
+        .collect();
     let (mut bits, mut tx, mut entries) = (0u64, 0u64, 0u64);
-    record(&mut trace, prob, &theta, 0, bits, tx, entries);
+    record_pooled(&mut trace, prob, &theta, pool, 0, bits, tx, entries);
     for k in 1..=iters {
         let alpha_k = cfg.gamma0 / (1.0 + cfg.gamma0 * cfg.lambda * k as f64);
+        {
+            let theta = &theta;
+            pool.scatter(&mut lanes, |w, lane| {
+                prob.locals[w].grad(theta, &mut lane.g);
+                for i in 0..d {
+                    lane.delta[i] = lane.g[i] + lane.err[i];
+                }
+                topj::top_j_update_into(&lane.delta, cfg.j, &mut lane.up);
+                // error memory = residual (transmitted values f32-rounded)
+                lane.err.copy_from_slice(&lane.delta);
+                for t in 0..lane.up.idx.len() {
+                    let i = lane.up.idx[t] as usize;
+                    lane.err[i] = lane.delta[i] - lane.up.val[t] as f64;
+                }
+            });
+        }
         linalg::zero(&mut agg);
-        for (w, l) in prob.locals.iter().enumerate() {
-            l.grad(&theta, &mut g);
-            for i in 0..d {
-                delta[i] = g[i] + err[w][i];
-            }
-            let up = topj::top_j_update(&delta, cfg.j);
-            // error memory = residual (transmitted values f32-rounded)
-            for i in 0..d {
-                err[w][i] = delta[i];
-            }
-            for t in 0..up.idx.len() {
-                let i = up.idx[t] as usize;
-                agg[i] += up.val[t] as f64;
-                err[w][i] = delta[i] - up.val[t] as f64;
-            }
-            if up.nnz() > 0 {
-                bits += compress::sparse_bits(&up) as u64;
+        for lane in &lanes {
+            lane.up.add_into(&mut agg);
+            if lane.up.nnz() > 0 {
+                bits += compress::sparse_bits(&lane.up) as u64;
                 tx += 1;
-                entries += up.nnz() as u64;
+                entries += lane.up.nnz() as u64;
             }
         }
         linalg::axpy(-alpha_k, &agg, &mut theta);
         if k % cfg.eval_every == 0 || k == iters {
-            record(&mut trace, prob, &theta, k, bits, tx, entries);
+            record_pooled(&mut trace, prob, &theta, pool, k, bits, tx, entries);
         }
     }
     trace
@@ -95,10 +117,16 @@ mod tests {
     fn j_equals_d_close_to_gd_first_step() {
         let prob = Problem::linear(synthetic::dna_like(5, 40), 2, 0.1);
         let l = prob.lipschitz();
-        let cfg = TopJConfig { j: prob.d, gamma0: 1.0 / l, lambda: 0.0, eval_every: 1, fstar: None };
+        let cfg = TopJConfig {
+            j: prob.d,
+            gamma0: 1.0 / l,
+            lambda: 0.0,
+            eval_every: 1,
+            fstar: None,
+        };
         let t = run(&prob, &cfg, 5);
-        let gd =
-            super::super::gd::run(&prob, &super::super::gd::GdConfig { alpha: 1.0 / l, eval_every: 1, fstar: None }, 5);
+        let gd_cfg = super::super::gd::GdConfig { alpha: 1.0 / l, eval_every: 1, fstar: None };
+        let gd = super::super::gd::run(&prob, &gd_cfg, 5);
         // With j=d and lambda=0 (constant step), trajectories agree to f32
         // rounding.
         for (a, b) in t.rows.iter().zip(gd.rows.iter()) {

@@ -31,15 +31,29 @@ impl SparseUpdate {
 
     /// Gather the non-zeros of a dense vector.
     pub fn from_dense(v: &[f64]) -> SparseUpdate {
-        let mut idx = Vec::new();
-        let mut val = Vec::new();
+        let mut up = SparseUpdate::empty(v.len());
+        up.gather_from(v);
+        up
+    }
+
+    /// Reset to an empty update of dimension `dim`, KEEPING the index and
+    /// value allocations — the arena-style reuse that makes the trainers'
+    /// steady-state round allocation-free.
+    pub fn reset(&mut self, dim: usize) {
+        self.dim = dim as u32;
+        self.idx.clear();
+        self.val.clear();
+    }
+
+    /// [`from_dense`](Self::from_dense) into this (reused) buffer.
+    pub fn gather_from(&mut self, v: &[f64]) {
+        self.reset(v.len());
         for (i, &x) in v.iter().enumerate() {
             if x != 0.0 {
-                idx.push(i as u32);
-                val.push(x as f32);
+                self.idx.push(i as u32);
+                self.val.push(x as f32);
             }
         }
-        SparseUpdate { dim: v.len() as u32, idx, val }
     }
 
     pub fn nnz(&self) -> usize {

@@ -61,13 +61,21 @@ pub fn quantize(v: &[f64], s: u8, rng: &mut Pcg64) -> QuantizedVec {
 /// Dequantize to a dense vector.
 pub fn dequantize(q: &QuantizedVec) -> Vec<f64> {
     let mut out = vec![0.0; q.dim as usize];
+    dequantize_into(q, &mut out);
+    out
+}
+
+/// [`dequantize`] into a caller-owned buffer (zeroed first) — lets the
+/// pooled QGD/QSGD-SEC lanes reuse their dense scratch across rounds.
+pub fn dequantize_into(q: &QuantizedVec, out: &mut [f64]) {
+    assert_eq!(out.len(), q.dim as usize);
+    linalg::zero(out);
     let norm = q.norm as f64;
     let sf = q.s as f64;
     for k in 0..q.idx.len() {
         let lvl = q.levels[k] as f64;
         out[q.idx[k] as usize] = norm * lvl / sf;
     }
-    out
 }
 
 /// Exact wire cost in bits: 32 (norm) + per non-zero (8 level + 1 sign)

@@ -5,15 +5,19 @@
 
 use super::SparseUpdate;
 
-/// Indices of the `j` largest-|v| components, returned sorted ascending.
-/// O(d) selection via `select_nth_unstable` (no full sort).
-pub fn top_j_indices(v: &[f64], j: usize) -> Vec<u32> {
+/// Indices of the `j` largest-|v| components, written sorted ascending
+/// into `out` (cleared first, capacity kept). O(d) selection via
+/// `select_nth_unstable` (no full sort). Single home of the selection
+/// comparator so index reporting and the wire update can never diverge.
+fn top_j_indices_into(v: &[f64], j: usize, out: &mut Vec<u32>) {
+    out.clear();
     let d = v.len();
     if j == 0 {
-        return Vec::new();
+        return;
     }
     if j >= d {
-        return (0..d as u32).collect();
+        out.extend(0..d as u32);
+        return;
     }
     let mut order: Vec<u32> = (0..d as u32).collect();
     order.select_nth_unstable_by(j - 1, |&a, &b| {
@@ -22,16 +26,32 @@ pub fn top_j_indices(v: &[f64], j: usize) -> Vec<u32> {
             .partial_cmp(&v[a as usize].abs())
             .unwrap_or(std::cmp::Ordering::Equal)
     });
-    let mut keep = order[..j].to_vec();
-    keep.sort_unstable();
-    keep
+    out.extend_from_slice(&order[..j]);
+    out.sort_unstable();
+}
+
+/// Indices of the `j` largest-|v| components, returned sorted ascending.
+pub fn top_j_indices(v: &[f64], j: usize) -> Vec<u32> {
+    let mut out = Vec::new();
+    top_j_indices_into(v, j, &mut out);
+    out
 }
 
 /// Sparsify `v` to its top-j components as a wire update.
 pub fn top_j_update(v: &[f64], j: usize) -> SparseUpdate {
-    let idx = top_j_indices(v, j);
-    let val = idx.iter().map(|&i| v[i as usize] as f32).collect();
-    SparseUpdate { dim: v.len() as u32, idx, val }
+    let mut out = SparseUpdate::empty(v.len());
+    top_j_update_into(v, j, &mut out);
+    out
+}
+
+/// [`top_j_update`] into a reused buffer: indices/values land in `out`
+/// with capacity kept across rounds (the trainers' arena-reuse pattern).
+/// The O(d) selection scratch still allocates; top-j is a baseline, not
+/// the zero-alloc hot path.
+pub fn top_j_update_into(v: &[f64], j: usize, out: &mut SparseUpdate) {
+    out.reset(v.len());
+    top_j_indices_into(v, j, &mut out.idx);
+    out.val.extend(out.idx.iter().map(|&i| v[i as usize] as f32));
 }
 
 #[cfg(test)]

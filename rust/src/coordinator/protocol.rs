@@ -92,17 +92,26 @@ pub fn encode(msg: &Msg, dim: u32) -> Vec<u8> {
     out
 }
 
-#[derive(Debug, thiserror::Error, PartialEq)]
+#[derive(Debug, PartialEq)]
 pub enum ProtoError {
-    #[error("frame too short")]
     Truncated,
-    #[error("bad magic byte {0:#x}")]
     BadMagic(u8),
-    #[error("unknown message kind {0}")]
     BadKind(u8),
-    #[error("payload malformed")]
     BadPayload,
 }
+
+impl std::fmt::Display for ProtoError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ProtoError::Truncated => write!(f, "frame too short"),
+            ProtoError::BadMagic(b) => write!(f, "bad magic byte {b:#x}"),
+            ProtoError::BadKind(k) => write!(f, "unknown message kind {k}"),
+            ProtoError::BadPayload => write!(f, "payload malformed"),
+        }
+    }
+}
+
+impl std::error::Error for ProtoError {}
 
 /// Decode a frame. `dim` is the model dimension (known to both ends).
 pub fn decode(buf: &[u8], dim: u32) -> Result<Msg, ProtoError> {

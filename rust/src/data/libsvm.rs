@@ -7,14 +7,37 @@
 
 use super::{Dataset, Features};
 use crate::sparse::CsrMat;
+use std::fmt;
 use std::path::Path;
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum LibsvmError {
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
-    #[error("line {line}: {msg}")]
+    Io(std::io::Error),
     Parse { line: usize, msg: String },
+}
+
+impl fmt::Display for LibsvmError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            LibsvmError::Io(e) => write!(f, "io error: {e}"),
+            LibsvmError::Parse { line, msg } => write!(f, "line {line}: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for LibsvmError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            LibsvmError::Io(e) => Some(e),
+            LibsvmError::Parse { .. } => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for LibsvmError {
+    fn from(e: std::io::Error) -> LibsvmError {
+        LibsvmError::Io(e)
+    }
 }
 
 /// Parse LIBSVM text. `min_dim` forces at least that many columns (useful

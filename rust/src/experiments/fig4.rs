@@ -9,7 +9,7 @@ use crate::algo::gdsec::{GdSecConfig, Xi};
 use crate::algo::{gd, gdsec};
 use crate::data::synthetic;
 use crate::objectives::Problem;
-use anyhow::Result;
+use crate::util::error::Result;
 
 pub fn run(ctx: &ExpContext) -> Result<FigReport> {
     let m = 5;

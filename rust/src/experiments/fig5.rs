@@ -8,7 +8,7 @@ use crate::algo::gdsec::{GdSecConfig, Xi};
 use crate::algo::{gd, gdsec};
 use crate::data::synthetic;
 use crate::objectives::Problem;
-use anyhow::Result;
+use crate::util::error::Result;
 
 pub fn run(ctx: &ExpContext) -> Result<FigReport> {
     let n = ctx.samples(3470);

@@ -8,7 +8,7 @@ use crate::algo::gdsec::{transmission_heatmap, GdSecConfig, Xi};
 use crate::data::synthetic;
 use crate::objectives::Problem;
 use crate::util::csv::CsvWriter;
-use anyhow::Result;
+use crate::util::error::Result;
 
 pub fn run(ctx: &ExpContext) -> Result<FigReport> {
     let data = synthetic::coord_lipschitz(ctx.seed);

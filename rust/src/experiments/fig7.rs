@@ -10,7 +10,7 @@ use crate::algo::gdsec;
 use crate::data::synthetic;
 use crate::objectives::Problem;
 use crate::util::tablefmt::{sci, Table};
-use anyhow::Result;
+use crate::util::error::Result;
 
 pub fn run(ctx: &ExpContext) -> Result<FigReport> {
     // Full RCV1-train is 15181×47236; quick mode shrinks n and d.

@@ -11,7 +11,7 @@ use crate::algo::{gd, gdsec};
 use crate::coordinator::scheduler::Scheduler;
 use crate::data::synthetic;
 use crate::objectives::Problem;
-use anyhow::Result;
+use crate::util::error::Result;
 
 pub fn run(ctx: &ExpContext) -> Result<FigReport> {
     let n = ctx.samples(2000);

@@ -9,7 +9,7 @@ use crate::algo::gdsec::Xi;
 use crate::algo::sgdsec::{self, SgdSecConfig};
 use crate::data::synthetic;
 use crate::objectives::Problem;
-use anyhow::Result;
+use crate::util::error::Result;
 
 pub fn run(ctx: &ExpContext) -> Result<FigReport> {
     let n = ctx.samples(6000);

@@ -18,8 +18,8 @@ pub mod fig8;
 pub mod fig9;
 
 use crate::algo::trace::Trace;
+use crate::util::error::Result;
 use crate::util::tablefmt::{bits, pct, sci, Table};
-use anyhow::Result;
 use std::path::{Path, PathBuf};
 
 /// Shared experiment context.
@@ -108,7 +108,7 @@ pub fn run_figure(fig: &str, ctx: &ExpContext) -> Result<Vec<FigReport>> {
             }
             Ok(out)
         }
-        other => anyhow::bail!("unknown figure '{other}' (fig1..fig9 or all)"),
+        other => crate::bail!("unknown figure '{other}' (fig1..fig9 or all)"),
     }
 }
 

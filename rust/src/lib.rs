@@ -18,6 +18,23 @@
 //!   never on the request path.
 //!
 //! See `examples/quickstart.rs` for a 20-line end-to-end run.
+//!
+//! ## Performance architecture
+//!
+//! The per-round hot path is parallel and allocation-free: worker
+//! gradient + sparsify steps fan out over a scoped-thread
+//! [`util::pool::Pool`] with a deterministic worker-id reduction order
+//! (bit-for-bit identical trajectories for any thread count), per-worker
+//! lanes reuse their update buffers arena-style, and the dense kernels in
+//! [`linalg`] are blocked/unrolled for autovectorization. `GDSEC_THREADS`
+//! overrides the fan-out width; `benches/hotpath_micro.rs` writes the
+//! machine-readable perf trajectory to `BENCH_hotpath.json`. See
+//! EXPERIMENTS.md §Perf.
+
+// Indexed loops over multiple same-length slices are the house style for
+// the numeric kernels — clearer than zip pyramids and equally fast once
+// bounds checks are hoisted.
+#![allow(clippy::needless_range_loop)]
 
 pub mod algo;
 pub mod compress;
@@ -38,5 +55,6 @@ pub mod prelude {
     pub use crate::algo::trace::Trace;
     pub use crate::data::Dataset;
     pub use crate::objectives::Problem;
+    pub use crate::util::pool::Pool;
     pub use crate::util::rng::Pcg64;
 }

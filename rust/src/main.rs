@@ -13,7 +13,6 @@
 //!   gdsec coordinate --workers 5 --iters 200 --scheduler rr --participation 0.5
 //!   gdsec info
 
-use anyhow::{anyhow, bail, Result};
 use gdsec::algo::gdsec::GdSecConfig;
 use gdsec::algo::{cgd, gd, gdsec as gdsec_algo, iag, qgd, sgdsec, topj};
 use gdsec::config::RunConfig;
@@ -23,6 +22,8 @@ use gdsec::experiments::{run_figure, ExpContext};
 use gdsec::objectives::Problem;
 use gdsec::runtime::Manifest;
 use gdsec::util::cli::{opt, usage, Args};
+use gdsec::util::error::Result;
+use gdsec::{bail, err};
 
 fn main() {
     let args = match Args::from_env(true) {
@@ -106,7 +107,7 @@ fn build_dataset(cfg: &RunConfig) -> Result<Dataset> {
 
 fn cmd_train(args: &Args) -> Result<()> {
     let mut cfg = RunConfig::default();
-    cfg.apply_args(args).map_err(|e| anyhow!("{e}"))?;
+    cfg.apply_args(args).map_err(|e| err!("{e}"))?;
     let data = build_dataset(&cfg)?;
     let lambda = cfg.lambda.unwrap_or(1.0 / data.n() as f64);
     let prob = Problem::new(cfg.objective, data, cfg.workers, lambda);
@@ -215,7 +216,7 @@ fn cmd_experiment(args: &Args) -> Result<()> {
     let out = args.get_or("out", "results");
     let mut ctx = ExpContext::new(out);
     ctx.quick = args.flag("quick");
-    ctx.seed = args.get_u64("seed", 42).map_err(|e| anyhow!("{e}"))?;
+    ctx.seed = args.get_u64("seed", 42).map_err(|e| err!("{e}"))?;
     let reports = run_figure(fig, &ctx)?;
     for r in &reports {
         r.print();
@@ -226,14 +227,14 @@ fn cmd_experiment(args: &Args) -> Result<()> {
 
 fn cmd_coordinate(args: &Args) -> Result<()> {
     let mut cfg = RunConfig::default();
-    cfg.apply_args(args).map_err(|e| anyhow!("{e}"))?;
+    cfg.apply_args(args).map_err(|e| err!("{e}"))?;
     let data = build_dataset(&cfg)?;
     let lambda = cfg.lambda.unwrap_or(1.0 / data.n() as f64);
     let prob = Problem::new(cfg.objective, data, cfg.workers, lambda);
     let alpha = cfg.alpha.unwrap_or_else(|| 1.0 / prob.lipschitz());
     let xi = cfg.resolve_xi(&prob);
     let sched = Scheduler::parse(&cfg.scheduler, cfg.participation, cfg.seed)
-        .ok_or_else(|| anyhow!("unknown scheduler '{}'", cfg.scheduler))?;
+        .ok_or_else(|| err!("unknown scheduler '{}'", cfg.scheduler))?;
     let gcfg = GdSecConfig { alpha, beta: cfg.beta, xi, ..Default::default() };
     println!(
         "coordinator: {} workers, {} rounds, scheduler {}",
@@ -272,10 +273,13 @@ fn cmd_info() -> Result<()> {
                 let a = &m.artifacts[n];
                 println!("  {n}: {} inputs, {} outputs", a.inputs.len(), a.outputs.len());
             }
+            #[cfg(feature = "pjrt")]
             match gdsec::runtime::Runtime::new(m) {
                 Ok(rt) => println!("PJRT platform: {}", rt.platform()),
                 Err(e) => println!("PJRT unavailable: {e:#}"),
             }
+            #[cfg(not(feature = "pjrt"))]
+            println!("PJRT runtime disabled (rebuild with --features pjrt)");
         }
         Err(e) => println!("no artifacts: {e:#}"),
     }

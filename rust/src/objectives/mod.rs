@@ -294,6 +294,19 @@ impl Problem {
         self.locals.iter().map(|l| l.value(theta)).sum()
     }
 
+    /// [`value`](Self::value) with the per-worker local evaluations fanned
+    /// out over `pool`. The partial values land in per-worker slots and
+    /// are summed in worker order, so the result is bitwise equal to the
+    /// serial evaluation for any thread count.
+    pub fn value_pooled(&self, theta: &[f64], pool: &crate::util::pool::Pool) -> f64 {
+        if pool.threads() == 1 || self.m() <= 1 {
+            return self.value(theta);
+        }
+        let mut vals = vec![0.0f64; self.m()];
+        pool.scatter(&mut vals, |w, v| *v = self.locals[w].value(theta));
+        vals.iter().sum()
+    }
+
     /// Global gradient into `out`.
     pub fn grad(&self, theta: &[f64], out: &mut [f64]) {
         linalg::zero(out);

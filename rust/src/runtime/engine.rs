@@ -7,9 +7,100 @@
 //!   step into a plain loss+gradient evaluation).
 //! * [`TfmEngine`] — transformer init / loss+grad for the e2e example.
 
-use super::{Manifest, Runtime};
+use anyhow::{anyhow, bail, Result};
 use crate::coordinator::worker::GradProvider;
-use anyhow::{anyhow, Result};
+use std::collections::HashMap;
+use std::path::Path;
+use super::Manifest;
+
+/// A PJRT CPU client with a compiled-executable cache.
+///
+/// NOT `Send` (the underlying PJRT wrappers hold raw pointers); create one
+/// per thread via [`Runtime::new`] inside the thread. Compilation is
+/// per-instance; the HLO text load + compile for the artifacts in this
+/// repo takes tens of milliseconds.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    exes: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Runtime {
+    pub fn new(manifest: Manifest) -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Runtime { client, manifest, exes: HashMap::new() })
+    }
+
+    pub fn from_dir<P: AsRef<Path>>(dir: P) -> Result<Runtime> {
+        Ok(Runtime::new(Manifest::load(dir).map_err(|e| anyhow!("{e:#}"))?)?)
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch from cache) an artifact by manifest name.
+    pub fn load(&mut self, name: &str) -> Result<()> {
+        if self.exes.contains_key(name) {
+            return Ok(());
+        }
+        let spec = self.manifest.get(name).map_err(|e| anyhow!("{e:#}"))?.clone();
+        let path = self.manifest.dir.join(&spec.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        self.exes.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Execute an artifact. Outputs come back as f32 vectors.
+    pub fn exec(&mut self, name: &str, inputs: &[xla::Literal]) -> Result<Vec<Vec<f32>>> {
+        self.load(name)?;
+        let spec = self.manifest.get(name).map_err(|e| anyhow!("{e:#}"))?;
+        if inputs.len() != spec.inputs.len() {
+            bail!(
+                "artifact {name}: expected {} inputs, got {}",
+                spec.inputs.len(),
+                inputs.len()
+            );
+        }
+        let n_outputs = spec.outputs.len();
+        let exe = &self.exes[name];
+        let result = exe.execute::<xla::Literal>(inputs)?[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True: decompose.
+        let parts = result.to_tuple()?;
+        if parts.len() != n_outputs {
+            bail!("artifact {name}: expected {n_outputs} outputs, got {}", parts.len());
+        }
+        let mut out = Vec::with_capacity(parts.len());
+        for p in parts {
+            out.push(p.to_vec::<f32>()?);
+        }
+        Ok(out)
+    }
+
+    /// f32 literal with the given dims.
+    pub fn lit_f32(values: &[f32], dims: &[i64]) -> Result<xla::Literal> {
+        Ok(xla::Literal::vec1(values).reshape(dims)?)
+    }
+
+    /// f32 literal from f64 values (wire/compute precision boundary).
+    pub fn lit_from_f64(values: &[f64], dims: &[i64]) -> Result<xla::Literal> {
+        let v32: Vec<f32> = values.iter().map(|&x| x as f32).collect();
+        Self::lit_f32(&v32, dims)
+    }
+
+    /// i32 literal.
+    pub fn lit_i32(values: &[i32], dims: &[i64]) -> Result<xla::Literal> {
+        Ok(xla::Literal::vec1(values).reshape(dims)?)
+    }
+}
 
 /// Scalars layout shared with `python/compile/model.py::make_worker_step`.
 #[derive(Debug, Clone, Copy)]

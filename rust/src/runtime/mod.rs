@@ -2,11 +2,22 @@
 //! and execute them from the Rust request path. Python is never invoked at
 //! run time — the interchange is HLO *text* (see DESIGN.md and
 //! /opt/xla-example/README.md for why text, not serialized protos).
+//!
+//! The artifact **manifest** (this module) is dependency-free and always
+//! compiled, so the CLI can report artifact inventory offline. The PJRT
+//! **execution engine** ([`engine`], incl. [`engine::Runtime`]) needs the
+//! external `xla`/`anyhow` crates and is gated behind the off-by-default
+//! `pjrt` feature — the offline image has no crate registry, so the
+//! default build must not reference external crates at all.
 
+#[cfg(feature = "pjrt")]
 pub mod engine;
+#[cfg(feature = "pjrt")]
+pub use engine::Runtime;
 
+use crate::err;
+use crate::util::error::{Context, Result};
 use crate::util::json::{self, Json};
-use anyhow::{anyhow, bail, Context, Result};
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 
@@ -47,12 +58,12 @@ impl Manifest {
         let path = dir.join("manifest.json");
         let text = std::fs::read_to_string(&path)
             .with_context(|| format!("reading {} (run `make artifacts`?)", path.display()))?;
-        let v = json::parse(&text).map_err(|e| anyhow!("manifest: {e}"))?;
+        let v = json::parse(&text).map_err(|e| err!("manifest: {e}"))?;
         let mut artifacts = HashMap::new();
         for a in v
             .get("artifacts")
             .and_then(Json::as_arr)
-            .ok_or_else(|| anyhow!("manifest: missing artifacts[]"))?
+            .ok_or_else(|| err!("manifest: missing artifacts[]"))?
         {
             let spec = parse_artifact(a)?;
             artifacts.insert(spec.name.clone(), spec);
@@ -63,7 +74,7 @@ impl Manifest {
     pub fn get(&self, name: &str) -> Result<&ArtifactSpec> {
         self.artifacts
             .get(name)
-            .ok_or_else(|| anyhow!("artifact '{name}' not in manifest"))
+            .ok_or_else(|| err!("artifact '{name}' not in manifest"))
     }
 
     /// Find the first artifact (alphabetically) whose name has the prefix.
@@ -88,12 +99,12 @@ fn parse_artifact(a: &Json) -> Result<ArtifactSpec> {
     let name = a
         .get("name")
         .and_then(Json::as_str)
-        .ok_or_else(|| anyhow!("artifact missing name"))?
+        .ok_or_else(|| err!("artifact missing name"))?
         .to_string();
     let file = a
         .get("file")
         .and_then(Json::as_str)
-        .ok_or_else(|| anyhow!("artifact {name}: missing file"))?
+        .ok_or_else(|| err!("artifact {name}: missing file"))?
         .to_string();
     let tensors = |key: &str| -> Vec<TensorSpec> {
         let mut out = Vec::new();
@@ -119,95 +130,6 @@ fn parse_artifact(a: &Json) -> Result<ArtifactSpec> {
         }
     }
     Ok(ArtifactSpec { name, file, inputs: tensors("inputs"), outputs: tensors("outputs"), meta })
-}
-
-/// A PJRT CPU client with a compiled-executable cache.
-///
-/// NOT `Send` (the underlying PJRT wrappers hold raw pointers); create one
-/// per thread via [`Runtime::new`] inside the thread. Compilation is
-/// per-instance; the HLO text load + compile for the artifacts in this
-/// repo takes tens of milliseconds.
-pub struct Runtime {
-    client: xla::PjRtClient,
-    manifest: Manifest,
-    exes: HashMap<String, xla::PjRtLoadedExecutable>,
-}
-
-impl Runtime {
-    pub fn new(manifest: Manifest) -> Result<Runtime> {
-        let client = xla::PjRtClient::cpu()?;
-        Ok(Runtime { client, manifest, exes: HashMap::new() })
-    }
-
-    pub fn from_dir<P: AsRef<Path>>(dir: P) -> Result<Runtime> {
-        Runtime::new(Manifest::load(dir)?)
-    }
-
-    pub fn manifest(&self) -> &Manifest {
-        &self.manifest
-    }
-
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    /// Compile (or fetch from cache) an artifact by manifest name.
-    pub fn load(&mut self, name: &str) -> Result<()> {
-        if self.exes.contains_key(name) {
-            return Ok(());
-        }
-        let spec = self.manifest.get(name)?.clone();
-        let path = self.manifest.dir.join(&spec.file);
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
-        )?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self.client.compile(&comp)?;
-        self.exes.insert(name.to_string(), exe);
-        Ok(())
-    }
-
-    /// Execute an artifact. Outputs come back as f32 vectors.
-    pub fn exec(&mut self, name: &str, inputs: &[xla::Literal]) -> Result<Vec<Vec<f32>>> {
-        self.load(name)?;
-        let spec = self.manifest.get(name)?;
-        if inputs.len() != spec.inputs.len() {
-            bail!(
-                "artifact {name}: expected {} inputs, got {}",
-                spec.inputs.len(),
-                inputs.len()
-            );
-        }
-        let n_outputs = spec.outputs.len();
-        let exe = &self.exes[name];
-        let result = exe.execute::<xla::Literal>(inputs)?[0][0].to_literal_sync()?;
-        // aot.py lowers with return_tuple=True: decompose.
-        let parts = result.to_tuple()?;
-        if parts.len() != n_outputs {
-            bail!("artifact {name}: expected {n_outputs} outputs, got {}", parts.len());
-        }
-        let mut out = Vec::with_capacity(parts.len());
-        for p in parts {
-            out.push(p.to_vec::<f32>()?);
-        }
-        Ok(out)
-    }
-
-    /// f32 literal with the given dims.
-    pub fn lit_f32(values: &[f32], dims: &[i64]) -> Result<xla::Literal> {
-        Ok(xla::Literal::vec1(values).reshape(dims)?)
-    }
-
-    /// f32 literal from f64 values (wire/compute precision boundary).
-    pub fn lit_from_f64(values: &[f64], dims: &[i64]) -> Result<xla::Literal> {
-        let v32: Vec<f32> = values.iter().map(|&x| x as f32).collect();
-        Self::lit_f32(&v32, dims)
-    }
-
-    /// i32 literal.
-    pub fn lit_i32(values: &[i32], dims: &[i64]) -> Result<xla::Literal> {
-        Ok(xla::Literal::vec1(values).reshape(dims)?)
-    }
 }
 
 #[cfg(test)]

@@ -3,7 +3,14 @@
 //! Provides warmup + timed iterations with robust summary statistics
 //! (mean, median, p95, min/max, std) and throughput reporting. Bench
 //! binaries under `rust/benches/` are `harness = false` and call into this.
+//!
+//! [`write_json`] emits the machine-readable `BENCH_*.json` artifacts
+//! (schema `gdsec-bench-v1`) that track the perf trajectory PR-over-PR —
+//! `benches/hotpath_micro.rs` writes `BENCH_hotpath.json` at the repo
+//! root; see EXPERIMENTS.md §Perf for how to read it.
 
+use crate::util::json::Json;
+use std::path::Path;
 use std::time::{Duration, Instant};
 
 /// Summary statistics over per-iteration wall times.
@@ -26,6 +33,28 @@ impl BenchStats {
     /// Work-units per second, if units were declared.
     pub fn throughput(&self) -> Option<f64> {
         self.units_per_iter.map(|u| u / (self.mean_ns * 1e-9))
+    }
+
+    /// Machine-readable form for the `BENCH_*.json` artifacts.
+    pub fn to_json(&self) -> Json {
+        let mut pairs = vec![
+            ("name", Json::str(&self.name)),
+            ("iters", Json::num(self.iters as f64)),
+            ("mean_ns", Json::num(self.mean_ns)),
+            ("median_ns", Json::num(self.median_ns)),
+            ("p95_ns", Json::num(self.p95_ns)),
+            ("min_ns", Json::num(self.min_ns)),
+            ("max_ns", Json::num(self.max_ns)),
+            ("std_ns", Json::num(self.std_ns)),
+        ];
+        if let (Some(u), Some(unit)) = (self.units_per_iter, &self.unit_name) {
+            pairs.push(("units_per_iter", Json::num(u)));
+            pairs.push(("unit", Json::str(unit)));
+            if let Some(tp) = self.throughput() {
+                pairs.push(("throughput_per_s", Json::num(tp)));
+            }
+        }
+        Json::obj(pairs)
     }
 
     pub fn report(&self) -> String {
@@ -149,6 +178,20 @@ impl Bencher {
     }
 }
 
+/// Write a `BENCH_*.json` artifact: schema tag, caller-supplied context
+/// (host facts, derived ratios…) and one entry per benchmark. Pretty,
+/// key-sorted output so the file diffs cleanly PR-over-PR.
+pub fn write_json<P: AsRef<Path>>(
+    path: P,
+    context: Vec<(&str, Json)>,
+    stats: &[BenchStats],
+) -> std::io::Result<()> {
+    let mut pairs = vec![("schema", Json::str("gdsec-bench-v1"))];
+    pairs.extend(context);
+    pairs.push(("benches", Json::arr(stats.iter().map(BenchStats::to_json))));
+    std::fs::write(path, Json::obj(pairs).to_pretty())
+}
+
 fn stats_from(
     name: &str,
     samples: &mut Vec<f64>,
@@ -226,5 +269,31 @@ mod tests {
         let s = b.run_once("single", || std::thread::sleep(Duration::from_millis(1)));
         assert_eq!(s.iters, 1);
         assert!(s.mean_ns >= 1e6);
+    }
+
+    #[test]
+    fn json_artifact_roundtrips() {
+        let b = Bencher {
+            warmup: Duration::from_millis(1),
+            measure: Duration::from_millis(5),
+            min_iters: 2,
+            max_iters: 100,
+        };
+        let s = b.run_units("op", 64.0, "elem", || {
+            std::hint::black_box(2 + 2);
+        });
+        let dir = std::env::temp_dir().join(format!("gdsec_benchjson_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("BENCH_test.json");
+        write_json(&path, vec![("threads", Json::num(4.0))], &[s]).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let v = crate::util::json::parse(&text).unwrap();
+        assert_eq!(v.get("schema").and_then(Json::as_str), Some("gdsec-bench-v1"));
+        assert_eq!(v.get("threads").and_then(Json::as_f64), Some(4.0));
+        let benches = v.get("benches").and_then(Json::as_arr).unwrap();
+        assert_eq!(benches[0].get("name").and_then(Json::as_str), Some("op"));
+        assert_eq!(benches[0].get("unit").and_then(Json::as_str), Some("elem"));
+        assert!(benches[0].get("mean_ns").and_then(Json::as_f64).unwrap() > 0.0);
+        std::fs::remove_dir_all(&dir).ok();
     }
 }

@@ -1,0 +1,183 @@
+//! Crate-wide error type for the zero-dependency default build.
+//!
+//! Mirrors the small slice of `anyhow`'s surface this crate uses —
+//! [`Result`], the [`err!`](crate::err)/[`bail!`](crate::bail) macros and
+//! a [`Context`] extension trait — so the CLI and experiment harness need
+//! no external crates. `{:#}` (alternate) formatting renders the full
+//! context chain outermost-first, exactly like `anyhow`'s, which the
+//! runtime tests rely on for their "run `make artifacts`?" hint.
+//!
+//! The real `anyhow` is only used by the PJRT engine behind the `pjrt`
+//! feature, where the `xla` bridge already requires external crates.
+
+use std::fmt;
+
+/// A boxed-free error: a chain of human-readable context frames,
+/// outermost (most recent context) first.
+pub struct Error {
+    frames: Vec<String>,
+}
+
+impl Error {
+    pub fn msg<M: Into<String>>(msg: M) -> Error {
+        Error { frames: vec![msg.into()] }
+    }
+
+    /// Wrap with an outer context frame (what was being attempted).
+    pub fn wrap<M: Into<String>>(mut self, msg: M) -> Error {
+        self.frames.insert(0, msg.into());
+        self
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            write!(f, "{}", self.frames.join(": "))
+        } else {
+            write!(f, "{}", self.frames[0])
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{:#}", self)
+    }
+}
+
+impl std::error::Error for Error {}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Error {
+        Error::msg(e.to_string())
+    }
+}
+
+impl From<String> for Error {
+    fn from(s: String) -> Error {
+        Error::msg(s)
+    }
+}
+
+impl From<&str> for Error {
+    fn from(s: &str) -> Error {
+        Error::msg(s)
+    }
+}
+
+impl From<crate::data::libsvm::LibsvmError> for Error {
+    fn from(e: crate::data::libsvm::LibsvmError) -> Error {
+        Error::msg(e.to_string())
+    }
+}
+
+impl From<crate::util::cli::CliError> for Error {
+    fn from(e: crate::util::cli::CliError) -> Error {
+        Error::msg(e.to_string())
+    }
+}
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// `anyhow::Context`-style extension for results and options.
+pub trait Context<T> {
+    fn context<M: Into<String>>(self, msg: M) -> Result<T>;
+    fn with_context<M: Into<String>, F: FnOnce() -> M>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    // `{:#}` so wrapping one of our own Errors keeps its full context
+    // chain (plain Display would print only the outermost frame);
+    // foreign error types render identically either way.
+    fn context<M: Into<String>>(self, msg: M) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{e:#}")).wrap(msg))
+    }
+
+    fn with_context<M: Into<String>, F: FnOnce() -> M>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{e:#}")).wrap(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<M: Into<String>>(self, msg: M) -> Result<T> {
+        self.ok_or_else(|| Error::msg(msg))
+    }
+
+    fn with_context<M: Into<String>, F: FnOnce() -> M>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`](crate::util::error::Error) from a format string.
+#[macro_export]
+macro_rules! err {
+    ($($arg:tt)*) => { $crate::util::error::Error::msg(format!($($arg)*)) };
+}
+
+/// Early-return with an [`Error`](crate::util::error::Error).
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => { return Err($crate::err!($($arg)*)) };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails() -> Result<()> {
+        Err(err!("inner {}", 42))
+    }
+
+    #[test]
+    fn display_plain_and_alternate() {
+        let e = fails().unwrap_err().wrap("outer");
+        assert_eq!(format!("{e}"), "outer");
+        assert_eq!(format!("{e:#}"), "outer: inner 42");
+        assert_eq!(format!("{e:?}"), "outer: inner 42");
+    }
+
+    #[test]
+    fn context_on_result_and_option() {
+        let r: std::result::Result<(), std::io::Error> =
+            Err(std::io::Error::new(std::io::ErrorKind::NotFound, "gone"));
+        let e = r.with_context(|| "reading manifest".to_string()).unwrap_err();
+        assert!(format!("{e:#}").starts_with("reading manifest: "));
+        let o: Option<u32> = None;
+        assert!(o.context("missing").is_err());
+    }
+
+    #[test]
+    fn context_preserves_inner_chain() {
+        // Wrapping one of our own multi-frame errors must keep the root
+        // cause in the `{:#}` rendering.
+        fn inner() -> Result<()> {
+            Err(err!("permission denied").wrap("opening config.json"))
+        }
+        let e = inner().context("starting run").unwrap_err();
+        assert_eq!(
+            format!("{e:#}"),
+            "starting run: opening config.json: permission denied"
+        );
+    }
+
+    #[test]
+    fn bail_macro_returns() {
+        fn f(x: bool) -> Result<u32> {
+            if x {
+                bail!("nope");
+            }
+            Ok(7)
+        }
+        assert_eq!(f(false).unwrap(), 7);
+        assert_eq!(format!("{}", f(true).unwrap_err()), "nope");
+    }
+
+    #[test]
+    fn io_error_converts() {
+        fn f() -> Result<String> {
+            Ok(std::fs::read_to_string("/definitely/not/here")?)
+        }
+        assert!(f().is_err());
+    }
+}

@@ -4,7 +4,9 @@
 pub mod bench;
 pub mod cli;
 pub mod csv;
+pub mod error;
 pub mod json;
+pub mod pool;
 pub mod rng;
 pub mod tablefmt;
 

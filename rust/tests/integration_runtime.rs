@@ -1,3 +1,5 @@
+#![cfg(feature = "pjrt")]
+
 //! PJRT runtime integration: load the jax/Pallas AOT artifacts, execute
 //! them from Rust, and pin the compiled worker step against the native
 //! Rust implementation.

@@ -1,0 +1,179 @@
+//! Serial-vs-parallel trajectory parity: every trainer must produce
+//! BIT-FOR-BIT identical results for any worker-pool thread count.
+//!
+//! The engines guarantee this by giving each worker lane exclusive state
+//! and folding lanes in worker-id order on the calling thread; these
+//! properties pin that contract on random linreg/logreg problems — θ, h,
+//! per-worker h/e and the per-round bit accounting must match exactly
+//! between a 1-thread and a 4-thread pool.
+
+use gdsec::algo::gdsec as gdsec_algo;
+use gdsec::algo::gdsec::{GdSecConfig, Xi};
+use gdsec::algo::trace::Trace;
+use gdsec::algo::{cgd, gd, iag, qgd, sgdsec, topj};
+use gdsec::data::synthetic;
+use gdsec::objectives::{ObjectiveKind, Problem};
+use gdsec::testing::{check_with, PropConfig};
+use gdsec::util::pool::Pool;
+use gdsec::util::rng::Pcg64;
+
+const ITERS: usize = 20;
+
+fn random_problem(rng: &mut Pcg64) -> Problem {
+    let kind = if rng.bernoulli(0.5) { ObjectiveKind::LinReg } else { ObjectiveKind::LogReg };
+    let n = 40 + rng.index(60);
+    let m = 2 + rng.index(5); // 2..=6 workers
+    Problem::new(kind, synthetic::dna_like(rng.next_u64(), n), m, 0.05)
+}
+
+fn assert_traces_bit_equal(label: &str, a: &Trace, b: &Trace) -> Result<(), String> {
+    if a.rows.len() != b.rows.len() {
+        return Err(format!("{label}: row count {} vs {}", a.rows.len(), b.rows.len()));
+    }
+    for (x, y) in a.rows.iter().zip(&b.rows) {
+        if x.fval.to_bits() != y.fval.to_bits() {
+            return Err(format!("{label}: iter {} fval {} vs {}", x.iter, x.fval, y.fval));
+        }
+        if (x.bits, x.transmissions, x.entries) != (y.bits, y.transmissions, y.entries) {
+            return Err(format!(
+                "{label}: iter {} accounting ({}, {}, {}) vs ({}, {}, {})",
+                x.iter, x.bits, x.transmissions, x.entries, y.bits, y.transmissions, y.entries
+            ));
+        }
+    }
+    Ok(())
+}
+
+#[test]
+fn prop_gdsec_serial_parallel_parity() {
+    check_with(
+        PropConfig { cases: 10, seed: 0xA11CE },
+        "gdsec 1-thread vs 4-thread bit parity",
+        |rng| {
+            let prob = random_problem(rng);
+            let cfg = GdSecConfig {
+                alpha: 1.0 / prob.lipschitz(),
+                beta: rng.uniform() * 0.3,
+                xi: Xi::Uniform(rng.uniform() * 120.0),
+                fstar: Some(0.0),
+                ..Default::default()
+            };
+            // Deterministic partial-participation schedule (depends on k
+            // only, so both runs see identical active sets).
+            let m = prob.m();
+            let schedule = |k: usize| {
+                if k % 3 == 0 {
+                    Some((0..m).filter(|w| (w + k) % 2 == 0).collect::<Vec<_>>())
+                } else {
+                    None
+                }
+            };
+            let s = gdsec_algo::run_states(&prob, &cfg, ITERS, schedule, &Pool::new(1));
+            let p = gdsec_algo::run_states(&prob, &cfg, ITERS, schedule, &Pool::new(4));
+            assert_traces_bit_equal("gdsec", &s.trace, &p.trace)?;
+            for i in 0..prob.d {
+                if s.server.theta[i].to_bits() != p.server.theta[i].to_bits() {
+                    return Err(format!("theta[{i}] diverged"));
+                }
+                if s.server.h[i].to_bits() != p.server.h[i].to_bits() {
+                    return Err(format!("server h[{i}] diverged"));
+                }
+            }
+            for (w, (sw, pw)) in s.workers.iter().zip(&p.workers).enumerate() {
+                for i in 0..prob.d {
+                    if sw.h[i].to_bits() != pw.h[i].to_bits()
+                        || sw.e[i].to_bits() != pw.e[i].to_bits()
+                    {
+                        return Err(format!("worker {w} state diverged at {i}"));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_baselines_serial_parallel_parity() {
+    check_with(
+        PropConfig { cases: 6, seed: 0xB0B },
+        "baselines 1-thread vs 4-thread bit parity",
+        |rng| {
+            let prob = random_problem(rng);
+            let alpha = 1.0 / prob.lipschitz();
+            let (p1, p4) = (Pool::new(1), Pool::new(4));
+
+            let c = gd::GdConfig { alpha, eval_every: 1, fstar: Some(0.0) };
+            assert_traces_bit_equal(
+                "gd",
+                &gd::run_scheduled_pooled(&prob, &c, ITERS, |_k| None, &p1),
+                &gd::run_scheduled_pooled(&prob, &c, ITERS, |_k| None, &p4),
+            )?;
+
+            let c = cgd::CgdConfig { alpha, xi: 2.0, eval_every: 1, fstar: Some(0.0) };
+            assert_traces_bit_equal(
+                "cgd",
+                &cgd::run_pooled(&prob, &c, ITERS, &p1),
+                &cgd::run_pooled(&prob, &c, ITERS, &p4),
+            )?;
+
+            let seed = rng.next_u64();
+            let c = qgd::QgdConfig { alpha, s: 255, seed, eval_every: 1, fstar: Some(0.0) };
+            assert_traces_bit_equal(
+                "qgd",
+                &qgd::run_pooled(&prob, &c, ITERS, &p1),
+                &qgd::run_pooled(&prob, &c, ITERS, &p4),
+            )?;
+
+            let c = topj::TopJConfig {
+                j: 1 + rng.index(prob.d),
+                gamma0: alpha,
+                lambda: 0.05,
+                eval_every: 1,
+                fstar: Some(0.0),
+            };
+            assert_traces_bit_equal(
+                "topj",
+                &topj::run_pooled(&prob, &c, ITERS, &p1),
+                &topj::run_pooled(&prob, &c, ITERS, &p4),
+            )?;
+
+            let c = iag::IagConfig {
+                alpha: alpha / (2.0 * prob.m() as f64),
+                seed,
+                eval_every: 1,
+                fstar: Some(0.0),
+            };
+            assert_traces_bit_equal(
+                "iag",
+                &iag::run_pooled(&prob, &c, ITERS, &p1),
+                &iag::run_pooled(&prob, &c, ITERS, &p4),
+            )?;
+
+            for quantize_s in [None, Some(255)] {
+                let c = sgdsec::SgdSecConfig {
+                    gamma0: 0.05,
+                    lambda: 0.01,
+                    beta: 0.05,
+                    xi: Xi::Uniform(30.0),
+                    batch: 1 + rng.index(3),
+                    seed,
+                    quantize_s,
+                    eval_every: 1,
+                    fstar: Some(0.0),
+                };
+                assert_traces_bit_equal(
+                    if quantize_s.is_some() { "qsgdsec" } else { "sgdsec" },
+                    &sgdsec::run_sgdsec_pooled(&prob, &c, ITERS, &p1),
+                    &sgdsec::run_sgdsec_pooled(&prob, &c, ITERS, &p4),
+                )?;
+                assert_traces_bit_equal(
+                    "sgd",
+                    &sgdsec::run_sgd_pooled(&prob, &c, ITERS, &p1),
+                    &sgdsec::run_sgd_pooled(&prob, &c, ITERS, &p4),
+                )?;
+            }
+            Ok(())
+        },
+    );
+}
