@@ -15,9 +15,9 @@
 
 use gdsec::algo::gdsec as gdsec_algo;
 use gdsec::algo::gdsec::{GdSecConfig, ServerState, WorkerState, Xi};
-use gdsec::compress::{self, quantize, SparseUpdate};
+use gdsec::compress::{self, quantize, rle, SparseUpdate};
 use gdsec::coordinator::protocol::{self, Msg};
-use gdsec::data::synthetic;
+use gdsec::data::{synthetic, Features};
 use gdsec::linalg::{self, DenseMat};
 use gdsec::objectives::Problem;
 use gdsec::util::bench::{self, BenchStats, Bencher};
@@ -43,6 +43,39 @@ fn seed_gemv_t_acc(m: &DenseMat, alpha: f64, r: &[f64], out: &mut [f64]) {
             seed_axpy(a, m.row(i), out);
         }
     }
+}
+
+/// The seed codec's per-value byte pushes (vs the bulk-copied f32 value
+/// plane `compress::encode_sparse` writes now). Wire bytes are identical.
+fn seed_encode_sparse(u: &SparseUpdate, out: &mut Vec<u8>) {
+    rle::put_varint(out, u.idx.len() as u32);
+    rle::encode_gaps(&u.idx, out);
+    for &v in &u.val {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+}
+
+/// The seed pool's per-round scoped-spawn fan-out (replica of the
+/// pre-persistent `Pool::scatter`), with the same per-lane work as the
+/// persistent round-trip bench.
+fn seed_scoped_scatter(items: &mut [u64], threads: usize) {
+    let n = items.len();
+    if threads == 1 || n <= 1 {
+        for (i, item) in items.iter_mut().enumerate() {
+            *item = item.wrapping_add(i as u64);
+        }
+        return;
+    }
+    let chunk = n.div_ceil(threads);
+    std::thread::scope(|s| {
+        for (ci, ch) in items.chunks_mut(chunk).enumerate() {
+            s.spawn(move || {
+                for (j, item) in ch.iter_mut().enumerate() {
+                    *item = item.wrapping_add((ci * chunk + j) as u64);
+                }
+            });
+        }
+    });
 }
 
 /// The seed's 4-accumulator dot product.
@@ -77,10 +110,12 @@ fn main() {
     let b = Bencher::from_env();
     let quick = std::env::var("GDSEC_BENCH_QUICK").ok().as_deref() == Some("1");
     let mut reports: Vec<BenchStats> = Vec::new();
+    // The persistent pool every parallel section below fans out over.
+    let par_pool = Pool::from_env();
     let mut context: Vec<(&str, Json)> = vec![
         ("bench", Json::str("hotpath_micro")),
         ("quick", Json::Bool(quick)),
-        ("threads", Json::num(Pool::from_env().threads() as f64)),
+        ("threads", Json::num(par_pool.threads() as f64)),
     ];
 
     // --- sparsify at the paper's dimensions (reused buffer = hot path) ---
@@ -171,6 +206,58 @@ fn main() {
         std::hint::black_box(linalg::sub_abs_max(&x47, &y47, &mut out_d));
     }));
 
+    // --- column-blocked CSR AᵀSpMV at RCV1 scale vs the seed's scalar
+    //     walk (the Fig 7 sparse hot path) ---
+    let sp_rows = if quick { 2000 } else { 15181 };
+    let sp_data = synthetic::rcv1_like(47, sp_rows, 47236, 50);
+    let a_sp = match &sp_data.x {
+        Features::Sparse(m) => m,
+        Features::Dense(_) => panic!("rcv1_like must be sparse"),
+    };
+    let mut rng = Pcg64::seeded(53);
+    let r_sp: Vec<f64> = (0..a_sp.rows).map(|_| rng.normal()).collect();
+    let mut out_sp = vec![0.0; a_sp.cols];
+    // Parity check once before timing: pooled must equal serial bitwise.
+    {
+        let mut serial = vec![0.0; a_sp.cols];
+        a_sp.spmv_t_acc(1.0, &r_sp, &mut serial);
+        a_sp.spmv_t_acc_pooled(1.0, &r_sp, &mut out_sp, &par_pool);
+        for j in 0..a_sp.cols {
+            assert_eq!(
+                serial[j].to_bits(),
+                out_sp[j].to_bits(),
+                "spmv_t_acc pooled/serial parity broke at {j}"
+            );
+        }
+    }
+    let spmv_nnz = a_sp.nnz() as f64;
+    let spmv_new = b.run_units(
+        &format!("spmv_t_acc {sp_rows}x47236 pooled t={}", par_pool.threads()),
+        spmv_nnz,
+        "nnz",
+        || {
+            linalg::zero(&mut out_sp);
+            a_sp.spmv_t_acc_pooled(1.0, &r_sp, &mut out_sp, &par_pool);
+            std::hint::black_box(out_sp[0]);
+        },
+    );
+    let spmv_seed = b.run_units(
+        &format!("spmv_t_acc {sp_rows}x47236 seed-baseline"),
+        spmv_nnz,
+        "nnz",
+        || {
+            linalg::zero(&mut out_sp);
+            a_sp.spmv_t_acc(1.0, &r_sp, &mut out_sp);
+            std::hint::black_box(out_sp[0]);
+        },
+    );
+    context.push((
+        "spmv_t_acc_47236_speedup_vs_seed",
+        Json::num(spmv_seed.mean_ns / spmv_new.mean_ns),
+    ));
+    reports.push(spmv_new);
+    reports.push(spmv_seed);
+
     // --- RLE codec ---
     let mut rng = Pcg64::seeded(9);
     for &(d, p_zero) in &[(784usize, 0.5), (47236, 0.95)] {
@@ -198,6 +285,67 @@ fn main() {
                 std::hint::black_box(u.nnz());
             },
         ));
+    }
+
+    // --- bulk f32 value plane vs the seed's per-value byte pushes ---
+    let d_wire = 47236usize;
+    let mut rng = Pcg64::seeded(29);
+    let v: Vec<f64> =
+        (0..d_wire).map(|_| if rng.bernoulli(0.5) { 0.0 } else { rng.normal() }).collect();
+    let wire_up = SparseUpdate::from_dense(&v);
+    let mut buf_new = Vec::with_capacity(8 * d_wire);
+    let mut buf_seed = Vec::with_capacity(8 * d_wire);
+    // The optimized encoder must stay byte-identical to the seed codec.
+    compress::encode_sparse(&wire_up, &mut buf_new);
+    seed_encode_sparse(&wire_up, &mut buf_seed);
+    assert_eq!(buf_new, buf_seed, "bulk codec changed the wire format");
+    let enc_new = b.run_units(
+        &format!("encode_sparse d={d_wire} nnz={} bulk", wire_up.nnz()),
+        wire_up.nnz() as f64,
+        "entry",
+        || {
+            buf_new.clear();
+            compress::encode_sparse(&wire_up, &mut buf_new);
+            std::hint::black_box(buf_new.len());
+        },
+    );
+    let enc_seed = b.run_units(
+        &format!("encode_sparse d={d_wire} nnz={} seed-baseline", wire_up.nnz()),
+        wire_up.nnz() as f64,
+        "entry",
+        || {
+            buf_seed.clear();
+            seed_encode_sparse(&wire_up, &mut buf_seed);
+            std::hint::black_box(buf_seed.len());
+        },
+    );
+    context.push((
+        "encode_sparse_speedup_vs_seed",
+        Json::num(enc_seed.mean_ns / enc_new.mean_ns),
+    ));
+    reports.push(enc_new);
+    reports.push(enc_seed);
+
+    // --- pool round-trip latency: persistent (parked workers + barrier)
+    //     vs the seed's per-round scoped spawns ---
+    {
+        let threads = par_pool.threads();
+        let mut lanes = vec![0u64; threads.max(2)];
+        let rt_new = b.run("pool roundtrip persistent", || {
+            par_pool.scatter(&mut lanes, |i, v| *v = v.wrapping_add(i as u64));
+            std::hint::black_box(lanes[0]);
+        });
+        let rt_seed = b.run("pool roundtrip scoped-spawn seed-baseline", || {
+            seed_scoped_scatter(&mut lanes, threads);
+            std::hint::black_box(lanes[0]);
+        });
+        context.push(("pool_roundtrip_ns", Json::num(rt_new.mean_ns)));
+        context.push((
+            "pool_roundtrip_speedup_vs_seed",
+            Json::num(rt_seed.mean_ns / rt_new.mean_ns),
+        ));
+        reports.push(rt_new);
+        reports.push(rt_seed);
     }
 
     // --- QSGD quantizer ---
@@ -245,7 +393,6 @@ fn main() {
         eval_every: 10,
         ..Default::default()
     };
-    let par_pool = Pool::from_env();
     // Warm caches/page tables once before the timed runs.
     let _ = gdsec_algo::run_scheduled_pooled(&prob, &e2e_cfg, 2, |_k| None, &par_pool);
     let mut serial_trace = None;

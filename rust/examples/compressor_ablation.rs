@@ -4,9 +4,9 @@
 //!
 //! Run: `cargo run --release --example compressor_ablation`
 
-use gdsec::algo::gdsec::{GdSecConfig, Xi};
 use gdsec::algo::gd;
 use gdsec::algo::gdsec as gdsec_algo;
+use gdsec::algo::gdsec::{GdSecConfig, Xi};
 use gdsec::data::synthetic;
 use gdsec::objectives::Problem;
 use gdsec::util::tablefmt::{bits, sci, Table};

@@ -3,9 +3,9 @@
 //!
 //! Run: `cargo run --release --example quickstart`
 
-use gdsec::algo::gdsec::{GdSecConfig, Xi};
 use gdsec::algo::gd;
 use gdsec::algo::gdsec as gdsec_algo;
+use gdsec::algo::gdsec::{GdSecConfig, Xi};
 use gdsec::data::synthetic;
 use gdsec::objectives::Problem;
 use gdsec::util::tablefmt::{bits, pct};
@@ -33,7 +33,7 @@ fn main() {
         println!(
             "  {:<8} iters {:>5}  uplink {:>10}  transmissions {:>6}",
             t.algo,
-            t.iters_to_reach(eps).map(|v| v.to_string()).unwrap_or("-".into()),
+            t.iters_to_reach(eps).map_or_else(|| "-".to_string(), |v| v.to_string()),
             bits(t.bits_to_reach(eps).unwrap_or(0) as f64),
             t.total_transmissions(),
         );

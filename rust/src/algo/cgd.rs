@@ -26,7 +26,7 @@ pub struct CgdConfig {
 }
 
 pub fn run(prob: &Problem, cfg: &CgdConfig, iters: usize) -> Trace {
-    run_pooled(prob, cfg, iters, &Pool::from_env())
+    run_pooled(prob, cfg, iters, Pool::global())
 }
 
 /// CGD with the per-worker gradient + censor test + RLE cost fanned out

@@ -26,12 +26,12 @@ pub fn run(prob: &Problem, cfg: &GdConfig, iters: usize) -> Trace {
     run_scheduled(prob, cfg, iters, |_k| None)
 }
 
-/// [`run`] with a participation schedule (threads from [`Pool::from_env`]).
+/// [`run`] with a participation schedule (threads from the shared [`Pool::global`]).
 pub fn run_scheduled<F>(prob: &Problem, cfg: &GdConfig, iters: usize, active: F) -> Trace
 where
     F: FnMut(usize) -> Option<Vec<usize>>,
 {
-    run_scheduled_pooled(prob, cfg, iters, active, &Pool::from_env())
+    run_scheduled_pooled(prob, cfg, iters, active, Pool::global())
 }
 
 /// GD with a participation schedule (Fig 8's "GD with half transmissions"):

@@ -21,16 +21,18 @@
 //! ## Parallel zero-alloc engine
 //!
 //! [`run_scheduled_pooled`] fans the per-worker gradient + sparsify step
-//! out across a [`Pool`] of scoped threads and reduces in worker-id
-//! order, so the trajectory is **bit-for-bit identical for any thread
-//! count** (pinned by `tests/prop_parallel_parity.rs`). Per-worker lanes
-//! own their [`WorkerState`] and a reusable [`SparseUpdate`] buffer
-//! (arena-style `reset()` + capacity reuse), and the server's fused
+//! out across a persistent [`Pool`] (parked workers + round barrier) and
+//! reduces in worker-id order, so the trajectory is **bit-for-bit
+//! identical for any thread count** (pinned by
+//! `tests/prop_parallel_parity.rs`). Per-worker lanes own their
+//! [`WorkerState`] and a reusable [`SparseUpdate`] buffer (arena-style
+//! `reset()` + capacity reuse), and the server's fused
 //! [`ServerState::apply_round`] re-zeroes its aggregation scratch inside
 //! the update pass — after warm-up, an optimizer round performs **zero
-//! heap allocations** on the serial path (pinned by
-//! `tests/alloc_free_round.rs`; with >1 thread the scoped spawns are the
-//! only remaining allocation).
+//! heap allocations** at ANY thread count: the pool dispatches a round as
+//! a stack context + function pointer, no spawns, no boxing (pinned by
+//! `tests/alloc_free_round.rs` for both the serial and the pooled round
+//! body).
 
 use super::trace::{Trace, TraceRow};
 use crate::compress::{self, SparseUpdate};
@@ -334,17 +336,17 @@ pub struct GdSecRun {
 }
 
 /// Run GD-SEC for `iters` iterations with all workers participating,
-/// fanning worker steps across [`Pool::from_env`] threads.
+/// fanning worker steps across the shared [`Pool::global`] threads.
 pub fn run(prob: &Problem, cfg: &GdSecConfig, iters: usize) -> Trace {
     run_scheduled(prob, cfg, iters, |_k| None)
 }
 
-/// [`run`] with a participation schedule (threads from [`Pool::from_env`]).
+/// [`run`] with a participation schedule (threads from the shared [`Pool::global`]).
 pub fn run_scheduled<F>(prob: &Problem, cfg: &GdSecConfig, iters: usize, active: F) -> Trace
 where
     F: FnMut(usize) -> Option<Vec<usize>>,
 {
-    run_scheduled_pooled(prob, cfg, iters, active, &Pool::from_env())
+    run_scheduled_pooled(prob, cfg, iters, active, Pool::global())
 }
 
 /// Run GD-SEC with a participation schedule: `active(k)` returns the set

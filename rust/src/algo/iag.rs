@@ -21,7 +21,7 @@ pub struct IagConfig {
 }
 
 pub fn run(prob: &Problem, cfg: &IagConfig, iters: usize) -> Trace {
-    run_pooled(prob, cfg, iters, &Pool::from_env())
+    run_pooled(prob, cfg, iters, Pool::global())
 }
 
 /// NoUnif-IAG. Only one worker computes a fresh gradient per iteration,

@@ -27,7 +27,7 @@ pub struct QgdConfig {
 }
 
 pub fn run(prob: &Problem, cfg: &QgdConfig, iters: usize) -> Trace {
-    run_pooled(prob, cfg, iters, &Pool::from_env())
+    run_pooled(prob, cfg, iters, Pool::global())
 }
 
 /// QGD with per-worker gradient + quantization fanned out over `pool`;

@@ -29,7 +29,7 @@ pub struct SgdSecConfig {
 
 /// Plain distributed SGD baseline (dense transmissions).
 pub fn run_sgd(prob: &Problem, cfg: &SgdSecConfig, iters: usize) -> Trace {
-    run_sgd_pooled(prob, cfg, iters, &Pool::from_env())
+    run_sgd_pooled(prob, cfg, iters, Pool::global())
 }
 
 /// [`run_sgd`] with the per-worker minibatch gradients fanned out over
@@ -82,7 +82,7 @@ pub fn run_sgd_pooled(prob: &Problem, cfg: &SgdSecConfig, iters: usize, pool: &P
 
 /// SGD-SEC / QSGD-SEC.
 pub fn run_sgdsec(prob: &Problem, cfg: &SgdSecConfig, iters: usize) -> Trace {
-    run_sgdsec_pooled(prob, cfg, iters, &Pool::from_env())
+    run_sgdsec_pooled(prob, cfg, iters, Pool::global())
 }
 
 /// [`run_sgdsec`] with the per-worker minibatch gradient + censor (+

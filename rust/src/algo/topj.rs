@@ -24,7 +24,7 @@ pub struct TopJConfig {
 }
 
 pub fn run(prob: &Problem, cfg: &TopJConfig, iters: usize) -> Trace {
-    run_pooled(prob, cfg, iters, &Pool::from_env())
+    run_pooled(prob, cfg, iters, Pool::global())
 }
 
 /// Top-j with the per-worker gradient + selection + error-memory update

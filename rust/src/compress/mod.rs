@@ -68,6 +68,26 @@ impl SparseUpdate {
         }
     }
 
+    /// Accumulate the entries whose index falls in
+    /// `[j0, j0 + block.len())` into the column block `block`
+    /// (`block[i − j0] += val`) — the unit of the coordinator's
+    /// column-parallel server aggregation. Indices are strictly
+    /// increasing, so the in-range entries are one contiguous subrange
+    /// (binary search + early break) and are visited in the same
+    /// ascending order as [`add_into`](Self::add_into): per element the
+    /// two produce bitwise-identical sums.
+    pub fn add_range_into(&self, j0: usize, block: &mut [f64]) {
+        let j1 = j0 + block.len();
+        let lo = self.idx.partition_point(|&i| (i as usize) < j0);
+        for k in lo..self.idx.len() {
+            let i = self.idx[k] as usize;
+            if i >= j1 {
+                break;
+            }
+            block[i - j0] += self.val[k] as f64;
+        }
+    }
+
     /// Densify.
     pub fn to_dense(&self) -> Vec<f64> {
         let mut out = vec![0.0; self.dim as usize];
@@ -88,16 +108,60 @@ pub enum PayloadKind {
     Silence = 4,
 }
 
+/// Append `vals` as little-endian f32 bytes in ONE bulk copy. On
+/// little-endian hosts (every target we run on) the in-memory `[f32]`
+/// plane IS the wire image, so this is a single `memcpy` instead of the
+/// per-value 4-byte pushes that dominated `encode_sparse` at high nnz;
+/// big-endian hosts take a per-value byte-swap fallback with identical
+/// wire bytes.
+fn put_f32_plane(vals: &[f32], out: &mut Vec<u8>) {
+    let old = out.len();
+    out.resize(old + 4 * vals.len(), 0);
+    let dst = &mut out[old..];
+    if cfg!(target_endian = "little") {
+        // SAFETY: `[f32; n]` and `[u8; 4n]` have identical size/layout;
+        // dst was just sized to exactly 4·n bytes.
+        unsafe {
+            std::ptr::copy_nonoverlapping(vals.as_ptr().cast::<u8>(), dst.as_mut_ptr(), dst.len());
+        }
+    } else {
+        for (chunk, &v) in dst.chunks_exact_mut(4).zip(vals) {
+            chunk.copy_from_slice(&v.to_le_bytes());
+        }
+    }
+}
+
+/// Read `n` little-endian f32 values from the front of `src` in one bulk
+/// copy (the decode mirror of [`put_f32_plane`]). `src` must hold at
+/// least 4·n bytes — callers length-check first.
+fn get_f32_plane(src: &[u8], n: usize) -> Vec<f32> {
+    assert!(src.len() >= 4 * n);
+    let mut vals: Vec<f32> = vec![0.0; n];
+    if cfg!(target_endian = "little") {
+        // SAFETY: `vals` owns exactly 4·n initialized bytes; on LE hosts
+        // the raw copy IS the from_le_bytes conversion.
+        unsafe {
+            std::ptr::copy_nonoverlapping(src.as_ptr(), vals.as_mut_ptr().cast::<u8>(), 4 * n);
+        }
+    } else {
+        for (dst, chunk) in vals.iter_mut().zip(src[..4 * n].chunks_exact(4)) {
+            *dst = f32::from_le_bytes([chunk[0], chunk[1], chunk[2], chunk[3]]);
+        }
+    }
+    vals
+}
+
 /// Encode a sparse update: [nnz varint][gap stream][f32 values LE].
 pub fn encode_sparse(u: &SparseUpdate, out: &mut Vec<u8>) {
     rle::put_varint(out, u.idx.len() as u32);
     rle::encode_gaps(&u.idx, out);
-    for &v in &u.val {
-        out.extend_from_slice(&v.to_le_bits_bytes());
-    }
+    put_f32_plane(&u.val, out);
 }
 
-/// Decode a sparse update given the (known) dimension.
+/// Decode a sparse update given the (known) dimension. Rejects truncated
+/// buffers, indices ≥ `dim`, and gap streams whose cumulative index
+/// overflows u32 (which would alias smaller indices and break the
+/// strictly-increasing invariant downstream).
 pub fn decode_sparse(buf: &[u8], dim: u32) -> Option<(SparseUpdate, usize)> {
     let (nnz, mut pos) = rle::get_varint(buf)?;
     let mut idx = Vec::new();
@@ -109,19 +173,19 @@ pub fn decode_sparse(buf: &[u8], dim: u32) -> Option<(SparseUpdate, usize)> {
     if buf.len() < pos + need {
         return None;
     }
-    let mut val = Vec::with_capacity(nnz as usize);
-    for k in 0..nnz as usize {
-        let b = &buf[pos + 4 * k..pos + 4 * k + 4];
-        val.push(f32::from_le_bytes([b[0], b[1], b[2], b[3]]));
-    }
+    let val = get_f32_plane(&buf[pos..], nnz as usize);
     Some((SparseUpdate { dim, idx, val }, pos + need))
 }
 
 /// Encode a dense f32 vector (classical GD / CGD transmissions): raw
-/// 32·d bits, as the paper counts them.
+/// 32·d bits, as the paper counts them. The f64→f32 narrowing keeps this
+/// a per-value loop, but writing through a pre-sized buffer instead of
+/// per-value pushes lets it autovectorize.
 pub fn encode_dense(v: &[f64], out: &mut Vec<u8>) {
-    for &x in v {
-        out.extend_from_slice(&(x as f32).to_le_bytes());
+    let old = out.len();
+    out.resize(old + 4 * v.len(), 0);
+    for (chunk, &x) in out[old..].chunks_exact_mut(4).zip(v) {
+        chunk.copy_from_slice(&(x as f32).to_le_bytes());
     }
 }
 
@@ -131,9 +195,8 @@ pub fn decode_dense(buf: &[u8], d: usize) -> Option<(Vec<f64>, usize)> {
         return None;
     }
     let mut out = Vec::with_capacity(d);
-    for k in 0..d {
-        let b = &buf[4 * k..4 * k + 4];
-        out.push(f32::from_le_bytes([b[0], b[1], b[2], b[3]]) as f64);
+    for chunk in buf[..4 * d].chunks_exact(4) {
+        out.push(f32::from_le_bytes([chunk[0], chunk[1], chunk[2], chunk[3]]) as f64);
     }
     Some((out, 4 * d))
 }
@@ -183,17 +246,6 @@ pub fn decode_adaptive(buf: &[u8], dim: u32) -> Option<(SparseUpdate, usize)> {
 /// Exact bit cost of the adaptive encoding.
 pub fn adaptive_bits(u: &SparseUpdate) -> usize {
     8 + sparse_bits(u).min(dense_bits(u.dim as usize))
-}
-
-trait F32Bytes {
-    fn to_le_bits_bytes(self) -> [u8; 4];
-}
-
-impl F32Bytes for f32 {
-    #[inline]
-    fn to_le_bits_bytes(self) -> [u8; 4] {
-        self.to_le_bytes()
-    }
 }
 
 #[cfg(test)]
@@ -315,6 +367,30 @@ mod tests {
     fn adaptive_rejects_bad_tag() {
         assert!(decode_adaptive(&[99, 0, 0], 4).is_none());
         assert!(decode_adaptive(&[], 4).is_none());
+    }
+
+    #[test]
+    fn add_range_into_matches_add_into_bitwise() {
+        let mut rng = Pcg64::seeded(555);
+        for _ in 0..50 {
+            let d = 1 + rng.index(400);
+            let v: Vec<f64> =
+                (0..d).map(|_| if rng.bernoulli(0.6) { 0.0 } else { rng.normal() }).collect();
+            let u = SparseUpdate::from_dense(&v);
+            let mut whole: Vec<f64> = (0..d).map(|j| (j as f64) * 0.1).collect();
+            let mut blocked = whole.clone();
+            u.add_into(&mut whole);
+            let chunk = 1 + rng.index(d);
+            let mut j0 = 0;
+            while j0 < d {
+                let j1 = (j0 + chunk).min(d);
+                u.add_range_into(j0, &mut blocked[j0..j1]);
+                j0 = j1;
+            }
+            for j in 0..d {
+                assert_eq!(whole[j].to_bits(), blocked[j].to_bits(), "d={d} j={j}");
+            }
+        }
     }
 
     #[test]

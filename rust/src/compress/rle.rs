@@ -49,7 +49,11 @@ pub fn encode_gaps(indices: &[u32], out: &mut Vec<u8>) {
     }
 }
 
-/// Decode `n` gaps back to indices. Returns bytes consumed.
+/// Decode `n` gaps back to indices. Returns bytes consumed. Fails on
+/// truncation AND on cumulative-index overflow past u32: a wrapped index
+/// would silently alias a smaller one and break the strictly-increasing
+/// invariant every consumer (and [`crate::compress::decode_sparse`]'s
+/// tail-only range check) relies on, so such streams are rejected here.
 pub fn decode_gaps(buf: &[u8], n: usize, out: &mut Vec<u32>) -> Option<usize> {
     let mut pos = 0usize;
     let mut prev: i64 = -1;
@@ -58,6 +62,9 @@ pub fn decode_gaps(buf: &[u8], n: usize, out: &mut Vec<u32>) -> Option<usize> {
         let (gap, used) = get_varint(&buf[pos..])?;
         pos += used;
         let idx = prev + 1 + gap as i64;
+        if idx > u32::MAX as i64 {
+            return None;
+        }
         out.push(idx as u32);
         prev = idx;
     }
@@ -142,6 +149,20 @@ mod tests {
         assert!(buf.len() >= 2);
         let mut back = Vec::new();
         assert!(decode_gaps(&buf[..1], 1, &mut back).is_none());
+    }
+
+    #[test]
+    fn overflowing_gap_stream_rejected() {
+        // First index lands exactly on u32::MAX (legal), a second entry
+        // must overflow and be rejected rather than wrap non-monotonically.
+        let mut buf = Vec::new();
+        put_varint(&mut buf, u32::MAX); // gap → idx0 = u32::MAX
+        put_varint(&mut buf, 0); // idx1 = u32::MAX + 1 → overflow
+        let mut one = Vec::new();
+        assert_eq!(decode_gaps(&buf, 1, &mut one), Some(varint_len(u32::MAX)));
+        assert_eq!(one, vec![u32::MAX]);
+        let mut two = Vec::new();
+        assert!(decode_gaps(&buf, 2, &mut two).is_none());
     }
 
     #[test]

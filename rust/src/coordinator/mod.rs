@@ -25,6 +25,7 @@ use crate::algo::gdsec::GdSecConfig;
 use crate::algo::trace::{Trace, TraceRow};
 use crate::compress::SparseUpdate;
 use crate::linalg;
+use crate::util::pool::Pool;
 use protocol::Msg;
 use scheduler::Scheduler;
 use std::sync::Arc;
@@ -51,6 +52,11 @@ pub struct CoordConfig {
     /// Initial iterate θ^0 (zeros when None) — the e2e transformer run
     /// starts from the compiled jax initialization.
     pub init_theta: Option<Vec<f64>>,
+    /// Pool for the server-side column-blocked aggregation + step
+    /// (defaults to the process-wide persistent pool). Thread count does
+    /// not affect the trajectory: every θ_j sees updates in worker-id
+    /// order regardless of which block owns it.
+    pub pool: Pool,
 }
 
 impl CoordConfig {
@@ -65,6 +71,7 @@ impl CoordConfig {
             problem_name: String::new(),
             fstar: 0.0,
             init_theta: None,
+            pool: Pool::global().clone(),
         }
     }
 }
@@ -232,24 +239,24 @@ impl Coordinator {
                 break;
             }
 
-            // Aggregate in worker-id order (determinism) and step.
-            linalg::zero(&mut agg);
+            // Aggregate in worker-id order (determinism) and step, fanned
+            // over contiguous column blocks: every element still sees the
+            // updates in worker order, so any thread count produces the
+            // serial loop's bits exactly (the integration tests pin this
+            // against the single-threaded reference).
             for u in updates.iter().flatten() {
                 cum_entries += u.nnz() as u64;
-                u.add_into(&mut agg);
             }
             cum_bits += metrics.payload_bits;
             cum_tx += metrics.transmissions;
-            if self.cfg.gdsec.state_variable {
-                for i in 0..d {
-                    theta[i] -= self.cfg.gdsec.alpha * (h[i] + agg[i]);
-                    h[i] += self.cfg.gdsec.beta * agg[i];
-                }
-            } else {
-                for i in 0..d {
-                    theta[i] -= self.cfg.gdsec.alpha * agg[i];
-                }
-            }
+            apply_round_blocked(
+                &mut theta,
+                &mut h,
+                &mut agg,
+                &updates,
+                &self.cfg.gdsec,
+                &self.cfg.pool,
+            );
             metrics.wall_us = t0.elapsed().as_micros() as u64;
             rounds.push(metrics);
         }
@@ -279,6 +286,58 @@ impl Coordinator {
             downlink_frame_bytes: downlink_bytes,
         }
     }
+}
+
+/// The server's per-round work — zero + aggregate the worker updates and
+/// apply θ^{k+1} = θ^k − α(h + Δ̂), h += β·Δ̂ — fanned over contiguous
+/// column blocks of (θ, h, agg). Each block zeroes its agg slice, folds
+/// the updates' in-range entries in worker-id order
+/// ([`SparseUpdate::add_range_into`]), and steps its θ/h slice, keeping
+/// the working set cache-resident at RCV1 scale. Per element the
+/// operation sequence is identical to the serial loop, so the trajectory
+/// is bit-for-bit thread-count-independent.
+fn apply_round_blocked(
+    theta: &mut [f64],
+    h: &mut [f64],
+    agg: &mut [f64],
+    updates: &[Option<SparseUpdate>],
+    cfg: &GdSecConfig,
+    pool: &Pool,
+) {
+    let d = theta.len();
+    if d == 0 {
+        return;
+    }
+    struct Block<'a> {
+        j0: usize,
+        theta: &'a mut [f64],
+        h: &'a mut [f64],
+        agg: &'a mut [f64],
+    }
+    let chunk = d.div_ceil(pool.threads());
+    let mut blocks: Vec<Block<'_>> = theta
+        .chunks_mut(chunk)
+        .zip(h.chunks_mut(chunk))
+        .zip(agg.chunks_mut(chunk))
+        .enumerate()
+        .map(|(b, ((tc, hc), ac))| Block { j0: b * chunk, theta: tc, h: hc, agg: ac })
+        .collect();
+    pool.scatter(&mut blocks, |_, blk| {
+        linalg::zero(blk.agg);
+        for u in updates.iter().flatten() {
+            u.add_range_into(blk.j0, blk.agg);
+        }
+        if cfg.state_variable {
+            for j in 0..blk.theta.len() {
+                blk.theta[j] -= cfg.alpha * (blk.h[j] + blk.agg[j]);
+                blk.h[j] += cfg.beta * blk.agg[j];
+            }
+        } else {
+            for j in 0..blk.theta.len() {
+                blk.theta[j] -= cfg.alpha * blk.agg[j];
+            }
+        }
+    });
 }
 
 /// Convenience: run distributed GD-SEC over a [`crate::objectives::Problem`]

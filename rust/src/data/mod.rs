@@ -51,6 +51,25 @@ impl Features {
         }
     }
 
+    /// [`matvec_t_acc`](Self::matvec_t_acc) with the sparse path fanned
+    /// over `pool` column blocks ([`CsrMat::spmv_t_acc_pooled`] —
+    /// bitwise identical to the serial kernel for any thread count, so
+    /// callers may switch freely). The dense path stays the serial
+    /// `gemv_t_acc`, which is already column-blocked for cache. Must
+    /// not be called from inside a scatter job of the same pool.
+    pub fn matvec_t_acc_pooled(
+        &self,
+        alpha: f64,
+        r: &[f64],
+        out: &mut [f64],
+        pool: &crate::util::pool::Pool,
+    ) {
+        match self {
+            Features::Dense(m) => m.gemv_t_acc(alpha, r, out),
+            Features::Sparse(m) => m.spmv_t_acc_pooled(alpha, r, out, pool),
+        }
+    }
+
     /// Fused full-batch gradient pass: for every row i compute
     /// `z_i = x_i·θ`, then `out += weight(i, z_i) · x_i` — ONE streaming
     /// pass over X instead of matvec + transposed matvec (halves the
@@ -59,11 +78,28 @@ impl Features {
         &self,
         theta: &[f64],
         out: &mut [f64],
+        weight: F,
+    ) {
+        self.fused_grad_pass_range(theta, out, 0, self.rows(), weight)
+    }
+
+    /// [`fused_grad_pass`](Self::fused_grad_pass) restricted to rows
+    /// `[start, end)` — the unit of the intra-worker row-split
+    /// (`objectives::GradSplit`): disjoint row ranges accumulate into
+    /// private buffers that the caller folds in ascending-range order.
+    /// `weight` still receives the ABSOLUTE row index.
+    pub fn fused_grad_pass_range<F: FnMut(usize, f64) -> f64>(
+        &self,
+        theta: &[f64],
+        out: &mut [f64],
+        start: usize,
+        end: usize,
         mut weight: F,
     ) {
+        debug_assert!(start <= end && end <= self.rows());
         match self {
             Features::Dense(m) => {
-                for i in 0..m.rows {
+                for i in start..end {
                     let row = m.row(i);
                     let z = crate::linalg::dot(row, theta);
                     let w = weight(i, z);
@@ -73,7 +109,7 @@ impl Features {
                 }
             }
             Features::Sparse(m) => {
-                for i in 0..m.rows {
+                for i in start..end {
                     let (cols, vals) = m.row(i);
                     let mut z = 0.0;
                     for k in 0..cols.len() {

@@ -22,12 +22,16 @@
 //! ## Performance architecture
 //!
 //! The per-round hot path is parallel and allocation-free: worker
-//! gradient + sparsify steps fan out over a scoped-thread
-//! [`util::pool::Pool`] with a deterministic worker-id reduction order
-//! (bit-for-bit identical trajectories for any thread count), per-worker
-//! lanes reuse their update buffers arena-style, and the dense kernels in
-//! [`linalg`] are blocked/unrolled for autovectorization. `GDSEC_THREADS`
-//! overrides the fan-out width; `benches/hotpath_micro.rs` writes the
+//! gradient + sparsify steps, column-blocked sparse/dense kernels, and
+//! server aggregation fan out over a persistent [`util::pool::Pool`]
+//! (parked threads + round barrier, zero-alloc dispatch) with a
+//! deterministic worker-id reduction order (bit-for-bit identical
+//! trajectories for any thread count), per-worker lanes reuse their
+//! update buffers arena-style, and the kernels in [`linalg`] /
+//! [`sparse`] are blocked/unrolled for autovectorization with row-split
+//! [`objectives::GradSplit`] lanes covering the M < cores regime.
+//! `GDSEC_THREADS` sets the fan-out width of the shared pool
+//! ([`util::pool::Pool::global`]); `benches/hotpath_micro.rs` writes the
 //! machine-readable perf trajectory to `BENCH_hotpath.json`. See
 //! EXPERIMENTS.md §Perf.
 

@@ -65,6 +65,22 @@ fn log1pexp(z: f64) -> f64 {
     }
 }
 
+/// dℓ/dz of the scalar loss at linear predictor `z` with label `yi` —
+/// the per-row weight of the fused gradient pass (shared by the full,
+/// minibatch, and row-split gradient kernels so all three apply the SAME
+/// floating-point operations per row).
+#[inline]
+fn residual_weight(kind: ObjectiveKind, yi: f64, z: f64) -> f64 {
+    match kind {
+        ObjectiveKind::LinReg | ObjectiveKind::Lasso => z - yi,
+        ObjectiveKind::LogReg => -yi * sigmoid(-yi * z),
+        ObjectiveKind::Nlls => {
+            let p = sigmoid(z);
+            -(yi - p) * p * (1.0 - p)
+        }
+    }
+}
+
 /// One worker's local objective `f_m`.
 #[derive(Debug, Clone)]
 pub struct LocalObjective {
@@ -129,25 +145,9 @@ impl LocalObjective {
     /// the two-pass matvec/matvec^T of `grad_indices` — ~2× less memory
     /// traffic on the worker hot loop (EXPERIMENTS.md §Perf).
     pub fn grad(&self, theta: &[f64], out: &mut [f64]) {
-        let n = self.n_total as f64;
         let m = self.m_workers as f64;
         linalg::zero(out);
-        let kind = self.kind;
-        let y = &self.shard.y;
-        self.shard.x.fused_grad_pass(theta, out, |i, z| {
-            let wi = match kind {
-                ObjectiveKind::LinReg | ObjectiveKind::Lasso => z - y[i],
-                ObjectiveKind::LogReg => {
-                    let yi = y[i];
-                    -yi * sigmoid(-yi * z)
-                }
-                ObjectiveKind::Nlls => {
-                    let p = sigmoid(z);
-                    -(y[i] - p) * p * (1.0 - p)
-                }
-            };
-            wi / n
-        });
+        self.grad_data_range(theta, 0, self.shard.n(), out);
         match self.kind {
             ObjectiveKind::Lasso => {
                 let lm = self.lambda / m;
@@ -160,6 +160,21 @@ impl LocalObjective {
                 linalg::axpy(lm, theta, out);
             }
         }
+    }
+
+    /// Data-term gradient contribution of local rows `[start, end)`
+    /// accumulated into `out` (no zeroing, no regularizer):
+    /// `out += Σ_{i ∈ range} ℓ'(z_i)/N · x_i`. This is the unit of the
+    /// intra-worker row-split ([`GradSplit`]); `grad` is exactly
+    /// "zero + full-range + regularizer", so the split kernels reuse the
+    /// same per-row arithmetic.
+    pub fn grad_data_range(&self, theta: &[f64], start: usize, end: usize, out: &mut [f64]) {
+        let n = self.n_total as f64;
+        let kind = self.kind;
+        let y = &self.shard.y;
+        self.shard.x.fused_grad_pass_range(theta, out, start, end, |i, z| {
+            residual_weight(kind, y[i], z) / n
+        });
     }
 
     /// Gradient over a subset of local samples, with the data term scaled
@@ -177,18 +192,7 @@ impl LocalObjective {
         self.shard.x.matvec(theta, &mut z);
         let mut w = vec![0.0; self.shard.n()];
         for &i in idx {
-            let wi = match self.kind {
-                ObjectiveKind::LinReg | ObjectiveKind::Lasso => z[i] - self.shard.y[i],
-                ObjectiveKind::LogReg => {
-                    let yi = self.shard.y[i];
-                    -yi * sigmoid(-yi * z[i])
-                }
-                ObjectiveKind::Nlls => {
-                    let p = sigmoid(z[i]);
-                    -(self.shard.y[i] - p) * p * (1.0 - p)
-                }
-            };
-            w[i] = wi * scale / n;
+            w[i] = residual_weight(self.kind, self.shard.y[i], z[i]) * scale / n;
         }
         self.shard.x.matvec_t_acc(1.0, &w, out);
         match self.kind {
@@ -241,6 +245,62 @@ fn loss_curvature_bound(kind: ObjectiveKind) -> f64 {
         ObjectiveKind::LinReg | ObjectiveKind::Lasso => 1.0,
         ObjectiveKind::LogReg => 0.25,
         ObjectiveKind::Nlls => 0.25,
+    }
+}
+
+/// Reusable scratch for [`Problem::grad_pooled`]: one lane per
+/// (worker, row-block) with a private d-length accumulator.
+///
+/// The lane structure — which worker, which row range — is FIXED at
+/// construction and independent of the pool's thread count, and the
+/// caller folds lanes in (worker asc, block asc) order, so the reduced
+/// gradient is bit-for-bit identical for any thread count (pinned by
+/// `tests/prop_parallel_parity.rs`). Splitting *within* a shard is what
+/// keeps all cores busy when M < cores or shards are imbalanced — the
+/// regime of `estimate_fstar`, whose problem-wide gradient was previously
+/// a serial loop over workers.
+pub struct GradSplit {
+    d: usize,
+    lanes: Vec<GradSplitLane>,
+}
+
+struct GradSplitLane {
+    worker: usize,
+    start: usize,
+    end: usize,
+    buf: Vec<f64>,
+}
+
+impl GradSplit {
+    /// Default rows per lane: small enough that even one RCV1-sized
+    /// shard splits across every core, large enough that a lane amortizes
+    /// its d-length reduce.
+    pub const DEFAULT_ROW_BLOCK: usize = 512;
+
+    /// Split every worker's shard into `row_block`-row lanes (the last
+    /// lane of a shard may be short; empty shards contribute none).
+    pub fn new(prob: &Problem, row_block: usize) -> GradSplit {
+        let rb = row_block.max(1);
+        let mut lanes = Vec::new();
+        for (w, l) in prob.locals.iter().enumerate() {
+            let nm = l.shard.n();
+            let mut s = 0;
+            while s < nm {
+                let e = (s + rb).min(nm);
+                lanes.push(GradSplitLane { worker: w, start: s, end: e, buf: vec![0.0; prob.d] });
+                s = e;
+            }
+        }
+        GradSplit { d: prob.d, lanes }
+    }
+
+    /// [`new`](Self::new) with [`DEFAULT_ROW_BLOCK`](Self::DEFAULT_ROW_BLOCK).
+    pub fn for_problem(prob: &Problem) -> GradSplit {
+        GradSplit::new(prob, GradSplit::DEFAULT_ROW_BLOCK)
+    }
+
+    pub fn lanes(&self) -> usize {
+        self.lanes.len()
     }
 }
 
@@ -317,6 +377,41 @@ impl Problem {
         }
     }
 
+    /// Global gradient with the (worker, row-block) lanes of `split`
+    /// fanned out over `pool` and reduced in lane order on the calling
+    /// thread, plus ONE closed-form regularizer term (λ instead of M
+    /// copies of λ/M). Deterministic for any thread count — the summation
+    /// tree is fixed by `split`, never by scheduling. Not bitwise equal
+    /// to [`grad`] (different reduction tree), which is why callers pick
+    /// one kernel and use it for every thread count.
+    pub fn grad_pooled(
+        &self,
+        theta: &[f64],
+        out: &mut [f64],
+        split: &mut GradSplit,
+        pool: &crate::util::pool::Pool,
+    ) {
+        assert_eq!(split.d, self.d, "GradSplit built for a different problem");
+        assert_eq!(theta.len(), self.d);
+        assert_eq!(out.len(), self.d);
+        pool.scatter(&mut split.lanes, |_, lane| {
+            linalg::zero(&mut lane.buf);
+            self.locals[lane.worker].grad_data_range(theta, lane.start, lane.end, &mut lane.buf);
+        });
+        linalg::zero(out);
+        for lane in &split.lanes {
+            linalg::axpy(1.0, &lane.buf, out);
+        }
+        match self.kind {
+            ObjectiveKind::Lasso => {
+                for j in 0..self.d {
+                    out[j] += self.lambda * sign(theta[j]);
+                }
+            }
+            _ => linalg::axpy(self.lambda, theta, out),
+        }
+    }
+
     /// Global smoothness constant L of f (smooth part).
     /// Computed from the *pooled* data matrix spectral norm: since all data
     /// terms share the 1/N scale, L = c·σ_max(X)²/N + λ. We bound
@@ -332,9 +427,15 @@ impl Problem {
         curv * self.pooled_spectral_sq(80) / n + reg
     }
 
-    /// Power iteration for σ_max(X)² where X is the row-stacked shard data.
+    /// Power iteration for σ_max(X)² where X is the row-stacked shard
+    /// data. The transposed accumulation — the expensive half at RCV1
+    /// scale — runs the column-blocked pooled kernel on the shared pool
+    /// (bitwise identical to the serial walk, so L never depends on the
+    /// thread count). Called from setup paths only, never from inside a
+    /// scatter job.
     fn pooled_spectral_sq(&self, iters: usize) -> f64 {
         let d = self.d;
+        let pool = crate::util::pool::Pool::global();
         let mut v = vec![1.0 / (d as f64).sqrt(); d];
         let mut atav = vec![0.0; d];
         let mut lambda = 0.0;
@@ -347,7 +448,7 @@ impl Problem {
                 }
                 let mut av = vec![0.0; nm];
                 l.shard.x.matvec(&v, &mut av);
-                l.shard.x.matvec_t_acc(1.0, &av, &mut atav);
+                l.shard.x.matvec_t_acc_pooled(1.0, &av, &mut atav, pool);
             }
             lambda = linalg::nrm2(&atav);
             if lambda <= 1e-300 {
@@ -395,22 +496,35 @@ impl Problem {
     }
 
     /// Estimate f* := min f(θ) by running (sub)gradient descent far past
-    /// the horizon the experiments use. For smooth objectives uses α=1/L
-    /// fixed; for lasso a decreasing step with best-value tracking.
+    /// the horizon the experiments use, on the process-wide
+    /// [`Pool::global`](crate::util::pool::Pool::global) — see
+    /// [`estimate_fstar_pooled`](Self::estimate_fstar_pooled).
     pub fn estimate_fstar(&self, iters: usize) -> f64 {
+        self.estimate_fstar_pooled(iters, crate::util::pool::Pool::global())
+    }
+
+    /// The f* estimator's GD loop with every gradient fanned out over
+    /// `pool` via [`grad_pooled`](Self::grad_pooled) (row-split lanes, so
+    /// it scales even when M < cores) and every objective evaluation via
+    /// [`value_pooled`](Self::value_pooled). For smooth objectives uses
+    /// α=1/L fixed; for lasso a decreasing step with best-value tracking.
+    /// The estimate is bit-for-bit identical for any thread count
+    /// (pinned by `tests/prop_parallel_parity.rs`).
+    pub fn estimate_fstar_pooled(&self, iters: usize, pool: &crate::util::pool::Pool) -> f64 {
         let d = self.d;
         let l = self.lipschitz().max(1e-12);
+        let mut split = GradSplit::for_problem(self);
         let mut theta = vec![0.0; d];
         let mut g = vec![0.0; d];
-        let mut best = self.value(&theta);
+        let mut best = self.value_pooled(&theta, pool);
         match self.kind {
             ObjectiveKind::Lasso => {
                 let gamma0 = 1.0 / l;
                 for k in 0..iters {
-                    self.grad(&theta, &mut g);
+                    self.grad_pooled(&theta, &mut g, &mut split, pool);
                     let alpha = gamma0 / (1.0 + 0.05 * k as f64).sqrt();
                     linalg::axpy(-alpha, &g, &mut theta);
-                    let v = self.value(&theta);
+                    let v = self.value_pooled(&theta, pool);
                     if v < best {
                         best = v;
                     }
@@ -419,10 +533,10 @@ impl Problem {
             _ => {
                 let alpha = 1.0 / l;
                 for _ in 0..iters {
-                    self.grad(&theta, &mut g);
+                    self.grad_pooled(&theta, &mut g, &mut split, pool);
                     linalg::axpy(-alpha, &g, &mut theta);
                 }
-                best = best.min(self.value(&theta));
+                best = best.min(self.value_pooled(&theta, pool));
             }
         }
         best
@@ -597,6 +711,60 @@ mod tests {
         let fstar = prob.estimate_fstar(2000);
         assert!(fstar <= prob.value(&vec![0.0; prob.d]));
         assert!(fstar.is_finite());
+    }
+
+    #[test]
+    fn grad_pooled_matches_grad_numerically() {
+        use crate::util::pool::Pool;
+        for kind in [
+            ObjectiveKind::LinReg,
+            ObjectiveKind::LogReg,
+            ObjectiveKind::Lasso,
+            ObjectiveKind::Nlls,
+        ] {
+            let prob = Problem::new(kind, synthetic::dna_like(17, 90), 3, 0.05);
+            let mut rng = Pcg64::seeded(11);
+            // Away from lasso's kink so sign(θ_j) is stable under ±ε.
+            let theta: Vec<f64> =
+                (0..prob.d).map(|_| rng.normal() * 0.05 + 0.2 * rng.sign()).collect();
+            let mut serial = vec![0.0; prob.d];
+            prob.grad(&theta, &mut serial);
+            // Awkward row block (7) so shards split unevenly.
+            let mut split = GradSplit::new(&prob, 7);
+            assert!(split.lanes() > prob.m(), "row-split produced no extra lanes");
+            let mut pooled = vec![0.0; prob.d];
+            prob.grad_pooled(&theta, &mut pooled, &mut split, &Pool::new(3));
+            for j in 0..prob.d {
+                let denom = serial[j].abs().max(1e-9);
+                assert!(
+                    (pooled[j] - serial[j]).abs() / denom < 1e-9,
+                    "{kind:?} j={j}: {} vs {}",
+                    pooled[j],
+                    serial[j]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn grad_data_range_splits_sum_to_full() {
+        // Fixed-structure split: concatenating range contributions in
+        // ascending order must reproduce the full-range pass bitwise
+        // (same per-row ops, same out-accumulation order).
+        let prob = Problem::logistic(synthetic::dna_like(23, 64), 1, 0.02);
+        let l = &prob.locals[0];
+        let mut rng = Pcg64::seeded(13);
+        let theta: Vec<f64> = (0..prob.d).map(|_| rng.normal() * 0.1).collect();
+        let mut full = vec![0.0; prob.d];
+        l.grad_data_range(&theta, 0, l.shard.n(), &mut full);
+        let mut parts = vec![0.0; prob.d];
+        let nm = l.shard.n();
+        let mid = nm / 3;
+        l.grad_data_range(&theta, 0, mid, &mut parts);
+        l.grad_data_range(&theta, mid, nm, &mut parts);
+        for j in 0..prob.d {
+            assert_eq!(full[j].to_bits(), parts[j].to_bits(), "j={j}");
+        }
     }
 
     #[test]

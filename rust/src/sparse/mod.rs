@@ -80,6 +80,67 @@ impl CsrMat {
         }
     }
 
+    /// Column-block slice of the transposed SpMV:
+    /// `block[c − j0] += alpha · (Aᵀr)_c` for `c ∈ [j0, j0 + block.len())`.
+    ///
+    /// Column indices are strictly increasing within a row, so each row's
+    /// entries inside the block form one contiguous subrange found with a
+    /// binary search. Rows are visited in ascending order and rows with
+    /// `alpha·r_i == 0` are skipped — per element this is exactly the
+    /// accumulation order of [`spmv_t_acc`], which makes the blocked and
+    /// pooled variants bitwise identical to the serial kernel.
+    pub fn spmv_t_acc_block(&self, alpha: f64, r: &[f64], j0: usize, block: &mut [f64]) {
+        assert_eq!(r.len(), self.rows);
+        let j1 = j0 + block.len();
+        assert!(j1 <= self.cols);
+        for i in 0..self.rows {
+            let a = alpha * r[i];
+            if a == 0.0 {
+                continue;
+            }
+            let (cols, vals) = self.row(i);
+            let lo = cols.partition_point(|&c| (c as usize) < j0);
+            for k in lo..cols.len() {
+                let c = cols[k] as usize;
+                if c >= j1 {
+                    break;
+                }
+                block[c - j0] += a * vals[k];
+            }
+        }
+    }
+
+    /// [`spmv_t_acc`] fanned over contiguous column blocks of `out`, one
+    /// per pool thread ([`spmv_t_acc_block`] each). Output bits do not
+    /// depend on the thread count: every `out[j]` is owned by exactly one
+    /// block and accumulates its rows in ascending order either way
+    /// (pinned by `tests/prop_parallel_parity.rs`). The serial CSR walk
+    /// re-streams the full d-length `out` from L2/L3 per row at RCV1
+    /// scale (d = 47236 ⇒ 370 KB); the per-thread blocks stay
+    /// cache-resident instead.
+    pub fn spmv_t_acc_pooled(
+        &self,
+        alpha: f64,
+        r: &[f64],
+        out: &mut [f64],
+        pool: &crate::util::pool::Pool,
+    ) {
+        assert_eq!(r.len(), self.rows);
+        assert_eq!(out.len(), self.cols);
+        if pool.threads() == 1 || self.cols < 2 {
+            self.spmv_t_acc(alpha, r, out);
+            return;
+        }
+        let chunk = self.cols.div_ceil(pool.threads());
+        let mut blocks: Vec<(usize, &mut [f64])> =
+            out.chunks_mut(chunk).enumerate().map(|(b, s)| (b * chunk, s)).collect();
+        pool.scatter(&mut blocks, |_, item| {
+            let j0 = item.0;
+            let block: &mut [f64] = &mut *item.1;
+            self.spmv_t_acc_block(alpha, r, j0, block);
+        });
+    }
+
     /// Squared L2 norm of row i.
     pub fn row_nrm2_sq(&self, i: usize) -> f64 {
         let (_, vals) = self.row(i);
@@ -217,6 +278,63 @@ mod tests {
         let ld = linalg::power_iter_ata(&a.to_dense(), 200);
         let ls = a.power_iter_ata(200);
         assert!((ld - ls).abs() < 1e-6 * ld.max(1.0));
+    }
+
+    #[test]
+    fn spmv_t_blocked_matches_serial_bitwise() {
+        // Deterministic pseudo-random CSR, awkward block boundaries.
+        let d = 37;
+        let rows: Vec<Vec<(u32, f64)>> = (0..23)
+            .map(|i| {
+                (0..d)
+                    .filter(|j| (i * 7 + j * 13) % 5 == 0)
+                    .map(|j| (j as u32, ((i * d + j) as f64 * 0.37).sin()))
+                    .collect()
+            })
+            .collect();
+        let a = CsrMat::from_rows(d, &rows);
+        let mut r: Vec<f64> = (0..a.rows).map(|i| ((i as f64) * 0.7).cos()).collect();
+        r[5] = 0.0; // zero rows must be skipped exactly
+        let mut serial: Vec<f64> = (0..d).map(|j| (j as f64) * 0.01).collect();
+        let mut blocked = serial.clone();
+        a.spmv_t_acc(0.35, &r, &mut serial);
+        let mut j0 = 0;
+        for width in [1usize, 4, 13, 19] {
+            let j1 = (j0 + width).min(d);
+            a.spmv_t_acc_block(0.35, &r, j0, &mut blocked[j0..j1]);
+            j0 = j1;
+        }
+        a.spmv_t_acc_block(0.35, &r, j0, &mut blocked[j0..]);
+        for j in 0..d {
+            assert_eq!(serial[j].to_bits(), blocked[j].to_bits(), "j={j}");
+        }
+    }
+
+    #[test]
+    fn spmv_t_pooled_matches_serial_bitwise() {
+        use crate::util::pool::Pool;
+        let d = 301;
+        let rows: Vec<Vec<(u32, f64)>> = (0..50)
+            .map(|i| {
+                (0..d)
+                    .filter(|j| (i * 11 + j * 3) % 7 == 0)
+                    .map(|j| (j as u32, ((i + j) as f64 * 0.11).sin()))
+                    .collect()
+            })
+            .collect();
+        let a = CsrMat::from_rows(d, &rows);
+        let r: Vec<f64> = (0..a.rows).map(|i| ((i as f64) * 1.3).sin()).collect();
+        let mut serial: Vec<f64> = (0..d).map(|j| (j as f64) * -0.02).collect();
+        let pooled_init = serial.clone();
+        a.spmv_t_acc(1.5, &r, &mut serial);
+        for threads in [1usize, 2, 4, 7] {
+            let pool = Pool::new(threads);
+            let mut pooled = pooled_init.clone();
+            a.spmv_t_acc_pooled(1.5, &r, &mut pooled, &pool);
+            for j in 0..d {
+                assert_eq!(serial[j].to_bits(), pooled[j].to_bits(), "threads={threads} j={j}");
+            }
+        }
     }
 
     #[test]

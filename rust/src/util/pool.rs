@@ -1,39 +1,321 @@
-//! Scoped-thread worker pool for the per-round fan-out.
+//! Persistent worker pool for the per-round fan-out.
 //!
 //! The trainers' hot loop is embarrassingly parallel across workers: each
 //! worker's gradient + sparsify step touches only its own shard and state.
 //! [`Pool::scatter`] fans a `&mut [T]` of per-worker lanes out across OS
-//! threads via [`std::thread::scope`] (no unsafe, no external crates) and
-//! hands every lane its index, so callers keep a **deterministic
-//! reduction order** afterwards: results land in the lane they belong to
-//! and the main thread folds them in worker-id order. Trajectories are
-//! therefore bit-for-bit identical for any thread count — pinned by
-//! `tests/prop_parallel_parity.rs`.
+//! threads and hands every lane its index, so callers keep a
+//! **deterministic reduction order** afterwards: results land in the lane
+//! they belong to and the main thread folds them in worker-id order.
+//! Trajectories are therefore bit-for-bit identical for any thread count —
+//! pinned by `tests/prop_parallel_parity.rs`.
 //!
-//! Scoped threads are spawned per call. At the paper's scales one round
-//! costs hundreds of microseconds to milliseconds of compute, so the
-//! ~10 µs spawn cost is noise; a persistent pool would buy nothing but
-//! unsafe code or channels on the hot path.
+//! ## Design: parked threads + a round barrier
+//!
+//! Earlier revisions spawned scoped threads per `scatter` call (~10 µs per
+//! round). That was tolerable for coarse per-worker fan-outs but is pure
+//! overhead now that the pool also backs fine-grained kernels (column-
+//! blocked `spmv_t_acc`, row-split gradients, blocked server aggregation)
+//! that may run several rounds per optimizer iteration. This pool instead
+//! spawns its `threads − 1` helper threads ONCE and parks them on a
+//! condvar between rounds. Invariants:
+//!
+//! * **Parking / wake protocol** — a round is published as an (epoch,
+//!   job) pair under one mutex; workers sleep on the `start` condvar
+//!   until the epoch advances, run their slot, then decrement a
+//!   `remaining` counter and signal `done`. The calling thread always
+//!   executes slot 0 itself and blocks on `done` until `remaining == 0`,
+//!   so the borrowed job data provably outlives the round.
+//! * **Zero allocation per round** — the job is a stack-held context plus
+//!   a monomorphized `unsafe fn` trampoline (a plain function pointer):
+//!   no boxing, no channels. Mutex/condvar are futex-based on Linux and
+//!   allocate nothing either (pinned by `tests/alloc_free_round.rs`).
+//! * **Determinism** — item→index assignment is a fixed chunking of the
+//!   input slice (identical to the old scoped version); each item is
+//!   visited exactly once and written only by its owning slot, so results
+//!   cannot depend on scheduling. Thread count only changes who computes
+//!   a lane, never what lands in it.
+//! * **Shutdown on drop** — the pool is an `Arc` internally (`Clone`
+//!   shares the same workers); dropping the last handle sets a shutdown
+//!   flag, wakes everyone, and joins the helper threads. No detached
+//!   threads survive the pool.
+//! * **No re-entrancy** — `scatter` must not be called from inside a
+//!   scatter job of the same pool, nor of any ancestor pool in a nested
+//!   dispatch chain (the round lock that serializes concurrent callers
+//!   would deadlock). A thread-local stack of active pool identities
+//!   turns that mistake into an immediate panic instead of a silent
+//!   hang; dispatching onto an *independent* pool from inside a job is
+//!   fine, but cyclic pool graphs driven from several threads at once
+//!   are still forbidden (a per-thread check cannot prove a cross-
+//!   thread lock cycle). Compose parallelism by flattening work units
+//!   instead (see `objectives::GradSplit`).
+//!
+//! `threads == 1` (or a single item) short-circuits to an inline loop:
+//! no helper threads are ever spawned and `scatter` is just the serial
+//! fold — which is why the serial path stays allocation- and park-free.
 
-/// A fan-out policy: how many OS threads to use per [`Pool::scatter`].
-#[derive(Debug, Clone)]
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::thread::JoinHandle;
+
+/// Poison-tolerant lock: a panic inside a scatter closure unwinds through
+/// `run_round` while guards are held, which would poison these mutexes;
+/// the protected state is always left consistent (the barrier handshake
+/// completes before any re-raise), so poisoning is ignored.
+fn lock_pool<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+}
+
+thread_local! {
+    /// Stack of pool identities (Shared addresses) whose jobs THIS
+    /// thread is currently executing, innermost last. `run_round`
+    /// refuses to dispatch onto ANY pool already on the stack — direct
+    /// re-entrancy or an A→B→A chain through another pool — turning
+    /// what would be a silent deadlock on `round_lock`/the barrier into
+    /// an immediate, attributable panic. Nesting *independent* pools is
+    /// allowed. The check is per-thread and therefore best-effort for
+    /// cycles: it always catches the dispatching thread's own ancestor
+    /// chain, but a cyclic pool graph driven from several threads at
+    /// once is a lock cycle no thread-local view can prove — don't
+    /// build cyclic pool graphs.
+    static ACTIVE_POOLS: std::cell::RefCell<Vec<usize>> =
+        const { std::cell::RefCell::new(Vec::new()) };
+}
+
+/// A type-erased round job: a context pointer and a monomorphized
+/// trampoline executing one slot's share of the work.
+#[derive(Copy, Clone)]
+struct Job {
+    ctx: *const (),
+    call: unsafe fn(*const (), usize),
+}
+
+// SAFETY: the context pointed to by `ctx` lives on the scatter caller's
+// stack and is only dereferenced between job publication and the
+// `remaining == 0` handshake, during which the caller is blocked.
+unsafe impl Send for Job {}
+
+struct RoundState {
+    epoch: u64,
+    job: Option<Job>,
+    /// Helper threads still running the current round.
+    remaining: usize,
+    /// A helper panicked during the current round (re-raised on the
+    /// calling thread once the barrier clears, so the borrowed job data
+    /// can never dangle and the pool itself stays usable).
+    panicked: bool,
+    shutdown: bool,
+}
+
+struct Shared {
+    state: Mutex<RoundState>,
+    /// Workers park here waiting for the epoch to advance.
+    start: Condvar,
+    /// The scatter caller parks here waiting for `remaining == 0`.
+    done: Condvar,
+}
+
+struct Inner {
+    shared: Arc<Shared>,
+    /// Serializes concurrent `scatter` callers (one round at a time).
+    round_lock: Mutex<()>,
+    /// Helper thread count (`threads − 1`).
+    workers: usize,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl Inner {
+    /// Publish `job`, run slot 0 inline, wait for the helpers. Panics —
+    /// whether from slot 0 or a helper — are re-raised HERE, after the
+    /// barrier has cleared, so the stack-held job context never dangles
+    /// and the pool survives a panicking scatter closure.
+    fn run_round(&self, job: Job) {
+        let me = Arc::as_ptr(&self.shared) as *const () as usize;
+        ACTIVE_POOLS.with(|s| {
+            assert!(
+                !s.borrow().contains(&me),
+                "re-entrant Pool::scatter: a scatter job must not dispatch a round on a pool \
+                 it is (transitively) running on"
+            );
+        });
+        let _round = lock_pool(&self.round_lock);
+        {
+            let mut st = lock_pool(&self.shared.state);
+            st.job = Some(job);
+            st.epoch = st.epoch.wrapping_add(1);
+            st.remaining = self.workers;
+            st.panicked = false;
+            self.shared.start.notify_all();
+        }
+        // SAFETY: ctx outlives the round (we block below until every
+        // helper has finished its slot, even if slot 0 panics).
+        ACTIVE_POOLS.with(|s| s.borrow_mut().push(me));
+        let local = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| unsafe {
+            (job.call)(job.ctx, 0)
+        }));
+        ACTIVE_POOLS.with(|s| {
+            s.borrow_mut().pop();
+        });
+        let helper_panicked = {
+            let mut st = lock_pool(&self.shared.state);
+            while st.remaining > 0 {
+                st = self.shared.done.wait(st).unwrap_or_else(std::sync::PoisonError::into_inner);
+            }
+            st.job = None;
+            st.panicked
+        };
+        if let Err(payload) = local {
+            std::panic::resume_unwind(payload);
+        }
+        if helper_panicked {
+            panic!("a pool worker panicked during scatter");
+        }
+    }
+}
+
+impl Drop for Inner {
+    fn drop(&mut self) {
+        {
+            let mut st = lock_pool(&self.shared.state);
+            st.shutdown = true;
+            self.shared.start.notify_all();
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(shared: Arc<Shared>, slot: usize) {
+    let me = Arc::as_ptr(&shared) as *const () as usize;
+    let mut seen = 0u64;
+    loop {
+        let job = {
+            let mut st = lock_pool(&shared.state);
+            loop {
+                if st.shutdown {
+                    return;
+                }
+                if st.epoch != seen {
+                    seen = st.epoch;
+                    break st.job.expect("epoch advanced without a job");
+                }
+                st = shared.start.wait(st).unwrap_or_else(std::sync::PoisonError::into_inner);
+            }
+        };
+        // SAFETY: the publisher blocks until `remaining == 0`, so ctx is
+        // alive for the whole call. A panicking job must still decrement
+        // the barrier (or the publisher would wait forever on dead data).
+        ACTIVE_POOLS.with(|s| s.borrow_mut().push(me));
+        let ok = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| unsafe {
+            (job.call)(job.ctx, slot)
+        }))
+        .is_ok();
+        ACTIVE_POOLS.with(|s| {
+            s.borrow_mut().pop();
+        });
+        let mut st = lock_pool(&shared.state);
+        if !ok {
+            st.panicked = true;
+        }
+        st.remaining -= 1;
+        if st.remaining == 0 {
+            shared.done.notify_one();
+        }
+    }
+}
+
+/// Stack-held scatter context handed to [`Job`] trampolines.
+struct ScatterCtx<T, F> {
+    items: *mut T,
+    n: usize,
+    chunk: usize,
+    f: *const F,
+}
+
+/// Run slot `slot`'s contiguous chunk of the scatter.
+unsafe fn scatter_chunk<T, F: Fn(usize, &mut T) + Sync>(ctx: *const (), slot: usize) {
+    let ctx = &*(ctx as *const ScatterCtx<T, F>);
+    let start = slot * ctx.chunk;
+    if start >= ctx.n {
+        return;
+    }
+    let end = (start + ctx.chunk).min(ctx.n);
+    let f = &*ctx.f;
+    for i in start..end {
+        f(i, &mut *ctx.items.add(i));
+    }
+}
+
+/// A persistent fan-out pool (see module docs). `Clone` shares the same
+/// helper threads; the last clone dropped shuts them down.
 pub struct Pool {
     threads: usize,
+    inner: Option<Arc<Inner>>,
+}
+
+impl Clone for Pool {
+    fn clone(&self) -> Pool {
+        Pool { threads: self.threads, inner: self.inner.clone() }
+    }
+}
+
+impl std::fmt::Debug for Pool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Pool")
+            .field("threads", &self.threads)
+            .field("persistent", &self.inner.is_some())
+            .finish()
+    }
 }
 
 impl Pool {
-    /// Pool with an explicit thread count (clamped to ≥ 1).
+    /// Pool with an explicit thread count (clamped to ≥ 1). `threads − 1`
+    /// helper threads are spawned immediately and parked.
     pub fn new(threads: usize) -> Pool {
-        Pool { threads: threads.max(1) }
+        let threads = threads.max(1);
+        if threads == 1 {
+            return Pool { threads, inner: None };
+        }
+        let shared = Arc::new(Shared {
+            state: Mutex::new(RoundState {
+                epoch: 0,
+                job: None,
+                remaining: 0,
+                panicked: false,
+                shutdown: false,
+            }),
+            start: Condvar::new(),
+            done: Condvar::new(),
+        });
+        let handles = (1..threads)
+            .map(|slot| {
+                let sh = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("gdsec-pool-{slot}"))
+                    .spawn(move || worker_loop(sh, slot))
+                    .expect("failed to spawn pool worker")
+            })
+            .collect();
+        Pool {
+            threads,
+            inner: Some(Arc::new(Inner {
+                shared,
+                round_lock: Mutex::new(()),
+                workers: threads - 1,
+                handles,
+            })),
+        }
     }
 
-    /// Serial execution (thread count 1); `scatter` runs inline.
+    /// Serial execution (thread count 1); `scatter` runs inline and no
+    /// helper threads exist.
     pub fn serial() -> Pool {
         Pool::new(1)
     }
 
     /// Thread count from `GDSEC_THREADS`, falling back to the machine's
-    /// available parallelism.
+    /// available parallelism. Builds a NEW pool each call — the trainers'
+    /// `run()` wrappers share one process-wide pool via [`Pool::global`]
+    /// instead, so they do not respawn threads per run.
     pub fn from_env() -> Pool {
         let threads = std::env::var("GDSEC_THREADS")
             .ok()
@@ -45,39 +327,47 @@ impl Pool {
         Pool::new(threads)
     }
 
+    /// The process-wide shared pool, lazily built from the environment on
+    /// first use (`GDSEC_THREADS` is read once). All `run()` convenience
+    /// wrappers in `algo::*` fan out over this instance.
+    pub fn global() -> &'static Pool {
+        static GLOBAL: OnceLock<Pool> = OnceLock::new();
+        GLOBAL.get_or_init(Pool::from_env)
+    }
+
     pub fn threads(&self) -> usize {
         self.threads
     }
 
     /// Apply `f(index, item)` to every item, fanning contiguous chunks out
-    /// across up to `threads` scoped threads. Each item is visited exactly
-    /// once; item order **within** the slice is preserved, so a caller
-    /// that reduces `items` front-to-back afterwards sees the same result
-    /// for any thread count. With 1 thread (or ≤ 1 item) this runs inline
-    /// and allocates nothing.
+    /// across the pool's threads. Each item is visited exactly once; item
+    /// order **within** the slice is preserved, so a caller that reduces
+    /// `items` front-to-back afterwards sees the same result for any
+    /// thread count. With 1 thread (or ≤ 1 item) this runs inline and
+    /// allocates nothing; with more threads the parked workers are woken
+    /// for one round and the call still allocates nothing (module docs).
     pub fn scatter<T, F>(&self, items: &mut [T], f: F)
     where
         T: Send,
         F: Fn(usize, &mut T) + Sync,
     {
         let n = items.len();
-        if self.threads == 1 || n <= 1 {
-            for (i, item) in items.iter_mut().enumerate() {
-                f(i, item);
+        let inner = match &self.inner {
+            Some(inner) if n > 1 => inner,
+            _ => {
+                for (i, item) in items.iter_mut().enumerate() {
+                    f(i, item);
+                }
+                return;
             }
-            return;
-        }
+        };
         let chunk = n.div_ceil(self.threads);
-        std::thread::scope(|s| {
-            for (ci, ch) in items.chunks_mut(chunk).enumerate() {
-                let f = &f;
-                s.spawn(move || {
-                    for (j, item) in ch.iter_mut().enumerate() {
-                        f(ci * chunk + j, item);
-                    }
-                });
-            }
-        });
+        let ctx = ScatterCtx { items: items.as_mut_ptr(), n, chunk, f: &f as *const F };
+        let job = Job {
+            ctx: &ctx as *const ScatterCtx<T, F> as *const (),
+            call: scatter_chunk::<T, F>,
+        };
+        inner.run_round(job);
     }
 }
 
@@ -127,5 +417,118 @@ mod tests {
         Pool::new(7).scatter(&mut b, work);
         let fold = |xs: &[f64]| xs.iter().fold(0.0f64, |acc, x| acc + x);
         assert_eq!(fold(&a).to_bits(), fold(&b).to_bits());
+    }
+
+    #[test]
+    fn pool_survives_many_rounds() {
+        // The same pool must dispatch thousands of rounds (the persistent
+        // workers re-park between rounds, never exit early).
+        let pool = Pool::new(3);
+        let mut items = vec![0u64; 5];
+        for round in 0..2000u64 {
+            pool.scatter(&mut items, |i, v| *v += i as u64 + round % 3);
+        }
+        let serial_expect: Vec<u64> = {
+            let mut items = vec![0u64; 5];
+            for round in 0..2000u64 {
+                for (i, v) in items.iter_mut().enumerate() {
+                    *v += i as u64 + round % 3;
+                }
+            }
+            items
+        };
+        assert_eq!(items, serial_expect);
+    }
+
+    #[test]
+    fn clones_share_workers_and_drop_cleanly() {
+        let pool = Pool::new(4);
+        let pool2 = pool.clone();
+        let mut items = vec![0u32; 8];
+        pool.scatter(&mut items, |i, v| *v = i as u32);
+        drop(pool);
+        // The clone still drives the same (alive) workers.
+        pool2.scatter(&mut items, |i, v| *v += i as u32);
+        let expect: Vec<u32> = (0..8).map(|i| 2 * i).collect();
+        assert_eq!(items, expect);
+        // Dropping the last handle joins the helpers (no hang, no leak —
+        // the test finishing at all pins the shutdown path).
+        drop(pool2);
+    }
+
+    #[test]
+    fn scatter_usable_from_any_thread() {
+        // The round lock serializes concurrent callers; a pool shared
+        // across threads must stay correct.
+        let pool = std::sync::Arc::new(Pool::new(3));
+        let mut joins = Vec::new();
+        for t in 0..4 {
+            let p = std::sync::Arc::clone(&pool);
+            joins.push(std::thread::spawn(move || {
+                let mut items = vec![0usize; 17];
+                for _ in 0..50 {
+                    p.scatter(&mut items, |i, v| *v = i * (t + 1));
+                }
+                items
+            }));
+        }
+        for (t, j) in joins.into_iter().enumerate() {
+            let items = j.join().unwrap();
+            let expect: Vec<usize> = (0..17).map(|i| i * (t + 1)).collect();
+            assert_eq!(items, expect);
+        }
+    }
+
+    #[test]
+    fn panicking_job_propagates_and_pool_survives() {
+        let pool = Pool::new(3);
+        let mut items = vec![0u32; 6];
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.scatter(&mut items, |i, v| {
+                // n=6 over 3 slots ⇒ item 4 runs on a helper thread.
+                assert!(i != 4, "boom");
+                *v = i as u32;
+            });
+        }));
+        assert!(result.is_err(), "worker panic must re-raise on the caller");
+        // The pool (and its parked helpers) must survive a panicked round.
+        pool.scatter(&mut items, |i, v| *v = 10 + i as u32);
+        assert_eq!(items, (10..16).collect::<Vec<u32>>());
+    }
+
+    #[test]
+    #[should_panic(expected = "re-entrant")]
+    fn reentrant_scatter_panics_instead_of_deadlocking() {
+        let pool = Pool::new(2);
+        let pool2 = pool.clone();
+        let mut items = vec![0u8; 2];
+        pool.scatter(&mut items, |_, _| {
+            let mut inner = vec![0u8; 2];
+            pool2.scatter(&mut inner, |_, v| *v += 1);
+        });
+    }
+
+    #[test]
+    fn cross_pool_nesting_is_allowed() {
+        // A scatter job may dispatch rounds on a DIFFERENT pool.
+        let outer = Pool::new(2);
+        let inner_pool = Pool::new(2);
+        let mut items = vec![0u32; 2];
+        outer.scatter(&mut items, |i, v| {
+            let mut inner = vec![1u32; 2];
+            inner_pool.scatter(&mut inner, |j, w| *w += j as u32);
+            *v = i as u32 + inner.iter().sum::<u32>();
+        });
+        assert_eq!(items, vec![3, 4]);
+    }
+
+    #[test]
+    fn global_pool_is_shared() {
+        let a = Pool::global();
+        let b = Pool::global();
+        assert_eq!(a.threads(), b.threads());
+        let mut items = vec![0u8; 4];
+        a.scatter(&mut items, |i, v| *v = i as u8);
+        assert_eq!(items, vec![0, 1, 2, 3]);
     }
 }

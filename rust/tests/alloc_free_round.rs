@@ -1,17 +1,21 @@
 //! Pins the zero-allocation steady-state round invariant: once lane
 //! buffers have warmed up, a full GD-SEC optimizer round — θ-diff,
 //! per-worker gradient + sparsify into reused buffers, fused server
-//! apply — performs NO heap allocation on the serial path. (With >1 pool
-//! thread the scoped spawns are the only remaining allocation, which is
-//! why this pin runs the round body inline.)
+//! apply — performs NO heap allocation. This holds on the serial path
+//! AND through the persistent pool: a `Pool::scatter` round is a
+//! stack-held context dispatched to parked workers over a futex-based
+//! mutex/condvar pair, so no spawns, boxes, or channel nodes exist on
+//! the per-round path.
 //!
-//! A counting global allocator wraps `System`; this file contains exactly
-//! one test so no concurrent harness activity can pollute the counter.
+//! A counting global allocator wraps `System` (counting allocations from
+//! EVERY thread, pool workers included); this file contains exactly one
+//! test so no concurrent harness activity can pollute the counter.
 
 use gdsec::algo::gdsec::{GdSecConfig, ServerState, WorkerState, Xi};
 use gdsec::compress::SparseUpdate;
 use gdsec::data::synthetic;
 use gdsec::objectives::Problem;
+use gdsec::util::pool::Pool;
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicU64, Ordering};
 
@@ -90,4 +94,37 @@ fn steady_state_round_allocates_nothing() {
     );
     // Sanity: the run actually optimized (not a no-op loop).
     assert!(server.theta.iter().any(|&t| t != 0.0));
+
+    // --- Persistent-pool phase: the same round body fanned over a
+    //     3-thread pool must also be allocation-free once the pool
+    //     exists (thread spawn happens HERE, before the counter). ---
+    let pool = Pool::new(3);
+    let mut pooled_round = |server: &mut ServerState,
+                            lanes: &mut Vec<(WorkerState, SparseUpdate)>,
+                            theta_diff: &mut Vec<f64>| {
+        server.theta_diff(theta_diff);
+        {
+            let theta: &[f64] = &server.theta;
+            let diff: &[f64] = theta_diff;
+            pool.scatter(lanes, |w, lane| {
+                let (ws, up) = lane;
+                prob.locals[w].grad(theta, ws.grad_mut());
+                ws.sparsify_into(&cfg, m, diff, up);
+            });
+        }
+        server.apply_round(&cfg, lanes.iter().filter(|(_, up)| up.nnz() > 0).map(|(_, up)| up));
+    };
+    for _ in 0..3 {
+        pooled_round(&mut server, &mut lanes, &mut theta_diff);
+    }
+    let before = ALLOC_CALLS.load(Ordering::SeqCst);
+    for _ in 0..25 {
+        pooled_round(&mut server, &mut lanes, &mut theta_diff);
+    }
+    let after = ALLOC_CALLS.load(Ordering::SeqCst);
+    assert_eq!(
+        after - before,
+        0,
+        "steady-state pooled GD-SEC rounds performed heap allocations"
+    );
 }

@@ -1,0 +1,157 @@
+//! Wire-codec robustness properties: everything a worker can put on the
+//! uplink must round-trip BIT-exactly, and everything a malicious or
+//! corrupted peer can put there must be rejected cleanly (`None`, never a
+//! panic or an out-of-range index reaching the aggregation path).
+
+use gdsec::compress::{self, rle, SparseUpdate};
+use gdsec::testing::{check_with, gen, PropConfig};
+use gdsec::util::rng::Pcg64;
+
+/// Random update including the degenerate densities: case-dependent
+/// all-zero (nnz = 0), all-nonzero (nnz = d), and mixed.
+fn random_update(rng: &mut Pcg64, case_mode: usize, d: usize) -> SparseUpdate {
+    let v: Vec<f64> = match case_mode {
+        0 => vec![0.0; d],
+        1 => (0..d).map(|_| rng.normal() + 2.0 * rng.sign()).collect(),
+        _ => gen::vec_mixed(rng, d),
+    };
+    SparseUpdate::from_dense(&v)
+}
+
+#[test]
+fn prop_sparse_roundtrip_bit_exact() {
+    let mode = std::cell::Cell::new(0usize);
+    check_with(
+        PropConfig { cases: 60, seed: 0xC0DEC1 },
+        "encode_sparse/decode_sparse bit-exact roundtrip (incl nnz=0, nnz=d)",
+        |rng| {
+            let m = mode.get();
+            mode.set(m + 1);
+            let d = gen::len(rng, 3000);
+            let u = random_update(rng, m % 3, d);
+            let mut buf = Vec::new();
+            compress::encode_sparse(&u, &mut buf);
+            if buf.len() * 8 != compress::sparse_bits(&u) {
+                return Err(format!(
+                    "bit accounting: {} bytes vs {} bits",
+                    buf.len(),
+                    compress::sparse_bits(&u)
+                ));
+            }
+            let (back, used) =
+                compress::decode_sparse(&buf, d as u32).ok_or("decode failed".to_string())?;
+            if used != buf.len() {
+                return Err(format!("consumed {used} of {}", buf.len()));
+            }
+            if back.idx != u.idx {
+                return Err("index stream mismatch".to_string());
+            }
+            for (k, (a, b)) in back.val.iter().zip(&u.val).enumerate() {
+                if a.to_bits() != b.to_bits() {
+                    return Err(format!("value {k}: {a} vs {b}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_sparse_truncation_rejected() {
+    check_with(
+        PropConfig { cases: 25, seed: 0xC0DEC2 },
+        "decode_sparse rejects every strict prefix",
+        |rng| {
+            let d = gen::len(rng, 400);
+            let u = SparseUpdate::from_dense(&gen::vec_sparse(rng, d, 0.6));
+            let mut buf = Vec::new();
+            compress::encode_sparse(&u, &mut buf);
+            for cut in 0..buf.len() {
+                if compress::decode_sparse(&buf[..cut], d as u32).is_some() {
+                    return Err(format!("prefix of {cut}/{} bytes decoded", buf.len()));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_dense_truncation_rejected_and_roundtrip() {
+    check_with(
+        PropConfig { cases: 25, seed: 0xC0DEC3 },
+        "decode_dense rejects short buffers, roundtrips f32-exact values",
+        |rng| {
+            let d = gen::len(rng, 600);
+            let v = gen::vec_f32_exact(rng, d);
+            let mut buf = Vec::new();
+            compress::encode_dense(&v, &mut buf);
+            let (back, used) =
+                compress::decode_dense(&buf, d).ok_or("decode failed".to_string())?;
+            if used != buf.len() || back != v {
+                return Err("dense roundtrip mismatch".to_string());
+            }
+            for cut in [0, buf.len() / 2, buf.len().saturating_sub(1)] {
+                if cut < buf.len() && compress::decode_dense(&buf[..cut], d).is_some() {
+                    return Err(format!("short buffer of {cut} bytes decoded"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_out_of_range_indices_rejected() {
+    check_with(
+        PropConfig { cases: 25, seed: 0xC0DEC4 },
+        "decode_sparse rejects any index ≥ dim",
+        |rng| {
+            let d = 2 + gen::len(rng, 400);
+            let mut v = gen::vec_sparse(rng, d, 0.5);
+            v[d - 1] = 1.0; // force the top index to be present
+            let u = SparseUpdate::from_dense(&v);
+            let mut buf = Vec::new();
+            compress::encode_sparse(&u, &mut buf);
+            // Exact dimension decodes; any smaller claimed dim must fail
+            // (the encoded top index is then out of range).
+            if compress::decode_sparse(&buf, d as u32).is_none() {
+                return Err("exact-dim decode failed".to_string());
+            }
+            let small = 1 + rng.index(d - 1);
+            if compress::decode_sparse(&buf, small as u32).is_some() {
+                return Err(format!("dim {small} accepted index {}", d - 1));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_overflowing_gap_streams_rejected() {
+    // A gap stream whose cumulative index passes u32::MAX would wrap to a
+    // SMALLER index (a non-monotone index stream) if accepted; both the
+    // gap decoder and the sparse decoder must reject it.
+    check_with(
+        PropConfig { cases: 25, seed: 0xC0DEC5 },
+        "decode rejects gap streams that overflow / go non-monotone",
+        |rng| {
+            let extra = 1 + rng.index(5);
+            let mut buf = Vec::new();
+            rle::put_varint(&mut buf, 1 + extra as u32); // nnz
+            rle::put_varint(&mut buf, u32::MAX); // idx0 = u32::MAX (legal alone)
+            for _ in 0..extra {
+                rle::put_varint(&mut buf, rng.below(1 << 10) as u32); // must overflow
+            }
+            buf.resize(buf.len() + 4 * (1 + extra), 0); // value plane
+            let mut idx = Vec::new();
+            if rle::decode_gaps(&buf[1..], 1 + extra, &mut idx).is_some() {
+                return Err("overflowing gap stream decoded".to_string());
+            }
+            if compress::decode_sparse(&buf, u32::MAX).is_some() {
+                return Err("decode_sparse accepted overflowing stream".to_string());
+            }
+            Ok(())
+        },
+    );
+}

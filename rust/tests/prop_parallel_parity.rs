@@ -11,8 +11,8 @@ use gdsec::algo::gdsec as gdsec_algo;
 use gdsec::algo::gdsec::{GdSecConfig, Xi};
 use gdsec::algo::trace::Trace;
 use gdsec::algo::{cgd, gd, iag, qgd, sgdsec, topj};
-use gdsec::data::synthetic;
-use gdsec::objectives::{ObjectiveKind, Problem};
+use gdsec::data::{synthetic, Features};
+use gdsec::objectives::{GradSplit, ObjectiveKind, Problem};
 use gdsec::testing::{check_with, PropConfig};
 use gdsec::util::pool::Pool;
 use gdsec::util::rng::Pcg64;
@@ -87,6 +87,76 @@ fn prop_gdsec_serial_parallel_parity() {
                         return Err(format!("worker {w} state diverged at {i}"));
                     }
                 }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_spmv_t_blocked_parity() {
+    // The column-blocked/pooled CSR AᵀSpMV must equal the serial scalar
+    // kernel bitwise for any thread count.
+    check_with(
+        PropConfig { cases: 8, seed: 0x5BA5E },
+        "spmv_t_acc pooled 1/4-thread vs serial bit parity",
+        |rng| {
+            let rows = 20 + rng.index(60);
+            let d = 50 + rng.index(400);
+            let ds = synthetic::rcv1_like(rng.next_u64(), rows, d, 8);
+            let Features::Sparse(a) = &ds.x else {
+                return Err("rcv1_like must be sparse".to_string());
+            };
+            let r: Vec<f64> = (0..a.rows).map(|_| rng.normal()).collect();
+            let init: Vec<f64> = (0..d).map(|_| rng.normal()).collect();
+            let mut serial = init.clone();
+            a.spmv_t_acc(0.7, &r, &mut serial);
+            for threads in [1usize, 4] {
+                let pool = Pool::new(threads);
+                let mut pooled = init.clone();
+                a.spmv_t_acc_pooled(0.7, &r, &mut pooled, &pool);
+                for j in 0..d {
+                    if serial[j].to_bits() != pooled[j].to_bits() {
+                        return Err(format!(
+                            "threads={threads} j={j}: {} vs {}",
+                            pooled[j], serial[j]
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_grad_split_and_fstar_parity() {
+    // Intra-worker row-split gradient and the pooled f* estimator: the
+    // fixed lane structure makes 1-thread and 4-thread results bit-equal.
+    check_with(
+        PropConfig { cases: 6, seed: 0xF57A2 },
+        "grad_pooled + estimate_fstar 1 vs 4 threads bit parity",
+        |rng| {
+            let prob = random_problem(rng);
+            let theta: Vec<f64> = (0..prob.d).map(|_| rng.normal() * 0.2).collect();
+            let (p1, p4) = (Pool::new(1), Pool::new(4));
+            // Small row block so even these tiny shards split into
+            // several lanes per worker.
+            let mut s1 = GradSplit::new(&prob, 7);
+            let mut s4 = GradSplit::new(&prob, 7);
+            let mut g1 = vec![0.0; prob.d];
+            let mut g4 = vec![0.0; prob.d];
+            prob.grad_pooled(&theta, &mut g1, &mut s1, &p1);
+            prob.grad_pooled(&theta, &mut g4, &mut s4, &p4);
+            for j in 0..prob.d {
+                if g1[j].to_bits() != g4[j].to_bits() {
+                    return Err(format!("grad_pooled diverged at {j}: {} vs {}", g1[j], g4[j]));
+                }
+            }
+            let f1 = prob.estimate_fstar_pooled(30, &p1);
+            let f4 = prob.estimate_fstar_pooled(30, &p4);
+            if f1.to_bits() != f4.to_bits() {
+                return Err(format!("estimate_fstar diverged: {f1} vs {f4}"));
             }
             Ok(())
         },
