@@ -431,6 +431,57 @@ fn main() {
     reports.push(e2e_serial);
     reports.push(e2e_par);
 
+    // --- nested engine lanes: M=2 workers on a 4-thread pool. With only
+    //     two shards the per-worker fan-out alone could use 2 cores; the
+    //     engine's (worker, row-block) nnz-budget lanes (default budget ⇒
+    //     ~24 blocks/worker at this scale) are what let 4 threads bite.
+    //     Gated in CI: the 4-thread run must not be slower than 1-thread.
+    {
+        let m2_iters = if quick { 6 } else { 40 };
+        let prob2 = Problem::linear(synthetic::mnist_like(7, 4000), 2, 1.0 / 4000.0);
+        let m2_cfg = GdSecConfig {
+            alpha: 1.0 / prob2.lipschitz(),
+            beta: 0.01,
+            xi: Xi::Uniform(200.0 * 2.0),
+            fstar: Some(0.0),
+            eval_every: 10,
+            ..Default::default()
+        };
+        let pool1 = Pool::new(1);
+        let pool4 = Pool::new(4);
+        // Parity check once before timing: the nested block tree is fixed
+        // by (problem, budget), so thread count must not change a bit.
+        let t1 = gdsec_algo::run_scheduled_pooled(&prob2, &m2_cfg, m2_iters, |_k| None, &pool1);
+        let t4 = gdsec_algo::run_scheduled_pooled(&prob2, &m2_cfg, m2_iters, |_k| None, &pool4);
+        assert_eq!(t1.total_bits(), t4.total_bits(), "nested M=2 bit parity broke");
+        assert_eq!(
+            t1.rows.last().unwrap().fval.to_bits(),
+            t4.rows.last().unwrap().fval.to_bits(),
+            "nested M=2 trajectory parity broke"
+        );
+        // Multi-sample timings (the CI gate floor is 1.0, so the ratio
+        // uses medians — robust to a single scheduler hiccup, unlike the
+        // one-shot e2e numbers above).
+        let nested_serial =
+            b.run(&format!("engine nested M=2 iters={m2_iters} threads=1"), || {
+                std::hint::black_box(gdsec_algo::run_scheduled_pooled(
+                    &prob2, &m2_cfg, m2_iters, |_k| None, &pool1,
+                ));
+            });
+        let nested_par =
+            b.run(&format!("engine nested M=2 iters={m2_iters} threads=4"), || {
+                std::hint::black_box(gdsec_algo::run_scheduled_pooled(
+                    &prob2, &m2_cfg, m2_iters, |_k| None, &pool4,
+                ));
+            });
+        context.push((
+            "engine_nested_speedup_m2",
+            Json::num(nested_serial.median_ns / nested_par.median_ns),
+        ));
+        reports.push(nested_serial);
+        reports.push(nested_par);
+    }
+
     println!("\n== hotpath microbenchmarks ==");
     for r in &reports {
         println!("{}", r.report());

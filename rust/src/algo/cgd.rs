@@ -7,8 +7,15 @@
 //! nothing and the server reuses `g_last_m`. Transmitted vectors are
 //! RLE-encoded (structural zeros from sparse data are skipped), per the
 //! paper's "CGD with RLE" variant.
+//!
+//! Runs through the unified round [`engine`]: [`CgdRule`] owns the shared
+//! per-round threshold, each lane its gradient scratch, wire-update
+//! buffer and last-transmitted memory; the server folds the (possibly
+//! stale) memories in worker-id order, so the trajectory matches the
+//! serial one bit-for-bit at any thread count.
 
-use super::gdsec::{fstar_iters, record_pooled};
+use super::engine::{self, CompressRule, EngineLane, EngineOpts, RoundCtx, Sent};
+use super::gdsec::{fstar_iters, ServerState};
 use super::trace::Trace;
 use crate::compress::{self, SparseUpdate};
 use crate::linalg;
@@ -25,88 +32,112 @@ pub struct CgdConfig {
     pub fstar: Option<f64>,
 }
 
+/// One CGD worker lane.
+pub struct CgdLane {
+    g: Vec<f64>,
+    up: SparseUpdate,
+    /// Server-side memory of this worker's last transmitted gradient.
+    last: Vec<f64>,
+}
+
+/// Whole-gradient censoring rule.
+pub struct CgdRule {
+    cfg: CgdConfig,
+    agg: Vec<f64>,
+    /// This round's censor threshold (ξ̃/M)·‖θ^k − θ^{k−1}‖, computed
+    /// once in `begin_round` and shared by every lane.
+    thresh: f64,
+}
+
+impl CgdRule {
+    pub fn new(cfg: CgdConfig, d: usize) -> CgdRule {
+        CgdRule { cfg, agg: vec![0.0; d], thresh: 0.0 }
+    }
+}
+
+impl CompressRule for CgdRule {
+    type Lane = CgdLane;
+
+    fn name(&self) -> String {
+        "CGD".into()
+    }
+
+    fn make_lane(&self, prob: &Problem, _w: usize) -> CgdLane {
+        CgdLane {
+            g: vec![0.0; prob.d],
+            up: SparseUpdate::empty(prob.d),
+            last: vec![0.0; prob.d],
+        }
+    }
+
+    fn wants_theta_diff(&self) -> bool {
+        true
+    }
+
+    fn grad_buf<'l>(&self, lane: &'l mut CgdLane) -> &'l mut [f64] {
+        &mut lane.g
+    }
+
+    fn begin_round(&mut self, ctx: &RoundCtx) {
+        self.thresh = self.cfg.xi / ctx.m as f64 * linalg::nrm2(ctx.theta_diff);
+    }
+
+    fn compress(&self, _ctx: &RoundCtx, _w: usize, lane: &mut CgdLane) -> Option<Sent> {
+        let mut dist_sq = 0.0;
+        for (gi, li) in lane.g.iter().zip(&lane.last) {
+            let dgi = gi - li;
+            dist_sq += dgi * dgi;
+        }
+        if dist_sq.sqrt() <= self.thresh {
+            return None;
+        }
+        // Transmit the full gradient, RLE-coding structural zeros; the
+        // server stores the f32-rounded wire values.
+        lane.up.gather_from(&lane.g);
+        linalg::zero(&mut lane.last);
+        lane.up.add_into(&mut lane.last);
+        Some(Sent {
+            bits: compress::sparse_bits(&lane.up) as u64,
+            entries: lane.up.nnz() as u64,
+        })
+    }
+
+    fn apply(
+        &mut self,
+        _k: usize,
+        server: &mut ServerState,
+        lanes: &[EngineLane<CgdLane>],
+        _pool: &Pool,
+    ) {
+        // The θ update folds the (possibly stale) gradient memories of
+        // ALL workers, in worker-id order.
+        linalg::zero(&mut self.agg);
+        for el in lanes {
+            linalg::axpy(1.0, &el.lane.last, &mut self.agg);
+        }
+        server.theta_prev.copy_from_slice(&server.theta);
+        linalg::axpy(-self.cfg.alpha, &self.agg, &mut server.theta);
+    }
+}
+
 pub fn run(prob: &Problem, cfg: &CgdConfig, iters: usize) -> Trace {
     run_pooled(prob, cfg, iters, Pool::global())
 }
 
-/// CGD with the per-worker gradient + censor test + RLE cost fanned out
-/// over `pool`. Each lane owns its gradient scratch, wire-update buffer
-/// and last-transmitted memory; the server folds the (possibly stale)
-/// memories in worker-id order, so the trajectory matches the serial one
-/// bit-for-bit.
+/// CGD through the engine on an explicit pool.
 pub fn run_pooled(prob: &Problem, cfg: &CgdConfig, iters: usize, pool: &Pool) -> Trace {
-    let d = prob.d;
-    let m = prob.m();
     let fstar = cfg.fstar.unwrap_or_else(|| prob.estimate_fstar(fstar_iters(iters)));
-    let mut trace = Trace::new("CGD", &prob.name, fstar);
-    let mut theta = vec![0.0; d];
-    let mut theta_prev = vec![0.0; d];
-    let mut diff = vec![0.0; d];
-    let mut agg = vec![0.0; d];
-    struct Lane {
-        g: Vec<f64>,
-        up: SparseUpdate,
-        /// Server-side memory of this worker's last transmitted gradient.
-        last: Vec<f64>,
-        sent_bits: u64,
-        sent_entries: u64,
-        sent: bool,
-    }
-    let mut lanes: Vec<Lane> = (0..m)
-        .map(|_| Lane {
-            g: vec![0.0; d],
-            up: SparseUpdate::empty(d),
-            last: vec![0.0; d],
-            sent_bits: 0,
-            sent_entries: 0,
-            sent: false,
-        })
-        .collect();
-    let (mut bits, mut tx, mut entries) = (0u64, 0u64, 0u64);
-    record_pooled(&mut trace, prob, &theta, pool, 0, bits, tx, entries);
-    for k in 1..=iters {
-        linalg::sub(&theta, &theta_prev, &mut diff);
-        let thresh = cfg.xi / m as f64 * linalg::nrm2(&diff);
-        {
-            let theta = &theta;
-            pool.scatter(&mut lanes, |w, lane| {
-                lane.sent = false;
-                prob.locals[w].grad(theta, &mut lane.g);
-                let mut dist_sq = 0.0;
-                for (gi, li) in lane.g.iter().zip(&lane.last) {
-                    let dgi = gi - li;
-                    dist_sq += dgi * dgi;
-                }
-                if dist_sq.sqrt() > thresh {
-                    // Transmit the full gradient, RLE-coding structural
-                    // zeros; the server stores the f32-rounded wire values.
-                    lane.up.gather_from(&lane.g);
-                    lane.sent_bits = compress::sparse_bits(&lane.up) as u64;
-                    lane.sent_entries = lane.up.nnz() as u64;
-                    lane.sent = true;
-                    linalg::zero(&mut lane.last);
-                    lane.up.add_into(&mut lane.last);
-                }
-            });
-        }
-        // Deterministic fold: bit accounting and the θ update from the
-        // (possibly stale) gradient memories, in worker-id order.
-        for lane in lanes.iter().filter(|l| l.sent) {
-            bits += lane.sent_bits;
-            tx += 1;
-            entries += lane.sent_entries;
-        }
-        linalg::zero(&mut agg);
-        for lane in &lanes {
-            linalg::axpy(1.0, &lane.last, &mut agg);
-        }
-        theta_prev.copy_from_slice(&theta);
-        linalg::axpy(-cfg.alpha, &agg, &mut theta);
-        if k % cfg.eval_every == 0 || k == iters {
-            record_pooled(&mut trace, prob, &theta, pool, k, bits, tx, entries);
-        }
-    }
-    trace
+    engine::run_rule(
+        prob,
+        CgdRule::new(cfg.clone(), prob.d),
+        iters,
+        cfg.eval_every,
+        fstar,
+        |_k| None,
+        pool,
+        &EngineOpts::from_env(),
+    )
+    .trace
 }
 
 #[cfg(test)]

@@ -1,0 +1,467 @@
+//! The unified round engine: ONE generic trainer loop shared by GD-SEC
+//! and every baseline.
+//!
+//! Every synchronous method in this repo has the same round shape — each
+//! worker computes a local gradient, applies a *compression rule*
+//! (censor / quantize / top-j / nothing), the server folds the surviving
+//! updates in worker-id order and steps θ. The rule is the ONLY
+//! per-method degree of freedom (exactly the framing of LAQ-style
+//! analyses), so the engine owns everything else:
+//!
+//! * the per-round fan-out over the persistent [`Pool`] (parked workers,
+//!   zero-alloc dispatch),
+//! * the θ / θ-diff bookkeeping and the trace rows with byte-exact bit
+//!   accounting,
+//! * the **nested (worker × row-block) gradient lanes**: every worker's
+//!   shard is pre-cut into contiguous row blocks by an **nnz budget**
+//!   ([`Features::split_rows_by_nnz`](crate::data::Features::split_rows_by_nnz)),
+//!   the flattened (worker, block) units scatter across the pool — so M
+//!   workers saturate many more than M cores — and each worker's blocks
+//!   fold in ascending row order
+//!   ([`LocalObjective::fold_block_grads`](crate::objectives::LocalObjective::fold_block_grads)).
+//!
+//! ## Determinism contract
+//!
+//! The block tree is fixed by the problem and the
+//! [`EngineOpts::nnz_budget`] — never by the pool's thread count — and
+//! both reductions (block→gradient and lane→server) run in a fixed
+//! order, so trajectories are **bit-for-bit identical for any thread
+//! count** (pinned by `tests/prop_parallel_parity.rs`, including forced
+//! multi-block lanes). With the default budget, shards below ~64k nnz
+//! stay single-block, and a one-block fold is bitwise equal to the
+//! serial fused gradient pass — which is how the engine also stays
+//! bit-identical to the threaded [`crate::coordinator`] (whose native
+//! workers run the same tree via
+//! [`LocalObjective::grad_blocked`](crate::objectives::LocalObjective::grad_blocked)).
+//!
+//! Steady-state rounds allocate nothing: lanes, block buffers, and the
+//! θ-diff scratch are built once, and a [`Pool::scatter`] round is a
+//! stack context + fn pointer (pinned by `tests/alloc_free_round.rs`,
+//! which drives real [`Engine::step`] rounds under a counting
+//! allocator). Future scenarios — async rounds, device placement,
+//! straggler schedules — plug in as rules or engine hooks without
+//! touching the trainers.
+
+use super::gdsec::ServerState;
+use super::trace::{Trace, TraceRow};
+use crate::objectives::{GradSplit, Problem};
+use crate::util::pool::Pool;
+
+/// Wire accounting for one worker's transmission in one round.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Sent {
+    /// Payload bits put on the uplink (the paper's metric).
+    pub bits: u64,
+    /// Non-zero entries carried by the message.
+    pub entries: u64,
+}
+
+/// Immutable shared state a rule sees during a round's parallel phase.
+#[derive(Clone, Copy)]
+pub struct RoundCtx<'a> {
+    /// The problem (shard access for `Custom`-gradient rules).
+    pub prob: &'a Problem,
+    /// Iteration number (1-based; 0 is the initial iterate).
+    pub k: usize,
+    /// Worker count M.
+    pub m: usize,
+    /// θ^k.
+    pub theta: &'a [f64],
+    /// θ^k − θ^{k−1} (all zeros unless the rule wants it).
+    pub theta_diff: &'a [f64],
+    /// max_i |θ^k_i − θ^{k−1}_i| (0.0 unless the rule wants the diff).
+    pub diff_max: f64,
+}
+
+/// Who computes the worker gradient.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GradMode {
+    /// The engine computes the full local gradient into
+    /// [`CompressRule::grad_buf`] through the nested block lanes before
+    /// calling `compress` (deterministic full-batch methods).
+    Full,
+    /// The rule computes its own gradient inside `compress` (stochastic
+    /// methods with per-lane RNG streams — row-split lanes cannot apply).
+    Custom,
+}
+
+/// One worker's slot in the engine's fan-out: the rule's lane state plus
+/// this round's wire accounting (`None` = inactive or censored-silent).
+pub struct EngineLane<L> {
+    pub lane: L,
+    pub sent: Option<Sent>,
+}
+
+/// A compression rule: the per-method degree of freedom the engine is
+/// parameterized by. Parallel-phase methods take `&self` (they run
+/// concurrently across lanes); sequential hooks take `&mut self`.
+pub trait CompressRule: Sync {
+    /// Per-worker state (error memories, RNG streams, wire buffers …).
+    type Lane: Send;
+
+    /// Trace label (e.g. "GD-SEC", "top-10").
+    fn name(&self) -> String;
+
+    /// Build worker `w`'s lane.
+    fn make_lane(&self, prob: &Problem, w: usize) -> Self::Lane;
+
+    /// See [`GradMode`].
+    fn grad_mode(&self) -> GradMode {
+        GradMode::Full
+    }
+
+    /// Rule needs θ^k − θ^{k−1} each round (censoring thresholds).
+    fn wants_theta_diff(&self) -> bool {
+        false
+    }
+
+    /// Where the engine writes the full local gradient (`Full` mode).
+    fn grad_buf<'l>(&self, _lane: &'l mut Self::Lane) -> &'l mut [f64] {
+        &mut []
+    }
+
+    /// Sequential hook before the fan-out (per-round step sizes, shared
+    /// censoring thresholds).
+    fn begin_round(&mut self, _ctx: &RoundCtx) {}
+
+    /// Worker `w`'s compression step (parallel; lane-local state only).
+    /// Returns the wire accounting, or `None` for a silent round.
+    fn compress(&self, ctx: &RoundCtx, w: usize, lane: &mut Self::Lane) -> Option<Sent>;
+
+    /// Rule performs a pre-loop memory-seeding round (NoUnif-IAG): every
+    /// worker's gradient is computed and [`seed`](Self::seed) transmits it
+    /// before iteration 1.
+    fn seeds_memories(&self) -> bool {
+        false
+    }
+
+    /// Seeding transmission for worker `w` (parallel, `Full` mode only).
+    fn seed(&self, _w: usize, _lane: &mut Self::Lane) -> Sent {
+        unreachable!("rule does not seed memories")
+    }
+
+    /// Server-side fold + θ step (sequential, worker-id order is the
+    /// caller's guarantee). `k` is the 1-based iteration.
+    fn apply(
+        &mut self,
+        k: usize,
+        server: &mut ServerState,
+        lanes: &[EngineLane<Self::Lane>],
+        pool: &Pool,
+    );
+}
+
+/// Engine tuning knobs.
+#[derive(Debug, Clone)]
+pub struct EngineOpts {
+    /// nnz budget per nested row-block lane
+    /// ([`GradSplit::DEFAULT_NNZ_BUDGET`] unless overridden). Smaller ⇒
+    /// more intra-worker parallelism (and a different — still
+    /// thread-count-independent — summation tree).
+    pub nnz_budget: usize,
+}
+
+impl Default for EngineOpts {
+    fn default() -> EngineOpts {
+        EngineOpts { nnz_budget: GradSplit::DEFAULT_NNZ_BUDGET }
+    }
+}
+
+impl EngineOpts {
+    /// Default opts with the `GDSEC_NNZ_BUDGET` env override (read per
+    /// call; constant within a process, so every run in a process sees
+    /// the same block tree).
+    pub fn from_env() -> EngineOpts {
+        let nnz_budget = std::env::var("GDSEC_NNZ_BUDGET")
+            .ok()
+            .and_then(|s| s.parse::<usize>().ok())
+            .filter(|&b| b >= 1)
+            .unwrap_or(GradSplit::DEFAULT_NNZ_BUDGET);
+        EngineOpts { nnz_budget }
+    }
+}
+
+/// Final state of an engine run.
+pub struct EngineRun<R: CompressRule> {
+    pub trace: Trace,
+    pub server: ServerState,
+    pub rule: R,
+    pub lanes: Vec<R::Lane>,
+}
+
+/// Cumulative wire accounting.
+#[derive(Debug, Clone, Copy, Default)]
+struct Acct {
+    bits: u64,
+    tx: u64,
+    entries: u64,
+}
+
+/// The resumable engine: [`new`](Engine::new) builds every buffer once,
+/// [`step`](Engine::step) runs one allocation-free optimizer round, and
+/// [`record`](Engine::record) appends a trace row. [`run_rule`] is the
+/// convenience driver the trainers use.
+pub struct Engine<'p, R: CompressRule> {
+    prob: &'p Problem,
+    pool: &'p Pool,
+    pub rule: R,
+    pub server: ServerState,
+    lanes: Vec<EngineLane<R::Lane>>,
+    /// Fixed nested (worker, row-block) lane tree (`Full`-grad rules).
+    split: Option<GradSplit>,
+    /// Lane-index span of each worker's blocks inside `split`.
+    spans: Vec<(usize, usize)>,
+    /// Per-round participation flags (reused).
+    flags: Vec<bool>,
+    theta_diff: Vec<f64>,
+    acct: Acct,
+    trace: Trace,
+    k: usize,
+}
+
+impl<'p, R: CompressRule> Engine<'p, R> {
+    pub fn new(prob: &'p Problem, rule: R, pool: &'p Pool, opts: &EngineOpts, fstar: f64) -> Self {
+        let m = prob.m();
+        let d = prob.d;
+        let lanes: Vec<EngineLane<R::Lane>> = (0..m)
+            .map(|w| EngineLane { lane: rule.make_lane(prob, w), sent: None })
+            .collect();
+        let (split, spans) = match rule.grad_mode() {
+            GradMode::Full => {
+                let split = GradSplit::new_by_nnz(prob, opts.nnz_budget);
+                let spans = split.worker_spans(m);
+                (Some(split), spans)
+            }
+            GradMode::Custom => (None, Vec::new()),
+        };
+        let trace = Trace::new(&rule.name(), &prob.name, fstar);
+        Engine {
+            prob,
+            pool,
+            rule,
+            server: ServerState::new(d),
+            lanes,
+            split,
+            spans,
+            flags: vec![true; m],
+            theta_diff: vec![0.0; d],
+            acct: Acct::default(),
+            trace,
+            k: 0,
+        }
+    }
+
+    /// The current iteration (0 before the first [`step`](Engine::step)).
+    pub fn iter(&self) -> usize {
+        self.k
+    }
+
+    /// Record a trace row for the current iterate, evaluating f(θ) with
+    /// per-worker local values fanned out over the pool and summed in
+    /// worker order (bitwise equal to the serial evaluation).
+    pub fn record(&mut self) {
+        self.trace.push(TraceRow {
+            iter: self.k,
+            fval: self.prob.value_pooled(&self.server.theta, self.pool),
+            bits: self.acct.bits,
+            transmissions: self.acct.tx,
+            entries: self.acct.entries,
+        });
+    }
+
+    /// The pre-loop memory-seeding round (rules with
+    /// [`CompressRule::seeds_memories`]): every worker's gradient is
+    /// computed through the nested lanes and [`CompressRule::seed`]
+    /// transmits it; accounting folds in worker-id order. No θ step.
+    pub fn seed_round(&mut self) {
+        debug_assert!(matches!(self.rule.grad_mode(), GradMode::Full));
+        self.flags.fill(true);
+        self.fan_out_full(0, 0.0, true);
+        self.fold_accounting();
+    }
+
+    /// One optimizer round: θ-diff, participation flags, rule pre-hook,
+    /// nested gradient + compress fan-out, accounting fold (worker-id
+    /// order), server apply. Allocation-free after warm-up (for `act ==
+    /// None` schedules and allocation-free rules).
+    pub fn step(&mut self, act: Option<&[usize]>) {
+        self.k += 1;
+        let k = self.k;
+        let diff_max = if self.rule.wants_theta_diff() {
+            // Fused diff + stationarity max — the quantity censoring
+            // thresholds scale with, surfaced as debug telemetry. The
+            // `enabled` gate keeps the disabled path format-free (the
+            // zero-alloc round invariant).
+            let dm = self.server.theta_diff_max(&mut self.theta_diff);
+            if crate::util::enabled(crate::util::Level::Debug) {
+                crate::debugln!("{} k={k}: max|Δθ| = {dm:.3e}", self.trace.algo);
+            }
+            dm
+        } else {
+            0.0
+        };
+        for (w, f) in self.flags.iter_mut().enumerate() {
+            *f = act.map_or(true, |set| set.contains(&w));
+        }
+        {
+            let ctx = RoundCtx {
+                prob: self.prob,
+                k,
+                m: self.lanes.len(),
+                theta: &self.server.theta,
+                theta_diff: &self.theta_diff,
+                diff_max,
+            };
+            self.rule.begin_round(&ctx);
+        }
+        match self.rule.grad_mode() {
+            GradMode::Full => self.fan_out_full(k, diff_max, false),
+            GradMode::Custom => self.fan_out_custom(k, diff_max),
+        }
+        self.fold_accounting();
+        self.rule.apply(k, &mut self.server, &self.lanes, self.pool);
+    }
+
+    /// `Full`-grad fan-out: phase 1 scatters the flattened (worker,
+    /// row-block) units — each block accumulates its private partial —
+    /// and phase 2 scatters the worker lanes, folding each worker's
+    /// blocks in ascending row order into the rule's gradient buffer
+    /// before running `compress` (or `seed`). Both phases assign work by
+    /// fixed chunking, so results are thread-count independent.
+    fn fan_out_full(&mut self, k: usize, diff_max: f64, seeding: bool) {
+        let prob = self.prob;
+        let split = self.split.as_mut().expect("Full-grad rule without a block tree");
+        let flags = &self.flags;
+        let theta: &[f64] = &self.server.theta;
+        self.pool.scatter(&mut split.lanes, |_, bl| {
+            if !flags[bl.worker] {
+                return;
+            }
+            crate::linalg::zero(&mut bl.buf);
+            prob.locals[bl.worker].grad_data_range(theta, bl.start, bl.end, &mut bl.buf);
+        });
+        let split = &*split;
+        let spans = &self.spans;
+        let rule = &self.rule;
+        let ctx = RoundCtx {
+            prob,
+            k,
+            m: self.lanes.len(),
+            theta,
+            theta_diff: &self.theta_diff,
+            diff_max,
+        };
+        self.pool.scatter(&mut self.lanes, |w, el| {
+            if !flags[w] {
+                el.sent = None;
+                return;
+            }
+            let (b0, b1) = spans[w];
+            {
+                let grad = rule.grad_buf(&mut el.lane);
+                prob.locals[w].fold_block_grads(
+                    theta,
+                    split.lanes[b0..b1].iter().map(|bl| bl.buf.as_slice()),
+                    grad,
+                );
+            }
+            el.sent = if seeding {
+                Some(rule.seed(w, &mut el.lane))
+            } else {
+                rule.compress(&ctx, w, &mut el.lane)
+            };
+        });
+    }
+
+    /// `Custom`-grad fan-out: one scatter; the rule computes its own
+    /// gradient inside `compress` (per-lane RNG streams stay per-lane).
+    fn fan_out_custom(&mut self, k: usize, diff_max: f64) {
+        let flags = &self.flags;
+        let rule = &self.rule;
+        let ctx = RoundCtx {
+            prob: self.prob,
+            k,
+            m: self.lanes.len(),
+            theta: &self.server.theta,
+            theta_diff: &self.theta_diff,
+            diff_max,
+        };
+        self.pool.scatter(&mut self.lanes, |w, el| {
+            if !flags[w] {
+                el.sent = None;
+                return;
+            }
+            el.sent = rule.compress(&ctx, w, &mut el.lane);
+        });
+    }
+
+    /// Fold this round's per-lane wire accounting in worker-id order.
+    fn fold_accounting(&mut self) {
+        for el in &self.lanes {
+            if let Some(s) = el.sent {
+                self.acct.bits += s.bits;
+                self.acct.tx += 1;
+                self.acct.entries += s.entries;
+            }
+        }
+    }
+
+    pub fn into_run(self) -> EngineRun<R> {
+        EngineRun {
+            trace: self.trace,
+            server: self.server,
+            rule: self.rule,
+            lanes: self.lanes.into_iter().map(|el| el.lane).collect(),
+        }
+    }
+}
+
+/// The dense server fold shared by the uncompressed-wire rules (GD, QGD,
+/// SGD): `agg = Σ vecs` in the caller's iteration order (worker-id order,
+/// with the rule's own participation filter), then `θ -= α·agg`.
+/// Op-for-op the baselines' historical apply loop, so a rule switching to
+/// this helper never moves a bit.
+pub fn apply_dense_fold<'a, I>(alpha: f64, vecs: I, agg: &mut [f64], theta: &mut [f64])
+where
+    I: Iterator<Item = &'a [f64]>,
+{
+    crate::linalg::zero(agg);
+    for v in vecs {
+        crate::linalg::axpy(1.0, v, agg);
+    }
+    crate::linalg::axpy(-alpha, agg, theta);
+}
+
+/// Run `rule` for `iters` rounds with a participation schedule
+/// (`active(k)`: participating worker ids at iteration k, `None` = all)
+/// and the standard eval cadence (record at iteration 0, every
+/// `eval_every`-th round, and the final round).
+#[allow(clippy::too_many_arguments)]
+pub fn run_rule<R, F>(
+    prob: &Problem,
+    rule: R,
+    iters: usize,
+    eval_every: usize,
+    fstar: f64,
+    mut active: F,
+    pool: &Pool,
+    opts: &EngineOpts,
+) -> EngineRun<R>
+where
+    R: CompressRule,
+    F: FnMut(usize) -> Option<Vec<usize>>,
+{
+    let mut eng = Engine::new(prob, rule, pool, opts, fstar);
+    eng.record();
+    if eng.rule.seeds_memories() {
+        eng.seed_round();
+    }
+    for k in 1..=iters {
+        let act = active(k);
+        eng.step(act.as_deref());
+        if k % eval_every == 0 || k == iters {
+            eng.record();
+        }
+    }
+    eng.into_run()
+}

@@ -1,15 +1,15 @@
 //! Classical distributed GD — the paper's baseline. Every worker
 //! transmits its full gradient every iteration (32·d bits each).
 //!
-//! Worker gradients fan out over the [`Pool`]; each lane owns a reusable
-//! gradient buffer and rounds it to the f32 wire precision in-thread, and
-//! the server folds lanes in worker-id order — bit-for-bit identical to
-//! the serial trajectory for any thread count.
+//! Runs through the unified round [`engine`]: [`GdRule`] rounds each
+//! lane's gradient to the f32 wire precision in-thread and the server
+//! folds lanes in worker-id order — bit-for-bit identical to the serial
+//! trajectory for any thread count.
 
-use super::gdsec::{fstar_iters, record_pooled};
+use super::engine::{self, CompressRule, EngineLane, EngineOpts, RoundCtx, Sent};
+use super::gdsec::{fstar_iters, ServerState};
 use super::trace::Trace;
 use crate::compress;
-use crate::linalg;
 use crate::objectives::Problem;
 use crate::util::pool::Pool;
 
@@ -19,6 +19,63 @@ pub struct GdConfig {
     pub eval_every: usize,
     /// Known/precomputed f* (skips the internal estimate when set).
     pub fstar: Option<f64>,
+}
+
+/// One GD worker lane: the reusable gradient buffer.
+pub struct GdLane {
+    g: Vec<f64>,
+}
+
+/// Dense full-gradient "compression": f32 wire rounding only.
+pub struct GdRule {
+    cfg: GdConfig,
+    agg: Vec<f64>,
+}
+
+impl GdRule {
+    pub fn new(cfg: GdConfig, d: usize) -> GdRule {
+        GdRule { cfg, agg: vec![0.0; d] }
+    }
+}
+
+impl CompressRule for GdRule {
+    type Lane = GdLane;
+
+    fn name(&self) -> String {
+        "GD".into()
+    }
+
+    fn make_lane(&self, prob: &Problem, _w: usize) -> GdLane {
+        GdLane { g: vec![0.0; prob.d] }
+    }
+
+    fn grad_buf<'l>(&self, lane: &'l mut GdLane) -> &'l mut [f64] {
+        &mut lane.g
+    }
+
+    fn compress(&self, _ctx: &RoundCtx, _w: usize, lane: &mut GdLane) -> Option<Sent> {
+        // Wire: dense f32 vector, 32·d bits — round in-thread.
+        for v in lane.g.iter_mut() {
+            *v = *v as f32 as f64;
+        }
+        let d = lane.g.len();
+        Some(Sent { bits: compress::dense_bits(d) as u64, entries: d as u64 })
+    }
+
+    fn apply(
+        &mut self,
+        _k: usize,
+        server: &mut ServerState,
+        lanes: &[EngineLane<GdLane>],
+        _pool: &Pool,
+    ) {
+        engine::apply_dense_fold(
+            self.cfg.alpha,
+            lanes.iter().filter(|el| el.sent.is_some()).map(|el| el.lane.g.as_slice()),
+            &mut self.agg,
+            &mut server.theta,
+        );
+    }
 }
 
 /// Run distributed GD for `iters` iterations.
@@ -41,56 +98,24 @@ pub fn run_scheduled_pooled<F>(
     prob: &Problem,
     cfg: &GdConfig,
     iters: usize,
-    mut active: F,
+    active: F,
     pool: &Pool,
 ) -> Trace
 where
     F: FnMut(usize) -> Option<Vec<usize>>,
 {
-    let d = prob.d;
     let fstar = cfg.fstar.unwrap_or_else(|| prob.estimate_fstar(fstar_iters(iters)));
-    let mut trace = Trace::new("GD", &prob.name, fstar);
-    let mut theta = vec![0.0; d];
-    let mut agg = vec![0.0; d];
-    struct Lane {
-        g: Vec<f64>,
-        active: bool,
-    }
-    let mut lanes: Vec<Lane> =
-        (0..prob.m()).map(|_| Lane { g: vec![0.0; d], active: true }).collect();
-    let (mut bits, mut tx, mut entries) = (0u64, 0u64, 0u64);
-    record_pooled(&mut trace, prob, &theta, pool, 0, bits, tx, entries);
-    for k in 1..=iters {
-        let act = active(k);
-        for (w, lane) in lanes.iter_mut().enumerate() {
-            lane.active = act.as_ref().map_or(true, |set| set.contains(&w));
-        }
-        {
-            let theta = &theta;
-            pool.scatter(&mut lanes, |w, lane| {
-                if !lane.active {
-                    return;
-                }
-                prob.locals[w].grad(theta, &mut lane.g);
-                // Wire: dense f32 vector, 32·d bits — round in-thread.
-                for v in lane.g.iter_mut() {
-                    *v = *v as f32 as f64;
-                }
-            });
-        }
-        linalg::zero(&mut agg);
-        for lane in lanes.iter().filter(|l| l.active) {
-            linalg::axpy(1.0, &lane.g, &mut agg);
-            bits += compress::dense_bits(d) as u64;
-            tx += 1;
-            entries += d as u64;
-        }
-        linalg::axpy(-cfg.alpha, &agg, &mut theta);
-        if k % cfg.eval_every == 0 || k == iters {
-            record_pooled(&mut trace, prob, &theta, pool, k, bits, tx, entries);
-        }
-    }
-    trace
+    engine::run_rule(
+        prob,
+        GdRule::new(cfg.clone(), prob.d),
+        iters,
+        cfg.eval_every,
+        fstar,
+        active,
+        pool,
+        &EngineOpts::from_env(),
+    )
+    .trace
 }
 
 #[cfg(test)]

@@ -18,23 +18,27 @@
 //! threaded, byte-on-the-wire version lives in [`crate::coordinator`]; an
 //! integration test pins both to identical trajectories.
 //!
-//! ## Parallel zero-alloc engine
+//! ## The unified round engine
 //!
-//! [`run_scheduled_pooled`] fans the per-worker gradient + sparsify step
-//! out across a persistent [`Pool`] (parked workers + round barrier) and
-//! reduces in worker-id order, so the trajectory is **bit-for-bit
-//! identical for any thread count** (pinned by
-//! `tests/prop_parallel_parity.rs`). Per-worker lanes own their
-//! [`WorkerState`] and a reusable [`SparseUpdate`] buffer (arena-style
-//! `reset()` + capacity reuse), and the server's fused
+//! The trainer loop itself lives in [`crate::algo::engine`]: this module
+//! only contributes [`GdSecRule`] (the censor + error-correction
+//! compression rule, Eq. 2) and the GD-SEC server semantics
+//! ([`ServerState::apply_round`], Eq. 6). The engine fans the nested
+//! (worker × nnz-balanced row-block) gradient lanes and the per-worker
+//! sparsify step across the persistent [`Pool`] and reduces in worker-id
+//! order, so the trajectory is **bit-for-bit identical for any thread
+//! count** (pinned by `tests/prop_parallel_parity.rs`). Per-worker lanes
+//! own their [`WorkerState`] and a reusable [`SparseUpdate`] buffer
+//! (arena-style `reset()` + capacity reuse), and the fused
 //! [`ServerState::apply_round`] re-zeroes its aggregation scratch inside
 //! the update pass — after warm-up, an optimizer round performs **zero
 //! heap allocations** at ANY thread count: the pool dispatches a round as
 //! a stack context + function pointer, no spawns, no boxing (pinned by
-//! `tests/alloc_free_round.rs` for both the serial and the pooled round
-//! body).
+//! `tests/alloc_free_round.rs`, which drives real engine rounds under a
+//! counting allocator).
 
-use super::trace::{Trace, TraceRow};
+use super::engine::{self, CompressRule, EngineLane, EngineOpts, RoundCtx, Sent};
+use super::trace::Trace;
 use crate::compress::{self, SparseUpdate};
 use crate::linalg;
 use crate::objectives::Problem;
@@ -309,20 +313,75 @@ impl ServerState {
     }
 }
 
-/// One worker's slot in the round fan-out: its GD-SEC state, a reusable
-/// wire-update buffer, and this round's participation flag. Lanes are the
-/// unit [`Pool::scatter`] distributes across threads; everything a lane
-/// touches in the parallel section is lane-local.
+/// One worker's slot in the engine fan-out: its GD-SEC state and a
+/// reusable wire-update buffer. Everything a lane touches in the
+/// parallel section is lane-local.
 #[derive(Debug, Clone)]
 pub struct WorkerLane {
     pub ws: WorkerState,
     pub up: SparseUpdate,
-    active: bool,
 }
 
 impl WorkerLane {
     pub fn new(d: usize) -> WorkerLane {
-        WorkerLane { ws: WorkerState::new(d), up: SparseUpdate::empty(d), active: true }
+        WorkerLane { ws: WorkerState::new(d), up: SparseUpdate::empty(d) }
+    }
+}
+
+/// The GD-SEC compression rule for the unified round [`engine`]: censor
+/// the gradient difference component-wise (Eq. 2) with error correction
+/// and state variables on the worker, apply Eq. 6 on the server.
+pub struct GdSecRule {
+    cfg: GdSecConfig,
+}
+
+impl GdSecRule {
+    pub fn new(cfg: GdSecConfig) -> GdSecRule {
+        GdSecRule { cfg }
+    }
+}
+
+impl CompressRule for GdSecRule {
+    type Lane = WorkerLane;
+
+    fn name(&self) -> String {
+        "GD-SEC".into()
+    }
+
+    fn make_lane(&self, prob: &Problem, _w: usize) -> WorkerLane {
+        WorkerLane::new(prob.d)
+    }
+
+    fn wants_theta_diff(&self) -> bool {
+        true
+    }
+
+    fn grad_buf<'l>(&self, lane: &'l mut WorkerLane) -> &'l mut [f64] {
+        lane.ws.grad_mut()
+    }
+
+    fn compress(&self, ctx: &RoundCtx, _w: usize, lane: &mut WorkerLane) -> Option<Sent> {
+        lane.ws.sparsify_into(&self.cfg, ctx.m, ctx.theta_diff, &mut lane.up);
+        if lane.up.nnz() == 0 {
+            return None;
+        }
+        Some(Sent {
+            bits: compress::sparse_bits(&lane.up) as u64,
+            entries: lane.up.nnz() as u64,
+        })
+    }
+
+    fn apply(
+        &mut self,
+        _k: usize,
+        server: &mut ServerState,
+        lanes: &[EngineLane<WorkerLane>],
+        _pool: &Pool,
+    ) {
+        server.apply_round(
+            &self.cfg,
+            lanes.iter().filter(|el| el.sent.is_some()).map(|el| &el.lane.up),
+        );
     }
 }
 
@@ -370,102 +429,50 @@ where
     run_states(prob, cfg, iters, active, pool).trace
 }
 
-/// [`run_scheduled_pooled`] returning the final states as well.
+/// [`run_scheduled_pooled`] returning the final states as well
+/// (engine defaults; `GDSEC_NNZ_BUDGET` tunes the nested lanes).
 pub fn run_states<F>(
     prob: &Problem,
     cfg: &GdSecConfig,
     iters: usize,
-    mut active: F,
+    active: F,
     pool: &Pool,
 ) -> GdSecRun
 where
     F: FnMut(usize) -> Option<Vec<usize>>,
 {
-    let d = prob.d;
-    let m = prob.m();
-    let fstar = cfg.fstar.unwrap_or_else(|| prob.estimate_fstar(fstar_iters(iters)));
-    let mut trace = Trace::new("GD-SEC", &prob.name, fstar);
-    let mut server = ServerState::new(d);
-    let mut lanes: Vec<WorkerLane> = (0..m).map(|_| WorkerLane::new(d)).collect();
-    let mut theta_diff = vec![0.0; d];
-    let mut bits: u64 = 0;
-    let mut transmissions: u64 = 0;
-    let mut entries: u64 = 0;
-
-    record_pooled(&mut trace, prob, &server.theta, pool, 0, bits, transmissions, entries);
-    for k in 1..=iters {
-        // Fused diff + stationarity max: the max is the quantity the
-        // censoring thresholds scale with — free round telemetry. The
-        // explicit `enabled` gate keeps the disabled path format- and
-        // allocation-free (the zero-alloc round invariant).
-        let diff_max = server.theta_diff_max(&mut theta_diff);
-        if crate::util::enabled(crate::util::Level::Debug) {
-            crate::debugln!("gd-sec k={k}: max|Δθ| = {diff_max:.3e}");
-        }
-        let act = active(k);
-        for (w, lane) in lanes.iter_mut().enumerate() {
-            lane.active = act.as_ref().map_or(true, |set| set.contains(&w));
-        }
-        worker_round(prob, cfg, &server.theta, &theta_diff, &mut lanes, pool);
-        for lane in lanes.iter().filter(|l| l.active && l.up.nnz() > 0) {
-            bits += compress::sparse_bits(&lane.up) as u64;
-            transmissions += 1;
-            entries += lane.up.nnz() as u64;
-        }
-        server.apply_round(
-            cfg,
-            lanes.iter().filter(|l| l.active && l.up.nnz() > 0).map(|l| &l.up),
-        );
-        if k % cfg.eval_every == 0 || k == iters {
-            record_pooled(&mut trace, prob, &server.theta, pool, k, bits, transmissions, entries);
-        }
-    }
-    GdSecRun { trace, server, workers: lanes.into_iter().map(|l| l.ws).collect() }
+    run_states_opts(prob, cfg, iters, active, pool, &EngineOpts::from_env())
 }
 
-/// The parallel half-round: every active lane computes its local gradient
-/// and censors it into the lane's reusable update buffer. Lane `w` reads
-/// only shared immutable state (θ, θ-diff, shard `w`) and writes only
-/// lane `w` — the reduction order is entirely the caller's.
-fn worker_round(
+/// [`run_states`] with explicit [`EngineOpts`] (tests force multi-block
+/// nested lanes through this).
+pub fn run_states_opts<F>(
     prob: &Problem,
     cfg: &GdSecConfig,
-    theta: &[f64],
-    theta_diff: &[f64],
-    lanes: &mut [WorkerLane],
+    iters: usize,
+    active: F,
     pool: &Pool,
-) {
-    let m = lanes.len();
-    pool.scatter(lanes, |w, lane| {
-        if !lane.active {
-            return;
-        }
-        prob.locals[w].grad(theta, &mut lane.ws.grad);
-        lane.ws.sparsify_into(cfg, m, theta_diff, &mut lane.up);
-    });
-}
-
-/// Record a trace row, evaluating f(θ) with per-worker local values
-/// fanned out over `pool` and summed in worker order (bitwise equal to
-/// the serial evaluation).
-#[allow(clippy::too_many_arguments)]
-pub(crate) fn record_pooled(
-    trace: &mut Trace,
-    prob: &Problem,
-    theta: &[f64],
-    pool: &Pool,
-    iter: usize,
-    bits: u64,
-    transmissions: u64,
-    entries: u64,
-) {
-    trace.push(TraceRow {
-        iter,
-        fval: prob.value_pooled(theta, pool),
-        bits,
-        transmissions,
-        entries,
-    });
+    opts: &EngineOpts,
+) -> GdSecRun
+where
+    F: FnMut(usize) -> Option<Vec<usize>>,
+{
+    let fstar = cfg.fstar.unwrap_or_else(|| prob.estimate_fstar(fstar_iters(iters)));
+    let run = engine::run_rule(
+        prob,
+        GdSecRule::new(cfg.clone()),
+        iters,
+        cfg.eval_every,
+        fstar,
+        active,
+        pool,
+        opts,
+    );
+    GdSecRun {
+        trace: run.trace,
+        server: run.server,
+        workers: run.lanes.into_iter().map(|l| l.ws).collect(),
+    }
 }
 
 /// Heuristic horizon for the f* estimate: far past the experiment length.

@@ -2,8 +2,18 @@
 //! (Schmidt et al. [57]): one worker per iteration transmits a fresh
 //! gradient (chosen with probability ∝ L_m); the server aggregates it with
 //! the stale gradients of the others.
+//!
+//! Runs through the unified round [`engine`]: the participation schedule
+//! samples exactly one worker per round (the engine skips every other
+//! lane's gradient), the pre-loop seeding round fills all M gradient
+//! memories ([`engine::CompressRule::seeds_memories`]), and the
+//! per-iteration aggregation of all M stored gradients fans over
+//! [`Pool::scatter_blocks`] column blocks — each block summed over
+//! workers in ascending order ⇒ bitwise equal to the serial fold for any
+//! thread count.
 
-use super::gdsec::{fstar_iters, record_pooled};
+use super::engine::{self, CompressRule, EngineLane, EngineOpts, RoundCtx, Sent};
+use super::gdsec::{fstar_iters, ServerState};
 use super::trace::Trace;
 use crate::compress;
 use crate::linalg;
@@ -20,86 +30,105 @@ pub struct IagConfig {
     pub fstar: Option<f64>,
 }
 
+/// One IAG worker lane: the server-side memory of this worker's last
+/// transmitted (f32-rounded) gradient. The engine computes fresh
+/// gradients directly into it; `compress`/`seed` round it to the wire
+/// precision in place.
+pub struct IagLane {
+    mem: Vec<f64>,
+}
+
+/// Incremental-aggregated-gradient rule: dense transmissions, stale
+/// memories for everyone but the sampled worker.
+pub struct IagRule {
+    cfg: IagConfig,
+    agg: Vec<f64>,
+}
+
+impl IagRule {
+    pub fn new(cfg: IagConfig, d: usize) -> IagRule {
+        IagRule { cfg, agg: vec![0.0; d] }
+    }
+
+    fn dense_sent(d: usize) -> Sent {
+        Sent { bits: compress::dense_bits(d) as u64, entries: d as u64 }
+    }
+}
+
+impl CompressRule for IagRule {
+    type Lane = IagLane;
+
+    fn name(&self) -> String {
+        "NoUnif-IAG".into()
+    }
+
+    fn make_lane(&self, prob: &Problem, _w: usize) -> IagLane {
+        IagLane { mem: vec![0.0; prob.d] }
+    }
+
+    fn grad_buf<'l>(&self, lane: &'l mut IagLane) -> &'l mut [f64] {
+        &mut lane.mem
+    }
+
+    fn seeds_memories(&self) -> bool {
+        true
+    }
+
+    fn seed(&self, _w: usize, lane: &mut IagLane) -> Sent {
+        for v in lane.mem.iter_mut() {
+            *v = *v as f32 as f64;
+        }
+        IagRule::dense_sent(lane.mem.len())
+    }
+
+    fn compress(&self, _ctx: &RoundCtx, w: usize, lane: &mut IagLane) -> Option<Sent> {
+        Some(self.seed(w, lane))
+    }
+
+    fn apply(
+        &mut self,
+        _k: usize,
+        server: &mut ServerState,
+        lanes: &[EngineLane<IagLane>],
+        pool: &Pool,
+    ) {
+        // agg = Σ_w mem[w], parallelized over column blocks. Every element
+        // is summed over workers in ascending order regardless of which
+        // thread owns its block, so the result is bitwise identical to
+        // the serial fold.
+        pool.scatter_blocks(&mut self.agg, |j0, block| {
+            linalg::zero(block);
+            for el in lanes {
+                linalg::axpy(1.0, &el.lane.mem[j0..j0 + block.len()], block);
+            }
+        });
+        linalg::axpy(-self.cfg.alpha, &self.agg, &mut server.theta);
+    }
+}
+
 pub fn run(prob: &Problem, cfg: &IagConfig, iters: usize) -> Trace {
     run_pooled(prob, cfg, iters, Pool::global())
 }
 
-/// NoUnif-IAG. Only one worker computes a fresh gradient per iteration,
-/// so unlike the synchronous baselines there is no per-worker fan-out in
-/// the steady state; the pool instead parallelizes the two O(M·d) parts —
-/// the initialization round (per-worker lanes) and the per-iteration
-/// aggregation of all M stored gradients (column blocks, each block
-/// summed over workers in ascending order ⇒ bitwise equal to the serial
-/// fold for any thread count).
+/// NoUnif-IAG through the engine on an explicit pool. The engine's
+/// nested lanes parallelize the two O(M·d)-plus parts — the seeding
+/// round and the sampled worker's fresh gradient — and `apply` the
+/// per-iteration memory aggregation.
 pub fn run_pooled(prob: &Problem, cfg: &IagConfig, iters: usize, pool: &Pool) -> Trace {
-    let d = prob.d;
-    let m = prob.m();
     let fstar = cfg.fstar.unwrap_or_else(|| prob.estimate_fstar(fstar_iters(iters)));
-    let mut trace = Trace::new("NoUnif-IAG", &prob.name, fstar);
     let mut rng = Pcg64::seeded(cfg.seed);
     let weights = prob.worker_lipschitz();
-    let mut theta = vec![0.0; d];
-    let mut g = vec![0.0; d];
-    let mut memory: Vec<Vec<f64>> = vec![vec![0.0; d]; m];
-    let mut agg = vec![0.0; d];
-    let (mut bits, mut tx, mut entries) = (0u64, 0u64, 0u64);
-    record_pooled(&mut trace, prob, &theta, pool, 0, bits, tx, entries);
-    // Initialization round: every worker seeds the server memory once
-    // (bits counted — the aggregate needs all M gradients before IAG can
-    // make its first sensible step). Fanned out per worker.
-    {
-        let theta = &theta;
-        pool.scatter(&mut memory, |w, mem| {
-            prob.locals[w].grad(theta, mem);
-            for v in mem.iter_mut() {
-                *v = *v as f32 as f64;
-            }
-        });
-    }
-    bits += (m * compress::dense_bits(d)) as u64;
-    tx += m as u64;
-    entries += (m * d) as u64;
-    for k in 1..=iters {
-        let w = rng.categorical(&weights);
-        prob.locals[w].grad(&theta, &mut g);
-        for i in 0..d {
-            memory[w][i] = g[i] as f32 as f64;
-        }
-        bits += compress::dense_bits(d) as u64;
-        tx += 1;
-        entries += d as u64;
-        sum_memories(&memory, &mut agg, pool);
-        linalg::axpy(-cfg.alpha, &agg, &mut theta);
-        if k % cfg.eval_every == 0 || k == iters {
-            record_pooled(&mut trace, prob, &theta, pool, k, bits, tx, entries);
-        }
-    }
-    trace
-}
-
-/// agg = Σ_w memory[w], parallelized over column blocks. Every element is
-/// summed over workers in ascending order regardless of which thread owns
-/// its block, so the result is bitwise identical to the serial fold.
-fn sum_memories(memory: &[Vec<f64>], agg: &mut [f64], pool: &Pool) {
-    let d = agg.len();
-    if pool.threads() == 1 || d == 0 {
-        linalg::zero(agg);
-        for mem in memory {
-            linalg::axpy(1.0, mem, agg);
-        }
-        return;
-    }
-    let chunk = d.div_ceil(pool.threads());
-    let mut blocks: Vec<(usize, &mut [f64])> =
-        agg.chunks_mut(chunk).enumerate().map(|(b, s)| (b * chunk, s)).collect();
-    pool.scatter(&mut blocks, |_, item| {
-        let j0 = item.0;
-        let block: &mut [f64] = &mut *item.1;
-        linalg::zero(block);
-        for mem in memory {
-            linalg::axpy(1.0, &mem[j0..j0 + block.len()], block);
-        }
-    });
+    engine::run_rule(
+        prob,
+        IagRule::new(cfg.clone(), prob.d),
+        iters,
+        cfg.eval_every,
+        fstar,
+        |_k| Some(vec![rng.categorical(&weights)]),
+        pool,
+        &EngineOpts::from_env(),
+    )
+    .trace
 }
 
 #[cfg(test)]

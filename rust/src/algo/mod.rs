@@ -2,6 +2,11 @@
 //! baseline from the evaluation section, all emitting [`trace::Trace`]
 //! rows with byte-exact uplink bit accounting.
 //!
+//! Every method runs through the unified round [`engine`] — one generic
+//! trainer loop with nested (worker × nnz-balanced row-block) pool
+//! parallelism — and each module below is just its configuration plus a
+//! [`engine::CompressRule`] implementation:
+//!
 //! | Module | Algorithm | Paper role |
 //! |---|---|---|
 //! | [`gdsec`] | GD-SEC (+ GD-SOEC / no-state-variable ablations) | contribution |
@@ -13,6 +18,7 @@
 //! | [`sgdsec`] | SGD, SGD-SEC, QSGD-SEC | extensions (§IV-G) |
 
 pub mod cgd;
+pub mod engine;
 pub mod gd;
 pub mod gdsec;
 pub mod iag;

@@ -2,15 +2,15 @@
 //! gradient, per the paper's baseline ([30], [56]): 8-bit magnitude +
 //! 1 sign bit per non-zero component + 32 bits for the norm.
 //!
-//! Stochastic rounding draws come from **per-worker** seeded streams
-//! (`SplitMix64::child(seed, w)`, the same scheme the SGD extensions
-//! use), so the worker fan-out over the [`Pool`] is deterministic and
-//! thread-count independent.
+//! Runs through the unified round [`engine`]. Stochastic rounding draws
+//! come from **per-worker** seeded streams (`SplitMix64::child(seed, w)`,
+//! the same scheme the SGD extensions use), so the worker fan-out over
+//! the pool is deterministic and thread-count independent.
 
-use super::gdsec::{fstar_iters, record_pooled};
+use super::engine::{self, CompressRule, EngineLane, EngineOpts, RoundCtx, Sent};
+use super::gdsec::{fstar_iters, ServerState};
 use super::trace::Trace;
 use crate::compress::quantize;
-use crate::linalg;
 use crate::objectives::Problem;
 use crate::util::pool::Pool;
 use crate::util::rng::{Pcg64, SplitMix64};
@@ -26,60 +26,92 @@ pub struct QgdConfig {
     pub fstar: Option<f64>,
 }
 
+/// One QGD worker lane: gradient scratch, dequantized wire image, and the
+/// worker's private rounding stream.
+pub struct QgdLane {
+    g: Vec<f64>,
+    dq: Vec<f64>,
+    rng: Pcg64,
+}
+
+/// QSGD quantization rule.
+pub struct QgdRule {
+    cfg: QgdConfig,
+    agg: Vec<f64>,
+}
+
+impl QgdRule {
+    pub fn new(cfg: QgdConfig, d: usize) -> QgdRule {
+        QgdRule { cfg, agg: vec![0.0; d] }
+    }
+}
+
+impl CompressRule for QgdRule {
+    type Lane = QgdLane;
+
+    fn name(&self) -> String {
+        "QGD".into()
+    }
+
+    fn make_lane(&self, prob: &Problem, w: usize) -> QgdLane {
+        QgdLane {
+            g: vec![0.0; prob.d],
+            dq: vec![0.0; prob.d],
+            rng: Pcg64::seeded(SplitMix64::child(self.cfg.seed, w as u64)),
+        }
+    }
+
+    fn grad_buf<'l>(&self, lane: &'l mut QgdLane) -> &'l mut [f64] {
+        &mut lane.g
+    }
+
+    fn compress(&self, _ctx: &RoundCtx, _w: usize, lane: &mut QgdLane) -> Option<Sent> {
+        let q = quantize::quantize(&lane.g, self.cfg.s, &mut lane.rng);
+        let sent = Sent {
+            bits: quantize::quantized_bits(&q) as u64,
+            entries: q.idx.len() as u64,
+        };
+        quantize::dequantize_into(&q, &mut lane.dq);
+        Some(sent)
+    }
+
+    fn apply(
+        &mut self,
+        _k: usize,
+        server: &mut ServerState,
+        lanes: &[EngineLane<QgdLane>],
+        _pool: &Pool,
+    ) {
+        engine::apply_dense_fold(
+            self.cfg.alpha,
+            lanes
+                .iter()
+                .filter(|el| el.sent.is_some())
+                .map(|el| el.lane.dq.as_slice()),
+            &mut self.agg,
+            &mut server.theta,
+        );
+    }
+}
+
 pub fn run(prob: &Problem, cfg: &QgdConfig, iters: usize) -> Trace {
     run_pooled(prob, cfg, iters, Pool::global())
 }
 
-/// QGD with per-worker gradient + quantization fanned out over `pool`;
-/// dequantized lanes are folded in worker-id order.
+/// QGD through the engine on an explicit pool.
 pub fn run_pooled(prob: &Problem, cfg: &QgdConfig, iters: usize, pool: &Pool) -> Trace {
-    let d = prob.d;
     let fstar = cfg.fstar.unwrap_or_else(|| prob.estimate_fstar(fstar_iters(iters)));
-    let mut trace = Trace::new("QGD", &prob.name, fstar);
-    let mut theta = vec![0.0; d];
-    let mut agg = vec![0.0; d];
-    struct Lane {
-        g: Vec<f64>,
-        dq: Vec<f64>,
-        rng: Pcg64,
-        q_bits: u64,
-        q_entries: u64,
-    }
-    let mut lanes: Vec<Lane> = (0..prob.m())
-        .map(|w| Lane {
-            g: vec![0.0; d],
-            dq: vec![0.0; d],
-            rng: Pcg64::seeded(SplitMix64::child(cfg.seed, w as u64)),
-            q_bits: 0,
-            q_entries: 0,
-        })
-        .collect();
-    let (mut bits, mut tx, mut entries) = (0u64, 0u64, 0u64);
-    record_pooled(&mut trace, prob, &theta, pool, 0, bits, tx, entries);
-    for k in 1..=iters {
-        {
-            let theta = &theta;
-            pool.scatter(&mut lanes, |w, lane| {
-                prob.locals[w].grad(theta, &mut lane.g);
-                let q = quantize::quantize(&lane.g, cfg.s, &mut lane.rng);
-                lane.q_bits = quantize::quantized_bits(&q) as u64;
-                lane.q_entries = q.idx.len() as u64;
-                quantize::dequantize_into(&q, &mut lane.dq);
-            });
-        }
-        linalg::zero(&mut agg);
-        for lane in &lanes {
-            linalg::axpy(1.0, &lane.dq, &mut agg);
-            bits += lane.q_bits;
-            tx += 1;
-            entries += lane.q_entries;
-        }
-        linalg::axpy(-cfg.alpha, &agg, &mut theta);
-        if k % cfg.eval_every == 0 || k == iters {
-            record_pooled(&mut trace, prob, &theta, pool, k, bits, tx, entries);
-        }
-    }
-    trace
+    engine::run_rule(
+        prob,
+        QgdRule::new(cfg.clone(), prob.d),
+        iters,
+        cfg.eval_every,
+        fstar,
+        |_k| None,
+        pool,
+        &EngineOpts::from_env(),
+    )
+    .trace
 }
 
 #[cfg(test)]

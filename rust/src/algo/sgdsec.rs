@@ -3,8 +3,16 @@
 //! `α_k = γ₀(1 + γ₀λk)^{-1}` from the paper's Fig 9 setup, and minibatch
 //! gradients drawn uniformly from each worker's shard (scaled to be
 //! unbiased for the local data term).
+//!
+//! Runs through the unified round [`engine`] in
+//! [`GradMode::Custom`]: the rules compute their own minibatch gradients
+//! from per-worker seeded RNG streams inside `compress`, which keeps the
+//! draw sequence — and so the trajectory — identical for any thread
+//! count (nested row-split lanes don't apply to index-sampled
+//! gradients).
 
-use super::gdsec::{fstar_iters, record_pooled, GdSecConfig, ServerState, WorkerState, Xi};
+use super::engine::{self, CompressRule, EngineLane, EngineOpts, GradMode, RoundCtx, Sent};
+use super::gdsec::{fstar_iters, GdSecConfig, ServerState, WorkerState, Xi};
 use super::trace::Trace;
 use crate::compress::{self, quantize, SparseUpdate};
 use crate::linalg;
@@ -27,107 +35,121 @@ pub struct SgdSecConfig {
     pub fstar: Option<f64>,
 }
 
+impl SgdSecConfig {
+    fn alpha(&self, k: usize) -> f64 {
+        self.gamma0 / (1.0 + self.gamma0 * self.lambda * k as f64)
+    }
+}
+
+/// One plain-SGD worker lane: minibatch gradient scratch + draw stream.
+pub struct SgdLane {
+    g: Vec<f64>,
+    rng: Pcg64,
+}
+
+/// Dense minibatch-SGD rule (no compression beyond f32 wire rounding).
+pub struct SgdRule {
+    cfg: SgdSecConfig,
+    agg: Vec<f64>,
+}
+
+impl SgdRule {
+    pub fn new(cfg: SgdSecConfig, d: usize) -> SgdRule {
+        SgdRule { cfg, agg: vec![0.0; d] }
+    }
+}
+
+impl CompressRule for SgdRule {
+    type Lane = SgdLane;
+
+    fn name(&self) -> String {
+        "SGD".into()
+    }
+
+    fn make_lane(&self, prob: &Problem, w: usize) -> SgdLane {
+        SgdLane {
+            g: vec![0.0; prob.d],
+            rng: Pcg64::seeded(SplitMix64::child(self.cfg.seed, w as u64)),
+        }
+    }
+
+    fn grad_mode(&self) -> GradMode {
+        GradMode::Custom
+    }
+
+    fn compress(&self, ctx: &RoundCtx, w: usize, lane: &mut SgdLane) -> Option<Sent> {
+        stochastic_grad(&ctx.prob.locals[w], ctx.theta, self.cfg.batch, &mut lane.rng, &mut lane.g);
+        // Wire: dense f32 vector — round in-thread.
+        for v in lane.g.iter_mut() {
+            *v = *v as f32 as f64;
+        }
+        let d = lane.g.len();
+        Some(Sent { bits: compress::dense_bits(d) as u64, entries: d as u64 })
+    }
+
+    fn apply(
+        &mut self,
+        k: usize,
+        server: &mut ServerState,
+        lanes: &[EngineLane<SgdLane>],
+        _pool: &Pool,
+    ) {
+        engine::apply_dense_fold(
+            self.cfg.alpha(k),
+            lanes
+                .iter()
+                .filter(|el| el.sent.is_some())
+                .map(|el| el.lane.g.as_slice()),
+            &mut self.agg,
+            &mut server.theta,
+        );
+    }
+}
+
 /// Plain distributed SGD baseline (dense transmissions).
 pub fn run_sgd(prob: &Problem, cfg: &SgdSecConfig, iters: usize) -> Trace {
     run_sgd_pooled(prob, cfg, iters, Pool::global())
 }
 
-/// [`run_sgd`] with the per-worker minibatch gradients fanned out over
-/// `pool` (per-worker seeded RNG streams keep the draw sequence — and so
-/// the trajectory — identical for any thread count).
+/// [`run_sgd`] through the engine on an explicit pool.
 pub fn run_sgd_pooled(prob: &Problem, cfg: &SgdSecConfig, iters: usize, pool: &Pool) -> Trace {
-    let d = prob.d;
     let fstar = cfg.fstar.unwrap_or_else(|| prob.estimate_fstar(fstar_iters(iters)));
-    let mut trace = Trace::new("SGD", &prob.name, fstar);
-    let mut theta = vec![0.0; d];
-    let mut agg = vec![0.0; d];
-    struct Lane {
-        g: Vec<f64>,
-        rng: Pcg64,
-    }
-    let mut lanes: Vec<Lane> = (0..prob.m())
-        .map(|w| Lane {
-            g: vec![0.0; d],
-            rng: Pcg64::seeded(SplitMix64::child(cfg.seed, w as u64)),
-        })
-        .collect();
-    let (mut bits, mut tx, mut entries) = (0u64, 0u64, 0u64);
-    record_pooled(&mut trace, prob, &theta, pool, 0, bits, tx, entries);
-    for k in 1..=iters {
-        let alpha_k = cfg.gamma0 / (1.0 + cfg.gamma0 * cfg.lambda * k as f64);
-        {
-            let theta = &theta;
-            pool.scatter(&mut lanes, |w, lane| {
-                stochastic_grad(&prob.locals[w], theta, cfg.batch, &mut lane.rng, &mut lane.g);
-                // Wire: dense f32 vector — round in-thread.
-                for v in lane.g.iter_mut() {
-                    *v = *v as f32 as f64;
-                }
-            });
-        }
-        linalg::zero(&mut agg);
-        for lane in &lanes {
-            linalg::axpy(1.0, &lane.g, &mut agg);
-            bits += compress::dense_bits(d) as u64;
-            tx += 1;
-            entries += d as u64;
-        }
-        linalg::axpy(-alpha_k, &agg, &mut theta);
-        if k % cfg.eval_every == 0 || k == iters {
-            record_pooled(&mut trace, prob, &theta, pool, k, bits, tx, entries);
-        }
-    }
-    trace
+    engine::run_rule(
+        prob,
+        SgdRule::new(cfg.clone(), prob.d),
+        iters,
+        cfg.eval_every,
+        fstar,
+        |_k| None,
+        pool,
+        &EngineOpts::from_env(),
+    )
+    .trace
 }
 
-/// SGD-SEC / QSGD-SEC.
-pub fn run_sgdsec(prob: &Problem, cfg: &SgdSecConfig, iters: usize) -> Trace {
-    run_sgdsec_pooled(prob, cfg, iters, Pool::global())
+/// One SGD-SEC / QSGD-SEC worker lane.
+pub struct SgdSecLane {
+    ws: WorkerState,
+    rng: Pcg64,
+    /// Censored update Δ̂ (pre-quantization).
+    up: SparseUpdate,
+    /// What actually goes on the wire (== `up` unless quantizing).
+    wire: SparseUpdate,
+    dense: Vec<f64>,
 }
 
-/// [`run_sgdsec`] with the per-worker minibatch gradient + censor (+
-/// optional QSGD re-quantization) fanned out over `pool`. Each lane owns
-/// its worker state, RNG stream and wire buffers; the server folds lanes
-/// in worker-id order — bit-for-bit thread-count independent.
-pub fn run_sgdsec_pooled(prob: &Problem, cfg: &SgdSecConfig, iters: usize, pool: &Pool) -> Trace {
-    let d = prob.d;
-    let m = prob.m();
-    let fstar = cfg.fstar.unwrap_or_else(|| prob.estimate_fstar(fstar_iters(iters)));
-    let name = if cfg.quantize_s.is_some() { "QSGD-SEC" } else { "SGD-SEC" };
-    let mut trace = Trace::new(name, &prob.name, fstar);
-    let mut server = ServerState::new(d);
-    struct Lane {
-        ws: WorkerState,
-        rng: Pcg64,
-        /// Censored update Δ̂ (pre-quantization).
-        up: SparseUpdate,
-        /// What actually goes on the wire (== `up` unless quantizing).
-        wire: SparseUpdate,
-        dense: Vec<f64>,
-        sent_bits: u64,
-        sent_entries: u64,
-        sent: bool,
-    }
-    let mut lanes: Vec<Lane> = (0..m)
-        .map(|w| Lane {
-            ws: WorkerState::new(d),
-            rng: Pcg64::seeded(SplitMix64::child(cfg.seed, w as u64)),
-            up: SparseUpdate::empty(d),
-            wire: SparseUpdate::empty(d),
-            dense: vec![0.0; d],
-            sent_bits: 0,
-            sent_entries: 0,
-            sent: false,
-        })
-        .collect();
-    let mut theta_diff = vec![0.0; d];
-    let (mut bits, mut tx, mut entries) = (0u64, 0u64, 0u64);
-    let quantizing = cfg.quantize_s.is_some();
-    record_pooled(&mut trace, prob, &server.theta, pool, 0, bits, tx, entries);
-    for k in 1..=iters {
-        let alpha_k = cfg.gamma0 / (1.0 + cfg.gamma0 * cfg.lambda * k as f64);
+/// SGD-SEC / QSGD-SEC rule: minibatch gradient, GD-SEC censor + error
+/// correction, optional QSGD re-quantization of the survivors.
+pub struct SgdSecRule {
+    cfg: SgdSecConfig,
+    /// Per-round GD-SEC step config (α_k refreshed in `begin_round`).
+    step_cfg: GdSecConfig,
+}
+
+impl SgdSecRule {
+    pub fn new(cfg: SgdSecConfig) -> SgdSecRule {
         let step_cfg = GdSecConfig {
-            alpha: alpha_k,
+            alpha: cfg.gamma0,
             beta: cfg.beta,
             xi: cfg.xi.clone(),
             error_correction: true,
@@ -135,58 +157,112 @@ pub fn run_sgdsec_pooled(prob: &Problem, cfg: &SgdSecConfig, iters: usize, pool:
             eval_every: cfg.eval_every,
             fstar: None,
         };
-        server.theta_diff(&mut theta_diff);
-        {
-            let theta = &server.theta;
-            let theta_diff = &theta_diff;
-            let step_cfg = &step_cfg;
-            pool.scatter(&mut lanes, |w, lane| {
-                let (ws, rng) = (&mut lane.ws, &mut lane.rng);
-                stochastic_grad(&prob.locals[w], theta, cfg.batch, rng, ws.grad_mut());
-                lane.ws.sparsify_into(step_cfg, m, theta_diff, &mut lane.up);
-                if lane.up.nnz() == 0 {
-                    lane.sent = false;
-                    return;
-                }
-                lane.sent = true;
-                match cfg.quantize_s {
-                    None => {
-                        lane.sent_bits = compress::sparse_bits(&lane.up) as u64;
-                        lane.sent_entries = lane.up.nnz() as u64;
-                    }
-                    Some(s) => {
-                        // Quantize the surviving values; EC + h must track
-                        // the *dequantized* wire values so worker and
-                        // server stay mirrored.
-                        linalg::zero(&mut lane.dense);
-                        lane.up.add_into(&mut lane.dense);
-                        let q = quantize::quantize(&lane.dense, s, &mut lane.rng);
-                        lane.sent_bits = quantize::quantized_bits(&q) as u64;
-                        lane.sent_entries = q.idx.len() as u64;
-                        quantize::dequantize_into(&q, &mut lane.dense);
-                        lane.wire.gather_from(&lane.dense);
-                        lane.ws.requantize_fixup(step_cfg, &lane.up, &lane.wire);
-                    }
-                }
-            });
-        }
-        for lane in lanes.iter().filter(|l| l.sent) {
-            bits += lane.sent_bits;
-            tx += 1;
-            entries += lane.sent_entries;
-        }
-        server.apply_round(
-            &step_cfg,
-            lanes
-                .iter()
-                .filter(|l| l.sent)
-                .map(|l| if quantizing { &l.wire } else { &l.up }),
-        );
-        if k % cfg.eval_every == 0 || k == iters {
-            record_pooled(&mut trace, prob, &server.theta, pool, k, bits, tx, entries);
+        SgdSecRule { cfg, step_cfg }
+    }
+}
+
+impl CompressRule for SgdSecRule {
+    type Lane = SgdSecLane;
+
+    fn name(&self) -> String {
+        if self.cfg.quantize_s.is_some() { "QSGD-SEC".into() } else { "SGD-SEC".into() }
+    }
+
+    fn make_lane(&self, prob: &Problem, w: usize) -> SgdSecLane {
+        SgdSecLane {
+            ws: WorkerState::new(prob.d),
+            rng: Pcg64::seeded(SplitMix64::child(self.cfg.seed, w as u64)),
+            up: SparseUpdate::empty(prob.d),
+            wire: SparseUpdate::empty(prob.d),
+            dense: vec![0.0; prob.d],
         }
     }
-    trace
+
+    fn grad_mode(&self) -> GradMode {
+        GradMode::Custom
+    }
+
+    fn wants_theta_diff(&self) -> bool {
+        true
+    }
+
+    fn begin_round(&mut self, ctx: &RoundCtx) {
+        self.step_cfg.alpha = self.cfg.alpha(ctx.k);
+    }
+
+    fn compress(&self, ctx: &RoundCtx, w: usize, lane: &mut SgdSecLane) -> Option<Sent> {
+        stochastic_grad(
+            &ctx.prob.locals[w],
+            ctx.theta,
+            self.cfg.batch,
+            &mut lane.rng,
+            lane.ws.grad_mut(),
+        );
+        lane.ws.sparsify_into(&self.step_cfg, ctx.m, ctx.theta_diff, &mut lane.up);
+        if lane.up.nnz() == 0 {
+            return None;
+        }
+        match self.cfg.quantize_s {
+            None => Some(Sent {
+                bits: compress::sparse_bits(&lane.up) as u64,
+                entries: lane.up.nnz() as u64,
+            }),
+            Some(s) => {
+                // Quantize the surviving values; EC + h must track the
+                // *dequantized* wire values so worker and server stay
+                // mirrored.
+                linalg::zero(&mut lane.dense);
+                lane.up.add_into(&mut lane.dense);
+                let q = quantize::quantize(&lane.dense, s, &mut lane.rng);
+                let sent = Sent {
+                    bits: quantize::quantized_bits(&q) as u64,
+                    entries: q.idx.len() as u64,
+                };
+                quantize::dequantize_into(&q, &mut lane.dense);
+                lane.wire.gather_from(&lane.dense);
+                lane.ws.requantize_fixup(&self.step_cfg, &lane.up, &lane.wire);
+                Some(sent)
+            }
+        }
+    }
+
+    fn apply(
+        &mut self,
+        _k: usize,
+        server: &mut ServerState,
+        lanes: &[EngineLane<SgdSecLane>],
+        _pool: &Pool,
+    ) {
+        let quantizing = self.cfg.quantize_s.is_some();
+        server.apply_round(
+            &self.step_cfg,
+            lanes
+                .iter()
+                .filter(|el| el.sent.is_some())
+                .map(|el| if quantizing { &el.lane.wire } else { &el.lane.up }),
+        );
+    }
+}
+
+/// SGD-SEC / QSGD-SEC.
+pub fn run_sgdsec(prob: &Problem, cfg: &SgdSecConfig, iters: usize) -> Trace {
+    run_sgdsec_pooled(prob, cfg, iters, Pool::global())
+}
+
+/// [`run_sgdsec`] through the engine on an explicit pool.
+pub fn run_sgdsec_pooled(prob: &Problem, cfg: &SgdSecConfig, iters: usize, pool: &Pool) -> Trace {
+    let fstar = cfg.fstar.unwrap_or_else(|| prob.estimate_fstar(fstar_iters(iters)));
+    engine::run_rule(
+        prob,
+        SgdSecRule::new(cfg.clone()),
+        iters,
+        cfg.eval_every,
+        fstar,
+        |_k| None,
+        pool,
+        &EngineOpts::from_env(),
+    )
+    .trace
 }
 
 /// Unbiased minibatch gradient of the local objective.

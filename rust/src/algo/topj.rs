@@ -3,8 +3,13 @@
 //! of its error-corrected gradient, transmits them (RLE-coded indices),
 //! and accumulates the residual. Converges only with a decreasing step
 //! size `α_k = γ₀(1 + γ₀λk)^{-1}` (paper §IV), which we use.
+//!
+//! Runs through the unified round [`engine`]; lane updates fold into the
+//! aggregate in worker-id order (bit-for-bit equal to the serial
+//! trajectory at any thread count).
 
-use super::gdsec::{fstar_iters, record_pooled};
+use super::engine::{self, CompressRule, EngineLane, EngineOpts, RoundCtx, Sent};
+use super::gdsec::{fstar_iters, ServerState};
 use super::trace::Trace;
 use crate::compress::{self, topj, SparseUpdate};
 use crate::linalg;
@@ -23,69 +28,113 @@ pub struct TopJConfig {
     pub fstar: Option<f64>,
 }
 
+impl TopJConfig {
+    fn alpha(&self, k: usize) -> f64 {
+        self.gamma0 / (1.0 + self.gamma0 * self.lambda * k as f64)
+    }
+}
+
+/// One top-j worker lane: gradient scratch, error-corrected delta, error
+/// memory, reusable wire update.
+pub struct TopJLane {
+    g: Vec<f64>,
+    delta: Vec<f64>,
+    err: Vec<f64>,
+    up: SparseUpdate,
+}
+
+/// Fixed-budget top-j selection rule with error correction.
+pub struct TopJRule {
+    cfg: TopJConfig,
+    agg: Vec<f64>,
+}
+
+impl TopJRule {
+    pub fn new(cfg: TopJConfig, d: usize) -> TopJRule {
+        TopJRule { cfg, agg: vec![0.0; d] }
+    }
+}
+
+impl CompressRule for TopJRule {
+    type Lane = TopJLane;
+
+    fn name(&self) -> String {
+        format!("top-{}", self.cfg.j)
+    }
+
+    fn make_lane(&self, prob: &Problem, _w: usize) -> TopJLane {
+        TopJLane {
+            g: vec![0.0; prob.d],
+            delta: vec![0.0; prob.d],
+            err: vec![0.0; prob.d],
+            up: SparseUpdate::empty(prob.d),
+        }
+    }
+
+    fn grad_buf<'l>(&self, lane: &'l mut TopJLane) -> &'l mut [f64] {
+        &mut lane.g
+    }
+
+    fn compress(&self, _ctx: &RoundCtx, _w: usize, lane: &mut TopJLane) -> Option<Sent> {
+        let d = lane.g.len();
+        for i in 0..d {
+            lane.delta[i] = lane.g[i] + lane.err[i];
+        }
+        topj::top_j_update_into(&lane.delta, self.cfg.j, &mut lane.up);
+        // error memory = residual (transmitted values f32-rounded)
+        lane.err.copy_from_slice(&lane.delta);
+        for t in 0..lane.up.idx.len() {
+            let i = lane.up.idx[t] as usize;
+            lane.err[i] = lane.delta[i] - lane.up.val[t] as f64;
+        }
+        if lane.up.nnz() == 0 {
+            return None;
+        }
+        Some(Sent {
+            bits: compress::sparse_bits(&lane.up) as u64,
+            entries: lane.up.nnz() as u64,
+        })
+    }
+
+    fn apply(
+        &mut self,
+        k: usize,
+        server: &mut ServerState,
+        lanes: &[EngineLane<TopJLane>],
+        _pool: &Pool,
+    ) {
+        // Only this round's transmissions fold into the step: unlike
+        // CGD/IAG, top-j has no stale-memory semantics (the transmitted
+        // values already left the error memory), so a lane that sat the
+        // round out must not be re-applied. An active-but-empty update
+        // also carries `sent: None`, and skipping its no-op add is
+        // bitwise identical to folding it.
+        linalg::zero(&mut self.agg);
+        for el in lanes.iter().filter(|el| el.sent.is_some()) {
+            el.lane.up.add_into(&mut self.agg);
+        }
+        linalg::axpy(-self.cfg.alpha(k), &self.agg, &mut server.theta);
+    }
+}
+
 pub fn run(prob: &Problem, cfg: &TopJConfig, iters: usize) -> Trace {
     run_pooled(prob, cfg, iters, Pool::global())
 }
 
-/// Top-j with the per-worker gradient + selection + error-memory update
-/// fanned out over `pool`; lane updates are folded into the aggregate in
-/// worker-id order (bit-for-bit equal to the serial trajectory).
+/// Top-j through the engine on an explicit pool.
 pub fn run_pooled(prob: &Problem, cfg: &TopJConfig, iters: usize, pool: &Pool) -> Trace {
-    let d = prob.d;
-    let m = prob.m();
     let fstar = cfg.fstar.unwrap_or_else(|| prob.estimate_fstar(fstar_iters(iters)));
-    let mut trace = Trace::new(&format!("top-{}", cfg.j), &prob.name, fstar);
-    let mut theta = vec![0.0; d];
-    let mut agg = vec![0.0; d];
-    struct Lane {
-        g: Vec<f64>,
-        delta: Vec<f64>,
-        err: Vec<f64>,
-        up: SparseUpdate,
-    }
-    let mut lanes: Vec<Lane> = (0..m)
-        .map(|_| Lane {
-            g: vec![0.0; d],
-            delta: vec![0.0; d],
-            err: vec![0.0; d],
-            up: SparseUpdate::empty(d),
-        })
-        .collect();
-    let (mut bits, mut tx, mut entries) = (0u64, 0u64, 0u64);
-    record_pooled(&mut trace, prob, &theta, pool, 0, bits, tx, entries);
-    for k in 1..=iters {
-        let alpha_k = cfg.gamma0 / (1.0 + cfg.gamma0 * cfg.lambda * k as f64);
-        {
-            let theta = &theta;
-            pool.scatter(&mut lanes, |w, lane| {
-                prob.locals[w].grad(theta, &mut lane.g);
-                for i in 0..d {
-                    lane.delta[i] = lane.g[i] + lane.err[i];
-                }
-                topj::top_j_update_into(&lane.delta, cfg.j, &mut lane.up);
-                // error memory = residual (transmitted values f32-rounded)
-                lane.err.copy_from_slice(&lane.delta);
-                for t in 0..lane.up.idx.len() {
-                    let i = lane.up.idx[t] as usize;
-                    lane.err[i] = lane.delta[i] - lane.up.val[t] as f64;
-                }
-            });
-        }
-        linalg::zero(&mut agg);
-        for lane in &lanes {
-            lane.up.add_into(&mut agg);
-            if lane.up.nnz() > 0 {
-                bits += compress::sparse_bits(&lane.up) as u64;
-                tx += 1;
-                entries += lane.up.nnz() as u64;
-            }
-        }
-        linalg::axpy(-alpha_k, &agg, &mut theta);
-        if k % cfg.eval_every == 0 || k == iters {
-            record_pooled(&mut trace, prob, &theta, pool, k, bits, tx, entries);
-        }
-    }
-    trace
+    engine::run_rule(
+        prob,
+        TopJRule::new(cfg.clone(), prob.d),
+        iters,
+        cfg.eval_every,
+        fstar,
+        |_k| None,
+        pool,
+        &EngineOpts::from_env(),
+    )
+    .trace
 }
 
 #[cfg(test)]

@@ -57,6 +57,11 @@ pub struct CoordConfig {
     /// not affect the trajectory: every θ_j sees updates in worker-id
     /// order regardless of which block owns it.
     pub pool: Pool,
+    /// Uplink update codec. The default is the paper's sparse format;
+    /// [`protocol::WireFormat::Adaptive`] adds a 1-byte tag and falls
+    /// back to dense when RLE would cost more (the tag is accounted in
+    /// the reported payload bits).
+    pub wire: protocol::WireFormat,
 }
 
 impl CoordConfig {
@@ -72,6 +77,7 @@ impl CoordConfig {
             fstar: 0.0,
             init_theta: None,
             pool: Pool::global().clone(),
+            wire: protocol::WireFormat::default(),
         }
     }
 }
@@ -124,8 +130,9 @@ impl Coordinator {
         for (w, (factory, failure)) in factories.into_iter().zip(failures).enumerate() {
             let (server_end, worker_end) = duplex();
             let wcfg = cfg.gdsec.clone();
+            let wire = cfg.wire;
             handles.push(std::thread::spawn(move || {
-                worker::worker_loop(w as u32, m, wcfg, factory, worker_end, failure)
+                worker::worker_loop(w as u32, m, wcfg, factory, worker_end, failure, wire)
             }));
             ends.push(server_end);
         }
@@ -189,8 +196,9 @@ impl Coordinator {
                         metrics.overhead_bits += protocol::HEADER_LEN as u64 * 8;
                         match protocol::decode(&frame, d as u32) {
                             Ok(Msg::Update { update, local_f: f, .. }) => {
-                                metrics.payload_bits +=
-                                    crate::compress::sparse_bits(&update) as u64;
+                                // Codec-exact for either wire format (the
+                                // adaptive tag byte is real payload).
+                                metrics.payload_bits += protocol::update_payload_bits(&frame);
                                 metrics.transmissions += 1;
                                 metrics.overhead_bits += 64; // reported loss
                                 local_f[w] = Some(f);
@@ -293,9 +301,12 @@ impl Coordinator {
 /// column blocks of (θ, h, agg). Each block zeroes its agg slice, folds
 /// the updates' in-range entries in worker-id order
 /// ([`SparseUpdate::add_range_into`]), and steps its θ/h slice, keeping
-/// the working set cache-resident at RCV1 scale. Per element the
-/// operation sequence is identical to the serial loop, so the trajectory
-/// is bit-for-bit thread-count-independent.
+/// the working set cache-resident at RCV1 scale. Blocks are cut by the
+/// canonical [`Pool::block_width`] (the same contract as
+/// [`Pool::scatter_blocks`]; three zipped slices keep the hand-rolled
+/// scatter here). Per element the operation sequence is identical to the
+/// serial loop, so the trajectory is bit-for-bit
+/// thread-count-independent.
 fn apply_round_blocked(
     theta: &mut [f64],
     h: &mut [f64],
@@ -314,7 +325,7 @@ fn apply_round_blocked(
         h: &'a mut [f64],
         agg: &'a mut [f64],
     }
-    let chunk = d.div_ceil(pool.threads());
+    let chunk = pool.block_width(d);
     let mut blocks: Vec<Block<'_>> = theta
         .chunks_mut(chunk)
         .zip(h.chunks_mut(chunk))
@@ -355,7 +366,7 @@ pub fn run_native(
         .map(|l| {
             let local = l.clone();
             Box::new(move || {
-                Box::new(worker::NativeProvider { local }) as Box<dyn worker::GradProvider>
+                Box::new(worker::NativeProvider::new(local)) as Box<dyn worker::GradProvider>
             }) as ProviderFactory
         })
         .collect();

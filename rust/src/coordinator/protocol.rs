@@ -34,6 +34,11 @@ pub enum MsgKind {
     Silence = 3,
     /// Server → workers: stop.
     Shutdown = 4,
+    /// Worker → server: update in the adaptive wire format
+    /// ([`crate::compress::encode_adaptive`] — a 1-byte tag picks the
+    /// cheaper of sparse-RLE and dense f32; caps weak-censoring rounds
+    /// at `8 + 32·d` payload bits). Decodes to the same [`Msg::Update`].
+    UpdateAdaptive = 5,
 }
 
 impl MsgKind {
@@ -43,9 +48,23 @@ impl MsgKind {
             2 => Some(MsgKind::Update),
             3 => Some(MsgKind::Silence),
             4 => Some(MsgKind::Shutdown),
+            5 => Some(MsgKind::UpdateAdaptive),
             _ => None,
         }
     }
+}
+
+/// Uplink payload encoding for worker updates.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum WireFormat {
+    /// The paper's format: RLE gap-coded indices + f32 values.
+    #[default]
+    Sparse,
+    /// [`crate::compress::encode_adaptive`]: 1 tag byte + the cheaper of
+    /// sparse and dense — an extension beyond the paper, opt-in via
+    /// [`crate::coordinator::CoordConfig::wire`]. The tag byte is real
+    /// payload and is accounted in the reported bit counts.
+    Adaptive,
 }
 
 /// A decoded message.
@@ -59,8 +78,14 @@ pub enum Msg {
     Shutdown,
 }
 
-/// Encode a frame.
+/// Encode a frame in the default (paper) wire format.
 pub fn encode(msg: &Msg, dim: u32) -> Vec<u8> {
+    encode_wire(msg, dim, WireFormat::Sparse)
+}
+
+/// Encode a frame; `wire` selects the update payload codec (only
+/// [`Msg::Update`] frames differ between formats).
+pub fn encode_wire(msg: &Msg, dim: u32, wire: WireFormat) -> Vec<u8> {
     let (kind, round, sender, payload) = match msg {
         Msg::Broadcast { round, theta, active } => {
             let mut p = Vec::with_capacity(1 + theta.len() * 8);
@@ -74,8 +99,17 @@ pub fn encode(msg: &Msg, dim: u32) -> Vec<u8> {
             debug_assert_eq!(update.dim, dim);
             let mut p = Vec::new();
             p.extend_from_slice(&local_f.to_le_bytes());
-            compress::encode_sparse(update, &mut p);
-            (MsgKind::Update, *round, *worker, p)
+            let kind = match wire {
+                WireFormat::Sparse => {
+                    compress::encode_sparse(update, &mut p);
+                    MsgKind::Update
+                }
+                WireFormat::Adaptive => {
+                    compress::encode_adaptive(update, &mut p);
+                    MsgKind::UpdateAdaptive
+                }
+            };
+            (kind, *round, *worker, p)
         }
         Msg::Silence { round, worker, local_f } => {
             (MsgKind::Silence, *round, *worker, local_f.to_le_bytes().to_vec())
@@ -145,13 +179,16 @@ pub fn decode(buf: &[u8], dim: u32) -> Result<Msg, ProtoError> {
             }
             Ok(Msg::Broadcast { round, theta, active })
         }
-        MsgKind::Update => {
+        MsgKind::Update | MsgKind::UpdateAdaptive => {
             if p.len() < 8 {
                 return Err(ProtoError::BadPayload);
             }
             let local_f = f64::from_le_bytes([p[0], p[1], p[2], p[3], p[4], p[5], p[6], p[7]]);
-            let (update, used) =
-                compress::decode_sparse(&p[8..], dim).ok_or(ProtoError::BadPayload)?;
+            let (update, used) = if kind == MsgKind::Update {
+                compress::decode_sparse(&p[8..], dim).ok_or(ProtoError::BadPayload)?
+            } else {
+                compress::decode_adaptive(&p[8..], dim).ok_or(ProtoError::BadPayload)?
+            };
             if 8 + used != p.len() {
                 return Err(ProtoError::BadPayload);
             }
@@ -170,11 +207,22 @@ pub fn decode(buf: &[u8], dim: u32) -> Result<Msg, ProtoError> {
 
 /// The paper-metric payload bits carried by an uplink frame: the encoded
 /// sparse update only (silence and headers cost 0 in the paper's model).
+/// Assumes the default [`WireFormat::Sparse`]; for frames already in
+/// hand use [`update_payload_bits`], which is codec-exact for both
+/// formats.
 pub fn uplink_payload_bits(msg: &Msg) -> u64 {
     match msg {
         Msg::Update { update, .. } => compress::sparse_bits(update) as u64,
         _ => 0,
     }
+}
+
+/// Exact payload bits of an encoded `Update`/`UpdateAdaptive` frame: the
+/// frame bytes minus header and the 8-byte reported loss. For the sparse
+/// format this equals [`crate::compress::sparse_bits`] (the codecs are
+/// length-exact); for the adaptive format it includes the 1-byte tag.
+pub fn update_payload_bits(frame: &[u8]) -> u64 {
+    (frame.len().saturating_sub(HEADER_LEN + 8) * 8) as u64
 }
 
 #[cfg(test)]
@@ -224,6 +272,52 @@ mod tests {
         let expect = crate::compress::sparse_bits(&u) as u64;
         let m = Msg::Update { round: 1, worker: 0, update: u, local_f: 0.0 };
         assert_eq!(uplink_payload_bits(&m), expect);
+    }
+
+    #[test]
+    fn adaptive_update_roundtrip_and_tag_accounting() {
+        // Sparse-cheaper case: decodes to the same Msg; payload bits are
+        // sparse + the 8-bit tag.
+        let mut v = vec![0.0f64; 200];
+        v[3] = 0.5;
+        v[150] = -1.0;
+        let u = SparseUpdate::from_dense(&v);
+        let sparse_cost = crate::compress::sparse_bits(&u) as u64;
+        let m = Msg::Update { round: 4, worker: 1, update: u, local_f: 0.5 };
+        let buf = encode_wire(&m, 200, WireFormat::Adaptive);
+        assert_eq!(decode(&buf, 200).unwrap(), m);
+        assert_eq!(update_payload_bits(&buf), sparse_cost + 8);
+
+        // Dense-cheaper case: a full vector costs 8 + 32·d, less than the
+        // RLE stream.
+        let dense: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        let u = SparseUpdate::from_dense(&dense);
+        let m = Msg::Update { round: 5, worker: 2, update: u.clone(), local_f: -2.0 };
+        let buf = encode_wire(&m, 100, WireFormat::Adaptive);
+        assert_eq!(update_payload_bits(&buf), 8 + 32 * 100);
+        assert!(update_payload_bits(&buf) < crate::compress::sparse_bits(&u) as u64);
+        match decode(&buf, 100).unwrap() {
+            Msg::Update { update, .. } => assert_eq!(update.to_dense(), u.to_dense()),
+            other => panic!("expected update, got {other:?}"),
+        }
+
+        // The sparse wire's accounting helper agrees with sparse_bits.
+        let buf = encode_wire(&m, 100, WireFormat::Sparse);
+        assert_eq!(update_payload_bits(&buf), crate::compress::sparse_bits(&u) as u64);
+    }
+
+    #[test]
+    fn adaptive_rejects_truncation() {
+        let mut v = vec![0.0f64; 50];
+        v[7] = 1.5;
+        let m = Msg::Update {
+            round: 1,
+            worker: 0,
+            update: SparseUpdate::from_dense(&v),
+            local_f: 0.0,
+        };
+        let buf = encode_wire(&m, 50, WireFormat::Adaptive);
+        assert!(decode(&buf[..buf.len() - 1], 50).is_err());
     }
 
     #[test]

@@ -2,10 +2,12 @@
 //! a pluggable [`GradProvider`] (native Rust objective or a PJRT-loaded
 //! XLA executable), run the GD-SEC censor/EC step, and reply.
 
-use super::protocol::{self, Msg};
+use super::protocol::{self, Msg, WireFormat};
 use super::transport::{Recv, WorkerEnd};
+use crate::algo::engine::EngineOpts;
 use crate::algo::gdsec::{GdSecConfig, WorkerState};
 use crate::linalg;
+use crate::objectives::BlockedGrad;
 
 /// Source of local loss/gradient computation — the seam between L3 and the
 /// compiled L2/L1 artifacts.
@@ -19,8 +21,24 @@ pub trait GradProvider {
 }
 
 /// Native (pure Rust) provider over a [`crate::objectives::LocalObjective`].
+///
+/// Gradients run through the same fixed nnz-budget block tree as the
+/// engine's nested lanes
+/// ([`LocalObjective::grad_blocked`](crate::objectives::LocalObjective::grad_blocked),
+/// budget from `GDSEC_NNZ_BUDGET`), executed serially on the worker
+/// thread — which keeps the distributed trajectory bitwise equal to the
+/// single-process engine reference at ANY shard size (pinned by
+/// `tests/integration_coordinator.rs`).
 pub struct NativeProvider {
     pub local: crate::objectives::LocalObjective,
+    plan: BlockedGrad,
+}
+
+impl NativeProvider {
+    pub fn new(local: crate::objectives::LocalObjective) -> NativeProvider {
+        let plan = local.blocked_grad_plan(EngineOpts::from_env().nnz_budget);
+        NativeProvider { local, plan }
+    }
 }
 
 impl GradProvider for NativeProvider {
@@ -29,7 +47,7 @@ impl GradProvider for NativeProvider {
     }
 
     fn loss_grad(&mut self, theta: &[f64], out: &mut [f64]) -> f64 {
-        self.local.grad(theta, out);
+        self.local.grad_blocked(theta, &mut self.plan, out);
         self.local.value(theta)
     }
 }
@@ -47,7 +65,8 @@ pub struct FailurePlan {
 }
 
 /// Run the worker loop until Shutdown (or link loss). `factory` is invoked
-/// on this thread to build the provider.
+/// on this thread to build the provider. `wire` selects the uplink update
+/// codec (the paper's sparse format, or the adaptive tagged format).
 pub fn worker_loop(
     id: u32,
     m_workers: usize,
@@ -55,6 +74,7 @@ pub fn worker_loop(
     factory: ProviderFactory,
     end: WorkerEnd,
     failure: FailurePlan,
+    wire: WireFormat,
 ) {
     let mut provider = factory();
     let d = provider.dim();
@@ -91,7 +111,7 @@ pub fn worker_loop(
                     Msg::Silence { round, worker: id, local_f }
                 };
                 theta_prev.copy_from_slice(&theta);
-                if !end.tx.send(protocol::encode(&reply, d as u32)) {
+                if !end.tx.send(protocol::encode_wire(&reply, d as u32, wire)) {
                     return;
                 }
             }
@@ -117,10 +137,11 @@ mod tests {
         let d = prob.d;
         let local = prob.locals[0].clone();
         let factory: ProviderFactory =
-            Box::new(move || Box::new(NativeProvider { local }) as Box<dyn GradProvider>);
+            Box::new(move || Box::new(NativeProvider::new(local)) as Box<dyn GradProvider>);
         let (server, worker) = duplex();
-        let h =
-            std::thread::spawn(move || worker_loop(0, 1, cfg, factory, worker, failure));
+        let h = std::thread::spawn(move || {
+            worker_loop(0, 1, cfg, factory, worker, failure, WireFormat::Sparse)
+        });
         (server, h, d)
     }
 

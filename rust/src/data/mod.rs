@@ -134,6 +134,41 @@ impl Features {
         }
     }
 
+    /// [`spectral_sq`](Self::spectral_sq) with the sparse path's
+    /// transposed accumulation fanned over `pool`
+    /// ([`CsrMat::power_iter_ata_pooled`] — bitwise identical to the
+    /// serial walk for any thread count). The dense path keeps the
+    /// serial column-blocked kernel. Must not be called from inside a
+    /// scatter job of the same pool.
+    pub fn spectral_sq_pooled(&self, iters: usize, pool: &crate::util::pool::Pool) -> f64 {
+        match self {
+            Features::Dense(m) => crate::linalg::power_iter_ata(m, iters),
+            Features::Sparse(m) => m.power_iter_ata_pooled(iters, pool),
+        }
+    }
+
+    /// Contiguous row blocks greedily filled to an `nnz` budget — the
+    /// work-balanced lane unit of the engine's nested fan-out. Sparse
+    /// shards cut on true nnz ([`CsrMat::split_rows_by_nnz`]); dense
+    /// shards weigh every row at `cols` stored values, so the budget
+    /// degenerates to an equal row count.
+    pub fn split_rows_by_nnz(&self, budget: usize) -> Vec<(usize, usize)> {
+        match self {
+            Features::Sparse(m) => m.split_rows_by_nnz(budget),
+            Features::Dense(m) => {
+                if m.rows == 0 {
+                    return Vec::new();
+                }
+                let per_row = m.cols.max(1);
+                let rows_per_block = (budget.max(1) / per_row).max(1);
+                (0..m.rows)
+                    .step_by(rows_per_block)
+                    .map(|s| (s, (s + rows_per_block).min(m.rows)))
+                    .collect()
+            }
+        }
+    }
+
     /// Per-column sums of squared entries (coordinate-wise smoothness).
     pub fn col_sq_sums(&self) -> Vec<f64> {
         match self {

@@ -21,19 +21,22 @@
 //!
 //! ## Performance architecture
 //!
-//! The per-round hot path is parallel and allocation-free: worker
-//! gradient + sparsify steps, column-blocked sparse/dense kernels, and
-//! server aggregation fan out over a persistent [`util::pool::Pool`]
-//! (parked threads + round barrier, zero-alloc dispatch) with a
-//! deterministic worker-id reduction order (bit-for-bit identical
-//! trajectories for any thread count), per-worker lanes reuse their
-//! update buffers arena-style, and the kernels in [`linalg`] /
-//! [`sparse`] are blocked/unrolled for autovectorization with row-split
+//! Every trainer (GD-SEC and all six baselines) runs through ONE unified
+//! round engine, [`algo::engine`], parameterized by a per-method
+//! [`algo::engine::CompressRule`]. The engine's per-round hot path is
+//! parallel and allocation-free: nested (worker × nnz-balanced
+//! row-block) gradient lanes, compress steps, column-blocked
+//! sparse/dense kernels, and server aggregation fan out over a
+//! persistent [`util::pool::Pool`] (parked threads + round barrier,
+//! zero-alloc dispatch) with fixed reduction orders (bit-for-bit
+//! identical trajectories for any thread count), per-worker lanes reuse
+//! their update buffers arena-style, and the kernels in [`linalg`] /
+//! [`sparse`] are blocked/unrolled for autovectorization with
 //! [`objectives::GradSplit`] lanes covering the M < cores regime.
 //! `GDSEC_THREADS` sets the fan-out width of the shared pool
-//! ([`util::pool::Pool::global`]); `benches/hotpath_micro.rs` writes the
-//! machine-readable perf trajectory to `BENCH_hotpath.json`. See
-//! EXPERIMENTS.md §Perf.
+//! ([`util::pool::Pool::global`]); `GDSEC_NNZ_BUDGET` tunes the nested
+//! lane cut; `benches/hotpath_micro.rs` writes the machine-readable perf
+//! trajectory to `BENCH_hotpath.json`. See EXPERIMENTS.md §Perf.
 
 // Indexed loops over multiple same-length slices are the house style for
 // the numeric kernels — clearer than zip pyramids and equally fast once

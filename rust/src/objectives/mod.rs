@@ -145,21 +145,70 @@ impl LocalObjective {
     /// the two-pass matvec/matvec^T of `grad_indices` — ~2× less memory
     /// traffic on the worker hot loop (EXPERIMENTS.md §Perf).
     pub fn grad(&self, theta: &[f64], out: &mut [f64]) {
-        let m = self.m_workers as f64;
         linalg::zero(out);
         self.grad_data_range(theta, 0, self.shard.n(), out);
+        self.add_regularizer(theta, out);
+    }
+
+    /// Accumulate this worker's regularizer (sub)gradient — λ/M-scaled ℓ2
+    /// or ℓ1 term — into `out`. Shared by every gradient kernel (full,
+    /// minibatch, blocked) so the regularizer arithmetic is identical
+    /// across all of them.
+    pub fn add_regularizer(&self, theta: &[f64], out: &mut [f64]) {
+        let lm = self.lambda / self.m_workers as f64;
         match self.kind {
             ObjectiveKind::Lasso => {
-                let lm = self.lambda / m;
                 for j in 0..theta.len() {
                     out[j] += lm * sign(theta[j]);
                 }
             }
-            _ => {
-                let lm = self.lambda / m;
-                linalg::axpy(lm, theta, out);
+            _ => linalg::axpy(lm, theta, out),
+        }
+    }
+
+    /// Fold pre-computed row-block partial gradients (ascending row
+    /// order, each `zero + grad_data_range` over its block) plus the
+    /// regularizer into `out` — THE reduction tree of the engine's
+    /// nested (worker, row-block) lanes. `grad_blocked` executes the
+    /// same tree serially, so the coordinator's native workers and the
+    /// engine produce bitwise identical gradients for any thread count.
+    /// With a single block this is `copy + regularizer`, bitwise equal
+    /// to [`grad`](Self::grad).
+    pub fn fold_block_grads<'b, I>(&self, theta: &[f64], mut bufs: I, out: &mut [f64])
+    where
+        I: Iterator<Item = &'b [f64]>,
+    {
+        match bufs.next() {
+            None => linalg::zero(out),
+            Some(first) => {
+                out.copy_from_slice(first);
+                for b in bufs {
+                    linalg::axpy(1.0, b, out);
+                }
             }
         }
+        self.add_regularizer(theta, out);
+    }
+
+    /// Build the fixed row-block plan `grad_blocked` folds — the same
+    /// nnz-budget cut the engine's nested lanes use for this shard.
+    pub fn blocked_grad_plan(&self, nnz_budget: usize) -> BlockedGrad {
+        let ranges = self.shard.x.split_rows_by_nnz(nnz_budget);
+        let bufs = ranges.iter().map(|_| vec![0.0; self.dim()]).collect();
+        BlockedGrad { ranges, bufs }
+    }
+
+    /// ∇f_m(θ) through the fixed block tree of `plan`, serially: each
+    /// block accumulates into its private buffer, buffers fold in
+    /// ascending row order ([`fold_block_grads`]), then the regularizer.
+    /// Bitwise identical to the engine's nested lanes at any thread
+    /// count, and to [`grad`](Self::grad) when the plan has ≤ 1 block.
+    pub fn grad_blocked(&self, theta: &[f64], plan: &mut BlockedGrad, out: &mut [f64]) {
+        for (&(start, end), buf) in plan.ranges.iter().zip(plan.bufs.iter_mut()) {
+            linalg::zero(buf);
+            self.grad_data_range(theta, start, end, buf);
+        }
+        self.fold_block_grads(theta, plan.bufs.iter().map(|b| b.as_slice()), out);
     }
 
     /// Data-term gradient contribution of local rows `[start, end)`
@@ -183,7 +232,6 @@ impl LocalObjective {
     /// always exact. Overwrites `out`.
     pub fn grad_indices(&self, theta: &[f64], idx: &[usize], scale: f64, out: &mut [f64]) {
         let n = self.n_total as f64;
-        let m = self.m_workers as f64;
         linalg::zero(out);
         // Residual weights per selected sample, then one X^T pass.
         // For dense shards a row-gather keeps the pass cache-friendly;
@@ -195,26 +243,19 @@ impl LocalObjective {
             w[i] = residual_weight(self.kind, self.shard.y[i], z[i]) * scale / n;
         }
         self.shard.x.matvec_t_acc(1.0, &w, out);
-        match self.kind {
-            ObjectiveKind::Lasso => {
-                let lm = self.lambda / m;
-                for j in 0..theta.len() {
-                    out[j] += lm * sign(theta[j]);
-                }
-            }
-            _ => {
-                let lm = self.lambda / m;
-                linalg::axpy(lm, theta, out);
-            }
-        }
+        self.add_regularizer(theta, out);
     }
 
     /// Smoothness constant L_m of the *smooth part* of f_m (used for
-    /// NoUnif-IAG sampling probabilities and step-size heuristics).
+    /// NoUnif-IAG sampling probabilities and step-size heuristics). The
+    /// power iteration's transposed accumulation runs on the shared
+    /// [`Pool::global`](crate::util::pool::Pool::global) (bitwise equal
+    /// to the serial walk, so L_m never depends on the thread count);
+    /// must not be called from inside a scatter job of that pool.
     pub fn lipschitz(&self) -> f64 {
         let n = self.n_total as f64;
         let m = self.m_workers as f64;
-        let sigma_sq = self.shard.x.spectral_sq(60);
+        let sigma_sq = self.shard.x.spectral_sq_pooled(60, crate::util::pool::Pool::global());
         let curv = loss_curvature_bound(self.kind);
         let reg = match self.kind {
             ObjectiveKind::Lasso => 0.0, // ℓ1 is not smooth; only data term
@@ -248,8 +289,24 @@ fn loss_curvature_bound(kind: ObjectiveKind) -> f64 {
     }
 }
 
-/// Reusable scratch for [`Problem::grad_pooled`]: one lane per
-/// (worker, row-block) with a private d-length accumulator.
+/// A reusable per-worker row-block gradient plan + buffers: the engine's
+/// nested lane tree for ONE shard, executed serially by
+/// [`LocalObjective::grad_blocked`] (the coordinator's native workers use
+/// it so the distributed trajectory stays bitwise equal to the engine's).
+pub struct BlockedGrad {
+    ranges: Vec<(usize, usize)>,
+    bufs: Vec<Vec<f64>>,
+}
+
+impl BlockedGrad {
+    pub fn blocks(&self) -> usize {
+        self.ranges.len()
+    }
+}
+
+/// Reusable scratch for [`Problem::grad_pooled`] and the engine's nested
+/// fan-out: one lane per (worker, row-block) with a private d-length
+/// accumulator.
 ///
 /// The lane structure — which worker, which row range — is FIXED at
 /// construction and independent of the pool's thread count, and the
@@ -261,14 +318,14 @@ fn loss_curvature_bound(kind: ObjectiveKind) -> f64 {
 /// a serial loop over workers.
 pub struct GradSplit {
     d: usize,
-    lanes: Vec<GradSplitLane>,
+    pub(crate) lanes: Vec<GradSplitLane>,
 }
 
-struct GradSplitLane {
-    worker: usize,
-    start: usize,
-    end: usize,
-    buf: Vec<f64>,
+pub(crate) struct GradSplitLane {
+    pub(crate) worker: usize,
+    pub(crate) start: usize,
+    pub(crate) end: usize,
+    pub(crate) buf: Vec<f64>,
 }
 
 impl GradSplit {
@@ -276,6 +333,14 @@ impl GradSplit {
     /// shard splits across every core, large enough that a lane amortizes
     /// its d-length reduce.
     pub const DEFAULT_ROW_BLOCK: usize = 512;
+
+    /// Default nnz budget per lane for [`new_by_nnz`](Self::new_by_nnz):
+    /// comparable work to [`DEFAULT_ROW_BLOCK`](Self::DEFAULT_ROW_BLOCK)
+    /// rows of a dense ~128-wide shard, small enough that one RCV1-scale
+    /// shard still splits across every core. Deliberately large relative
+    /// to the test-suite problems so tiny shards stay single-lane (a
+    /// one-block fold is bitwise equal to the serial fused pass).
+    pub const DEFAULT_NNZ_BUDGET: usize = 65_536;
 
     /// Split every worker's shard into `row_block`-row lanes (the last
     /// lane of a shard may be short; empty shards contribute none).
@@ -294,13 +359,44 @@ impl GradSplit {
         GradSplit { d: prob.d, lanes }
     }
 
-    /// [`new`](Self::new) with [`DEFAULT_ROW_BLOCK`](Self::DEFAULT_ROW_BLOCK).
+    /// Split every worker's shard into lanes greedily filled to an `nnz`
+    /// budget ([`Features::split_rows_by_nnz`]) instead of equal row
+    /// counts — sparse shards pack wildly unequal nnz into equal row
+    /// blocks, so budget-cut lanes balance *work* across the pool.
+    pub fn new_by_nnz(prob: &Problem, nnz_budget: usize) -> GradSplit {
+        let mut lanes = Vec::new();
+        for (w, l) in prob.locals.iter().enumerate() {
+            for (start, end) in l.shard.x.split_rows_by_nnz(nnz_budget) {
+                lanes.push(GradSplitLane { worker: w, start, end, buf: vec![0.0; prob.d] });
+            }
+        }
+        GradSplit { d: prob.d, lanes }
+    }
+
+    /// [`new_by_nnz`](Self::new_by_nnz) with
+    /// [`DEFAULT_NNZ_BUDGET`](Self::DEFAULT_NNZ_BUDGET).
     pub fn for_problem(prob: &Problem) -> GradSplit {
-        GradSplit::new(prob, GradSplit::DEFAULT_ROW_BLOCK)
+        GradSplit::new_by_nnz(prob, GradSplit::DEFAULT_NNZ_BUDGET)
     }
 
     pub fn lanes(&self) -> usize {
         self.lanes.len()
+    }
+
+    /// Per-worker spans into the (worker asc, block asc)-ordered lane
+    /// list: lane indices `[spans[w].0, spans[w].1)` belong to worker `w`.
+    pub(crate) fn worker_spans(&self, m: usize) -> Vec<(usize, usize)> {
+        let mut spans = vec![(0usize, 0usize); m];
+        let mut i = 0;
+        for w in 0..m {
+            let b0 = i;
+            while i < self.lanes.len() && self.lanes[i].worker == w {
+                i += 1;
+            }
+            spans[w] = (b0, i);
+        }
+        debug_assert_eq!(i, self.lanes.len());
+        spans
     }
 }
 
@@ -743,6 +839,58 @@ mod tests {
                     serial[j]
                 );
             }
+        }
+    }
+
+    #[test]
+    fn grad_blocked_single_block_is_bitwise_grad() {
+        // A plan whose budget swallows the whole shard degenerates to
+        // copy + regularizer == the serial fused pass, bit for bit.
+        for kind in [ObjectiveKind::LinReg, ObjectiveKind::Lasso] {
+            let prob = Problem::new(kind, synthetic::dna_like(29, 50), 2, 0.05);
+            let l = &prob.locals[0];
+            let mut rng = Pcg64::seeded(17);
+            let theta: Vec<f64> = (0..prob.d).map(|_| rng.normal() * 0.1).collect();
+            let mut plan = l.blocked_grad_plan(usize::MAX);
+            assert_eq!(plan.blocks(), 1);
+            let mut serial = vec![0.0; prob.d];
+            let mut blocked = vec![0.0; prob.d];
+            l.grad(&theta, &mut serial);
+            l.grad_blocked(&theta, &mut plan, &mut blocked);
+            for j in 0..prob.d {
+                assert_eq!(serial[j].to_bits(), blocked[j].to_bits(), "{kind:?} j={j}");
+            }
+        }
+    }
+
+    #[test]
+    fn grad_blocked_multi_block_matches_grad_numerically() {
+        let prob = Problem::logistic(synthetic::dna_like(31, 64), 2, 0.02);
+        let l = &prob.locals[0];
+        let mut rng = Pcg64::seeded(19);
+        let theta: Vec<f64> = (0..prob.d).map(|_| rng.normal() * 0.1).collect();
+        // Tiny budget forces several blocks even on this tiny shard.
+        let mut plan = l.blocked_grad_plan(64);
+        assert!(plan.blocks() > 1, "budget did not split the shard");
+        let mut serial = vec![0.0; prob.d];
+        let mut blocked = vec![0.0; prob.d];
+        l.grad(&theta, &mut serial);
+        l.grad_blocked(&theta, &mut plan, &mut blocked);
+        for j in 0..prob.d {
+            let denom = serial[j].abs().max(1e-9);
+            assert!(
+                (blocked[j] - serial[j]).abs() / denom < 1e-12,
+                "j={j}: {} vs {}",
+                blocked[j],
+                serial[j]
+            );
+        }
+        // The fold tree is fixed: re-running the plan reproduces the
+        // exact same bits.
+        let mut again = vec![0.0; prob.d];
+        l.grad_blocked(&theta, &mut plan, &mut again);
+        for j in 0..prob.d {
+            assert_eq!(blocked[j].to_bits(), again[j].to_bits());
         }
     }
 

@@ -131,14 +131,35 @@ impl CsrMat {
             self.spmv_t_acc(alpha, r, out);
             return;
         }
-        let chunk = self.cols.div_ceil(pool.threads());
-        let mut blocks: Vec<(usize, &mut [f64])> =
-            out.chunks_mut(chunk).enumerate().map(|(b, s)| (b * chunk, s)).collect();
-        pool.scatter(&mut blocks, |_, item| {
-            let j0 = item.0;
-            let block: &mut [f64] = &mut *item.1;
-            self.spmv_t_acc_block(alpha, r, j0, block);
-        });
+        pool.scatter_blocks(out, |j0, block| self.spmv_t_acc_block(alpha, r, j0, block));
+    }
+
+    /// Cut `[0, rows)` into contiguous row blocks greedily filled to an
+    /// `nnz` budget — the shard-balancing unit of the engine's nested
+    /// (worker, row-block) lanes: CSR shards can pack wildly unequal nnz
+    /// into equal row counts, so lanes are balanced by work, not rows.
+    /// Every block satisfies `nnz(block) ≤ budget` unless it is a single
+    /// row whose own nnz exceeds the budget (a block never overshoots by
+    /// more than that one row). Blocks partition the row range exactly.
+    pub fn split_rows_by_nnz(&self, budget: usize) -> Vec<(usize, usize)> {
+        let budget = budget.max(1);
+        let mut out = Vec::new();
+        let mut start = 0;
+        while start < self.rows {
+            let mut end = start + 1; // always take at least one row
+            let mut acc = self.indptr[end] - self.indptr[start];
+            while end < self.rows {
+                let next = self.indptr[end + 1] - self.indptr[end];
+                if acc + next > budget {
+                    break;
+                }
+                acc += next;
+                end += 1;
+            }
+            out.push((start, end));
+            start = end;
+        }
+        out
     }
 
     /// Squared L2 norm of row i.
@@ -160,6 +181,16 @@ impl CsrMat {
 
     /// Upper bound on sigma_max(A)^2 via power iteration on A^T A.
     pub fn power_iter_ata(&self, iters: usize) -> f64 {
+        self.power_iter_ata_pooled(iters, &crate::util::pool::Pool::serial())
+    }
+
+    /// [`power_iter_ata`](Self::power_iter_ata) with the transposed
+    /// accumulation — the expensive half at RCV1 width — fanned over
+    /// `pool` column blocks ([`spmv_t_acc_pooled`](Self::spmv_t_acc_pooled)
+    /// is bitwise identical to the serial walk, so the estimate never
+    /// depends on the thread count). Must not be called from inside a
+    /// scatter job of the same pool.
+    pub fn power_iter_ata_pooled(&self, iters: usize, pool: &crate::util::pool::Pool) -> f64 {
         let d = self.cols;
         if d == 0 || self.rows == 0 || self.nnz() == 0 {
             return 0.0;
@@ -171,7 +202,7 @@ impl CsrMat {
         for _ in 0..iters {
             self.spmv(&v, &mut av);
             linalg::zero(&mut atav);
-            self.spmv_t_acc(1.0, &av, &mut atav);
+            self.spmv_t_acc_pooled(1.0, &av, &mut atav, pool);
             lambda = linalg::nrm2(&atav);
             if lambda <= 1e-300 {
                 return 0.0;
@@ -335,6 +366,58 @@ mod tests {
                 assert_eq!(serial[j].to_bits(), pooled[j].to_bits(), "threads={threads} j={j}");
             }
         }
+    }
+
+    #[test]
+    fn power_iter_pooled_matches_serial_bitwise() {
+        use crate::util::pool::Pool;
+        let d = 97;
+        let rows: Vec<Vec<(u32, f64)>> = (0..40)
+            .map(|i| {
+                (0..d)
+                    .filter(|j| (i * 5 + j * 2) % 7 == 0)
+                    .map(|j| (j as u32, ((i * d + j) as f64 * 0.21).cos()))
+                    .collect()
+            })
+            .collect();
+        let a = CsrMat::from_rows(d, &rows);
+        let serial = a.power_iter_ata(40);
+        for threads in [2usize, 4] {
+            let pooled = a.power_iter_ata_pooled(40, &Pool::new(threads));
+            assert_eq!(serial.to_bits(), pooled.to_bits(), "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn split_rows_by_nnz_partitions_and_respects_budget() {
+        // Rows with nnz 2, 0, 2 and an 11-nnz monster row.
+        let d = 16;
+        let rows: Vec<Vec<(u32, f64)>> = vec![
+            vec![(0, 1.0), (3, 1.0)],
+            vec![],
+            vec![(1, 1.0), (2, 1.0)],
+            (0..11).map(|j| (j as u32, 1.0)).collect(),
+            vec![(5, 1.0)],
+        ];
+        let a = CsrMat::from_rows(d, &rows);
+        let blocks = a.split_rows_by_nnz(4);
+        // Exact partition in order.
+        let mut cursor = 0;
+        for &(s, e) in &blocks {
+            assert_eq!(s, cursor);
+            assert!(e > s);
+            cursor = e;
+        }
+        assert_eq!(cursor, a.rows);
+        // Budget respected except for single monster rows.
+        for &(s, e) in &blocks {
+            let nnz = a.indptr[e] - a.indptr[s];
+            assert!(nnz <= 4 || e - s == 1, "block {s}..{e} nnz={nnz}");
+        }
+        // The monster row sits alone.
+        assert!(blocks.contains(&(3, 4)));
+        // Empty matrix: no blocks.
+        assert!(CsrMat::from_rows(4, &[]).split_rows_by_nnz(4).is_empty());
     }
 
     #[test]

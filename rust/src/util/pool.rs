@@ -339,6 +339,47 @@ impl Pool {
         self.threads
     }
 
+    /// Canonical width of the contiguous blocks this pool fans a
+    /// length-`n` range into: one block per thread, last block short.
+    /// Every column-blocked kernel in the crate (`scatter_blocks`, the
+    /// coordinator's blocked server apply) derives its chunking from
+    /// this ONE function, so the bitwise contract — each element owned
+    /// by exactly one block, blocks ascending — is pinned in one place.
+    pub fn block_width(&self, n: usize) -> usize {
+        n.div_ceil(self.threads).max(1)
+    }
+
+    /// Fan `f(j0, block)` over the canonical contiguous blocks of `out`
+    /// (`j0` = the block's global start index). Each element of `out`
+    /// belongs to exactly one block and blocks are cut by
+    /// [`block_width`](Self::block_width), so a kernel whose per-element
+    /// accumulation order does not depend on the block boundaries (the
+    /// contract all callers uphold) produces bitwise identical results
+    /// for any thread count. With 1 thread the whole slice is one block
+    /// run inline — no Vec of block handles is built.
+    pub fn scatter_blocks<T, F>(&self, out: &mut [T], f: F)
+    where
+        T: Send,
+        F: Fn(usize, &mut [T]) + Sync,
+    {
+        let n = out.len();
+        if n == 0 {
+            return;
+        }
+        if self.threads == 1 {
+            f(0, out);
+            return;
+        }
+        let w = self.block_width(n);
+        let mut blocks: Vec<(usize, &mut [T])> =
+            out.chunks_mut(w).enumerate().map(|(b, s)| (b * w, s)).collect();
+        self.scatter(&mut blocks, |_, item| {
+            let j0 = item.0;
+            let block: &mut [T] = &mut *item.1;
+            f(j0, block);
+        });
+    }
+
     /// Apply `f(index, item)` to every item, fanning contiguous chunks out
     /// across the pool's threads. Each item is visited exactly once; item
     /// order **within** the slice is preserved, so a caller that reduces
@@ -520,6 +561,35 @@ mod tests {
             *v = i as u32 + inner.iter().sum::<u32>();
         });
         assert_eq!(items, vec![3, 4]);
+    }
+
+    #[test]
+    fn scatter_blocks_covers_every_element_once() {
+        for threads in [1usize, 2, 3, 5, 8] {
+            let pool = Pool::new(threads);
+            let mut out = vec![0usize; 23];
+            pool.scatter_blocks(&mut out, |j0, block| {
+                for (o, v) in block.iter_mut().enumerate() {
+                    *v += j0 + o + 1;
+                }
+            });
+            let expect: Vec<usize> = (1..=23).collect();
+            assert_eq!(out, expect, "threads={threads}");
+        }
+        // Empty slice: no panic, no calls.
+        Pool::new(4).scatter_blocks(&mut [] as &mut [u8], |_, _| panic!("must not run"));
+    }
+
+    #[test]
+    fn block_width_partitions_into_at_most_threads_blocks() {
+        for threads in [1usize, 2, 4, 7] {
+            let pool = Pool::new(threads);
+            for n in [1usize, 2, 5, 100, 101] {
+                let w = pool.block_width(n);
+                assert!(w >= 1);
+                assert!(n.div_ceil(w) <= threads, "n={n} threads={threads} w={w}");
+            }
+        }
     }
 
     #[test]

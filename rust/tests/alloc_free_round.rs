@@ -11,7 +11,8 @@
 //! EVERY thread, pool workers included); this file contains exactly one
 //! test so no concurrent harness activity can pollute the counter.
 
-use gdsec::algo::gdsec::{GdSecConfig, ServerState, WorkerState, Xi};
+use gdsec::algo::engine::{Engine, EngineOpts};
+use gdsec::algo::gdsec::{GdSecConfig, GdSecRule, ServerState, WorkerState, Xi};
 use gdsec::compress::SparseUpdate;
 use gdsec::data::synthetic;
 use gdsec::objectives::Problem;
@@ -127,4 +128,25 @@ fn steady_state_round_allocates_nothing() {
         0,
         "steady-state pooled GD-SEC rounds performed heap allocations"
     );
+
+    // --- Unified-engine phase: the REAL `Engine::step` round (nested
+    //     (worker, row-block) lanes forced multi-block, pooled fan-out,
+    //     full-participation schedule) must also be allocation-free once
+    //     the engine's buffers are built. ---
+    let opts = EngineOpts { nnz_budget: 256 };
+    let mut eng = Engine::new(&prob, GdSecRule::new(cfg.clone()), &pool, &opts, 0.0);
+    for _ in 0..3 {
+        eng.step(None);
+    }
+    let before = ALLOC_CALLS.load(Ordering::SeqCst);
+    for _ in 0..25 {
+        eng.step(None);
+    }
+    let after = ALLOC_CALLS.load(Ordering::SeqCst);
+    assert_eq!(
+        after - before,
+        0,
+        "steady-state engine rounds performed heap allocations"
+    );
+    assert!(eng.iter() == 28 && eng.server.theta.iter().any(|&t| t != 0.0));
 }

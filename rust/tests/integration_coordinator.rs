@@ -65,6 +65,70 @@ fn distributed_matches_serial_with_soec_and_per_coord_xi() {
 }
 
 #[test]
+fn adaptive_wire_same_trajectory_tagged_bits() {
+    // Opt-in adaptive wire format: the trajectory must be bitwise equal
+    // to the default sparse wire (both decode to the same f32 values),
+    // and every transmission's payload cost must differ from the sparse
+    // run's by the 8-bit tag at most — strictly cheaper than
+    // sparse + tag overall when dense rounds exist, never more than
+    // 8 bits/tx more expensive.
+    let prob = problem();
+    let cfg = cfg_for(&prob);
+    let iters = 30;
+    let sparse = gdsec::coordinator::run_native(&prob, cfg.clone(), iters, Scheduler::All);
+
+    let fstar = prob.estimate_fstar(2000);
+    let factories: Vec<ProviderFactory> = prob
+        .locals
+        .iter()
+        .map(|l| {
+            let local = l.clone();
+            Box::new(move || Box::new(NativeProvider::new(local)) as Box<dyn GradProvider>)
+                as ProviderFactory
+        })
+        .collect();
+    let failures = vec![FailurePlan::default(); prob.m()];
+    let prob2 = prob.clone();
+    let mut ccfg = CoordConfig::new(cfg, iters);
+    ccfg.problem_name = prob.name.clone();
+    ccfg.fstar = fstar;
+    ccfg.evaluator = Some(Arc::new(move |t: &[f64]| prob2.value(t)));
+    ccfg.wire = gdsec::coordinator::protocol::WireFormat::Adaptive;
+    let adaptive = Coordinator::spawn(ccfg, prob.d, factories, failures).run();
+
+    assert_eq!(sparse.trace.rows.len(), adaptive.trace.rows.len());
+    for (s, a) in sparse.trace.rows.iter().zip(adaptive.trace.rows.iter()) {
+        assert_eq!(
+            s.fval.to_bits(),
+            a.fval.to_bits(),
+            "adaptive wire changed the trajectory at iter {}",
+            s.iter
+        );
+        assert_eq!(s.transmissions, a.transmissions);
+        // Adaptive cost is bounded: at most one tag byte per transmission
+        // over the sparse cost (and possibly much cheaper).
+        assert!(
+            a.bits <= s.bits + 8 * a.transmissions,
+            "iter {}: adaptive {} vs sparse {} (+{} tags)",
+            s.iter,
+            a.bits,
+            s.bits,
+            a.transmissions
+        );
+    }
+    // The tag is really accounted: with at least one transmitted update,
+    // total adaptive bits cannot equal the sparse total exactly unless
+    // dense fallbacks saved more than the tags cost.
+    let tx = adaptive.trace.total_transmissions();
+    assert!(tx > 0);
+    assert_ne!(
+        adaptive.trace.total_bits(),
+        sparse.trace.total_bits(),
+        "tag byte not visible in accounting"
+    );
+}
+
+#[test]
 fn uplink_frame_bytes_cover_payload_plus_headers() {
     let prob = problem();
     let cfg = cfg_for(&prob);
@@ -110,7 +174,7 @@ fn worker_failure_tolerated() {
         .iter()
         .map(|l| {
             let local = l.clone();
-            Box::new(move || Box::new(NativeProvider { local }) as Box<dyn GradProvider>)
+            Box::new(move || Box::new(NativeProvider::new(local)) as Box<dyn GradProvider>)
                 as ProviderFactory
         })
         .collect();
@@ -141,7 +205,7 @@ fn all_workers_fail_run_still_terminates() {
         .iter()
         .map(|l| {
             let local = l.clone();
-            Box::new(move || Box::new(NativeProvider { local }) as Box<dyn GradProvider>)
+            Box::new(move || Box::new(NativeProvider::new(local)) as Box<dyn GradProvider>)
                 as ProviderFactory
         })
         .collect();

@@ -6,6 +6,7 @@ use gdsec::algo::gdsec::{GdSecConfig, ServerState, WorkerState, Xi};
 use gdsec::compress::{self, quantize, rle, SparseUpdate};
 use gdsec::coordinator::protocol::{self, Msg};
 use gdsec::coordinator::scheduler::Scheduler;
+use gdsec::data::{synthetic, Features};
 use gdsec::testing::{check, gen};
 use gdsec::util::rng::Pcg64;
 
@@ -165,6 +166,60 @@ fn prop_server_h_mirrors_worker_h_sum() {
                     ));
                 }
             }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_split_rows_by_nnz_partitions_within_budget() {
+    // The engine's nested-lane cut: blocks partition [0, rows) exactly,
+    // in order, and no block exceeds the nnz budget unless it is a
+    // single row whose own nnz already does (never overshoots by more
+    // than that one row).
+    check("split_rows_by_nnz invariants", |rng| {
+        let rows = rng.index(80);
+        let d = 30 + rng.index(300);
+        let avg_nnz = 1 + rng.index(20);
+        let ds = synthetic::rcv1_like(rng.next_u64(), rows, d, avg_nnz);
+        let Features::Sparse(a) = &ds.x else {
+            return Err("rcv1_like must be sparse".to_string());
+        };
+        let budget = 1 + rng.index(4 * avg_nnz.max(1) * 8);
+        let blocks = a.split_rows_by_nnz(budget);
+        // Exact, ordered partition.
+        let mut cursor = 0usize;
+        for &(s, e) in &blocks {
+            if s != cursor || e <= s {
+                return Err(format!("blocks not an ordered partition at ({s}, {e})"));
+            }
+            cursor = e;
+        }
+        if cursor != a.rows {
+            return Err(format!("blocks cover {cursor} of {} rows", a.rows));
+        }
+        // Budget respected except for single over-budget rows.
+        for &(s, e) in &blocks {
+            let nnz = a.indptr[e] - a.indptr[s];
+            if nnz > budget && e - s != 1 {
+                return Err(format!("block {s}..{e} has nnz {nnz} > budget {budget}"));
+            }
+        }
+        // Greedy maximality: a block that ends before the last row could
+        // not have absorbed the next row without busting the budget.
+        for &(s, e) in &blocks {
+            if e < a.rows {
+                let with_next = a.indptr[e + 1] - a.indptr[s];
+                if with_next <= budget {
+                    return Err(format!(
+                        "block {s}..{e} should have absorbed row {e} ({with_next} <= {budget})"
+                    ));
+                }
+            }
+        }
+        // The Features wrapper agrees with the CSR cut.
+        if ds.x.split_rows_by_nnz(budget) != blocks {
+            return Err("Features::split_rows_by_nnz disagrees with CsrMat".into());
         }
         Ok(())
     });

@@ -7,8 +7,9 @@
 //! per-worker h/e and the per-round bit accounting must match exactly
 //! between a 1-thread and a 4-thread pool.
 
+use gdsec::algo::engine::{self, CompressRule, EngineOpts};
 use gdsec::algo::gdsec as gdsec_algo;
-use gdsec::algo::gdsec::{GdSecConfig, Xi};
+use gdsec::algo::gdsec::{GdSecConfig, GdSecRule, Xi};
 use gdsec::algo::trace::Trace;
 use gdsec::algo::{cgd, gd, iag, qgd, sgdsec, topj};
 use gdsec::data::{synthetic, Features};
@@ -157,6 +158,197 @@ fn prop_grad_split_and_fstar_parity() {
             let f4 = prob.estimate_fstar_pooled(30, &p4);
             if f1.to_bits() != f4.to_bits() {
                 return Err(format!("estimate_fstar diverged: {f1} vs {f4}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Run one rule through the engine at `threads` with a tiny nnz budget
+/// (forcing multi-block nested (worker, row-block) lanes even on these
+/// tiny shards) and return its trace.
+fn engine_trace<R: CompressRule>(prob: &Problem, rule: R, threads: usize, budget: usize) -> Trace {
+    engine::run_rule(
+        prob,
+        rule,
+        ITERS,
+        1,
+        0.0,
+        |_k| None,
+        &Pool::new(threads),
+        &EngineOpts { nnz_budget: budget },
+    )
+    .trace
+}
+
+#[test]
+fn prop_engine_nested_lanes_parity_all_rules() {
+    // The tentpole acceptance: every trainer's rule, run through the
+    // unified engine with FORCED multi-block nested lanes (M < cores is
+    // the regime they exist for), must produce bit-identical traces at 1
+    // vs 4 threads. The block tree is fixed by (problem, budget), never
+    // by the thread count.
+    check_with(
+        PropConfig { cases: 5, seed: 0xE7617E },
+        "engine nested lanes 1 vs 4 threads bit parity (all rules)",
+        |rng| {
+            let prob = random_problem(rng);
+            let budget = 48 + rng.index(80); // tiny ⇒ several blocks/worker
+            let split = GradSplit::new_by_nnz(&prob, budget);
+            if split.lanes() <= prob.m() {
+                return Err(format!("budget {budget} produced no nested lanes"));
+            }
+            let alpha = 1.0 / prob.lipschitz();
+            let d = prob.d;
+            let seed = rng.next_u64();
+
+            let gcfg = GdSecConfig {
+                alpha,
+                beta: 0.05,
+                xi: Xi::Uniform(rng.uniform() * 80.0),
+                fstar: Some(0.0),
+                ..Default::default()
+            };
+            assert_traces_bit_equal(
+                "engine/gdsec",
+                &engine_trace(&prob, GdSecRule::new(gcfg.clone()), 1, budget),
+                &engine_trace(&prob, GdSecRule::new(gcfg), 4, budget),
+            )?;
+
+            let c = gd::GdConfig { alpha, eval_every: 1, fstar: Some(0.0) };
+            assert_traces_bit_equal(
+                "engine/gd",
+                &engine_trace(&prob, gd::GdRule::new(c.clone(), d), 1, budget),
+                &engine_trace(&prob, gd::GdRule::new(c, d), 4, budget),
+            )?;
+
+            let c = cgd::CgdConfig { alpha, xi: 2.0, eval_every: 1, fstar: Some(0.0) };
+            assert_traces_bit_equal(
+                "engine/cgd",
+                &engine_trace(&prob, cgd::CgdRule::new(c.clone(), d), 1, budget),
+                &engine_trace(&prob, cgd::CgdRule::new(c, d), 4, budget),
+            )?;
+
+            let c = qgd::QgdConfig { alpha, s: 255, seed, eval_every: 1, fstar: Some(0.0) };
+            assert_traces_bit_equal(
+                "engine/qgd",
+                &engine_trace(&prob, qgd::QgdRule::new(c.clone(), d), 1, budget),
+                &engine_trace(&prob, qgd::QgdRule::new(c, d), 4, budget),
+            )?;
+
+            let c = topj::TopJConfig {
+                j: 1 + rng.index(d),
+                gamma0: alpha,
+                lambda: 0.05,
+                eval_every: 1,
+                fstar: Some(0.0),
+            };
+            assert_traces_bit_equal(
+                "engine/topj",
+                &engine_trace(&prob, topj::TopJRule::new(c.clone(), d), 1, budget),
+                &engine_trace(&prob, topj::TopJRule::new(c, d), 4, budget),
+            )?;
+
+            // IAG: one sampled worker per round (deterministic schedule so
+            // both thread counts see the same single-lane rounds) plus the
+            // seeding round through the nested lanes.
+            let c = iag::IagConfig {
+                alpha: alpha / (2.0 * prob.m() as f64),
+                seed,
+                eval_every: 1,
+                fstar: Some(0.0),
+            };
+            let m = prob.m();
+            let iag_run = |threads: usize| {
+                engine::run_rule(
+                    &prob,
+                    iag::IagRule::new(c.clone(), d),
+                    ITERS,
+                    1,
+                    0.0,
+                    |k| Some(vec![k % m]),
+                    &Pool::new(threads),
+                    &EngineOpts { nnz_budget: budget },
+                )
+                .trace
+            };
+            assert_traces_bit_equal("engine/iag", &iag_run(1), &iag_run(4))?;
+
+            // Stochastic rules (Custom gradients — per-lane RNG streams
+            // instead of nested lanes) through the same engine loop.
+            for quantize_s in [None, Some(255)] {
+                let c = sgdsec::SgdSecConfig {
+                    gamma0: 0.05,
+                    lambda: 0.01,
+                    beta: 0.05,
+                    xi: Xi::Uniform(30.0),
+                    batch: 1 + rng.index(3),
+                    seed,
+                    quantize_s,
+                    eval_every: 1,
+                    fstar: Some(0.0),
+                };
+                assert_traces_bit_equal(
+                    "engine/sgdsec",
+                    &engine_trace(&prob, sgdsec::SgdSecRule::new(c.clone()), 1, budget),
+                    &engine_trace(&prob, sgdsec::SgdSecRule::new(c.clone()), 4, budget),
+                )?;
+                assert_traces_bit_equal(
+                    "engine/sgd",
+                    &engine_trace(&prob, sgdsec::SgdRule::new(c.clone(), d), 1, budget),
+                    &engine_trace(&prob, sgdsec::SgdRule::new(c, d), 4, budget),
+                )?;
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_gdsec_nested_schedule_parity_and_states() {
+    // Nested lanes + partial participation through the public
+    // run_states_opts surface: server AND worker states bit-equal.
+    check_with(
+        PropConfig { cases: 4, seed: 0x9E57ED },
+        "gdsec nested lanes + schedule 1 vs 4 threads",
+        |rng| {
+            let prob = random_problem(rng);
+            let opts = EngineOpts { nnz_budget: 40 + rng.index(60) };
+            let cfg = GdSecConfig {
+                alpha: 1.0 / prob.lipschitz(),
+                beta: rng.uniform() * 0.3,
+                xi: Xi::Uniform(rng.uniform() * 120.0),
+                fstar: Some(0.0),
+                ..Default::default()
+            };
+            let m = prob.m();
+            let schedule = |k: usize| {
+                if k % 3 == 0 {
+                    Some((0..m).filter(|w| (w + k) % 2 == 0).collect::<Vec<_>>())
+                } else {
+                    None
+                }
+            };
+            let s =
+                gdsec_algo::run_states_opts(&prob, &cfg, ITERS, schedule, &Pool::new(1), &opts);
+            let p =
+                gdsec_algo::run_states_opts(&prob, &cfg, ITERS, schedule, &Pool::new(4), &opts);
+            assert_traces_bit_equal("gdsec-nested", &s.trace, &p.trace)?;
+            for i in 0..prob.d {
+                if s.server.theta[i].to_bits() != p.server.theta[i].to_bits()
+                    || s.server.h[i].to_bits() != p.server.h[i].to_bits()
+                {
+                    return Err(format!("server state diverged at {i}"));
+                }
+            }
+            for (w, (sw, pw)) in s.workers.iter().zip(&p.workers).enumerate() {
+                for i in 0..prob.d {
+                    if sw.h[i].to_bits() != pw.h[i].to_bits()
+                        || sw.e[i].to_bits() != pw.e[i].to_bits()
+                    {
+                        return Err(format!("worker {w} state diverged at {i}"));
+                    }
+                }
             }
             Ok(())
         },
