@@ -482,6 +482,54 @@ fn main() {
         reports.push(nested_par);
     }
 
+    // --- GDSEC_NNZ_BUDGET sweep at RCV1 scale: the nested-lane budget's
+    //     first sparse-data point. Same problem, same pool, three block
+    //     trees (16k/64k/256k nnz per lane) — per-round time tells
+    //     whether the fixed 64k default should become cache-sized.
+    //     Trajectories are budget-dependent but thread-count-invariant;
+    //     timing is the only axis here. Gated for PRESENCE in CI. ---
+    {
+        use gdsec::algo::engine::EngineOpts;
+        let rows = if quick { 3000 } else { 12000 };
+        let ds = synthetic::rcv1_like(99, rows, 47236, 50);
+        let prob_b = Problem::linear(ds, 4, 1e-4);
+        let cfg_b = GdSecConfig {
+            alpha: 1e-3,
+            beta: 0.01,
+            xi: Xi::Uniform(50.0),
+            fstar: Some(0.0),
+            eval_every: 1_000_000, // timing only: skip per-round evals
+            ..Default::default()
+        };
+        let sweep_iters = if quick { 3 } else { 10 };
+        for budget in [16_384usize, 65_536, 262_144] {
+            let opts = EngineOpts { nnz_budget: budget, ..EngineOpts::default() };
+            let stats = b.run_once(
+                &format!(
+                    "engine budget sweep rcv1 {rows}x47236 nnz_budget={budget} t={}",
+                    par_pool.threads()
+                ),
+                || {
+                    std::hint::black_box(gdsec_algo::run_states_opts(
+                        &prob_b,
+                        &cfg_b,
+                        sweep_iters,
+                        |_k| None,
+                        &par_pool,
+                        &opts,
+                    ));
+                },
+            );
+            let key = match budget {
+                16_384 => "engine_budget_sweep_ns_16384",
+                65_536 => "engine_budget_sweep_ns_65536",
+                _ => "engine_budget_sweep_ns_262144",
+            };
+            context.push((key, Json::num(stats.mean_ns / sweep_iters as f64)));
+            reports.push(stats);
+        }
+    }
+
     println!("\n== hotpath microbenchmarks ==");
     for r in &reports {
         println!("{}", r.report());

@@ -82,7 +82,7 @@ impl CompressRule for CgdRule {
         self.thresh = self.cfg.xi / ctx.m as f64 * linalg::nrm2(ctx.theta_diff);
     }
 
-    fn compress(&self, _ctx: &RoundCtx, _w: usize, lane: &mut CgdLane) -> Option<Sent> {
+    fn compress(&self, ctx: &RoundCtx, _w: usize, lane: &mut CgdLane) -> Option<Sent> {
         let mut dist_sq = 0.0;
         for (gi, li) in lane.g.iter().zip(&lane.last) {
             let dgi = gi - li;
@@ -97,7 +97,7 @@ impl CompressRule for CgdRule {
         linalg::zero(&mut lane.last);
         lane.up.add_into(&mut lane.last);
         Some(Sent {
-            bits: compress::sparse_bits(&lane.up) as u64,
+            bits: compress::wire_bits(&lane.up, ctx.wire) as u64,
             entries: lane.up.nnz() as u64,
         })
     }
@@ -117,6 +117,21 @@ impl CompressRule for CgdRule {
         }
         server.theta_prev.copy_from_slice(&server.theta);
         linalg::axpy(-self.cfg.alpha, &self.agg, &mut server.theta);
+    }
+
+    fn defers_late(&self) -> bool {
+        // CGD's LAG-style apply folds EVERY worker's `last` memory each
+        // round, transmitted or not, and `compress` refreshes that
+        // memory in place — a "late" transmission therefore lands in the
+        // CURRENT aggregation regardless. Quorum cuts cannot defer it,
+        // so the engine neither parks these lanes nor counts stale
+        // folds.
+        false
+    }
+
+    fn fold_stale(&mut self, _k: usize, _server: &mut ServerState, _w: usize, _lane: &mut CgdLane) {
+        // Unreachable while `defers_late` is false; nothing to stage —
+        // the server-side memory IS the fold.
     }
 }
 

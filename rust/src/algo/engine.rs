@@ -44,6 +44,7 @@
 
 use super::gdsec::ServerState;
 use super::trace::{Trace, TraceRow};
+use crate::compress::{SparseUpdate, WireFormat};
 use crate::objectives::{GradSplit, Problem};
 use crate::util::pool::Pool;
 
@@ -71,6 +72,10 @@ pub struct RoundCtx<'a> {
     pub theta_diff: &'a [f64],
     /// max_i |θ^k_i − θ^{k−1}_i| (0.0 unless the rule wants the diff).
     pub diff_max: f64,
+    /// Uplink accounting format for sparse-update rules
+    /// ([`crate::compress::wire_bits`]); dense/quantized payloads are
+    /// format-independent.
+    pub wire: WireFormat,
 }
 
 /// Who computes the worker gradient.
@@ -149,6 +154,79 @@ pub trait CompressRule: Sync {
         lanes: &[EngineLane<Self::Lane>],
         pool: &Pool,
     );
+
+    /// Whether a quorum cut actually defers this rule's late
+    /// transmissions. Memory-based rules (CGD, NoUnif-IAG) return
+    /// false: their `apply` folds every worker's server-side memory
+    /// each round regardless of `sent`, so a "late" transmission lands
+    /// in the current aggregation anyway — the engine neither parks
+    /// their lanes nor counts stale folds for them.
+    fn defers_late(&self) -> bool {
+        true
+    }
+
+    /// Fold worker `w`'s update from the PREVIOUS round — still in its
+    /// lane, parked by a quorum cut ([`Engine::step_quorum`]) — into
+    /// round `k`'s upcoming [`apply`](Self::apply), **as if it had
+    /// arrived on time**: staged ahead of the fresh updates so the
+    /// server performs the same step one round late rather than dropping
+    /// bits on the floor. Called sequentially in ascending worker order
+    /// before the fan-out overwrites the lane. Synchronous runs (no
+    /// quorum cuts) never call this, which is what keeps them
+    /// bit-identical to the pre-quorum engine; neither do rules with
+    /// [`defers_late`](Self::defers_late) = false.
+    ///
+    /// GD-SEC-family rules stage into [`ServerState::fold_update`] (the
+    /// worker already moved its h_m/e_m at transmission, so the late
+    /// fold preserves the EC identity); dense rules accumulate into a
+    /// [`StalePending`] buffer their `apply` folds first.
+    fn fold_stale(&mut self, k: usize, server: &mut ServerState, w: usize, lane: &mut Self::Lane);
+}
+
+/// Staging buffer behind the dense rules' [`CompressRule::fold_stale`]:
+/// late wire images accumulate here (in the engine's ascending-worker
+/// fold order) and the next `apply` folds the staged sum ahead of the
+/// fresh lanes — `agg = 0 + staged + Σ fresh`, bitwise the same sequence
+/// as if the late updates had led the fold on time. All-zero and
+/// [`staged`](StalePending::staged) = `None` when no cut occurred, so
+/// synchronous applies are untouched op-for-op. Reuses one pre-sized
+/// buffer: the stale path stays allocation-free.
+#[derive(Debug, Clone)]
+pub struct StalePending {
+    buf: Vec<f64>,
+    dirty: bool,
+}
+
+impl StalePending {
+    pub fn new(d: usize) -> StalePending {
+        StalePending { buf: vec![0.0; d], dirty: false }
+    }
+
+    /// Stage a late dense wire image.
+    pub fn fold(&mut self, v: &[f64]) {
+        crate::linalg::axpy(1.0, v, &mut self.buf);
+        self.dirty = true;
+    }
+
+    /// Stage a late sparse update.
+    pub fn fold_sparse(&mut self, u: &SparseUpdate) {
+        u.add_into(&mut self.buf);
+        self.dirty = true;
+    }
+
+    /// The staged sum to fold ahead of the fresh lanes (`None` when
+    /// nothing is pending — the synchronous fast path).
+    pub fn staged(&self) -> Option<&[f64]> {
+        self.dirty.then_some(self.buf.as_slice())
+    }
+
+    /// Re-zero after an `apply` consumed the staged sum.
+    pub fn consume(&mut self) {
+        if self.dirty {
+            crate::linalg::zero(&mut self.buf);
+            self.dirty = false;
+        }
+    }
 }
 
 /// Engine tuning knobs.
@@ -159,25 +237,33 @@ pub struct EngineOpts {
     /// more intra-worker parallelism (and a different — still
     /// thread-count-independent — summation tree).
     pub nnz_budget: usize,
+    /// Uplink accounting format for sparse-update rules. Default
+    /// [`WireFormat::Adaptive`] (tag byte + cheaper of sparse/dense —
+    /// matches the coordinator's encoded frames byte-for-byte);
+    /// `Sparse` reproduces the paper's accounting.
+    pub wire: WireFormat,
 }
 
 impl Default for EngineOpts {
     fn default() -> EngineOpts {
-        EngineOpts { nnz_budget: GradSplit::DEFAULT_NNZ_BUDGET }
+        EngineOpts {
+            nnz_budget: GradSplit::DEFAULT_NNZ_BUDGET,
+            wire: WireFormat::default(),
+        }
     }
 }
 
 impl EngineOpts {
-    /// Default opts with the `GDSEC_NNZ_BUDGET` env override (read per
-    /// call; constant within a process, so every run in a process sees
-    /// the same block tree).
+    /// Default opts with the `GDSEC_NNZ_BUDGET` / `GDSEC_WIRE` env
+    /// overrides (read per call; constant within a process, so every run
+    /// in a process sees the same block tree and accounting).
     pub fn from_env() -> EngineOpts {
         let nnz_budget = std::env::var("GDSEC_NNZ_BUDGET")
             .ok()
             .and_then(|s| s.parse::<usize>().ok())
             .filter(|&b| b >= 1)
             .unwrap_or(GradSplit::DEFAULT_NNZ_BUDGET);
-        EngineOpts { nnz_budget }
+        EngineOpts { nnz_budget, wire: WireFormat::from_env() }
     }
 }
 
@@ -195,6 +281,9 @@ struct Acct {
     bits: u64,
     tx: u64,
     entries: u64,
+    /// Stale updates folded one round late via
+    /// [`CompressRule::fold_stale`].
+    stale: u64,
 }
 
 /// The resumable engine: [`new`](Engine::new) builds every buffer once,
@@ -213,7 +302,11 @@ pub struct Engine<'p, R: CompressRule> {
     spans: Vec<(usize, usize)>,
     /// Per-round participation flags (reused).
     flags: Vec<bool>,
+    /// Lanes whose last transmission was cut by a quorum and awaits its
+    /// [`CompressRule::fold_stale`] at the start of the next round.
+    parked: Vec<bool>,
     theta_diff: Vec<f64>,
+    wire: WireFormat,
     acct: Acct,
     trace: Trace,
     k: usize,
@@ -244,7 +337,9 @@ impl<'p, R: CompressRule> Engine<'p, R> {
             split,
             spans,
             flags: vec![true; m],
+            parked: vec![false; m],
             theta_diff: vec![0.0; d],
+            wire: opts.wire,
             acct: Acct::default(),
             trace,
             k: 0,
@@ -266,6 +361,7 @@ impl<'p, R: CompressRule> Engine<'p, R> {
             bits: self.acct.bits,
             transmissions: self.acct.tx,
             entries: self.acct.entries,
+            stale: self.acct.stale,
         });
     }
 
@@ -285,8 +381,33 @@ impl<'p, R: CompressRule> Engine<'p, R> {
     /// order), server apply. Allocation-free after warm-up (for `act ==
     /// None` schedules and allocation-free rules).
     pub fn step(&mut self, act: Option<&[usize]>) {
+        self.step_quorum(act, None);
+    }
+
+    /// [`step`](Engine::step) with a semi-synchronous quorum cut: lanes
+    /// in `late` (worker ids whose virtual reply misses this round's
+    /// quorum) still compute and transmit — their bits are accounted
+    /// this round — but their updates are **parked** instead of applied,
+    /// and folded into the NEXT round's apply through
+    /// [`CompressRule::fold_stale`], as if they had arrived on time one
+    /// round later. `late: None` (or an empty set) is the synchronous
+    /// round, bit-identical to the pre-quorum engine. Allocation-free
+    /// after warm-up, including the stale-fold path (pinned by
+    /// `tests/alloc_free_round.rs`).
+    pub fn step_quorum(&mut self, act: Option<&[usize]>, late: Option<&[usize]>) {
         self.k += 1;
         let k = self.k;
+        // Fold updates parked by the previous round's cut BEFORE the
+        // fan-out overwrites their lanes: they reach the server "during"
+        // this round, staged ahead of the fresh updates, in ascending
+        // worker order.
+        for w in 0..self.lanes.len() {
+            if self.parked[w] {
+                self.parked[w] = false;
+                self.rule.fold_stale(k, &mut self.server, w, &mut self.lanes[w].lane);
+                self.acct.stale += 1;
+            }
+        }
         let diff_max = if self.rule.wants_theta_diff() {
             // Fused diff + stationarity max — the quantity censoring
             // thresholds scale with, surfaced as debug telemetry. The
@@ -311,6 +432,7 @@ impl<'p, R: CompressRule> Engine<'p, R> {
                 theta: &self.server.theta,
                 theta_diff: &self.theta_diff,
                 diff_max,
+                wire: self.wire,
             };
             self.rule.begin_round(&ctx);
         }
@@ -319,6 +441,23 @@ impl<'p, R: CompressRule> Engine<'p, R> {
             GradMode::Custom => self.fan_out_custom(k, diff_max),
         }
         self.fold_accounting();
+        // Park the quorum cut's late transmissions: accounted above (the
+        // bits went on the wire this round), excluded from this apply,
+        // folded at the start of the next round. Silent late lanes have
+        // nothing to park, and memory-based rules (`defers_late` false)
+        // are never parked — their apply folds the refreshed memory this
+        // round regardless. A lane still parked when the run ends is an
+        // in-flight transmission at shutdown: dropped, bits charged.
+        if let Some(late) = late {
+            if self.rule.defers_late() {
+                for &w in late {
+                    if self.lanes[w].sent.is_some() {
+                        self.lanes[w].sent = None;
+                        self.parked[w] = true;
+                    }
+                }
+            }
+        }
         self.rule.apply(k, &mut self.server, &self.lanes, self.pool);
     }
 
@@ -350,6 +489,7 @@ impl<'p, R: CompressRule> Engine<'p, R> {
             theta,
             theta_diff: &self.theta_diff,
             diff_max,
+            wire: self.wire,
         };
         self.pool.scatter(&mut self.lanes, |w, el| {
             if !flags[w] {
@@ -385,6 +525,7 @@ impl<'p, R: CompressRule> Engine<'p, R> {
             theta: &self.server.theta,
             theta_diff: &self.theta_diff,
             diff_max,
+            wire: self.wire,
         };
         self.pool.scatter(&mut self.lanes, |w, el| {
             if !flags[w] {

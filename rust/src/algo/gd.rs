@@ -30,11 +30,14 @@ pub struct GdLane {
 pub struct GdRule {
     cfg: GdConfig,
     agg: Vec<f64>,
+    /// Gradients parked by a quorum cut; the next apply folds the staged
+    /// sum ahead of the fresh lanes.
+    stale: engine::StalePending,
 }
 
 impl GdRule {
     pub fn new(cfg: GdConfig, d: usize) -> GdRule {
-        GdRule { cfg, agg: vec![0.0; d] }
+        GdRule { cfg, agg: vec![0.0; d], stale: engine::StalePending::new(d) }
     }
 }
 
@@ -69,12 +72,24 @@ impl CompressRule for GdRule {
         lanes: &[EngineLane<GdLane>],
         _pool: &Pool,
     ) {
+        // Stale-first fold order: the staged late gradients, then this
+        // round's lanes in worker-id order. The synchronous path never
+        // stages anything, so its fold sequence — and every bit of the
+        // trajectory — is unchanged.
+        let staged = self.stale.staged();
         engine::apply_dense_fold(
             self.cfg.alpha,
-            lanes.iter().filter(|el| el.sent.is_some()).map(|el| el.lane.g.as_slice()),
+            staged
+                .into_iter()
+                .chain(lanes.iter().filter(|el| el.sent.is_some()).map(|el| el.lane.g.as_slice())),
             &mut self.agg,
             &mut server.theta,
         );
+        self.stale.consume();
+    }
+
+    fn fold_stale(&mut self, _k: usize, _server: &mut ServerState, _w: usize, lane: &mut GdLane) {
+        self.stale.fold(&lane.g);
     }
 }
 

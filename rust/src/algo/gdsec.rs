@@ -276,6 +276,18 @@ impl ServerState {
         linalg::sub_abs_max(&self.theta, &self.theta_prev, out)
     }
 
+    /// Stage a late-arriving update into the aggregation scratch ahead
+    /// of the next [`apply_round`](Self::apply_round): `agg` is all-zeros
+    /// between rounds, so the staged entries fold into the upcoming
+    /// Σ_m Δ̂_m exactly as if the update had arrived on time — the
+    /// mechanism behind [`CompressRule::fold_stale`] for the
+    /// GD-SEC-family rules (semi-synchronous quorum rounds). The worker
+    /// already moved its h_m/e_m at transmission, so the delayed server
+    /// fold keeps the h-mirror consistent one round later.
+    pub fn fold_update(&mut self, u: &SparseUpdate) {
+        u.add_into(&mut self.agg);
+    }
+
     /// Apply one aggregated round: θ^{k+1} = θ^k − α(h + Δ̂), h += β·Δ̂
     /// (Eq. 6), accepting any in-order sequence of update references.
     ///
@@ -366,7 +378,7 @@ impl CompressRule for GdSecRule {
             return None;
         }
         Some(Sent {
-            bits: compress::sparse_bits(&lane.up) as u64,
+            bits: compress::wire_bits(&lane.up, ctx.wire) as u64,
             entries: lane.up.nnz() as u64,
         })
     }
@@ -382,6 +394,19 @@ impl CompressRule for GdSecRule {
             &self.cfg,
             lanes.iter().filter(|el| el.sent.is_some()).map(|el| &el.lane.up),
         );
+    }
+
+    fn fold_stale(
+        &mut self,
+        _k: usize,
+        server: &mut ServerState,
+        _w: usize,
+        lane: &mut WorkerLane,
+    ) {
+        // The parked Δ̂ is still in the lane's wire buffer; stage it into
+        // the server scratch so the upcoming apply performs Eq. 6 on it
+        // exactly as if it had arrived on time (h += β·Δ̂ included).
+        server.fold_update(&lane.up);
     }
 }
 
@@ -791,6 +816,77 @@ mod tests {
             assert_eq!(serial.server.theta[i].to_bits(), pooled.server.theta[i].to_bits());
             assert_eq!(serial.server.h[i].to_bits(), pooled.server.h[i].to_bits());
         }
+    }
+
+    #[test]
+    fn quorum_fold_matches_manual_reference() {
+        // One worker is late EVERY round through the engine's quorum
+        // path (`step_quorum`): its transmission is parked by the cut
+        // and folded into the next round's aggregation via
+        // `fold_stale`, as if on time one round later. A hand-rolled
+        // loop implementing exactly that semantics must match θ, server
+        // h, and every worker's h/e bit-for-bit.
+        use crate::algo::engine::Engine;
+        use crate::util::pool::Pool;
+        let prob = small_problem();
+        let (m, d) = (prob.m(), prob.d);
+        let cfg = GdSecConfig {
+            alpha: 1.0 / prob.lipschitz(),
+            beta: 0.05,
+            xi: Xi::Uniform(20.0),
+            fstar: Some(0.0),
+            ..Default::default()
+        };
+        let late = [m - 1];
+        let pool = Pool::new(1);
+        let iters = 15;
+        let mut eng =
+            Engine::new(&prob, GdSecRule::new(cfg.clone()), &pool, &EngineOpts::default(), 0.0);
+        for _ in 0..iters {
+            eng.step_quorum(None, Some(&late));
+        }
+        eng.record();
+        let run = eng.into_run();
+
+        let mut server = ServerState::new(d);
+        let mut workers: Vec<WorkerState> = (0..m).map(|_| WorkerState::new(d)).collect();
+        let mut theta_diff = vec![0.0; d];
+        let mut parked: Option<SparseUpdate> = None;
+        for _k in 1..=iters {
+            // Previous round's parked update folds first (stale-before-
+            // fresh order), staged into the aggregation scratch.
+            if let Some(s) = parked.take() {
+                server.fold_update(&s);
+            }
+            server.theta_diff(&mut theta_diff);
+            let mut ups: Vec<SparseUpdate> = Vec::new();
+            for (w, ws) in workers.iter_mut().enumerate() {
+                prob.locals[w].grad(&server.theta, ws.grad_mut());
+                let up = ws.sparsify_step(&cfg, m, &theta_diff);
+                if up.nnz() == 0 {
+                    continue;
+                }
+                if w == m - 1 {
+                    parked = Some(up); // cut: arrives next round
+                } else {
+                    ups.push(up);
+                }
+            }
+            server.apply_round(&cfg, &ups);
+        }
+        for i in 0..d {
+            assert_eq!(run.server.theta[i].to_bits(), server.theta[i].to_bits(), "theta[{i}]");
+            assert_eq!(run.server.h[i].to_bits(), server.h[i].to_bits(), "h[{i}]");
+        }
+        for (w, (el, ws)) in run.lanes.iter().zip(&workers).enumerate() {
+            for i in 0..d {
+                assert_eq!(el.ws.h[i].to_bits(), ws.h[i].to_bits(), "worker {w} h[{i}]");
+                assert_eq!(el.ws.e[i].to_bits(), ws.e[i].to_bits(), "worker {w} e[{i}]");
+            }
+        }
+        // The straggler's updates really were deferred (stale folds
+        // happened) — otherwise this test proves nothing.
+        assert!(run.trace.total_stale() > 0, "no stale update was ever folded");
     }
 
     #[test]

@@ -104,6 +104,19 @@ impl CompressRule for IagRule {
         });
         linalg::axpy(-self.cfg.alpha, &self.agg, &mut server.theta);
     }
+
+    fn defers_late(&self) -> bool {
+        // IAG is stale by construction: every round aggregates ALL M
+        // gradient memories, fresh or not, and `compress` refreshes the
+        // sampled worker's memory in place — a "late" refresh lands in
+        // the current aggregation regardless, so cuts cannot defer it.
+        false
+    }
+
+    fn fold_stale(&mut self, _k: usize, _server: &mut ServerState, _w: usize, _lane: &mut IagLane) {
+        // Unreachable while `defers_late` is false; the memory IS the
+        // fold.
+    }
 }
 
 pub fn run(prob: &Problem, cfg: &IagConfig, iters: usize) -> Trace {

@@ -38,11 +38,14 @@ pub struct QgdLane {
 pub struct QgdRule {
     cfg: QgdConfig,
     agg: Vec<f64>,
+    /// Dequantized updates parked by a quorum cut; folded ahead of the
+    /// fresh lanes by the next apply.
+    stale: engine::StalePending,
 }
 
 impl QgdRule {
     pub fn new(cfg: QgdConfig, d: usize) -> QgdRule {
-        QgdRule { cfg, agg: vec![0.0; d] }
+        QgdRule { cfg, agg: vec![0.0; d], stale: engine::StalePending::new(d) }
     }
 }
 
@@ -82,15 +85,25 @@ impl CompressRule for QgdRule {
         lanes: &[EngineLane<QgdLane>],
         _pool: &Pool,
     ) {
+        let staged = self.stale.staged();
         engine::apply_dense_fold(
             self.cfg.alpha,
-            lanes
-                .iter()
-                .filter(|el| el.sent.is_some())
-                .map(|el| el.lane.dq.as_slice()),
+            staged.into_iter().chain(
+                lanes
+                    .iter()
+                    .filter(|el| el.sent.is_some())
+                    .map(|el| el.lane.dq.as_slice()),
+            ),
             &mut self.agg,
             &mut server.theta,
         );
+        self.stale.consume();
+    }
+
+    fn fold_stale(&mut self, _k: usize, _server: &mut ServerState, _w: usize, lane: &mut QgdLane) {
+        // The dequantized wire image of the parked transmission is still
+        // in the lane; fold it as if on time, one round late.
+        self.stale.fold(&lane.dq);
     }
 }
 

@@ -51,11 +51,14 @@ pub struct SgdLane {
 pub struct SgdRule {
     cfg: SgdSecConfig,
     agg: Vec<f64>,
+    /// Minibatch gradients parked by a quorum cut; folded ahead of the
+    /// fresh lanes by the next apply.
+    stale: engine::StalePending,
 }
 
 impl SgdRule {
     pub fn new(cfg: SgdSecConfig, d: usize) -> SgdRule {
-        SgdRule { cfg, agg: vec![0.0; d] }
+        SgdRule { cfg, agg: vec![0.0; d], stale: engine::StalePending::new(d) }
     }
 }
 
@@ -94,15 +97,23 @@ impl CompressRule for SgdRule {
         lanes: &[EngineLane<SgdLane>],
         _pool: &Pool,
     ) {
+        let staged = self.stale.staged();
         engine::apply_dense_fold(
             self.cfg.alpha(k),
-            lanes
-                .iter()
-                .filter(|el| el.sent.is_some())
-                .map(|el| el.lane.g.as_slice()),
+            staged.into_iter().chain(
+                lanes
+                    .iter()
+                    .filter(|el| el.sent.is_some())
+                    .map(|el| el.lane.g.as_slice()),
+            ),
             &mut self.agg,
             &mut server.theta,
         );
+        self.stale.consume();
+    }
+
+    fn fold_stale(&mut self, _k: usize, _server: &mut ServerState, _w: usize, lane: &mut SgdLane) {
+        self.stale.fold(&lane.g);
     }
 }
 
@@ -204,7 +215,7 @@ impl CompressRule for SgdSecRule {
         }
         match self.cfg.quantize_s {
             None => Some(Sent {
-                bits: compress::sparse_bits(&lane.up) as u64,
+                bits: compress::wire_bits(&lane.up, ctx.wire) as u64,
                 entries: lane.up.nnz() as u64,
             }),
             Some(s) => {
@@ -241,6 +252,20 @@ impl CompressRule for SgdSecRule {
                 .filter(|el| el.sent.is_some())
                 .map(|el| if quantizing { &el.lane.wire } else { &el.lane.up }),
         );
+    }
+
+    fn fold_stale(
+        &mut self,
+        _k: usize,
+        server: &mut ServerState,
+        _w: usize,
+        lane: &mut SgdSecLane,
+    ) {
+        // Same late Eq. 6 fold as GD-SEC; the wire image (dequantized
+        // when QSGD-SEC re-quantizes) is what the worker's h_m/e_m
+        // already tracked.
+        let quantizing = self.cfg.quantize_s.is_some();
+        server.fold_update(if quantizing { &lane.wire } else { &lane.up });
     }
 }
 

@@ -47,11 +47,16 @@ pub struct TopJLane {
 pub struct TopJRule {
     cfg: TopJConfig,
     agg: Vec<f64>,
+    /// Sparse updates parked by a quorum cut, staged dense; folded
+    /// ahead of the fresh lanes by the next apply (the values already
+    /// left the workers' error memories, so dropping them would lose
+    /// them for good).
+    stale: engine::StalePending,
 }
 
 impl TopJRule {
     pub fn new(cfg: TopJConfig, d: usize) -> TopJRule {
-        TopJRule { cfg, agg: vec![0.0; d] }
+        TopJRule { cfg, agg: vec![0.0; d], stale: engine::StalePending::new(d) }
     }
 }
 
@@ -75,7 +80,7 @@ impl CompressRule for TopJRule {
         &mut lane.g
     }
 
-    fn compress(&self, _ctx: &RoundCtx, _w: usize, lane: &mut TopJLane) -> Option<Sent> {
+    fn compress(&self, ctx: &RoundCtx, _w: usize, lane: &mut TopJLane) -> Option<Sent> {
         let d = lane.g.len();
         for i in 0..d {
             lane.delta[i] = lane.g[i] + lane.err[i];
@@ -91,7 +96,7 @@ impl CompressRule for TopJRule {
             return None;
         }
         Some(Sent {
-            bits: compress::sparse_bits(&lane.up) as u64,
+            bits: compress::wire_bits(&lane.up, ctx.wire) as u64,
             entries: lane.up.nnz() as u64,
         })
     }
@@ -110,10 +115,18 @@ impl CompressRule for TopJRule {
         // also carries `sent: None`, and skipping its no-op add is
         // bitwise identical to folding it.
         linalg::zero(&mut self.agg);
+        if let Some(staged) = self.stale.staged() {
+            linalg::axpy(1.0, staged, &mut self.agg);
+        }
+        self.stale.consume();
         for el in lanes.iter().filter(|el| el.sent.is_some()) {
             el.lane.up.add_into(&mut self.agg);
         }
         linalg::axpy(-self.cfg.alpha(k), &self.agg, &mut server.theta);
+    }
+
+    fn fold_stale(&mut self, _k: usize, _server: &mut ServerState, _w: usize, lane: &mut TopJLane) {
+        self.stale.fold_sparse(&lane.up);
     }
 }
 

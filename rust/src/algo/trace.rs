@@ -15,6 +15,9 @@ pub struct TraceRow {
     pub transmissions: u64,
     /// Cumulative non-zero entries put on the wire.
     pub entries: u64,
+    /// Cumulative stale updates folded one round late (semi-synchronous
+    /// quorum rounds; always 0 in the synchronous protocol).
+    pub stale: u64,
 }
 
 /// A full run trace for one algorithm on one problem.
@@ -48,6 +51,11 @@ impl Trace {
         self.rows.last().map_or(f64::NAN, |r| r.fval - self.fstar)
     }
 
+    /// Total stale updates folded over the run (quorum rounds).
+    pub fn total_stale(&self) -> u64 {
+        self.rows.last().map_or(0, |r| r.stale)
+    }
+
     /// Objective error series (f(θ^k) − f*).
     pub fn errors(&self) -> Vec<f64> {
         self.rows.iter().map(|r| r.fval - self.fstar).collect()
@@ -63,10 +71,12 @@ impl Trace {
         self.rows.iter().find(|r| r.fval - self.fstar <= eps).map(|r| r.bits)
     }
 
-    /// Write CSV: iter, err, fval, bits, transmissions, entries.
+    /// Write CSV: iter, err, fval, bits, transmissions, entries, stale.
     pub fn write_csv<P: AsRef<Path>>(&self, path: P) -> std::io::Result<()> {
-        let mut w =
-            CsvWriter::create(path, &["iter", "err", "fval", "bits", "transmissions", "entries"])?;
+        let mut w = CsvWriter::create(
+            path,
+            &["iter", "err", "fval", "bits", "transmissions", "entries", "stale"],
+        )?;
         for r in &self.rows {
             w.row_f64(&[
                 r.iter as f64,
@@ -75,6 +85,7 @@ impl Trace {
                 r.bits as f64,
                 r.transmissions as f64,
                 r.entries as f64,
+                r.stale as f64,
             ])?;
         }
         w.flush()
@@ -97,7 +108,7 @@ mod tests {
     fn mk(rows: &[(usize, f64, u64)]) -> Trace {
         let mut t = Trace::new("test", "prob", 1.0);
         for &(iter, fval, bits) in rows {
-            t.push(TraceRow { iter, fval, bits, transmissions: iter as u64, entries: 0 });
+            t.push(TraceRow { iter, fval, bits, transmissions: iter as u64, entries: 0, stale: 0 });
         }
         t
     }

@@ -96,6 +96,36 @@ impl SparseUpdate {
     }
 }
 
+/// Uplink payload encoding for sparse worker updates — shared by the
+/// threaded coordinator (which encodes real frames) and the
+/// single-process trainers (which account bits without materializing
+/// bytes, via [`wire_bits`]). The default is [`WireFormat::Adaptive`]:
+/// dense first rounds (weak censoring) cost `8 + 32·d` bits instead of
+/// the more expensive RLE stream, and well-censored rounds pay only the
+/// 1-byte tag over the paper's format. [`WireFormat::Sparse`] reproduces
+/// the paper's accounting exactly.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum WireFormat {
+    /// The paper's format: RLE gap-coded indices + f32 values.
+    Sparse,
+    /// [`encode_adaptive`]: 1 tag byte + the cheaper of sparse and dense.
+    /// The tag byte is real payload and is accounted in the reported bit
+    /// counts.
+    #[default]
+    Adaptive,
+}
+
+impl WireFormat {
+    /// Default with the `GDSEC_WIRE` env override (`sparse` | `adaptive`).
+    pub fn from_env() -> WireFormat {
+        match std::env::var("GDSEC_WIRE").ok().as_deref() {
+            Some("sparse") => WireFormat::Sparse,
+            Some("adaptive") => WireFormat::Adaptive,
+            _ => WireFormat::default(),
+        }
+    }
+}
+
 /// Message type tags on the wire.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 #[repr(u8)]
@@ -246,6 +276,17 @@ pub fn decode_adaptive(buf: &[u8], dim: u32) -> Option<(SparseUpdate, usize)> {
 /// Exact bit cost of the adaptive encoding.
 pub fn adaptive_bits(u: &SparseUpdate) -> usize {
     8 + sparse_bits(u).min(dense_bits(u.dim as usize))
+}
+
+/// Exact payload bit cost of a sparse update under `wire` — what the
+/// engine rules charge per transmission. Agrees byte-for-byte with the
+/// coordinator's encoded frames for either format
+/// ([`encode_sparse`] / [`encode_adaptive`]).
+pub fn wire_bits(u: &SparseUpdate, wire: WireFormat) -> usize {
+    match wire {
+        WireFormat::Sparse => sparse_bits(u),
+        WireFormat::Adaptive => adaptive_bits(u),
+    }
 }
 
 #[cfg(test)]

@@ -2,21 +2,35 @@
 //! M worker threads over framed byte-counted links — the L3 system
 //! contribution of the paper, in deployable shape.
 //!
-//! Design (mirrors the synchronous federated protocol the paper assumes,
-//! [50]/[51]):
+//! Design (the paper's synchronous federated protocol [50]/[51], grown a
+//! semi-synchronous quorum mode for the straggler-dominated wireless
+//! setting it targets):
 //! * the server broadcasts θ^k to every worker each round with an
 //!   active-this-round flag from the [`scheduler`];
 //! * active workers reply with either an RLE-coded sparse update or an
 //!   explicit `Silence` control frame (payload-bit cost 0, matching the
 //!   paper's accounting; the frame header is reported as overhead);
-//! * stragglers/crashes are handled by a receive timeout: a worker that
-//!   misses a deadline is treated as silent and marked dead after
-//!   `dead_after` consecutive timeouts (failure injection in tests);
-//! * aggregation is performed in worker-id order so the trajectory is
-//!   bit-for-bit equal to the single-threaded reference
-//!   ([`crate::algo::gdsec::run`]) — pinned by integration tests.
+//! * the gather is an event-driven [`round::RoundState`]: replies are
+//!   admitted in arrival order and routed by their round id, the model
+//!   step fires once a configurable [`round::Quorum`] has reported, and
+//!   the cut's late updates are **folded into the next round's
+//!   aggregation** (LAQ-style bounded staleness) instead of being
+//!   dropped — or, in the strictly synchronous pre-quorum protocol,
+//!   silently misattributed to the wrong round after a timeout;
+//! * straggler ordering is **virtual**: a seeded
+//!   [`transport::DelayPlan`] ranks replies deterministically, so quorum
+//!   trajectories are reproducible in CI (no wall-clock races);
+//! * crashes are handled by a receive timeout: a worker that misses a
+//!   deadline is treated as silent and marked dead after `dead_after`
+//!   consecutive timeouts (failure injection in tests);
+//! * aggregation is performed in worker-id order (stale folds first, in
+//!   (round, worker) order) so the synchronous trajectory
+//!   (`quorum = All`) is bit-for-bit equal to the single-threaded
+//!   reference ([`crate::algo::gdsec::run`]) — pinned by integration
+//!   tests, including under injected delays.
 
 pub mod protocol;
+pub mod round;
 pub mod scheduler;
 pub mod transport;
 pub mod worker;
@@ -27,10 +41,11 @@ use crate::compress::SparseUpdate;
 use crate::linalg;
 use crate::util::pool::Pool;
 use protocol::Msg;
+use round::{Admit, Quorum, RoundState, StaleUpdate};
 use scheduler::Scheduler;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
-use transport::{duplex, Recv, ServerEnd};
+use transport::{duplex, DelayPlan, Recv, ServerEnd};
 use worker::{FailurePlan, ProviderFactory};
 
 /// Coordinator configuration.
@@ -57,11 +72,21 @@ pub struct CoordConfig {
     /// not affect the trajectory: every θ_j sees updates in worker-id
     /// order regardless of which block owns it.
     pub pool: Pool,
-    /// Uplink update codec. The default is the paper's sparse format;
-    /// [`protocol::WireFormat::Adaptive`] adds a 1-byte tag and falls
-    /// back to dense when RLE would cost more (the tag is accounted in
-    /// the reported payload bits).
+    /// Uplink update codec. The default is
+    /// [`protocol::WireFormat::Adaptive`]: a 1-byte tag plus the cheaper
+    /// of sparse-RLE and dense (weak-censoring rounds — notably the
+    /// dense first round — are capped at `8 + 32·d` payload bits; the
+    /// tag is accounted). `Sparse` reproduces the paper's format
+    /// exactly. Overridable via `GDSEC_WIRE`.
     pub wire: protocol::WireFormat,
+    /// Round quorum: how many live scheduled workers must report before
+    /// the server steps θ ([`Quorum::All`] = the paper's synchronous
+    /// protocol, bitwise identical to the serial reference). Default
+    /// honors the `GDSEC_QUORUM` env override.
+    pub quorum: Quorum,
+    /// Deterministic virtual straggler schedule for quorum cuts (see
+    /// [`DelayPlan`]); irrelevant when `quorum` is `All`.
+    pub delay: DelayPlan,
 }
 
 impl CoordConfig {
@@ -77,7 +102,9 @@ impl CoordConfig {
             fstar: 0.0,
             init_theta: None,
             pool: Pool::global().clone(),
-            wire: protocol::WireFormat::default(),
+            wire: protocol::WireFormat::from_env(),
+            quorum: Quorum::from_env(),
+            delay: DelayPlan::default(),
         }
     }
 }
@@ -91,6 +118,17 @@ pub struct RoundMetrics {
     pub downlink_bits: u64,
     pub transmissions: u64,
     pub wall_us: u64,
+    /// Stale updates folded into THIS round's aggregation (parked by the
+    /// previous quorum cut, or physically delivered a round late).
+    pub stale_folded: u64,
+    /// Replies beyond this round's quorum cut (their updates are parked
+    /// for the next round).
+    pub late: u64,
+    /// Wall-clock proxy under the virtual [`DelayPlan`]: the largest
+    /// delay among the replies the quorum actually waited for. The sum
+    /// over rounds is the quantity a straggler inflates in synchronous
+    /// mode and a quorum cut bounds.
+    pub virtual_units: u64,
 }
 
 /// Result of a coordinated run.
@@ -139,7 +177,10 @@ impl Coordinator {
         Coordinator { cfg, ends, handles, d: dim }
     }
 
-    /// Run the synchronous protocol to completion and join the workers.
+    /// Run the protocol to completion and join the workers. With
+    /// `quorum = All` this is the paper's synchronous loop, bit-for-bit;
+    /// with a smaller quorum the round state machine applies the first K
+    /// virtual arrivals and folds the rest into the next round.
     pub fn run(mut self) -> CoordOutcome {
         let d = self.d;
         let m = self.ends.len();
@@ -155,7 +196,19 @@ impl Coordinator {
         let mut agg = vec![0.0; d];
         let mut sched = std::mem::replace(&mut self.cfg.scheduler, Scheduler::All);
 
-        let (mut cum_bits, mut cum_tx, mut cum_entries) = (0u64, 0u64, 0u64);
+        // Transmitted updates the server holds past their round — parked
+        // by a quorum cut or physically delivered late — folded into the
+        // NEXT apply in (round, worker) order. Error correction keeps
+        // this principled: the worker already moved its h_m/e_m when it
+        // transmitted, so the server folding one round late is the same
+        // Eq. 6 step, delayed (LAQ-style bounded staleness). An update
+        // still parked when the loop ends (the FINAL round's cut) is an
+        // in-flight transmission at shutdown: dropped like any frame in
+        // the pipe, its bits already charged — the trace's last row
+        // reflects the θ the server actually served.
+        let mut stale: Vec<StaleUpdate> = Vec::new();
+
+        let (mut cum_bits, mut cum_tx, mut cum_entries, mut cum_stale) = (0u64, 0u64, 0u64, 0u64);
         // One extra eval round so the final iterate's objective is recorded
         // (round k's reports evaluate θ^k, the iterate after k−1 updates).
         for k in 1..=iters + 1 {
@@ -164,6 +217,10 @@ impl Coordinator {
             let active =
                 if eval_only { (0..m).collect::<Vec<_>>() } else { sched.active(k, m) };
             let full_round = active.len() == m && !dead.iter().any(|&x| x);
+            // Quorum size is relative to the workers actually expected to
+            // report: live AND scheduled this round.
+            let expected = active.iter().filter(|&&w| !dead[w]).count();
+            let k_quorum = self.cfg.quorum.k_of(expected);
             let mut metrics = RoundMetrics { round: k, ..Default::default() };
 
             // Broadcast θ^k with per-worker active flags.
@@ -183,42 +240,65 @@ impl Coordinator {
                 }
             }
 
-            // Collect replies from live active workers.
-            let mut updates: Vec<Option<SparseUpdate>> = vec![None; m];
-            let mut local_f: Vec<Option<f64>> = vec![None; m];
+            // Event-driven gather: admit frames in arrival order until
+            // every live active worker resolves (fresh reply, timeout, or
+            // death). Round-id routing sends an older round's update to
+            // the stale pool instead of misreading it as this round's
+            // reply — and keeps waiting for that worker's fresh frame
+            // within the same deadline.
+            let mut rs = RoundState::new(k as u32, m);
+            let mut arrived_stale_entries = 0u64;
             for &w in &active {
                 if dead[w] {
                     continue;
                 }
-                match self.ends[w].rx.recv_timeout(self.cfg.recv_timeout) {
-                    Recv::Frame(frame) => {
-                        timeout_strikes[w] = 0;
-                        metrics.overhead_bits += protocol::HEADER_LEN as u64 * 8;
-                        match protocol::decode(&frame, d as u32) {
-                            Ok(Msg::Update { update, local_f: f, .. }) => {
-                                // Codec-exact for either wire format (the
-                                // adaptive tag byte is real payload).
-                                metrics.payload_bits += protocol::update_payload_bits(&frame);
-                                metrics.transmissions += 1;
-                                metrics.overhead_bits += 64; // reported loss
-                                local_f[w] = Some(f);
-                                updates[w] = Some(update);
+                let deadline = Instant::now() + self.cfg.recv_timeout;
+                loop {
+                    let remaining = deadline.saturating_duration_since(Instant::now());
+                    match self.ends[w].rx.recv_timeout(remaining) {
+                        Recv::Frame(frame) => {
+                            timeout_strikes[w] = 0;
+                            metrics.overhead_bits += protocol::HEADER_LEN as u64 * 8;
+                            match protocol::decode(&frame, d as u32) {
+                                Ok(msg @ (Msg::Update { .. } | Msg::Silence { .. })) => {
+                                    // Codec-exact for either wire format
+                                    // (the adaptive tag byte is real
+                                    // payload; silence payloads cost 0).
+                                    metrics.payload_bits += protocol::update_payload_bits(&frame);
+                                    metrics.overhead_bits += 64; // reported loss
+                                    if matches!(msg, Msg::Update { .. }) {
+                                        metrics.transmissions += 1;
+                                    }
+                                    let was_stale_round = match &msg {
+                                        Msg::Update { round, .. }
+                                        | Msg::Silence { round, .. } => (*round as usize) < k,
+                                        _ => unreachable!(),
+                                    };
+                                    match rs.admit(w, msg) {
+                                        Admit::Fresh => break,
+                                        Admit::Stale(su) => {
+                                            arrived_stale_entries += su.update.nnz() as u64;
+                                            stale.push(su);
+                                            continue; // fresh reply still due
+                                        }
+                                        Admit::Ignored if was_stale_round => continue,
+                                        Admit::Ignored => break,
+                                    }
+                                }
+                                _ => break, // malformed/unexpected: treat as silent
                             }
-                            Ok(Msg::Silence { local_f: f, .. }) => {
-                                metrics.overhead_bits += 64;
-                                local_f[w] = Some(f);
-                            }
-                            _ => {} // malformed/unexpected: treat as silent
                         }
-                    }
-                    Recv::Timeout => {
-                        timeout_strikes[w] += 1;
-                        if timeout_strikes[w] >= self.cfg.dead_after {
+                        Recv::Timeout => {
+                            timeout_strikes[w] += 1;
+                            if timeout_strikes[w] >= self.cfg.dead_after {
+                                dead[w] = true;
+                            }
+                            break;
+                        }
+                        Recv::Disconnected => {
                             dead[w] = true;
+                            break;
                         }
-                    }
-                    Recv::Disconnected => {
-                        dead[w] = true;
                     }
                 }
             }
@@ -226,8 +306,8 @@ impl Coordinator {
             // Record the objective of θ^k (the pre-update iterate), paired
             // with the bits accumulated through round k−1 — exactly the
             // serial reference's row k−1.
-            let fval = if full_round && local_f.iter().all(|f| f.is_some()) {
-                local_f.iter().map(|f| f.unwrap()).sum()
+            let fval = if full_round && rs.local_f().iter().all(|f| f.is_some()) {
+                rs.local_f().iter().map(|f| f.unwrap()).sum()
             } else if let Some(eval) = &self.cfg.evaluator {
                 eval(&theta)
             } else {
@@ -239,6 +319,7 @@ impl Coordinator {
                 bits: cum_bits,
                 transmissions: cum_tx,
                 entries: cum_entries,
+                stale: cum_stale,
             });
 
             if eval_only {
@@ -247,24 +328,49 @@ impl Coordinator {
                 break;
             }
 
-            // Aggregate in worker-id order (determinism) and step, fanned
-            // over contiguous column blocks: every element still sees the
-            // updates in worker order, so any thread count produces the
-            // serial loop's bits exactly (the integration tests pin this
-            // against the single-threaded reference).
-            for u in updates.iter().flatten() {
+            // Wire accounting happens at transmission time — late updates
+            // still paid their bits this round even though they fold next
+            // round.
+            for u in rs.updates().iter().flatten() {
                 cum_entries += u.nnz() as u64;
             }
+            cum_entries += arrived_stale_entries;
             cum_bits += metrics.payload_bits;
             cum_tx += metrics.transmissions;
+
+            // Cut the round at the quorum (virtual arrival order — seeded
+            // delays, then worker id — so the trajectory is deterministic
+            // for any thread schedule) and park the late updates.
+            let cut = rs.cut(k_quorum, &self.cfg.delay);
+            metrics.virtual_units = cut.units;
+            metrics.late = cut.late.len() as u64;
+            let mut parked: Vec<StaleUpdate> = Vec::new();
+            for &w in &cut.late {
+                if let Some(u) = rs.take_update(w) {
+                    parked.push(StaleUpdate { round: k as u32, worker: w, update: u });
+                }
+            }
+
+            // Aggregate and step, fanned over contiguous column blocks:
+            // stale folds first in (round, worker) order, then this
+            // round's on-time updates in worker-id order — every element
+            // sees the same fixed sequence at any thread count, so with
+            // `quorum = All` (stale always empty) the bits equal the
+            // serial loop's exactly (pinned by the integration tests).
+            stale.sort_by_key(|s| (s.round, s.worker));
+            metrics.stale_folded = stale.len() as u64;
             apply_round_blocked(
                 &mut theta,
                 &mut h,
                 &mut agg,
-                &updates,
+                &stale,
+                rs.updates(),
                 &self.cfg.gdsec,
                 &self.cfg.pool,
             );
+            cum_stale += stale.len() as u64;
+            stale.clear();
+            stale.append(&mut parked);
             metrics.wall_us = t0.elapsed().as_micros() as u64;
             rounds.push(metrics);
         }
@@ -299,7 +405,8 @@ impl Coordinator {
 /// The server's per-round work — zero + aggregate the worker updates and
 /// apply θ^{k+1} = θ^k − α(h + Δ̂), h += β·Δ̂ — fanned over contiguous
 /// column blocks of (θ, h, agg). Each block zeroes its agg slice, folds
-/// the updates' in-range entries in worker-id order
+/// the stale pool's in-range entries in (round, worker) order, then the
+/// fresh updates' in worker-id order
 /// ([`SparseUpdate::add_range_into`]), and steps its θ/h slice, keeping
 /// the working set cache-resident at RCV1 scale. Blocks are cut by the
 /// canonical [`Pool::block_width`] (the same contract as
@@ -311,6 +418,7 @@ fn apply_round_blocked(
     theta: &mut [f64],
     h: &mut [f64],
     agg: &mut [f64],
+    stale: &[StaleUpdate],
     updates: &[Option<SparseUpdate>],
     cfg: &GdSecConfig,
     pool: &Pool,
@@ -335,6 +443,9 @@ fn apply_round_blocked(
         .collect();
     pool.scatter(&mut blocks, |_, blk| {
         linalg::zero(blk.agg);
+        for s in stale {
+            s.update.add_range_into(blk.j0, blk.agg);
+        }
         for u in updates.iter().flatten() {
             u.add_range_into(blk.j0, blk.agg);
         }
@@ -352,12 +463,28 @@ fn apply_round_blocked(
 }
 
 /// Convenience: run distributed GD-SEC over a [`crate::objectives::Problem`]
-/// with native gradient providers.
+/// with native gradient providers. Quorum honors the `GDSEC_QUORUM` env
+/// override (the CI matrix runs the integration suite once with
+/// `quorum < M`); use [`run_native_opts`] to pin it.
 pub fn run_native(
     prob: &crate::objectives::Problem,
     gdsec: GdSecConfig,
     iters: usize,
     sched: Scheduler,
+) -> CoordOutcome {
+    run_native_opts(prob, gdsec, iters, sched, Quorum::from_env(), DelayPlan::default())
+}
+
+/// [`run_native`] with an explicit quorum policy and virtual delay
+/// schedule (parity tests pin `Quorum::All`; straggler tests inject
+/// deterministic [`DelayPlan`]s).
+pub fn run_native_opts(
+    prob: &crate::objectives::Problem,
+    gdsec: GdSecConfig,
+    iters: usize,
+    sched: Scheduler,
+    quorum: Quorum,
+    delay: DelayPlan,
 ) -> CoordOutcome {
     let fstar = prob.estimate_fstar(crate::algo::gdsec::fstar_iters(iters));
     let factories: Vec<ProviderFactory> = prob
@@ -377,6 +504,8 @@ pub fn run_native(
     cfg.problem_name = prob.name.clone();
     cfg.fstar = fstar;
     cfg.evaluator = Some(Arc::new(move |theta: &[f64]| prob2.value(theta)));
+    cfg.quorum = quorum;
+    cfg.delay = delay;
     Coordinator::spawn(cfg, prob.d, factories, failures).run()
 }
 

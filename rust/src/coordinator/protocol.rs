@@ -54,18 +54,11 @@ impl MsgKind {
     }
 }
 
-/// Uplink payload encoding for worker updates.
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
-pub enum WireFormat {
-    /// The paper's format: RLE gap-coded indices + f32 values.
-    #[default]
-    Sparse,
-    /// [`crate::compress::encode_adaptive`]: 1 tag byte + the cheaper of
-    /// sparse and dense — an extension beyond the paper, opt-in via
-    /// [`crate::coordinator::CoordConfig::wire`]. The tag byte is real
-    /// payload and is accounted in the reported bit counts.
-    Adaptive,
-}
+/// Uplink payload encoding for worker updates — defined next to the
+/// codecs in [`crate::compress`] (the single-process trainers account
+/// the same formats without materializing frames); re-exported here for
+/// the protocol surface. The crate-wide default is `Adaptive`.
+pub use crate::compress::WireFormat;
 
 /// A decoded message.
 #[derive(Debug, Clone, PartialEq)]
@@ -207,9 +200,10 @@ pub fn decode(buf: &[u8], dim: u32) -> Result<Msg, ProtoError> {
 
 /// The paper-metric payload bits carried by an uplink frame: the encoded
 /// sparse update only (silence and headers cost 0 in the paper's model).
-/// Assumes the default [`WireFormat::Sparse`]; for frames already in
-/// hand use [`update_payload_bits`], which is codec-exact for both
-/// formats.
+/// Always prices the [`WireFormat::Sparse`] codec — the paper's format —
+/// regardless of the crate's (Adaptive) default; for frames already in
+/// hand use [`update_payload_bits`], which is codec-exact for whichever
+/// format actually encoded them.
 pub fn uplink_payload_bits(msg: &Msg) -> u64 {
     match msg {
         Msg::Update { update, .. } => compress::sparse_bits(update) as u64,

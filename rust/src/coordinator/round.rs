@@ -1,0 +1,297 @@
+//! The event-driven round state machine behind the semi-synchronous
+//! coordinator.
+//!
+//! Each round the server broadcasts θ^k and then *admits* worker replies
+//! in arrival order. A reply tagged with an older round id is routed to
+//! the **stale pool** instead of being misattributed to the current
+//! round (the strictly synchronous gather silently did exactly that for
+//! a worker that had timed out one round earlier). Once every live
+//! active worker has resolved — fresh reply, timeout, or death — the
+//! round is **cut**: the first `K` replies in virtual-arrival order
+//! (`(DelayPlan::delay(w, k), w)` — deterministic, never wall-clock)
+//! are applied immediately, and the rest are parked as stale and folded
+//! into the *next* round's aggregation, exactly where GD-SEC's Eq. 6
+//! would have put them one round earlier (LAQ-style bounded staleness).
+//!
+//! With `Quorum::All` the cut keeps every reply and the machine is
+//! bit-for-bit identical to the synchronous protocol — pinned by
+//! `tests/integration_coordinator.rs` against the serial reference,
+//! including under injected delays.
+
+use super::protocol::Msg;
+use super::transport::DelayPlan;
+use crate::compress::SparseUpdate;
+
+/// How many of a round's live active workers must report before the
+/// server steps θ.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub enum Quorum {
+    /// Every live active worker — the paper's synchronous protocol.
+    #[default]
+    All,
+    /// A fixed count K (clamped to `[1, active]`).
+    Count(usize),
+    /// `ceil(ratio · active)`, clamped to `[1, active]`.
+    Fraction(f64),
+}
+
+impl Quorum {
+    /// Default with the `GDSEC_QUORUM` env override: `all`, an absolute
+    /// count (`2`), or a participation ratio in (0, 1) (`0.5`).
+    ///
+    /// Panics on anything else: a malformed value silently degrading to
+    /// `All` would turn the CI quorum matrix into a synchronous no-op
+    /// while staying green.
+    pub fn from_env() -> Quorum {
+        match std::env::var("GDSEC_QUORUM").ok().as_deref() {
+            None | Some("") | Some("all") => Quorum::All,
+            Some(s) => {
+                if let Ok(k) = s.parse::<usize>() {
+                    Quorum::Count(k)
+                } else {
+                    match s.parse::<f64>() {
+                        Ok(r) if r > 0.0 && r < 1.0 => Quorum::Fraction(r),
+                        _ => panic!(
+                            "GDSEC_QUORUM must be `all`, a worker count, or a \
+                             ratio in (0, 1); got {s:?}"
+                        ),
+                    }
+                }
+            }
+        }
+    }
+
+    /// The quorum size K for a round with `active` live scheduled
+    /// workers.
+    pub fn k_of(&self, active: usize) -> usize {
+        if active == 0 {
+            return 0;
+        }
+        match self {
+            Quorum::All => active,
+            Quorum::Count(k) => (*k).clamp(1, active),
+            Quorum::Fraction(r) => ((r * active as f64).ceil() as usize).clamp(1, active),
+        }
+    }
+}
+
+/// A transmitted update the server holds past its round: parked by a
+/// quorum cut, or physically delivered a round late after a timeout.
+/// Folded into the next aggregation in `(round, worker)` order.
+#[derive(Debug, Clone)]
+pub struct StaleUpdate {
+    pub round: u32,
+    pub worker: usize,
+    pub update: SparseUpdate,
+}
+
+/// Routing verdict for one admitted reply.
+#[derive(Debug)]
+pub enum Admit {
+    /// A fresh reply for the current round (update or silence) — counts
+    /// toward the quorum.
+    Fresh,
+    /// An older round's update, physically delivered late: the caller
+    /// adds it to the stale pool (its bits went on the wire — account
+    /// them — but it must not be misread as this round's reply).
+    Stale(StaleUpdate),
+    /// Nothing actionable: stale silence, duplicate, wrong-direction or
+    /// future-round frame.
+    Ignored,
+}
+
+/// Per-round reply state for one gather.
+pub struct RoundState {
+    k: u32,
+    updates: Vec<Option<SparseUpdate>>,
+    local_f: Vec<Option<f64>>,
+    replied: Vec<bool>,
+}
+
+/// The quorum cut of a completed gather.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Cut {
+    /// Repliers beyond the quorum, ascending worker id — their updates
+    /// (if any) are parked for the next round.
+    pub late: Vec<usize>,
+    /// Wall-clock proxy for the round: the largest virtual delay among
+    /// the replies the server waited for (the K-th virtual arrival).
+    pub units: u64,
+}
+
+impl RoundState {
+    pub fn new(k: u32, m: usize) -> RoundState {
+        RoundState {
+            k,
+            updates: vec![None; m],
+            local_f: vec![None; m],
+            replied: vec![false; m],
+        }
+    }
+
+    /// Admit worker `w`'s decoded reply, routing by round id. The caller
+    /// owns liveness (timeouts / strikes) and bit accounting.
+    pub fn admit(&mut self, w: usize, msg: Msg) -> Admit {
+        match msg {
+            Msg::Update { round, update, local_f, .. } => {
+                if round == self.k {
+                    if self.replied[w] {
+                        return Admit::Ignored;
+                    }
+                    self.replied[w] = true;
+                    self.local_f[w] = Some(local_f);
+                    self.updates[w] = Some(update);
+                    Admit::Fresh
+                } else if round < self.k {
+                    Admit::Stale(StaleUpdate { round, worker: w, update })
+                } else {
+                    Admit::Ignored
+                }
+            }
+            Msg::Silence { round, local_f, .. } => {
+                if round == self.k && !self.replied[w] {
+                    self.replied[w] = true;
+                    self.local_f[w] = Some(local_f);
+                    Admit::Fresh
+                } else {
+                    Admit::Ignored
+                }
+            }
+            _ => Admit::Ignored,
+        }
+    }
+
+    /// Whether worker `w` has reported fresh this round.
+    pub fn replied(&self, w: usize) -> bool {
+        self.replied[w]
+    }
+
+    /// Fresh local objective values, indexed by worker.
+    pub fn local_f(&self) -> &[Option<f64>] {
+        &self.local_f
+    }
+
+    /// Fresh updates, indexed by worker (None = silent / no reply).
+    pub fn updates(&self) -> &[Option<SparseUpdate>] {
+        &self.updates
+    }
+
+    /// Take worker `w`'s fresh update out (for parking late ones).
+    pub fn take_update(&mut self, w: usize) -> Option<SparseUpdate> {
+        self.updates[w].take()
+    }
+
+    /// Cut the round at quorum `k_quorum`: rank this round's repliers by
+    /// `(delay(w, k), w)` — virtual arrival order, deterministic for any
+    /// thread schedule — keep the first `k_quorum` as on-time, and
+    /// return the rest (ascending worker id) as late. `units` is the
+    /// largest delay among the on-time replies: the wall-clock proxy the
+    /// quorum actually waited for.
+    pub fn cut(&self, k_quorum: usize, plan: &DelayPlan) -> Cut {
+        let mut arrivals: Vec<(u64, usize)> = (0..self.replied.len())
+            .filter(|&w| self.replied[w])
+            .map(|w| (plan.delay(w, self.k as usize), w))
+            .collect();
+        arrivals.sort_unstable();
+        let on_time = k_quorum.min(arrivals.len());
+        let units = arrivals[..on_time].iter().map(|&(d, _)| d).max().unwrap_or(0);
+        let mut late: Vec<usize> = arrivals[on_time..].iter().map(|&(_, w)| w).collect();
+        late.sort_unstable();
+        Cut { late, units }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn upd(dim: usize, i: u32) -> SparseUpdate {
+        let mut u = SparseUpdate::empty(dim);
+        u.idx.push(i);
+        u.val.push(1.0);
+        u
+    }
+
+    #[test]
+    fn quorum_k_of_clamps() {
+        assert_eq!(Quorum::All.k_of(5), 5);
+        assert_eq!(Quorum::Count(3).k_of(5), 3);
+        assert_eq!(Quorum::Count(0).k_of(5), 1);
+        assert_eq!(Quorum::Count(99).k_of(5), 5);
+        assert_eq!(Quorum::Fraction(0.5).k_of(5), 3); // ceil(2.5)
+        assert_eq!(Quorum::Fraction(0.01).k_of(5), 1);
+        assert_eq!(Quorum::Fraction(0.99).k_of(5), 5);
+        assert_eq!(Quorum::All.k_of(0), 0);
+    }
+
+    #[test]
+    fn admit_routes_by_round_id() {
+        let mut rs = RoundState::new(5, 3);
+        // Fresh update.
+        match rs.admit(0, Msg::Update { round: 5, worker: 0, update: upd(4, 1), local_f: 0.5 })
+        {
+            Admit::Fresh => {}
+            other => panic!("{other:?}"),
+        }
+        assert!(rs.replied(0));
+        assert_eq!(rs.local_f()[0], Some(0.5));
+        // Stale update routed to the pool, worker still unresolved.
+        match rs.admit(1, Msg::Update { round: 4, worker: 1, update: upd(4, 2), local_f: 0.1 })
+        {
+            Admit::Stale(s) => {
+                assert_eq!((s.round, s.worker), (4, 1));
+                assert_eq!(s.update.idx, vec![2]);
+            }
+            other => panic!("{other:?}"),
+        }
+        assert!(!rs.replied(1));
+        // Its fresh reply afterwards still counts.
+        assert!(matches!(
+            rs.admit(1, Msg::Silence { round: 5, worker: 1, local_f: 0.2 }),
+            Admit::Fresh
+        ));
+        assert!(rs.replied(1));
+        // Stale silence / duplicates / future rounds are ignored.
+        assert!(matches!(
+            rs.admit(2, Msg::Silence { round: 3, worker: 2, local_f: 0.0 }),
+            Admit::Ignored
+        ));
+        assert!(matches!(
+            rs.admit(0, Msg::Update { round: 5, worker: 0, update: upd(4, 3), local_f: 0.9 }),
+            Admit::Ignored
+        ));
+        assert!(matches!(
+            rs.admit(2, Msg::Update { round: 6, worker: 2, update: upd(4, 3), local_f: 0.9 }),
+            Admit::Ignored
+        ));
+    }
+
+    #[test]
+    fn cut_ranks_by_delay_then_worker() {
+        let mut rs = RoundState::new(2, 4);
+        for w in 0..4 {
+            rs.admit(w, Msg::Silence { round: 2, worker: w as u32, local_f: 0.0 });
+        }
+        // Worker 1 is the straggler; ties (0 units) break by worker id.
+        let plan = DelayPlan::PerWorker(vec![0, 500, 0, 7]);
+        let cut = rs.cut(3, &plan);
+        assert_eq!(cut.late, vec![1]);
+        assert_eq!(cut.units, 7); // K-th arrival is worker 3 at 7 units
+        // Quorum All keeps everyone and waits for the straggler.
+        let cut = rs.cut(4, &plan);
+        assert!(cut.late.is_empty());
+        assert_eq!(cut.units, 500);
+        // No delays: cut falls back to worker-id order.
+        let cut = rs.cut(2, &DelayPlan::None);
+        assert_eq!(cut.late, vec![2, 3]);
+        assert_eq!(cut.units, 0);
+    }
+
+    #[test]
+    fn cut_with_fewer_repliers_than_quorum() {
+        let mut rs = RoundState::new(1, 3);
+        rs.admit(2, Msg::Silence { round: 1, worker: 2, local_f: 0.0 });
+        let cut = rs.cut(3, &DelayPlan::None);
+        assert!(cut.late.is_empty());
+    }
+}

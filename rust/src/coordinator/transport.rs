@@ -7,10 +7,54 @@
 //! link, and can additionally model a per-round uplink byte budget
 //! (Fig 8's bandwidth-limited regime is driven by the scheduler on top).
 
+use crate::util::rng::{Pcg64, SplitMix64};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender, TryRecvError};
 use std::sync::Arc;
 use std::time::Duration;
+
+/// Deterministic delay-injection harness for the semi-synchronous
+/// quorum rounds: a seeded per-(worker, round) schedule of **virtual**
+/// compute/uplink delays, in abstract time units (never wall-clock).
+///
+/// The coordinator's round state machine ranks the round's replies by
+/// `(delay(w, k), w)` and cuts the quorum there, so straggler
+/// trajectories are bit-for-bit reproducible in CI — no sleeps, no
+/// scheduler races. The per-round wall-clock proxy reported in
+/// [`crate::coordinator::RoundMetrics::virtual_units`] is the largest
+/// delay among the replies the server actually waited for.
+#[derive(Debug, Clone, Default)]
+pub enum DelayPlan {
+    /// No injected delays: every reply ties at 0 units and the cut falls
+    /// back to worker-id order.
+    #[default]
+    None,
+    /// Fixed per-worker delay, identical every round (index = worker
+    /// id; missing workers default to 0). `PerWorker(vec![0, 0, 900])`
+    /// models one hard straggler.
+    PerWorker(Vec<u64>),
+    /// Seeded pseudo-random delay in `[lo, hi)` drawn independently per
+    /// (worker, round) — i.i.d. jitter, reproducible from the seed.
+    Jitter { seed: u64, lo: u64, hi: u64 },
+}
+
+impl DelayPlan {
+    /// Virtual delay units for worker `w`'s reply in round `k`.
+    pub fn delay(&self, w: usize, k: usize) -> u64 {
+        match self {
+            DelayPlan::None => 0,
+            DelayPlan::PerWorker(units) => units.get(w).copied().unwrap_or(0),
+            DelayPlan::Jitter { seed, lo, hi } => {
+                if hi <= lo {
+                    return *lo;
+                }
+                // Stateless: one child stream per (worker, round) cell.
+                let cell = SplitMix64::child(*seed, ((w as u64) << 32) ^ k as u64);
+                lo + Pcg64::seeded(cell).below(hi - lo)
+            }
+        }
+    }
+}
 
 /// Shared byte counters for one direction of one link.
 #[derive(Debug, Default)]
@@ -71,6 +115,17 @@ impl RxLink {
             Ok(f) => Recv::Frame(f),
             Err(RecvTimeoutError::Timeout) => Recv::Timeout,
             Err(RecvTimeoutError::Disconnected) => Recv::Disconnected,
+        }
+    }
+
+    /// Non-blocking receive: `None` when the link is empty (the worker
+    /// loop uses this to skip to the newest queued θ broadcast when the
+    /// server has raced ahead after a quorum cut).
+    pub fn try_recv(&self) -> Option<Recv> {
+        match self.rx.try_recv() {
+            Ok(f) => Some(Recv::Frame(f)),
+            Err(TryRecvError::Empty) => None,
+            Err(TryRecvError::Disconnected) => Some(Recv::Disconnected),
         }
     }
 }
@@ -159,6 +214,39 @@ mod tests {
         let (tx, rx, _) = link();
         drop(rx);
         assert!(!tx.send(vec![1]));
+    }
+
+    #[test]
+    fn try_recv_empty_frame_disconnect() {
+        let (tx, rx, _) = link();
+        assert!(rx.try_recv().is_none());
+        tx.send(vec![1]);
+        assert!(matches!(rx.try_recv(), Some(Recv::Frame(_))));
+        drop(tx);
+        assert!(matches!(rx.try_recv(), Some(Recv::Disconnected)));
+    }
+
+    #[test]
+    fn delay_plan_deterministic_and_bounded() {
+        assert_eq!(DelayPlan::None.delay(3, 7), 0);
+        let pw = DelayPlan::PerWorker(vec![5, 0, 900]);
+        assert_eq!(pw.delay(2, 1), 900);
+        assert_eq!(pw.delay(2, 99), 900); // round-independent
+        assert_eq!(pw.delay(7, 1), 0); // out of range ⇒ 0
+        let j = DelayPlan::Jitter { seed: 42, lo: 10, hi: 20 };
+        let mut varies = false;
+        for w in 0..4 {
+            for k in 1..50 {
+                let d = j.delay(w, k);
+                assert!((10..20).contains(&d), "jitter {d} out of [10,20)");
+                assert_eq!(d, j.delay(w, k), "jitter not deterministic");
+                varies |= d != j.delay(w, k + 1);
+            }
+        }
+        assert!(varies, "jitter constant across rounds");
+        // Degenerate range collapses to lo.
+        let flat = DelayPlan::Jitter { seed: 1, lo: 3, hi: 3 };
+        assert_eq!(flat.delay(0, 1), 3);
     }
 
     #[test]

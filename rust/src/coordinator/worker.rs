@@ -92,7 +92,40 @@ pub fn worker_loop(
         };
         match msg {
             Msg::Shutdown => return,
-            Msg::Broadcast { round, theta, active } => {
+            Msg::Broadcast { mut round, mut theta, mut active } => {
+                // Quorum rounds let the server race ahead of a straggler:
+                // if newer broadcasts are already queued, the one in hand
+                // is superseded — skip straight to the newest so the
+                // worker computes at most one stale round, never a
+                // backlog. (In the synchronous protocol the inbox never
+                // holds two broadcasts, so this drain is a no-op there.)
+                while let Some(r) = end.rx.try_recv() {
+                    match r {
+                        Recv::Frame(f) => match protocol::decode(&f, d as u32) {
+                            Ok(Msg::Broadcast { round: r2, theta: t2, active: a2 })
+                                if r2 > round =>
+                            {
+                                // The superseded θ still advances the
+                                // iterate history — exactly what
+                                // processing it sequentially would have
+                                // done to theta_prev — so censoring
+                                // thresholds stay bitwise identical to
+                                // the one-at-a-time path.
+                                theta_prev.copy_from_slice(&theta);
+                                round = r2;
+                                theta = t2;
+                                active = a2;
+                            }
+                            Ok(Msg::Shutdown) => return,
+                            _ => {} // corrupt/out-of-order: drop
+                        },
+                        Recv::Disconnected => return,
+                        // try_recv never yields Timeout (it returns None
+                        // on an empty queue, which ends the drain above);
+                        // the arm only keeps the match exhaustive.
+                        Recv::Timeout => break,
+                    }
+                }
                 if failure.silent_from_round.is_some_and(|r| round >= r) {
                     theta_prev.copy_from_slice(&theta);
                     continue;
@@ -128,6 +161,20 @@ mod tests {
     use crate::coordinator::transport::duplex;
     use crate::data::synthetic;
     use crate::objectives::Problem;
+
+    /// How long these tests wait before concluding a worker stayed
+    /// silent — previously two hardcoded `50ms` literals, which silently
+    /// bounded how slow a worker may be before a probe misreads it as
+    /// dark. Override with `GDSEC_SILENCE_PROBE_MS` on a loaded box.
+    /// (Runtime straggler handling is NOT this: that is
+    /// `CoordConfig::{recv_timeout, dead_after}` plus the quorum cut.)
+    fn silence_probe() -> std::time::Duration {
+        let ms = std::env::var("GDSEC_SILENCE_PROBE_MS")
+            .ok()
+            .and_then(|s| s.parse::<u64>().ok())
+            .unwrap_or(50);
+        std::time::Duration::from_millis(ms)
+    }
 
     fn spawn_one(
         cfg: GdSecConfig,
@@ -178,7 +225,7 @@ mod tests {
             &Msg::Broadcast { round: 1, theta: vec![0.0; d], active: false },
             d as u32,
         ));
-        match server.rx.recv_timeout(std::time::Duration::from_millis(50)) {
+        match server.rx.recv_timeout(silence_probe()) {
             Recv::Timeout => {}
             other => panic!("expected no reply, got {other:?}"),
         }
@@ -200,9 +247,48 @@ mod tests {
             &Msg::Broadcast { round: 2, theta: vec![0.1; d], active: true },
             d as u32,
         ));
-        match server.rx.recv_timeout(std::time::Duration::from_millis(50)) {
+        match server.rx.recv_timeout(silence_probe()) {
             Recv::Timeout => {}
             other => panic!("expected dark worker, got {other:?}"),
+        }
+        server.tx.send(protocol::encode(&Msg::Shutdown, d as u32));
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn queued_newer_broadcast_supersedes_in_flight_round() {
+        // Both broadcasts are queued BEFORE the worker thread starts, so
+        // the drain deterministically sees round 2 superseding round 1:
+        // exactly one reply comes back, tagged round 2.
+        let cfg = GdSecConfig { xi: Xi::Uniform(1.0), ..Default::default() };
+        let prob = Problem::linear(synthetic::dna_like(1, 30), 1, 0.1);
+        let d = prob.d;
+        let local = prob.locals[0].clone();
+        let factory: ProviderFactory =
+            Box::new(move || Box::new(NativeProvider::new(local)) as Box<dyn GradProvider>);
+        let (server, worker) = duplex();
+        server.tx.send(protocol::encode(
+            &Msg::Broadcast { round: 1, theta: vec![0.0; d], active: true },
+            d as u32,
+        ));
+        server.tx.send(protocol::encode(
+            &Msg::Broadcast { round: 2, theta: vec![0.01; d], active: true },
+            d as u32,
+        ));
+        let h = std::thread::spawn(move || {
+            worker_loop(0, 1, cfg, factory, worker, FailurePlan::default(), WireFormat::Sparse)
+        });
+        match server.rx.recv() {
+            Recv::Frame(f) => match protocol::decode(&f, d as u32).unwrap() {
+                Msg::Update { round, .. } => assert_eq!(round, 2, "superseded round replied"),
+                other => panic!("expected update, got {other:?}"),
+            },
+            other => panic!("{other:?}"),
+        }
+        // No second reply: round 1 was skipped, not queued behind.
+        match server.rx.recv_timeout(silence_probe()) {
+            Recv::Timeout => {}
+            other => panic!("expected exactly one reply, got {other:?}"),
         }
         server.tx.send(protocol::encode(&Msg::Shutdown, d as u32));
         h.join().unwrap();

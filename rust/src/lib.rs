@@ -33,9 +33,18 @@
 //! their update buffers arena-style, and the kernels in [`linalg`] /
 //! [`sparse`] are blocked/unrolled for autovectorization with
 //! [`objectives::GradSplit`] lanes covering the M < cores regime.
+//! The threaded [`coordinator`] runs the same math over framed links
+//! with an event-driven round state machine: semi-synchronous quorum
+//! rounds ([`coordinator::round::Quorum`], deterministic virtual
+//! straggler schedules via [`coordinator::transport::DelayPlan`]) fold
+//! late updates one round later through
+//! [`algo::engine::CompressRule::fold_stale`] instead of dropping them;
+//! `quorum = All` stays bit-identical to the serial reference.
 //! `GDSEC_THREADS` sets the fan-out width of the shared pool
 //! ([`util::pool::Pool::global`]); `GDSEC_NNZ_BUDGET` tunes the nested
-//! lane cut; `benches/hotpath_micro.rs` writes the machine-readable perf
+//! lane cut; `GDSEC_QUORUM` / `GDSEC_WIRE` select the coordinator
+//! quorum and the (default-adaptive) uplink codec/accounting;
+//! `benches/hotpath_micro.rs` writes the machine-readable perf
 //! trajectory to `BENCH_hotpath.json`. See EXPERIMENTS.md §Perf.
 
 // Indexed loops over multiple same-length slices are the house style for

@@ -133,7 +133,7 @@ fn steady_state_round_allocates_nothing() {
     //     (worker, row-block) lanes forced multi-block, pooled fan-out,
     //     full-participation schedule) must also be allocation-free once
     //     the engine's buffers are built. ---
-    let opts = EngineOpts { nnz_budget: 256 };
+    let opts = EngineOpts { nnz_budget: 256, ..EngineOpts::default() };
     let mut eng = Engine::new(&prob, GdSecRule::new(cfg.clone()), &pool, &opts, 0.0);
     for _ in 0..3 {
         eng.step(None);
@@ -149,4 +149,26 @@ fn steady_state_round_allocates_nothing() {
         "steady-state engine rounds performed heap allocations"
     );
     assert!(eng.iter() == 28 && eng.server.theta.iter().any(|&t| t != 0.0));
+
+    // --- Quorum/stale-fold phase: semi-synchronous rounds where one
+    //     worker is late every round — its transmission parked by the
+    //     cut and folded one round later via `CompressRule::fold_stale`
+    //     (staged into the server scratch) — must be allocation-free
+    //     too: the stale path reuses the lane's wire buffer and the
+    //     pre-sized aggregation scratch. ---
+    const LATE: [usize; 1] = [1];
+    for _ in 0..3 {
+        eng.step_quorum(None, Some(&LATE));
+    }
+    let before = ALLOC_CALLS.load(Ordering::SeqCst);
+    for _ in 0..25 {
+        eng.step_quorum(None, Some(&LATE));
+    }
+    let after = ALLOC_CALLS.load(Ordering::SeqCst);
+    assert_eq!(
+        after - before,
+        0,
+        "steady-state quorum (stale-fold) engine rounds performed heap allocations"
+    );
+    assert!(eng.iter() == 56);
 }

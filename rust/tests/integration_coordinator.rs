@@ -1,11 +1,15 @@
 //! Integration tests: the threaded coordinator must reproduce the serial
-//! GD-SEC reference bit-for-bit, survive worker failures, and account
-//! bytes exactly.
+//! GD-SEC reference bit-for-bit (in synchronous mode — pinned with the
+//! quorum explicitly at `All`, with and without injected delays, so the
+//! round state machine refactor cannot drift), survive worker failures,
+//! fold stale updates under quorum cuts, and account bytes exactly.
 
 use gdsec::algo::gdsec::{GdSecConfig, Xi};
+use gdsec::coordinator::round::Quorum;
 use gdsec::coordinator::scheduler::Scheduler;
+use gdsec::coordinator::transport::DelayPlan;
 use gdsec::coordinator::worker::{FailurePlan, GradProvider, NativeProvider, ProviderFactory};
-use gdsec::coordinator::{CoordConfig, Coordinator};
+use gdsec::coordinator::{run_native_opts, CoordConfig, Coordinator};
 use gdsec::data::synthetic;
 use gdsec::objectives::Problem;
 use std::sync::Arc;
@@ -26,26 +30,36 @@ fn cfg_for(prob: &Problem) -> GdSecConfig {
 
 #[test]
 fn distributed_matches_serial_bit_for_bit() {
+    // Synchronous mode through the event-driven round machine: quorum
+    // All AND quorum Count(M) AND quorum All under an aggressive jitter
+    // delay plan must ALL be bitwise identical to the serial reference —
+    // when every reply is kept, virtual arrival order cannot move a bit.
     let prob = problem();
     let cfg = cfg_for(&prob);
     let iters = 60;
     let serial = gdsec::algo::gdsec::run(&prob, &cfg, iters);
-    let dist = gdsec::coordinator::run_native(&prob, cfg, iters, Scheduler::All);
-
-    assert_eq!(serial.rows.len(), dist.trace.rows.len());
-    for (s, d) in serial.rows.iter().zip(dist.trace.rows.iter()) {
-        assert_eq!(s.iter, d.iter);
-        assert_eq!(
-            s.fval.to_bits(),
-            d.fval.to_bits(),
-            "fval diverged at iter {}: {} vs {}",
-            s.iter,
-            s.fval,
-            d.fval
-        );
-        assert_eq!(s.bits, d.bits, "bit accounting diverged at iter {}", s.iter);
-        assert_eq!(s.transmissions, d.transmissions);
-        assert_eq!(s.entries, d.entries);
+    for (label, quorum, delay) in [
+        ("all", Quorum::All, DelayPlan::None),
+        ("count=m", Quorum::Count(prob.m()), DelayPlan::None),
+        ("all+jitter", Quorum::All, DelayPlan::Jitter { seed: 7, lo: 0, hi: 1000 }),
+    ] {
+        let dist = run_native_opts(&prob, cfg.clone(), iters, Scheduler::All, quorum, delay);
+        assert_eq!(serial.rows.len(), dist.trace.rows.len());
+        for (s, d) in serial.rows.iter().zip(dist.trace.rows.iter()) {
+            assert_eq!(s.iter, d.iter);
+            assert_eq!(
+                s.fval.to_bits(),
+                d.fval.to_bits(),
+                "[{label}] fval diverged at iter {}: {} vs {}",
+                s.iter,
+                s.fval,
+                d.fval
+            );
+            assert_eq!(s.bits, d.bits, "[{label}] bit accounting diverged at iter {}", s.iter);
+            assert_eq!(s.transmissions, d.transmissions);
+            assert_eq!(s.entries, d.entries);
+            assert_eq!(d.stale, 0, "[{label}] synchronous round folded a stale update");
+        }
     }
 }
 
@@ -57,7 +71,7 @@ fn distributed_matches_serial_with_soec_and_per_coord_xi() {
     cfg.xi = Xi::scaled_by_lipschitz(10.0, &prob.coord_lipschitz());
     let iters = 40;
     let serial = gdsec::algo::gdsec::run(&prob, &cfg, iters);
-    let dist = gdsec::coordinator::run_native(&prob, cfg, iters, Scheduler::All);
+    let dist = run_native_opts(&prob, cfg, iters, Scheduler::All, Quorum::All, DelayPlan::None);
     for (s, d) in serial.rows.iter().zip(dist.trace.rows.iter()) {
         assert_eq!(s.fval.to_bits(), d.fval.to_bits());
         assert_eq!(s.bits, d.bits);
@@ -65,18 +79,62 @@ fn distributed_matches_serial_with_soec_and_per_coord_xi() {
 }
 
 #[test]
-fn adaptive_wire_same_trajectory_tagged_bits() {
-    // Opt-in adaptive wire format: the trajectory must be bitwise equal
-    // to the default sparse wire (both decode to the same f32 values),
-    // and every transmission's payload cost must differ from the sparse
-    // run's by the 8-bit tag at most — strictly cheaper than
-    // sparse + tag overall when dense rounds exist, never more than
-    // 8 bits/tx more expensive.
+fn quorum_straggler_converges_with_fewer_virtual_units_and_stale_folds() {
+    // One hard straggler (900 virtual units vs 1). Synchronous rounds
+    // wait for it every time; a K=2 quorum cuts it, folds its update one
+    // round late, and must still converge to the tolerance the
+    // synchronous run reaches — at a fraction of the virtual wall-clock.
     let prob = problem();
     let cfg = cfg_for(&prob);
-    let iters = 30;
-    let sparse = gdsec::coordinator::run_native(&prob, cfg.clone(), iters, Scheduler::All);
+    let iters = 80;
+    let delay = DelayPlan::PerWorker(vec![1, 1, 900]);
+    let sync =
+        run_native_opts(&prob, cfg.clone(), iters, Scheduler::All, Quorum::All, delay.clone());
+    let quorum = run_native_opts(&prob, cfg, iters, Scheduler::All, Quorum::Count(2), delay);
 
+    // Convergence: the quorum run reaches the same f − f* tolerance.
+    // Staleness-1 folding can cost a few rounds of progress, so the
+    // target is what the synchronous run had reached by iter 60 (with a
+    // 2× final-error floor against noise) — well within "the same
+    // tolerance" for an 80-round run.
+    let eps = sync.trace.errors()[60].max(sync.trace.final_error() * 2.0);
+    assert!(eps.is_finite() && eps > 0.0);
+    assert!(
+        quorum.trace.final_error() <= eps,
+        "quorum run missed tolerance: {} vs sync-final {} (eps {eps})",
+        quorum.trace.final_error(),
+        sync.trace.final_error()
+    );
+
+    // Staleness: the straggler's updates were folded, not dropped.
+    let folded: u64 = quorum.rounds.iter().map(|r| r.stale_folded).sum();
+    assert!(folded >= 1, "no stale update folded");
+    assert_eq!(quorum.trace.total_stale(), folded);
+    assert!(quorum.rounds.iter().any(|r| r.late > 0));
+    assert_eq!(sync.trace.total_stale(), 0);
+
+    // Wall-clock proxy: the synchronous run pays the straggler every
+    // round; the quorum run's cut is bounded by the fast workers.
+    let sync_units: u64 = sync.rounds.iter().map(|r| r.virtual_units).sum();
+    let quorum_units: u64 = quorum.rounds.iter().map(|r| r.virtual_units).sum();
+    assert!(
+        quorum_units * 10 < sync_units,
+        "quorum did not cut the straggler: {quorum_units} vs {sync_units}"
+    );
+    // All transmissions still accounted (the straggler pays its bits in
+    // the round it transmits, on-time or not).
+    assert!(quorum.trace.total_bits() > 0);
+}
+
+#[test]
+fn quorum_dead_worker_mid_run_keeps_converging() {
+    // Failure injection ON TOP of quorum rounds: worker 1 exceeds
+    // `dead_after` strikes mid-run; the round machine shrinks the quorum
+    // to the live fleet and keeps folding the remaining straggler's
+    // stale updates.
+    let prob = problem();
+    let m = prob.m();
+    let cfg = cfg_for(&prob);
     let fstar = prob.estimate_fstar(2000);
     let factories: Vec<ProviderFactory> = prob
         .locals
@@ -87,14 +145,60 @@ fn adaptive_wire_same_trajectory_tagged_bits() {
                 as ProviderFactory
         })
         .collect();
-    let failures = vec![FailurePlan::default(); prob.m()];
+    let mut failures = vec![FailurePlan::default(); m];
+    failures[1] = FailurePlan { silent_from_round: Some(10) };
     let prob2 = prob.clone();
-    let mut ccfg = CoordConfig::new(cfg, iters);
+    let mut ccfg = CoordConfig::new(cfg, 60);
+    ccfg.recv_timeout = Duration::from_millis(200);
+    ccfg.dead_after = 2; // takes two strikes to die — exercises re-strikes
     ccfg.problem_name = prob.name.clone();
     ccfg.fstar = fstar;
     ccfg.evaluator = Some(Arc::new(move |t: &[f64]| prob2.value(t)));
-    ccfg.wire = gdsec::coordinator::protocol::WireFormat::Adaptive;
-    let adaptive = Coordinator::spawn(ccfg, prob.d, factories, failures).run();
+    ccfg.quorum = Quorum::Fraction(0.5);
+    ccfg.delay = DelayPlan::PerWorker(vec![0, 0, 50]);
+    let out = Coordinator::spawn(ccfg, prob.d, factories, failures).run();
+    assert_eq!(out.dead_workers, vec![1]);
+    let errs = out.trace.errors();
+    assert!(errs.last().unwrap().is_finite());
+    assert!(errs.last().unwrap() < &errs[2], "no progress after failure");
+    // Quorum cuts still happened and stale updates still folded.
+    assert!(out.trace.total_stale() >= 1, "quorum machine stopped folding");
+}
+
+#[test]
+fn adaptive_wire_same_trajectory_tagged_bits() {
+    // Adaptive wire format (now the default): the trajectory must be
+    // bitwise equal to the paper's sparse wire (both decode to the same
+    // f32 values), and every transmission's payload cost must differ
+    // from the sparse run's by the 8-bit tag at most — strictly cheaper
+    // than sparse + tag overall when dense rounds exist, never more than
+    // 8 bits/tx more expensive.
+    let prob = problem();
+    let cfg = cfg_for(&prob);
+    let iters = 30;
+    let fstar = prob.estimate_fstar(2000);
+    let spawn_with = |wire: gdsec::coordinator::protocol::WireFormat| {
+        let factories: Vec<ProviderFactory> = prob
+            .locals
+            .iter()
+            .map(|l| {
+                let local = l.clone();
+                Box::new(move || Box::new(NativeProvider::new(local)) as Box<dyn GradProvider>)
+                    as ProviderFactory
+            })
+            .collect();
+        let failures = vec![FailurePlan::default(); prob.m()];
+        let prob2 = prob.clone();
+        let mut ccfg = CoordConfig::new(cfg.clone(), iters);
+        ccfg.problem_name = prob.name.clone();
+        ccfg.fstar = fstar;
+        ccfg.evaluator = Some(Arc::new(move |t: &[f64]| prob2.value(t)));
+        ccfg.wire = wire;
+        ccfg.quorum = Quorum::All; // pin: this test compares wire formats
+        Coordinator::spawn(ccfg, prob.d, factories, failures).run()
+    };
+    let sparse = spawn_with(gdsec::coordinator::protocol::WireFormat::Sparse);
+    let adaptive = spawn_with(gdsec::coordinator::protocol::WireFormat::Adaptive);
 
     assert_eq!(sparse.trace.rows.len(), adaptive.trace.rows.len());
     for (s, a) in sparse.trace.rows.iter().zip(adaptive.trace.rows.iter()) {
@@ -233,11 +337,13 @@ fn scheduled_serial_equivalence_round_robin() {
     let m = prob.m();
     let serial =
         gdsec::algo::gdsec::run_scheduled(&prob, &cfg, iters, |k| Some(sched.active(k, m)));
-    let dist = gdsec::coordinator::run_native(
+    let dist = run_native_opts(
         &prob,
         cfg,
         iters,
         Scheduler::RoundRobin { fraction: 0.5 },
+        Quorum::All,
+        DelayPlan::None,
     );
     for (s, d) in serial.rows.iter().zip(dist.trace.rows.iter()) {
         assert!(

@@ -2,11 +2,14 @@
 //! (Theorems 1–3), cross-algorithm consistency, and end-to-end behaviour
 //! of the full baseline suite on shared workloads.
 
+use gdsec::algo::engine::EngineOpts;
 use gdsec::algo::gdsec::{GdSecConfig, Xi};
 use gdsec::algo::gdsec as gdsec_algo;
 use gdsec::algo::{cgd, gd, iag, qgd, sgdsec, topj};
+use gdsec::compress::WireFormat;
 use gdsec::data::synthetic;
 use gdsec::objectives::{ObjectiveKind, Problem};
+use gdsec::util::pool::Pool;
 
 fn logreg_problem(seed: u64) -> Problem {
     Problem::logistic(synthetic::paper_logreg(seed, 5, 50, 300), 5, 1.0 / 250.0)
@@ -162,6 +165,58 @@ fn iag_and_stochastic_paths_run_on_shared_problem() {
     let t_sec = sgdsec::run_sgdsec(&prob, &scfg, 200);
     let t_sgd = sgdsec::run_sgd(&prob, &scfg, 200);
     assert!(t_sec.total_bits() < t_sgd.total_bits());
+}
+
+#[test]
+fn adaptive_wire_accounting_caps_dense_first_round() {
+    // The single-process trainers' bit accounting knows the adaptive
+    // tag-byte option (the crate default): trajectories are identical to
+    // the sparse accounting — only the charged bits differ — and the
+    // dense first round (θ^1 = θ^0 ⇒ zero thresholds ⇒ everything
+    // transmits) gets CHEAPER, capped at 8 + 32·d bits per transmission
+    // instead of the costlier RLE stream. Continuous (mnist-like)
+    // features: every first-round gradient component is nonzero, so the
+    // first frames are genuinely dense.
+    let prob = Problem::linear(synthetic::mnist_like(29, 120), 3, 0.05);
+    let cfg = GdSecConfig {
+        alpha: 1.0 / prob.lipschitz(),
+        beta: 0.01,
+        xi: Xi::Uniform(40.0),
+        fstar: Some(0.0),
+        ..Default::default()
+    };
+    let run_wire = |wire: WireFormat| {
+        let opts = EngineOpts { wire, ..EngineOpts::from_env() };
+        gdsec_algo::run_states_opts(&prob, &cfg, 30, |_k| None, Pool::global(), &opts).trace
+    };
+    let sparse = run_wire(WireFormat::Sparse);
+    let adaptive = run_wire(WireFormat::Adaptive);
+    assert_eq!(sparse.rows.len(), adaptive.rows.len());
+    for (s, a) in sparse.rows.iter().zip(adaptive.rows.iter()) {
+        assert_eq!(
+            s.fval.to_bits(),
+            a.fval.to_bits(),
+            "accounting format changed the trajectory at iter {}",
+            s.iter
+        );
+        assert_eq!(s.transmissions, a.transmissions);
+        assert_eq!(s.entries, a.entries);
+    }
+    // First-round frames are dense: every worker pays exactly the
+    // adaptive cap, strictly below the sparse cost.
+    let m = prob.m() as u64;
+    let cap = m * (8 + 32 * prob.d as u64);
+    assert_eq!(adaptive.rows[1].bits, cap, "first round not dense-capped");
+    assert!(
+        adaptive.rows[1].bits < sparse.rows[1].bits,
+        "adaptive did not make the dense first round cheaper: {} vs {}",
+        adaptive.rows[1].bits,
+        sparse.rows[1].bits
+    );
+    // Never more than one tag byte per transmission over sparse.
+    assert!(
+        adaptive.total_bits() <= sparse.total_bits() + 8 * adaptive.total_transmissions()
+    );
 }
 
 #[test]

@@ -176,7 +176,7 @@ fn engine_trace<R: CompressRule>(prob: &Problem, rule: R, threads: usize, budget
         0.0,
         |_k| None,
         &Pool::new(threads),
-        &EngineOpts { nnz_budget: budget },
+        &EngineOpts { nnz_budget: budget, ..EngineOpts::default() },
     )
     .trace
 }
@@ -268,7 +268,7 @@ fn prop_engine_nested_lanes_parity_all_rules() {
                     0.0,
                     |k| Some(vec![k % m]),
                     &Pool::new(threads),
-                    &EngineOpts { nnz_budget: budget },
+                    &EngineOpts { nnz_budget: budget, ..EngineOpts::default() },
                 )
                 .trace
             };
@@ -305,6 +305,60 @@ fn prop_engine_nested_lanes_parity_all_rules() {
 }
 
 #[test]
+fn prop_engine_quorum_stale_fold_parity() {
+    // Semi-synchronous rounds: a deterministic late-lane schedule (the
+    // quorum cut's output) must still produce bit-identical trajectories
+    // at 1 vs 4 threads — the stale folds happen sequentially in worker
+    // order, never on the pool.
+    check_with(
+        PropConfig { cases: 6, seed: 0x57A1E },
+        "engine quorum stale-fold 1 vs 4 threads bit parity",
+        |rng| {
+            let prob = random_problem(rng);
+            let m = prob.m();
+            let cfg = GdSecConfig {
+                alpha: 1.0 / prob.lipschitz(),
+                beta: rng.uniform() * 0.3,
+                xi: Xi::Uniform(rng.uniform() * 80.0),
+                fstar: Some(0.0),
+                ..Default::default()
+            };
+            let budget = 48 + rng.index(80); // force multi-block nested lanes
+            let run = |threads: usize| {
+                let pool = Pool::new(threads);
+                let opts = EngineOpts { nnz_budget: budget, ..EngineOpts::default() };
+                let rule = GdSecRule::new(cfg.clone());
+                let mut eng = engine::Engine::new(&prob, rule, &pool, &opts, 0.0);
+                eng.record();
+                for k in 1..=ITERS {
+                    let late = [(k + 1) % m]; // rotate the straggler
+                    eng.step_quorum(None, Some(&late));
+                    eng.record();
+                }
+                eng.into_run()
+            };
+            let s = run(1);
+            let p = run(4);
+            assert_traces_bit_equal("engine-quorum", &s.trace, &p.trace)?;
+            if s.trace.total_stale() == 0 {
+                return Err("quorum run never folded a stale update".into());
+            }
+            if s.trace.total_stale() != p.trace.total_stale() {
+                return Err("stale accounting diverged across thread counts".into());
+            }
+            for i in 0..prob.d {
+                if s.server.theta[i].to_bits() != p.server.theta[i].to_bits()
+                    || s.server.h[i].to_bits() != p.server.h[i].to_bits()
+                {
+                    return Err(format!("server state diverged at {i}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
 fn prop_gdsec_nested_schedule_parity_and_states() {
     // Nested lanes + partial participation through the public
     // run_states_opts surface: server AND worker states bit-equal.
@@ -313,7 +367,7 @@ fn prop_gdsec_nested_schedule_parity_and_states() {
         "gdsec nested lanes + schedule 1 vs 4 threads",
         |rng| {
             let prob = random_problem(rng);
-            let opts = EngineOpts { nnz_budget: 40 + rng.index(60) };
+            let opts = EngineOpts { nnz_budget: 40 + rng.index(60), ..EngineOpts::default() };
             let cfg = GdSecConfig {
                 alpha: 1.0 / prob.lipschitz(),
                 beta: rng.uniform() * 0.3,
