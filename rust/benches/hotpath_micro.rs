@@ -530,6 +530,101 @@ fn main() {
         }
     }
 
+    // --- Delay-adaptive quorum vs fixed fractions on a drifting
+    //     straggler set (M=8): phase A has one 12-unit straggler among
+    //     2-unit workers, phase B has six (only two fast workers left).
+    //     A fixed Fraction is wrong in at least one phase — K ≥ 3 waits
+    //     12 units per phase-B round, K = 2 runs phase A with six of
+    //     eight workers perpetually a round (or the full window) stale —
+    //     while Adaptive tracks the fast cluster through the shift and
+    //     pays only one transition round. The metric is the summed
+    //     virtual round units until the run reaches the tolerance a
+    //     cut-free engine run hits at the reference horizon (the
+    //     "sync tolerance"); runs are deterministic (seeded problem,
+    //     virtual delays), so the ordering is machine-independent.
+    //     `engine_adaptive_quorum_units` is presence-gated in CI. ---
+    {
+        use gdsec::algo::engine::{Engine, EngineOpts};
+        use gdsec::algo::gdsec::GdSecRule;
+        use gdsec::coordinator::round::Quorum;
+        use gdsec::coordinator::scheduler::QuorumSim;
+        use gdsec::coordinator::transport::DelayPlan;
+        let m_q = 8;
+        let ref_iters = if quick { 60 } else { 240 };
+        let switch = ref_iters / 2;
+        let cap = 4 * ref_iters;
+        let window = 3;
+        let prob_q = Problem::logistic(synthetic::dna_like(21, 400), m_q, 0.05);
+        let cfg_q = GdSecConfig {
+            alpha: 1.0 / prob_q.lipschitz(),
+            beta: 0.05,
+            xi: Xi::Uniform(30.0),
+            fstar: Some(0.0),
+            eval_every: 1,
+            ..Default::default()
+        };
+        let fstar_q = prob_q.estimate_fstar(2000);
+        let plan = DelayPlan::Phased(vec![
+            (1, vec![2, 2, 2, 2, 2, 2, 2, 12]),
+            (switch, vec![2, 2, 12, 12, 12, 12, 12, 12]),
+        ]);
+        let opts = EngineOpts { stale_window: window, ..EngineOpts::default() };
+        // Sync tolerance: the error a cut-free run reaches at the
+        // reference horizon.
+        let tol = {
+            let rule = GdSecRule::new(cfg_q.clone());
+            let mut eng = Engine::new(&prob_q, rule, &par_pool, &opts, fstar_q);
+            for _ in 0..ref_iters {
+                eng.step(None);
+            }
+            (prob_q.value(&eng.server.theta) - fstar_q).max(1e-12)
+        };
+        // Summed virtual units for one quorum policy to reach tol.
+        let units_to_tol = |policy: Quorum| -> (u64, usize) {
+            let mut sim = QuorumSim::new(m_q, policy, plan.clone(), window);
+            let rule = GdSecRule::new(cfg_q.clone());
+            let mut eng = Engine::new(&prob_q, rule, &par_pool, &opts, fstar_q);
+            let mut total = 0u64;
+            for k in 1..=cap {
+                let (late, units) = sim.round(k, None);
+                eng.step_quorum_aged(None, Some(late));
+                total += units;
+                if prob_q.value(&eng.server.theta) - fstar_q <= tol {
+                    return (total, k);
+                }
+            }
+            (total, cap)
+        };
+        let adaptive = Quorum::Adaptive { target_quantile: 0.25, min_frac: 0.25 };
+        let (adaptive_units, adaptive_rounds) = units_to_tol(adaptive);
+        let mut best_fraction_units = u64::MAX;
+        let mut best_fraction = 0.0;
+        for frac in [0.25, 0.5, 0.75] {
+            let (u, r) = units_to_tol(Quorum::Fraction(frac));
+            println!(
+                "adaptive-quorum bench: Fraction({frac}) reached tol in {r} rounds, {u} units"
+            );
+            if u < best_fraction_units {
+                best_fraction_units = u;
+                best_fraction = frac;
+            }
+        }
+        println!(
+            "adaptive-quorum bench: Adaptive(q=0.25, min=0.25) reached tol in \
+             {adaptive_rounds} rounds, {adaptive_units} units (best fixed: \
+             Fraction({best_fraction}) at {best_fraction_units} units)"
+        );
+        context.push(("engine_adaptive_quorum_units", Json::num(adaptive_units as f64)));
+        context.push((
+            "engine_best_fraction_quorum_units",
+            Json::num(best_fraction_units as f64),
+        ));
+        context.push((
+            "engine_adaptive_vs_best_fraction_units_ratio",
+            Json::num(best_fraction_units as f64 / adaptive_units.max(1) as f64),
+        ));
+    }
+
     println!("\n== hotpath microbenchmarks ==");
     for r in &reports {
         println!("{}", r.report());

@@ -129,7 +129,14 @@ impl CompressRule for CgdRule {
         false
     }
 
-    fn fold_stale(&mut self, _k: usize, _server: &mut ServerState, _w: usize, _lane: &mut CgdLane) {
+    fn fold_stale(
+        &mut self,
+        _k: usize,
+        _server: &mut ServerState,
+        _w: usize,
+        _lane: &mut CgdLane,
+        _age: u32,
+    ) {
         // Unreachable while `defers_late` is false; nothing to stage —
         // the server-side memory IS the fold.
     }

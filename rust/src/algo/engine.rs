@@ -43,10 +43,25 @@
 //! touching the trainers.
 
 use super::gdsec::ServerState;
-use super::trace::{Trace, TraceRow};
+use super::trace::{stale_age_bin, Trace, TraceRow, STALE_AGE_BINS};
 use crate::compress::{SparseUpdate, WireFormat};
 use crate::objectives::{GradSplit, Problem};
 use crate::util::pool::Pool;
+
+/// The staleness window S from `GDSEC_STALE_WINDOW` (default 1): the
+/// maximum number of rounds a transmitted update may spend in flight
+/// before it MUST fold (or, at the bound, be dropped). S = 1 is the PR 4
+/// behavior — every parked update folds exactly one round late — and the
+/// setting the synchronous bitwise pins are stated under. Shared by
+/// [`EngineOpts::from_env`] and the coordinator's
+/// [`CoordConfig`](crate::coordinator::CoordConfig).
+pub fn stale_window_from_env() -> usize {
+    std::env::var("GDSEC_STALE_WINDOW")
+        .ok()
+        .and_then(|s| s.parse::<usize>().ok())
+        .filter(|&s| s >= 1)
+        .unwrap_or(1)
+}
 
 /// Wire accounting for one worker's transmission in one round.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -165,29 +180,44 @@ pub trait CompressRule: Sync {
         true
     }
 
-    /// Fold worker `w`'s update from the PREVIOUS round — still in its
-    /// lane, parked by a quorum cut ([`Engine::step_quorum`]) — into
-    /// round `k`'s upcoming [`apply`](Self::apply), **as if it had
-    /// arrived on time**: staged ahead of the fresh updates so the
-    /// server performs the same step one round late rather than dropping
-    /// bits on the floor. Called sequentially in ascending worker order
-    /// before the fan-out overwrites the lane. Synchronous runs (no
-    /// quorum cuts) never call this, which is what keeps them
-    /// bit-identical to the pre-quorum engine; neither do rules with
+    /// Fold worker `w`'s update from an EARLIER round — still in its
+    /// lane, parked by a quorum cut ([`Engine::step_quorum`] /
+    /// [`Engine::step_quorum_aged`]) — into round `k`'s upcoming
+    /// [`apply`](Self::apply), **as if it had arrived on time**: staged
+    /// ahead of the fresh updates so the server performs the same step
+    /// `age` rounds late rather than dropping bits on the floor. `age ∈
+    /// [1, S]` (the engine's staleness window) is how many rounds the
+    /// update spent in flight; a worker whose update is in flight does
+    /// not compute, so the lane still holds the parked wire image.
+    /// Called sequentially in `(origin round, worker)` order before the
+    /// fan-out overwrites the lane. Synchronous runs (no quorum cuts)
+    /// never call this, which is what keeps them bit-identical to the
+    /// pre-quorum engine; neither do rules with
     /// [`defers_late`](Self::defers_late) = false.
     ///
     /// GD-SEC-family rules stage into [`ServerState::fold_update`] (the
     /// worker already moved its h_m/e_m at transmission, so the late
-    /// fold preserves the EC identity); dense rules accumulate into a
-    /// [`StalePending`] buffer their `apply` folds first.
-    fn fold_stale(&mut self, k: usize, server: &mut ServerState, w: usize, lane: &mut Self::Lane);
+    /// fold preserves the EC identity at any age); dense rules
+    /// accumulate into a [`StalePending`] buffer their `apply` folds
+    /// first. No rule currently weights by `age` — the EC identity is
+    /// exact without aging — but the parameter is the seam where
+    /// LAQ-style aging factors would plug in.
+    fn fold_stale(
+        &mut self,
+        k: usize,
+        server: &mut ServerState,
+        w: usize,
+        lane: &mut Self::Lane,
+        age: u32,
+    );
 }
 
 /// Staging buffer behind the dense rules' [`CompressRule::fold_stale`]:
-/// late wire images accumulate here (in the engine's ascending-worker
-/// fold order) and the next `apply` folds the staged sum ahead of the
-/// fresh lanes — `agg = 0 + staged + Σ fresh`, bitwise the same sequence
-/// as if the late updates had led the fold on time. All-zero and
+/// late wire images accumulate here (in the engine's `(origin round,
+/// worker)` fold order — oldest transmissions first, ages capped at the
+/// staleness window S) and the next `apply` folds the staged sum ahead
+/// of the fresh lanes — `agg = 0 + staged + Σ fresh`, bitwise the same
+/// sequence as if the late updates had led the fold on time. All-zero and
 /// [`staged`](StalePending::staged) = `None` when no cut occurred, so
 /// synchronous applies are untouched op-for-op. Reuses one pre-sized
 /// buffer: the stale path stays allocation-free.
@@ -242,6 +272,12 @@ pub struct EngineOpts {
     /// matches the coordinator's encoded frames byte-for-byte);
     /// `Sparse` reproduces the paper's accounting.
     pub wire: WireFormat,
+    /// Staleness window S (≥ 1): the maximum age, in rounds, a
+    /// quorum-parked update may reach before it folds. `step_quorum`
+    /// always parks at age 1; [`Engine::step_quorum_aged`] may park up
+    /// to S. Default 1 (the PR 4 one-round-late behavior;
+    /// `GDSEC_STALE_WINDOW` overrides via [`from_env`](Self::from_env)).
+    pub stale_window: usize,
 }
 
 impl Default for EngineOpts {
@@ -249,22 +285,37 @@ impl Default for EngineOpts {
         EngineOpts {
             nnz_budget: GradSplit::DEFAULT_NNZ_BUDGET,
             wire: WireFormat::default(),
+            stale_window: 1,
         }
     }
 }
 
 impl EngineOpts {
-    /// Default opts with the `GDSEC_NNZ_BUDGET` / `GDSEC_WIRE` env
-    /// overrides (read per call; constant within a process, so every run
-    /// in a process sees the same block tree and accounting).
+    /// Default opts with the `GDSEC_NNZ_BUDGET` / `GDSEC_WIRE` /
+    /// `GDSEC_STALE_WINDOW` env overrides (read per call; constant
+    /// within a process, so every run in a process sees the same block
+    /// tree and accounting).
     pub fn from_env() -> EngineOpts {
         let nnz_budget = std::env::var("GDSEC_NNZ_BUDGET")
             .ok()
             .and_then(|s| s.parse::<usize>().ok())
             .filter(|&b| b >= 1)
             .unwrap_or(GradSplit::DEFAULT_NNZ_BUDGET);
-        EngineOpts { nnz_budget, wire: WireFormat::from_env() }
+        EngineOpts {
+            nnz_budget,
+            wire: WireFormat::from_env(),
+            stale_window: stale_window_from_env(),
+        }
     }
+}
+
+/// How a quorum round's late set is specified (internal seam between
+/// [`Engine::step_quorum`] and [`Engine::step_quorum_aged`]).
+enum LateSpec<'a> {
+    /// Worker ids, all parked at age 1 (the PR 4 semantics).
+    Uniform(&'a [usize]),
+    /// `(worker, delivery age)` pairs, ages within the staleness window.
+    Aged(&'a [(usize, u32)]),
 }
 
 /// Final state of an engine run.
@@ -281,9 +332,10 @@ struct Acct {
     bits: u64,
     tx: u64,
     entries: u64,
-    /// Stale updates folded one round late via
-    /// [`CompressRule::fold_stale`].
+    /// Stale updates folded late via [`CompressRule::fold_stale`].
     stale: u64,
+    /// Staleness-age histogram of those folds ([`stale_age_bin`]).
+    stale_ages: [u64; STALE_AGE_BINS],
 }
 
 /// The resumable engine: [`new`](Engine::new) builds every buffer once,
@@ -302,9 +354,18 @@ pub struct Engine<'p, R: CompressRule> {
     spans: Vec<(usize, usize)>,
     /// Per-round participation flags (reused).
     flags: Vec<bool>,
-    /// Lanes whose last transmission was cut by a quorum and awaits its
-    /// [`CompressRule::fold_stale`] at the start of the next round.
-    parked: Vec<bool>,
+    /// Per-worker in-flight state for quorum-parked transmissions: the
+    /// absolute round at which the parked update folds (0 = nothing in
+    /// flight). While `parked_due[w] > k` the worker is mid-transit —
+    /// it computes nothing, so the lane keeps holding the parked wire
+    /// image — and at round `parked_due[w]` the update folds via
+    /// [`CompressRule::fold_stale`].
+    parked_due: Vec<usize>,
+    /// The round each in-flight update was transmitted in (its fold age
+    /// is `due − origin`, bounded by [`EngineOpts::stale_window`]).
+    parked_round: Vec<usize>,
+    /// Staleness window S (see [`EngineOpts::stale_window`]).
+    stale_window: usize,
     theta_diff: Vec<f64>,
     wire: WireFormat,
     acct: Acct,
@@ -314,6 +375,7 @@ pub struct Engine<'p, R: CompressRule> {
 
 impl<'p, R: CompressRule> Engine<'p, R> {
     pub fn new(prob: &'p Problem, rule: R, pool: &'p Pool, opts: &EngineOpts, fstar: f64) -> Self {
+        assert!(opts.stale_window >= 1, "stale_window must be at least 1");
         let m = prob.m();
         let d = prob.d;
         let lanes: Vec<EngineLane<R::Lane>> = (0..m)
@@ -337,7 +399,9 @@ impl<'p, R: CompressRule> Engine<'p, R> {
             split,
             spans,
             flags: vec![true; m],
-            parked: vec![false; m],
+            parked_due: vec![0; m],
+            parked_round: vec![0; m],
+            stale_window: opts.stale_window,
             theta_diff: vec![0.0; d],
             wire: opts.wire,
             acct: Acct::default(),
@@ -362,6 +426,7 @@ impl<'p, R: CompressRule> Engine<'p, R> {
             transmissions: self.acct.tx,
             entries: self.acct.entries,
             stale: self.acct.stale,
+            stale_ages: self.acct.stale_ages,
         });
     }
 
@@ -395,17 +460,42 @@ impl<'p, R: CompressRule> Engine<'p, R> {
     /// after warm-up, including the stale-fold path (pinned by
     /// `tests/alloc_free_round.rs`).
     pub fn step_quorum(&mut self, act: Option<&[usize]>, late: Option<&[usize]>) {
+        self.step_inner(act, LateSpec::Uniform(late.unwrap_or(&[])));
+    }
+
+    /// [`step_quorum`](Engine::step_quorum) with per-worker delivery
+    /// ages: each `(w, age)` pair parks worker `w`'s transmission for
+    /// `age ∈ [1, S]` rounds (S = [`EngineOpts::stale_window`]; ages
+    /// outside the window panic — the window is a hard bound). While an
+    /// update is in flight its worker computes nothing — the physical
+    /// straggler semantics: a worker that takes `age` rounds to deliver
+    /// was busy for those rounds — and the lane keeps the parked wire
+    /// image until the fold. Folds happen at the start of the due round
+    /// in `(origin round, worker)` order. `age = 1` for every pair
+    /// reproduces [`step_quorum`](Engine::step_quorum) exactly.
+    /// Allocation-free after warm-up.
+    pub fn step_quorum_aged(&mut self, act: Option<&[usize]>, late: Option<&[(usize, u32)]>) {
+        self.step_inner(act, LateSpec::Aged(late.unwrap_or(&[])));
+    }
+
+    fn step_inner(&mut self, act: Option<&[usize]>, late: LateSpec) {
         self.k += 1;
         let k = self.k;
-        // Fold updates parked by the previous round's cut BEFORE the
-        // fan-out overwrites their lanes: they reach the server "during"
-        // this round, staged ahead of the fresh updates, in ascending
-        // worker order.
-        for w in 0..self.lanes.len() {
-            if self.parked[w] {
-                self.parked[w] = false;
-                self.rule.fold_stale(k, &mut self.server, w, &mut self.lanes[w].lane);
-                self.acct.stale += 1;
+        // Fold in-flight updates that come due THIS round, before the
+        // fan-out can overwrite their lanes: they reach the server
+        // "during" this round, staged ahead of the fresh updates, in
+        // (origin round, worker) order — oldest transmissions first.
+        // With the default window S = 1 this scans exactly the previous
+        // round in ascending worker order: op-for-op the PR 4 fold loop.
+        for origin in k.saturating_sub(self.stale_window)..k {
+            for w in 0..self.lanes.len() {
+                if self.parked_due[w] == k && self.parked_round[w] == origin {
+                    self.parked_due[w] = 0;
+                    let age = (k - origin) as u32;
+                    self.rule.fold_stale(k, &mut self.server, w, &mut self.lanes[w].lane, age);
+                    self.acct.stale += 1;
+                    self.acct.stale_ages[stale_age_bin(age)] += 1;
+                }
             }
         }
         let diff_max = if self.rule.wants_theta_diff() {
@@ -422,7 +512,9 @@ impl<'p, R: CompressRule> Engine<'p, R> {
             0.0
         };
         for (w, f) in self.flags.iter_mut().enumerate() {
-            *f = act.map_or(true, |set| set.contains(&w));
+            // A worker whose transmission is still in flight computes
+            // nothing this round, whatever the schedule says.
+            *f = self.parked_due[w] == 0 && act.map_or(true, |set| set.contains(&w));
         }
         {
             let ctx = RoundCtx {
@@ -443,22 +535,41 @@ impl<'p, R: CompressRule> Engine<'p, R> {
         self.fold_accounting();
         // Park the quorum cut's late transmissions: accounted above (the
         // bits went on the wire this round), excluded from this apply,
-        // folded at the start of the next round. Silent late lanes have
-        // nothing to park, and memory-based rules (`defers_late` false)
-        // are never parked — their apply folds the refreshed memory this
-        // round regardless. A lane still parked when the run ends is an
-        // in-flight transmission at shutdown: dropped, bits charged.
-        if let Some(late) = late {
-            if self.rule.defers_late() {
-                for &w in late {
-                    if self.lanes[w].sent.is_some() {
-                        self.lanes[w].sent = None;
-                        self.parked[w] = true;
+        // folded at the start of their due round (origin + age, age ≤
+        // S). Silent late lanes have nothing to park, and memory-based
+        // rules (`defers_late` false) are never parked — their apply
+        // folds the refreshed memory this round regardless. A lane still
+        // parked when the run ends is an in-flight transmission at
+        // shutdown: dropped, bits charged.
+        if self.rule.defers_late() {
+            match late {
+                LateSpec::Uniform(set) => {
+                    for &w in set {
+                        self.park(w, 1);
+                    }
+                }
+                LateSpec::Aged(pairs) => {
+                    for &(w, age) in pairs {
+                        self.park(w, age);
                     }
                 }
             }
         }
         self.rule.apply(k, &mut self.server, &self.lanes, self.pool);
+    }
+
+    /// Park worker `w`'s fresh transmission (if any) for `age` rounds.
+    fn park(&mut self, w: usize, age: u32) {
+        assert!(
+            age >= 1 && age as usize <= self.stale_window,
+            "delivery age {age} outside the staleness window [1, {}]",
+            self.stale_window
+        );
+        if self.lanes[w].sent.is_some() {
+            self.lanes[w].sent = None;
+            self.parked_due[w] = self.k + age as usize;
+            self.parked_round[w] = self.k;
+        }
     }
 
     /// `Full`-grad fan-out: phase 1 scatters the flattened (worker,

@@ -88,7 +88,14 @@ impl CompressRule for GdRule {
         self.stale.consume();
     }
 
-    fn fold_stale(&mut self, _k: usize, _server: &mut ServerState, _w: usize, lane: &mut GdLane) {
+    fn fold_stale(
+        &mut self,
+        _k: usize,
+        _server: &mut ServerState,
+        _w: usize,
+        lane: &mut GdLane,
+        _age: u32,
+    ) {
         self.stale.fold(&lane.g);
     }
 }

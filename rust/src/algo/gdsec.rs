@@ -402,10 +402,14 @@ impl CompressRule for GdSecRule {
         server: &mut ServerState,
         _w: usize,
         lane: &mut WorkerLane,
+        _age: u32,
     ) {
-        // The parked Δ̂ is still in the lane's wire buffer; stage it into
-        // the server scratch so the upcoming apply performs Eq. 6 on it
-        // exactly as if it had arrived on time (h += β·Δ̂ included).
+        // The parked Δ̂ is still in the lane's wire buffer (the worker
+        // computes nothing while it is in flight); stage it into the
+        // server scratch so the upcoming apply performs Eq. 6 on it
+        // exactly as if it had arrived on time (h += β·Δ̂ included). The
+        // worker moved its h_m/e_m at transmission, so the EC identity
+        // holds at any fold age — no aging factor needed.
         server.fold_update(&lane.up);
     }
 }
@@ -887,6 +891,88 @@ mod tests {
         // The straggler's updates really were deferred (stale folds
         // happened) — otherwise this test proves nothing.
         assert!(run.trace.total_stale() > 0, "no stale update was ever folded");
+    }
+
+    #[test]
+    fn quorum_aged_fold_matches_manual_reference() {
+        // Multi-round bounded staleness: the straggler's transmission
+        // spends TWO rounds in flight (it computes nothing while its
+        // update is in transit), folding via `fold_stale` at age 2. A
+        // hand-rolled loop with exactly those semantics — park with a due
+        // round, skip the worker's compute while in flight, fold the
+        // parked Δ̂ ahead of the fresh updates at its due round — must
+        // match θ, server h, and every worker's h/e bit-for-bit: the
+        // aged fold is the same Eq. 6 step, just later, so the EC
+        // identity survives any age within the window.
+        use crate::algo::engine::Engine;
+        use crate::util::pool::Pool;
+        let prob = small_problem();
+        let (m, d) = (prob.m(), prob.d);
+        let cfg = GdSecConfig {
+            alpha: 1.0 / prob.lipschitz(),
+            beta: 0.05,
+            xi: Xi::Uniform(20.0),
+            fstar: Some(0.0),
+            ..Default::default()
+        };
+        let straggler = m - 1;
+        let late = [(straggler, 2u32)];
+        let pool = Pool::new(1);
+        let iters = 16;
+        let opts = EngineOpts { stale_window: 3, ..EngineOpts::default() };
+        let mut eng = Engine::new(&prob, GdSecRule::new(cfg.clone()), &pool, &opts, 0.0);
+        for _ in 0..iters {
+            // Parked rounds are a no-op for the straggler (nothing
+            // transmitted while in flight), so passing the pair every
+            // round parks each of its transmissions at age 2.
+            eng.step_quorum_aged(None, Some(&late));
+        }
+        eng.record();
+        let run = eng.into_run();
+
+        let mut server = ServerState::new(d);
+        let mut workers: Vec<WorkerState> = (0..m).map(|_| WorkerState::new(d)).collect();
+        let mut theta_diff = vec![0.0; d];
+        let mut parked: Option<(usize, SparseUpdate)> = None; // (due round, Δ̂)
+        for k in 1..=iters {
+            if parked.as_ref().is_some_and(|(due, _)| *due == k) {
+                let (_, u) = parked.take().unwrap();
+                server.fold_update(&u);
+            }
+            server.theta_diff(&mut theta_diff);
+            let mut ups: Vec<SparseUpdate> = Vec::new();
+            for (w, ws) in workers.iter_mut().enumerate() {
+                if w == straggler && parked.is_some() {
+                    continue; // mid-flight: the worker computes nothing
+                }
+                prob.locals[w].grad(&server.theta, ws.grad_mut());
+                let up = ws.sparsify_step(&cfg, m, &theta_diff);
+                if up.nnz() == 0 {
+                    continue;
+                }
+                if w == straggler {
+                    parked = Some((k + 2, up)); // in flight for 2 rounds
+                } else {
+                    ups.push(up);
+                }
+            }
+            server.apply_round(&cfg, &ups);
+        }
+        for i in 0..d {
+            assert_eq!(run.server.theta[i].to_bits(), server.theta[i].to_bits(), "theta[{i}]");
+            assert_eq!(run.server.h[i].to_bits(), server.h[i].to_bits(), "h[{i}]");
+        }
+        for (w, (el, ws)) in run.lanes.iter().zip(&workers).enumerate() {
+            for i in 0..d {
+                assert_eq!(el.ws.h[i].to_bits(), ws.h[i].to_bits(), "worker {w} h[{i}]");
+                assert_eq!(el.ws.e[i].to_bits(), ws.e[i].to_bits(), "worker {w} e[{i}]");
+            }
+        }
+        // Age-2 folds really happened, and ONLY age-2 folds.
+        let last = run.trace.rows.last().unwrap();
+        assert!(run.trace.total_stale() > 0, "no stale update was ever folded");
+        assert_eq!(last.stale_ages[1], run.trace.total_stale(), "folds not all age 2");
+        assert_eq!(last.stale_ages[0] + last.stale_ages[2] + last.stale_ages[3], 0);
     }
 
     #[test]

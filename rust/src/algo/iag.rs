@@ -113,7 +113,14 @@ impl CompressRule for IagRule {
         false
     }
 
-    fn fold_stale(&mut self, _k: usize, _server: &mut ServerState, _w: usize, _lane: &mut IagLane) {
+    fn fold_stale(
+        &mut self,
+        _k: usize,
+        _server: &mut ServerState,
+        _w: usize,
+        _lane: &mut IagLane,
+        _age: u32,
+    ) {
         // Unreachable while `defers_late` is false; the memory IS the
         // fold.
     }

@@ -100,9 +100,16 @@ impl CompressRule for QgdRule {
         self.stale.consume();
     }
 
-    fn fold_stale(&mut self, _k: usize, _server: &mut ServerState, _w: usize, lane: &mut QgdLane) {
+    fn fold_stale(
+        &mut self,
+        _k: usize,
+        _server: &mut ServerState,
+        _w: usize,
+        lane: &mut QgdLane,
+        _age: u32,
+    ) {
         // The dequantized wire image of the parked transmission is still
-        // in the lane; fold it as if on time, one round late.
+        // in the lane; fold it as if on time, `age` rounds late.
         self.stale.fold(&lane.dq);
     }
 }

@@ -112,7 +112,14 @@ impl CompressRule for SgdRule {
         self.stale.consume();
     }
 
-    fn fold_stale(&mut self, _k: usize, _server: &mut ServerState, _w: usize, lane: &mut SgdLane) {
+    fn fold_stale(
+        &mut self,
+        _k: usize,
+        _server: &mut ServerState,
+        _w: usize,
+        lane: &mut SgdLane,
+        _age: u32,
+    ) {
         self.stale.fold(&lane.g);
     }
 }
@@ -260,10 +267,11 @@ impl CompressRule for SgdSecRule {
         server: &mut ServerState,
         _w: usize,
         lane: &mut SgdSecLane,
+        _age: u32,
     ) {
         // Same late Eq. 6 fold as GD-SEC; the wire image (dequantized
         // when QSGD-SEC re-quantizes) is what the worker's h_m/e_m
-        // already tracked.
+        // already tracked, at any fold age.
         let quantizing = self.cfg.quantize_s.is_some();
         server.fold_update(if quantizing { &lane.wire } else { &lane.up });
     }

@@ -125,7 +125,14 @@ impl CompressRule for TopJRule {
         linalg::axpy(-self.cfg.alpha(k), &self.agg, &mut server.theta);
     }
 
-    fn fold_stale(&mut self, _k: usize, _server: &mut ServerState, _w: usize, lane: &mut TopJLane) {
+    fn fold_stale(
+        &mut self,
+        _k: usize,
+        _server: &mut ServerState,
+        _w: usize,
+        lane: &mut TopJLane,
+        _age: u32,
+    ) {
         self.stale.fold_sparse(&lane.up);
     }
 }

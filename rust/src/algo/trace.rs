@@ -3,6 +3,19 @@
 use crate::util::csv::CsvWriter;
 use std::path::Path;
 
+/// Histogram bins for the staleness age of folded updates: ages 1, 2, 3
+/// land in their own bin, everything ≥ 4 in the last (the bound
+/// `GDSEC_STALE_WINDOW` defaults to 1, so the tail bin only fills under
+/// deliberately wide windows). Fixed-size so [`TraceRow`] stays `Copy`
+/// and the accounting stays allocation-free.
+pub const STALE_AGE_BINS: usize = 4;
+
+/// The histogram bin for a fold `age` rounds after transmission.
+#[inline]
+pub fn stale_age_bin(age: u32) -> usize {
+    (age.max(1) as usize - 1).min(STALE_AGE_BINS - 1)
+}
+
 /// One recorded iteration.
 #[derive(Debug, Clone, Copy)]
 pub struct TraceRow {
@@ -15,9 +28,14 @@ pub struct TraceRow {
     pub transmissions: u64,
     /// Cumulative non-zero entries put on the wire.
     pub entries: u64,
-    /// Cumulative stale updates folded one round late (semi-synchronous
-    /// quorum rounds; always 0 in the synchronous protocol).
+    /// Cumulative stale updates folded late (semi-synchronous quorum
+    /// rounds; always 0 in the synchronous protocol).
     pub stale: u64,
+    /// Cumulative staleness-age histogram of those folds
+    /// ([`stale_age_bin`]): how many folded 1, 2, 3, or ≥ 4 rounds after
+    /// transmission. Sums to `stale`; ages are hard-bounded by the
+    /// staleness window, so bins past `GDSEC_STALE_WINDOW` stay 0.
+    pub stale_ages: [u64; STALE_AGE_BINS],
 }
 
 /// A full run trace for one algorithm on one problem.
@@ -71,11 +89,25 @@ impl Trace {
         self.rows.iter().find(|r| r.fval - self.fstar <= eps).map(|r| r.bits)
     }
 
-    /// Write CSV: iter, err, fval, bits, transmissions, entries, stale.
+    /// Write CSV: iter, err, fval, bits, transmissions, entries, stale,
+    /// plus the staleness-age histogram columns (`stale_age1..3`,
+    /// `stale_age4p` = ages ≥ 4).
     pub fn write_csv<P: AsRef<Path>>(&self, path: P) -> std::io::Result<()> {
         let mut w = CsvWriter::create(
             path,
-            &["iter", "err", "fval", "bits", "transmissions", "entries", "stale"],
+            &[
+                "iter",
+                "err",
+                "fval",
+                "bits",
+                "transmissions",
+                "entries",
+                "stale",
+                "stale_age1",
+                "stale_age2",
+                "stale_age3",
+                "stale_age4p",
+            ],
         )?;
         for r in &self.rows {
             w.row_f64(&[
@@ -86,6 +118,10 @@ impl Trace {
                 r.transmissions as f64,
                 r.entries as f64,
                 r.stale as f64,
+                r.stale_ages[0] as f64,
+                r.stale_ages[1] as f64,
+                r.stale_ages[2] as f64,
+                r.stale_ages[3] as f64,
             ])?;
         }
         w.flush()
@@ -108,7 +144,15 @@ mod tests {
     fn mk(rows: &[(usize, f64, u64)]) -> Trace {
         let mut t = Trace::new("test", "prob", 1.0);
         for &(iter, fval, bits) in rows {
-            t.push(TraceRow { iter, fval, bits, transmissions: iter as u64, entries: 0, stale: 0 });
+            t.push(TraceRow {
+                iter,
+                fval,
+                bits,
+                transmissions: iter as u64,
+                entries: 0,
+                stale: 0,
+                stale_ages: [0; STALE_AGE_BINS],
+            });
         }
         t
     }
@@ -129,6 +173,18 @@ mod tests {
         let s = a.savings_vs(&b, 0.2);
         assert!((s - 0.9).abs() < 1e-12);
         assert!(a.savings_vs(&b, 1e-12).is_nan());
+    }
+
+    #[test]
+    fn stale_age_bins_saturate() {
+        assert_eq!(stale_age_bin(1), 0);
+        assert_eq!(stale_age_bin(2), 1);
+        assert_eq!(stale_age_bin(3), 2);
+        assert_eq!(stale_age_bin(4), 3);
+        assert_eq!(stale_age_bin(250), 3);
+        // Defensive: age 0 cannot occur (a fold is at least one round
+        // after transmission) but must not underflow.
+        assert_eq!(stale_age_bin(0), 0);
     }
 
     #[test]

@@ -12,11 +12,15 @@
 //!   paper's accounting; the frame header is reported as overhead);
 //! * the gather is an event-driven [`round::RoundState`]: replies are
 //!   admitted in arrival order and routed by their round id, the model
-//!   step fires once a configurable [`round::Quorum`] has reported, and
-//!   the cut's late updates are **folded into the next round's
-//!   aggregation** (LAQ-style bounded staleness) instead of being
-//!   dropped — or, in the strictly synchronous pre-quorum protocol,
-//!   silently misattributed to the wrong round after a timeout;
+//!   step fires once a configurable [`round::Quorum`] has reported
+//!   (fixed K, or adapted online to the observed delay distribution by
+//!   [`scheduler::QuorumController`]), and the cut's late updates are
+//!   **folded into a later round's aggregation** — at the delivery age
+//!   their excess delay spans, hard-bounded by the
+//!   [`CoordConfig::stale_window`] (LAQ-style bounded multi-round
+//!   staleness) — instead of being dropped, or, in the strictly
+//!   synchronous pre-quorum protocol, silently misattributed to the
+//!   wrong round after a timeout;
 //! * straggler ordering is **virtual**: a seeded
 //!   [`transport::DelayPlan`] ranks replies deterministically, so quorum
 //!   trajectories are reproducible in CI (no wall-clock races);
@@ -36,13 +40,13 @@ pub mod transport;
 pub mod worker;
 
 use crate::algo::gdsec::GdSecConfig;
-use crate::algo::trace::{Trace, TraceRow};
+use crate::algo::trace::{stale_age_bin, Trace, TraceRow, STALE_AGE_BINS};
 use crate::compress::SparseUpdate;
 use crate::linalg;
 use crate::util::pool::Pool;
 use protocol::Msg;
-use round::{Admit, Quorum, RoundState, StaleUpdate};
-use scheduler::Scheduler;
+use round::{delivery_age, Admit, Quorum, RoundState, StaleUpdate};
+use scheduler::{QuorumController, Scheduler};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 use transport::{duplex, DelayPlan, Recv, ServerEnd};
@@ -81,12 +85,22 @@ pub struct CoordConfig {
     pub wire: protocol::WireFormat,
     /// Round quorum: how many live scheduled workers must report before
     /// the server steps θ ([`Quorum::All`] = the paper's synchronous
-    /// protocol, bitwise identical to the serial reference). Default
-    /// honors the `GDSEC_QUORUM` env override.
+    /// protocol, bitwise identical to the serial reference;
+    /// [`Quorum::Adaptive`] picks K online from the observed delay
+    /// distribution via [`scheduler::QuorumController`]). Default honors
+    /// the `GDSEC_QUORUM` env override.
     pub quorum: Quorum,
     /// Deterministic virtual straggler schedule for quorum cuts (see
     /// [`DelayPlan`]); irrelevant when `quorum` is `All`.
     pub delay: DelayPlan,
+    /// Staleness window S (≥ 1): the hard bound on how many rounds late
+    /// a transmitted update may fold. A cut-late update is parked until
+    /// its [`round::delivery_age`] comes due (1 with S = 1 — the PR 4
+    /// behavior); a physically-late delivery older than S is dropped
+    /// ([`round::Admit::Expired`]); workers reply to backlog broadcasts
+    /// within S instead of discarding them. Default honors
+    /// `GDSEC_STALE_WINDOW`.
+    pub stale_window: usize,
 }
 
 impl CoordConfig {
@@ -105,6 +119,7 @@ impl CoordConfig {
             wire: protocol::WireFormat::from_env(),
             quorum: Quorum::from_env(),
             delay: DelayPlan::default(),
+            stale_window: crate::algo::engine::stale_window_from_env(),
         }
     }
 }
@@ -118,11 +133,21 @@ pub struct RoundMetrics {
     pub downlink_bits: u64,
     pub transmissions: u64,
     pub wall_us: u64,
-    /// Stale updates folded into THIS round's aggregation (parked by the
-    /// previous quorum cut, or physically delivered a round late).
+    /// Stale updates folded into THIS round's aggregation (parked by an
+    /// earlier quorum cut and now due, or physically delivered late
+    /// within the staleness window).
     pub stale_folded: u64,
+    /// Staleness-age histogram of those folds
+    /// ([`crate::algo::trace::stale_age_bin`]): ages 1, 2, 3, ≥ 4.
+    /// Ages are hard-bounded by [`CoordConfig::stale_window`], so bins
+    /// past the window stay 0.
+    pub stale_age_hist: [u64; STALE_AGE_BINS],
+    /// Updates that arrived older than the staleness window and were
+    /// dropped un-folded (their bits were still charged at
+    /// transmission).
+    pub stale_expired: u64,
     /// Replies beyond this round's quorum cut (their updates are parked
-    /// for the next round).
+    /// until their delivery age comes due).
     pub late: u64,
     /// Wall-clock proxy under the virtual [`DelayPlan`]: the largest
     /// delay among the replies the quorum actually waited for. The sum
@@ -169,8 +194,9 @@ impl Coordinator {
             let (server_end, worker_end) = duplex();
             let wcfg = cfg.gdsec.clone();
             let wire = cfg.wire;
+            let sw = cfg.stale_window;
             handles.push(std::thread::spawn(move || {
-                worker::worker_loop(w as u32, m, wcfg, factory, worker_end, failure, wire)
+                worker::worker_loop(w as u32, m, wcfg, factory, worker_end, failure, wire, sw)
             }));
             ends.push(server_end);
         }
@@ -195,20 +221,28 @@ impl Coordinator {
         let mut h = vec![0.0; d];
         let mut agg = vec![0.0; d];
         let mut sched = std::mem::replace(&mut self.cfg.scheduler, Scheduler::All);
+        let window = self.cfg.stale_window.max(1);
+        // Online quorum decisions: fixed policies pass through k_of,
+        // Adaptive tracks the per-worker delay EMA (fed after every
+        // gather) and cuts at the target tail quantile.
+        let mut ctrl = QuorumController::new(self.cfg.quorum, m);
 
         // Transmitted updates the server holds past their round — parked
         // by a quorum cut or physically delivered late — folded into the
-        // NEXT apply in (round, worker) order. Error correction keeps
-        // this principled: the worker already moved its h_m/e_m when it
-        // transmitted, so the server folding one round late is the same
-        // Eq. 6 step, delayed (LAQ-style bounded staleness). An update
-        // still parked when the loop ends (the FINAL round's cut) is an
-        // in-flight transmission at shutdown: dropped like any frame in
-        // the pipe, its bits already charged — the trace's last row
-        // reflects the θ the server actually served.
+        // apply of their due round `round + age` in (round, worker)
+        // order, where the delivery age models how many cut-lengths the
+        // reply's excess delay spans, hard-bounded by the staleness
+        // window S. Error correction keeps this principled: the worker
+        // already moved its h_m/e_m when it transmitted, so the server
+        // folding `age` rounds late is the same Eq. 6 step, delayed
+        // (LAQ-style bounded staleness). An update still parked when the
+        // loop ends is an in-flight transmission at shutdown: dropped
+        // like any frame in the pipe, its bits already charged — the
+        // trace's last row reflects the θ the server actually served.
         let mut stale: Vec<StaleUpdate> = Vec::new();
 
         let (mut cum_bits, mut cum_tx, mut cum_entries, mut cum_stale) = (0u64, 0u64, 0u64, 0u64);
+        let mut cum_stale_ages = [0u64; STALE_AGE_BINS];
         // One extra eval round so the final iterate's objective is recorded
         // (round k's reports evaluate θ^k, the iterate after k−1 updates).
         for k in 1..=iters + 1 {
@@ -218,9 +252,18 @@ impl Coordinator {
                 if eval_only { (0..m).collect::<Vec<_>>() } else { sched.active(k, m) };
             let full_round = active.len() == m && !dead.iter().any(|&x| x);
             // Quorum size is relative to the workers actually expected to
-            // report: live AND scheduled this round.
-            let expected = active.iter().filter(|&&w| !dead[w]).count();
-            let k_quorum = self.cfg.quorum.k_of(expected);
+            // report: live AND scheduled this round. Decided from the
+            // PRE-round delay estimates (the controller is fed after the
+            // gather below) — the same decide-K → cut → observe logic as
+            // the engine-side QuorumSim. (The in-flight MODELS differ:
+            // here a cut-late worker keeps computing and replying while
+            // its parked update is in transit — the links pipeline — so
+            // it is observed every round; the sim's workers sit out
+            // their delivery age. Trajectories are not cross-pinned
+            // between the two drivers except at Quorum::All.)
+            let expected_ids: Vec<usize> =
+                active.iter().copied().filter(|&w| !dead[w]).collect();
+            let k_quorum = ctrl.k_for(&expected_ids);
             let mut metrics = RoundMetrics { round: k, ..Default::default() };
 
             // Broadcast θ^k with per-worker active flags.
@@ -246,7 +289,7 @@ impl Coordinator {
             // the stale pool instead of misreading it as this round's
             // reply — and keeps waiting for that worker's fresh frame
             // within the same deadline.
-            let mut rs = RoundState::new(k as u32, m);
+            let mut rs = RoundState::new(k as u32, m, window as u32);
             let mut arrived_stale_entries = 0u64;
             for &w in &active {
                 if dead[w] {
@@ -257,7 +300,6 @@ impl Coordinator {
                     let remaining = deadline.saturating_duration_since(Instant::now());
                     match self.ends[w].rx.recv_timeout(remaining) {
                         Recv::Frame(frame) => {
-                            timeout_strikes[w] = 0;
                             metrics.overhead_bits += protocol::HEADER_LEN as u64 * 8;
                             match protocol::decode(&frame, d as u32) {
                                 Ok(msg @ (Msg::Update { .. } | Msg::Silence { .. })) => {
@@ -275,10 +317,29 @@ impl Coordinator {
                                         _ => unreachable!(),
                                     };
                                     match rs.admit(w, msg) {
-                                        Admit::Fresh => break,
+                                        Admit::Fresh => {
+                                            // Only a FRESH reply clears the
+                                            // strike count: a worker
+                                            // forever delivering last
+                                            // round's update one round
+                                            // late must still accrue
+                                            // strikes, or `dead_after` is
+                                            // defeated.
+                                            timeout_strikes[w] = 0;
+                                            break;
+                                        }
                                         Admit::Stale(su) => {
                                             arrived_stale_entries += su.update.nnz() as u64;
                                             stale.push(su);
+                                            continue; // fresh reply still due
+                                        }
+                                        Admit::Expired(su) => {
+                                            // Older than the staleness
+                                            // window: bits charged,
+                                            // contribution dropped — the
+                                            // window is a hard bound.
+                                            arrived_stale_entries += su.update.nnz() as u64;
+                                            metrics.stale_expired += 1;
                                             continue; // fresh reply still due
                                         }
                                         Admit::Ignored if was_stale_round => continue,
@@ -302,6 +363,14 @@ impl Coordinator {
                     }
                 }
             }
+            // Feed the observed virtual arrivals to the adaptive
+            // controller (every replier, cut-late ones included — their
+            // delay is the straggler signal the next round's K needs).
+            for &w in &expected_ids {
+                if rs.replied(w) {
+                    ctrl.observe(w, self.cfg.delay.delay(w, k));
+                }
+            }
 
             // Record the objective of θ^k (the pre-update iterate), paired
             // with the bits accumulated through round k−1 — exactly the
@@ -320,6 +389,7 @@ impl Coordinator {
                 transmissions: cum_tx,
                 entries: cum_entries,
                 stale: cum_stale,
+                stale_ages: cum_stale_ages,
             });
 
             if eval_only {
@@ -340,36 +410,49 @@ impl Coordinator {
 
             // Cut the round at the quorum (virtual arrival order — seeded
             // delays, then worker id — so the trajectory is deterministic
-            // for any thread schedule) and park the late updates.
+            // for any thread schedule) and park the late updates with the
+            // delivery age their excess delay spans (due at round
+            // `k + age`, hard-bounded by the staleness window).
             let cut = rs.cut(k_quorum, &self.cfg.delay);
             metrics.virtual_units = cut.units;
             metrics.late = cut.late.len() as u64;
             let mut parked: Vec<StaleUpdate> = Vec::new();
             for &w in &cut.late {
                 if let Some(u) = rs.take_update(w) {
-                    parked.push(StaleUpdate { round: k as u32, worker: w, update: u });
+                    let age = delivery_age(self.cfg.delay.delay(w, k), cut.units, window);
+                    parked.push(StaleUpdate { round: k as u32, worker: w, age, update: u });
                 }
             }
 
             // Aggregate and step, fanned over contiguous column blocks:
-            // stale folds first in (round, worker) order, then this
-            // round's on-time updates in worker-id order — every element
-            // sees the same fixed sequence at any thread count, so with
-            // `quorum = All` (stale always empty) the bits equal the
-            // serial loop's exactly (pinned by the integration tests).
+            // the pool's DUE stale entries (round + age ≤ k) fold first
+            // in (round, worker) order, then this round's on-time
+            // updates in worker-id order — every element sees the same
+            // fixed sequence at any thread count, so with `quorum = All`
+            // (stale always empty) the bits equal the serial loop's
+            // exactly (pinned by the integration tests). Not-yet-due
+            // entries stay in the pool for a later round (with S = 1
+            // everything is due immediately — the PR 4 behavior).
             stale.sort_by_key(|s| (s.round, s.worker));
-            metrics.stale_folded = stale.len() as u64;
+            let (due, pending): (Vec<StaleUpdate>, Vec<StaleUpdate>) =
+                stale.drain(..).partition(|s| (s.round + s.age) as usize <= k);
+            debug_assert!(due.iter().all(|s| s.age as usize <= window));
+            metrics.stale_folded = due.len() as u64;
+            for s in &due {
+                metrics.stale_age_hist[stale_age_bin(s.age)] += 1;
+                cum_stale_ages[stale_age_bin(s.age)] += 1;
+            }
             apply_round_blocked(
                 &mut theta,
                 &mut h,
                 &mut agg,
-                &stale,
+                &due,
                 rs.updates(),
                 &self.cfg.gdsec,
                 &self.cfg.pool,
             );
-            cum_stale += stale.len() as u64;
-            stale.clear();
+            cum_stale += due.len() as u64;
+            stale = pending;
             stale.append(&mut parked);
             metrics.wall_us = t0.elapsed().as_micros() as u64;
             rounds.push(metrics);
@@ -510,3 +593,67 @@ pub fn run_native_opts(
 }
 
 pub use worker::NativeProvider;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+    use crate::objectives::Problem;
+
+    #[test]
+    fn stale_only_worker_accrues_strikes_and_dies() {
+        // Regression for the strike-reset bug: clearing
+        // `timeout_strikes` on ANY delivered frame let a worker that
+        // forever re-sends the previous round's update one round late
+        // evade `dead_after` indefinitely (each round: stale frame ⇒
+        // strikes reset ⇒ timeout ⇒ strikes = 1, forever). Strikes must
+        // only clear on a FRESH reply, so this worker dies after
+        // `dead_after` rounds of stale-only deliveries.
+        let prob = Problem::linear(synthetic::dna_like(3, 30), 1, 0.1);
+        let d = prob.d;
+        let (server_end, worker_end) = duplex();
+        // Scripted worker: fresh at round 1, then forever one round late.
+        let handle = std::thread::spawn(move || {
+            let mut up = SparseUpdate::empty(d);
+            up.idx.push(0);
+            up.val.push(0.001);
+            loop {
+                let frame = match worker_end.rx.recv() {
+                    Recv::Frame(f) => f,
+                    _ => return,
+                };
+                match protocol::decode(&frame, d as u32) {
+                    Ok(Msg::Shutdown) => return,
+                    Ok(Msg::Broadcast { round, .. }) => {
+                        let tag = if round <= 1 { round } else { round - 1 };
+                        let reply = Msg::Update {
+                            round: tag,
+                            worker: 0,
+                            update: up.clone(),
+                            local_f: 0.0,
+                        };
+                        if !worker_end.tx.send(protocol::encode(&reply, d as u32)) {
+                            return;
+                        }
+                    }
+                    _ => {}
+                }
+            }
+        });
+        let prob2 = prob.clone();
+        let mut cfg = CoordConfig::new(GdSecConfig::default(), 6);
+        cfg.recv_timeout = Duration::from_millis(50);
+        cfg.dead_after = 2;
+        cfg.quorum = Quorum::All;
+        cfg.stale_window = 4;
+        cfg.problem_name = prob.name.clone();
+        cfg.evaluator = Some(Arc::new(move |t: &[f64]| prob2.value(t)));
+        let coord = Coordinator { cfg, ends: vec![server_end], handles: vec![handle], d };
+        let out = coord.run();
+        assert_eq!(out.dead_workers, vec![0], "stale-only worker evaded dead_after");
+        // Its stale deliveries were still folded (bits + contribution
+        // accounted) before death — staleness tolerance is not the same
+        // thing as liveness.
+        assert!(out.trace.total_stale() >= 1);
+    }
+}

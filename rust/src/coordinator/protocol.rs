@@ -163,6 +163,13 @@ pub fn decode(buf: &[u8], dim: u32) -> Result<Msg, ProtoError> {
             }
             let active = p[0] != 0;
             let n = (p.len() - 1) / 8;
+            // A θ of the wrong dimension would decode fine here and only
+            // detonate later in the worker's gradient (or silently read
+            // out of bounds semantics into the objective) — reject it at
+            // the protocol boundary like every other payload mismatch.
+            if n != dim as usize {
+                return Err(ProtoError::BadPayload);
+            }
             let mut theta = Vec::with_capacity(n);
             for k in 0..n {
                 let b = &p[1 + 8 * k..1 + 8 * k + 8];
@@ -329,6 +336,17 @@ mod tests {
         let mut b2 = encode(&m2, 1);
         b2.push(0);
         assert_eq!(decode(&b2, 1), Err(ProtoError::Truncated));
+    }
+
+    #[test]
+    fn broadcast_with_wrong_dimension_rejected() {
+        // Well-formed frame, wrong model dimension: must fail at decode,
+        // not inside the worker's gradient.
+        let m = Msg::Broadcast { round: 1, theta: vec![1.0, 2.0, 3.0], active: true };
+        let buf = encode(&m, 3);
+        assert_eq!(decode(&buf, 4), Err(ProtoError::BadPayload));
+        assert_eq!(decode(&buf, 2), Err(ProtoError::BadPayload));
+        assert!(decode(&buf, 3).is_ok());
     }
 
     #[test]

@@ -8,18 +8,24 @@
 //! a worker that had timed out one round earlier). Once every live
 //! active worker has resolved — fresh reply, timeout, or death — the
 //! round is **cut**: the first `K` replies in virtual-arrival order
-//! (`(DelayPlan::delay(w, k), w)` — deterministic, never wall-clock)
-//! are applied immediately, and the rest are parked as stale and folded
-//! into the *next* round's aggregation, exactly where GD-SEC's Eq. 6
-//! would have put them one round earlier (LAQ-style bounded staleness).
+//! (`(DelayPlan::delay(w, k), w)` — deterministic, never wall-clock;
+//! `K` fixed or delay-adaptive via
+//! [`QuorumController`](super::scheduler::QuorumController)) are applied
+//! immediately, and the rest are parked as stale and folded into a
+//! *later* round's aggregation — at the [`delivery_age`] their excess
+//! delay spans, hard-bounded by the staleness window S — exactly where
+//! GD-SEC's Eq. 6 would have put them rounds earlier (LAQ-style bounded
+//! multi-round staleness). Anything older than S never folds
+//! ([`Admit::Expired`]).
 //!
-//! With `Quorum::All` the cut keeps every reply and the machine is
-//! bit-for-bit identical to the synchronous protocol — pinned by
-//! `tests/integration_coordinator.rs` against the serial reference,
+//! With `Quorum::All` and window 1 the cut keeps every reply and the
+//! machine is bit-for-bit identical to the synchronous protocol — pinned
+//! by `tests/integration_coordinator.rs` against the serial reference,
 //! including under injected delays.
 
 use super::protocol::Msg;
 use super::transport::DelayPlan;
+use crate::algo::trace::{stale_age_bin, STALE_AGE_BINS};
 use crate::compress::SparseUpdate;
 
 /// How many of a round's live active workers must report before the
@@ -33,36 +39,92 @@ pub enum Quorum {
     Count(usize),
     /// `ceil(ratio · active)`, clamped to `[1, active]`.
     Fraction(f64),
+    /// Delay-adaptive K, chosen online by a
+    /// [`QuorumController`](super::scheduler::QuorumController) from the
+    /// per-worker EMA of observed virtual arrival delays: the cut waits
+    /// for every worker predicted within (a slack factor of) the
+    /// `target_quantile`-th delay order statistic, never fewer than
+    /// `ceil(min_frac · active)`. With no observations yet (or through
+    /// the stateless [`k_of`](Quorum::k_of)) it falls back to that
+    /// `min_frac` floor.
+    Adaptive { target_quantile: f64, min_frac: f64 },
 }
 
 impl Quorum {
-    /// Default with the `GDSEC_QUORUM` env override: `all`, an absolute
-    /// count (`2`), or a participation ratio in (0, 1) (`0.5`).
+    /// Default with the `GDSEC_QUORUM` env override (see
+    /// [`parse`](Quorum::parse) for the accepted forms).
     ///
-    /// Panics on anything else: a malformed value silently degrading to
-    /// `All` would turn the CI quorum matrix into a synchronous no-op
-    /// while staying green.
+    /// Panics on anything else — including an explicit `0`: a malformed
+    /// value silently degrading to `All` (or a zero quorum silently
+    /// clamping to 1) would turn the CI quorum matrix into a synchronous
+    /// no-op while staying green.
     pub fn from_env() -> Quorum {
         match std::env::var("GDSEC_QUORUM").ok().as_deref() {
-            None | Some("") | Some("all") => Quorum::All,
-            Some(s) => {
-                if let Ok(k) = s.parse::<usize>() {
-                    Quorum::Count(k)
-                } else {
-                    match s.parse::<f64>() {
-                        Ok(r) if r > 0.0 && r < 1.0 => Quorum::Fraction(r),
-                        _ => panic!(
-                            "GDSEC_QUORUM must be `all`, a worker count, or a \
-                             ratio in (0, 1); got {s:?}"
-                        ),
-                    }
+            None | Some("") => Quorum::All,
+            Some(s) => Quorum::parse(s).unwrap_or_else(|e| {
+                panic!(
+                    "GDSEC_QUORUM must be `all`, a positive worker count, a \
+                     ratio in (0, 1], or `adaptive[:quantile[:min_frac]]`: {e}"
+                )
+            }),
+        }
+    }
+
+    /// Parse a quorum spec: `all`, a positive worker count (`2`), a
+    /// participation ratio in (0, 1] (`0.5`; `1.0` ≡ `all` — a full
+    /// ratio is well-defined, not malformed), or
+    /// `adaptive[:quantile[:min_frac]]` (defaults 0.75 / 0.25).
+    /// `0` and `0.0` are rejected explicitly: a zero quorum would
+    /// otherwise clamp to 1 in [`k_of`](Quorum::k_of) and silently mean
+    /// "first reply wins".
+    pub fn parse(s: &str) -> Result<Quorum, String> {
+        if s == "all" {
+            return Ok(Quorum::All);
+        }
+        if let Some(rest) = s.strip_prefix("adaptive") {
+            let mut target_quantile = 0.75;
+            let mut min_frac = 0.25;
+            if let Some(args) = rest.strip_prefix(':') {
+                let mut it = args.split(':');
+                if let Some(q) = it.next() {
+                    target_quantile = q.parse::<f64>().map_err(|_| format!("bad quantile {q:?}"))?;
                 }
+                if let Some(f) = it.next() {
+                    min_frac = f.parse::<f64>().map_err(|_| format!("bad min_frac {f:?}"))?;
+                }
+                if it.next().is_some() {
+                    return Err(format!("too many `:` fields in {s:?}"));
+                }
+            } else if !rest.is_empty() {
+                return Err(format!("got {s:?}"));
             }
+            if !(target_quantile > 0.0 && target_quantile <= 1.0) {
+                return Err(format!("quantile {target_quantile} outside (0, 1]"));
+            }
+            if !(min_frac > 0.0 && min_frac <= 1.0) {
+                return Err(format!("min_frac {min_frac} outside (0, 1]"));
+            }
+            return Ok(Quorum::Adaptive { target_quantile, min_frac });
+        }
+        if let Ok(k) = s.parse::<usize>() {
+            return if k == 0 {
+                Err("quorum count 0 rejected".into())
+            } else {
+                Ok(Quorum::Count(k))
+            };
+        }
+        match s.parse::<f64>() {
+            Ok(r) if r > 0.0 && r < 1.0 => Ok(Quorum::Fraction(r)),
+            Ok(r) if r == 1.0 => Ok(Quorum::All),
+            Ok(r) => Err(format!("ratio {r} outside (0, 1]")),
+            Err(_) => Err(format!("got {s:?}")),
         }
     }
 
     /// The quorum size K for a round with `active` live scheduled
-    /// workers.
+    /// workers. Stateless: `Adaptive` answers with its `min_frac` floor
+    /// — the cold-start value; the online EMA decision lives in
+    /// [`QuorumController::k_for`](super::scheduler::QuorumController::k_for).
     pub fn k_of(&self, active: usize) -> usize {
         if active == 0 {
             return 0;
@@ -71,17 +133,42 @@ impl Quorum {
             Quorum::All => active,
             Quorum::Count(k) => (*k).clamp(1, active),
             Quorum::Fraction(r) => ((r * active as f64).ceil() as usize).clamp(1, active),
+            Quorum::Adaptive { min_frac, .. } => {
+                ((min_frac * active as f64).ceil() as usize).clamp(1, active)
+            }
         }
     }
 }
 
+/// The delivery age of a reply that missed a cut: how many rounds after
+/// its transmission round it folds. The cut closed at `units` virtual
+/// time; the reply lands `delay − units` units later, and each
+/// subsequent round is modeled as lasting this round's `units` (at least
+/// 1, so ties and zero-delay cuts still progress) — clamped into `[1,
+/// window]`, the staleness window's hard bound. Shared by the
+/// coordinator round loop and the engine-side
+/// [`QuorumSim`](super::scheduler::QuorumSim), so both model the same
+/// in-flight times.
+pub fn delivery_age(delay: u64, units: u64, window: usize) -> u32 {
+    let per_round = units.max(1);
+    let excess = delay.saturating_sub(units);
+    let age = excess.div_ceil(per_round).max(1);
+    age.min(window.max(1) as u64) as u32
+}
+
 /// A transmitted update the server holds past its round: parked by a
-/// quorum cut, or physically delivered a round late after a timeout.
-/// Folded into the next aggregation in `(round, worker)` order.
+/// quorum cut, or physically delivered late after a timeout. `age` is
+/// the number of rounds after `round` at which it folds (`due = round +
+/// age`), hard-bounded by the staleness window S — the pool folds its
+/// due entries each round in `(round, worker)` order and an update older
+/// than S is dropped at admission ([`Admit::Expired`]), never folded.
 #[derive(Debug, Clone)]
 pub struct StaleUpdate {
     pub round: u32,
     pub worker: usize,
+    /// Fold age in rounds (1 ≤ age ≤ S): the entry folds into round
+    /// `round + age`'s aggregation.
+    pub age: u32,
     pub update: SparseUpdate,
 }
 
@@ -91,10 +178,15 @@ pub enum Admit {
     /// A fresh reply for the current round (update or silence) — counts
     /// toward the quorum.
     Fresh,
-    /// An older round's update, physically delivered late: the caller
-    /// adds it to the stale pool (its bits went on the wire — account
-    /// them — but it must not be misread as this round's reply).
+    /// An older round's update, physically delivered late within the
+    /// staleness window: the caller adds it to the stale pool (its bits
+    /// went on the wire — account them — but it must not be misread as
+    /// this round's reply).
     Stale(StaleUpdate),
+    /// An update older than the staleness window S: its bits went on the
+    /// wire (account them) but it must NOT fold — the window is a hard
+    /// bound on how old a folded contribution may be.
+    Expired(StaleUpdate),
     /// Nothing actionable: stale silence, duplicate, wrong-direction or
     /// future-round frame.
     Ignored,
@@ -103,9 +195,14 @@ pub enum Admit {
 /// Per-round reply state for one gather.
 pub struct RoundState {
     k: u32,
+    /// Staleness window S: updates older than this are expired, not
+    /// pooled.
+    window: u32,
     updates: Vec<Option<SparseUpdate>>,
     local_f: Vec<Option<f64>>,
     replied: Vec<bool>,
+    /// Ages of the stale updates admitted (not expired) this round.
+    stale_age_hist: [u64; STALE_AGE_BINS],
 }
 
 /// The quorum cut of a completed gather.
@@ -120,12 +217,14 @@ pub struct Cut {
 }
 
 impl RoundState {
-    pub fn new(k: u32, m: usize) -> RoundState {
+    pub fn new(k: u32, m: usize, window: u32) -> RoundState {
         RoundState {
             k,
+            window: window.max(1),
             updates: vec![None; m],
             local_f: vec![None; m],
             replied: vec![false; m],
+            stale_age_hist: [0; STALE_AGE_BINS],
         }
     }
 
@@ -143,7 +242,15 @@ impl RoundState {
                     self.updates[w] = Some(update);
                     Admit::Fresh
                 } else if round < self.k {
-                    Admit::Stale(StaleUpdate { round, worker: w, update })
+                    // Fold age when this joins round k's aggregation.
+                    let age = self.k - round;
+                    let su = StaleUpdate { round, worker: w, age, update };
+                    if age > self.window {
+                        Admit::Expired(su)
+                    } else {
+                        self.stale_age_hist[stale_age_bin(age)] += 1;
+                        Admit::Stale(su)
+                    }
                 } else {
                     Admit::Ignored
                 }
@@ -164,6 +271,19 @@ impl RoundState {
     /// Whether worker `w` has reported fresh this round.
     pub fn replied(&self, w: usize) -> bool {
         self.replied[w]
+    }
+
+    /// Staleness-age histogram of this gather's admitted (non-expired)
+    /// stale updates ([`crate::algo::trace::stale_age_bin`] bins).
+    ///
+    /// This counts at ADMISSION time and only covers physically-late
+    /// deliveries routed through [`admit`](Self::admit) — deliberately
+    /// not the same thing as
+    /// [`RoundMetrics::stale_age_hist`](crate::coordinator::RoundMetrics::stale_age_hist),
+    /// which counts at FOLD time and also covers updates the quorum cut
+    /// parked (those never pass through `admit` as stale).
+    pub fn stale_age_hist(&self) -> [u64; STALE_AGE_BINS] {
+        self.stale_age_hist
     }
 
     /// Fresh local objective values, indexed by worker.
@@ -222,11 +342,64 @@ mod tests {
         assert_eq!(Quorum::Fraction(0.01).k_of(5), 1);
         assert_eq!(Quorum::Fraction(0.99).k_of(5), 5);
         assert_eq!(Quorum::All.k_of(0), 0);
+        // Adaptive without observation state falls back to its floor.
+        let a = Quorum::Adaptive { target_quantile: 0.75, min_frac: 0.5 };
+        assert_eq!(a.k_of(5), 3); // ceil(2.5)
+        assert_eq!(a.k_of(0), 0);
+    }
+
+    #[test]
+    fn quorum_parse_contract() {
+        assert_eq!(Quorum::parse("all"), Ok(Quorum::All));
+        assert_eq!(Quorum::parse("3"), Ok(Quorum::Count(3)));
+        assert_eq!(Quorum::parse("0.5"), Ok(Quorum::Fraction(0.5)));
+        // A full ratio is well-defined synchronous participation, not an
+        // error.
+        assert_eq!(Quorum::parse("1.0"), Ok(Quorum::All));
+        // A zero quorum must be rejected, not clamped to 1.
+        assert!(Quorum::parse("0").is_err());
+        assert!(Quorum::parse("0.0").is_err());
+        assert!(Quorum::parse("1.5").is_err());
+        assert!(Quorum::parse("-0.3").is_err());
+        assert!(Quorum::parse("bogus").is_err());
+        assert_eq!(
+            Quorum::parse("adaptive"),
+            Ok(Quorum::Adaptive { target_quantile: 0.75, min_frac: 0.25 })
+        );
+        assert_eq!(
+            Quorum::parse("adaptive:0.6"),
+            Ok(Quorum::Adaptive { target_quantile: 0.6, min_frac: 0.25 })
+        );
+        assert_eq!(
+            Quorum::parse("adaptive:0.6:0.34"),
+            Ok(Quorum::Adaptive { target_quantile: 0.6, min_frac: 0.34 })
+        );
+        assert!(Quorum::parse("adaptive:0.6:0.3:9").is_err());
+        assert!(Quorum::parse("adaptive:2.0").is_err());
+        assert!(Quorum::parse("adaptive:0.5:0.0").is_err());
+        assert!(Quorum::parse("adaptivex").is_err());
+    }
+
+    #[test]
+    fn delivery_age_models_excess_over_cut() {
+        // Tie with the cut (excess 0): next round.
+        assert_eq!(delivery_age(5, 5, 3), 1);
+        // Excess within one round-duration: next round.
+        assert_eq!(delivery_age(8, 5, 3), 1);
+        // Excess spanning rounds: ceil(excess / units).
+        assert_eq!(delivery_age(15, 5, 3), 2);
+        assert_eq!(delivery_age(16, 5, 3), 3);
+        // Hard-bounded by the window.
+        assert_eq!(delivery_age(900, 5, 3), 3);
+        assert_eq!(delivery_age(900, 5, 1), 1);
+        // Zero-unit cut (all ties) still progresses one round per unit.
+        assert_eq!(delivery_age(0, 0, 4), 1);
+        assert_eq!(delivery_age(2, 0, 4), 2);
     }
 
     #[test]
     fn admit_routes_by_round_id() {
-        let mut rs = RoundState::new(5, 3);
+        let mut rs = RoundState::new(5, 3, 4);
         // Fresh update.
         match rs.admit(0, Msg::Update { round: 5, worker: 0, update: upd(4, 1), local_f: 0.5 })
         {
@@ -239,12 +412,13 @@ mod tests {
         match rs.admit(1, Msg::Update { round: 4, worker: 1, update: upd(4, 2), local_f: 0.1 })
         {
             Admit::Stale(s) => {
-                assert_eq!((s.round, s.worker), (4, 1));
+                assert_eq!((s.round, s.worker, s.age), (4, 1, 1));
                 assert_eq!(s.update.idx, vec![2]);
             }
             other => panic!("{other:?}"),
         }
         assert!(!rs.replied(1));
+        assert_eq!(rs.stale_age_hist(), [1, 0, 0, 0]);
         // Its fresh reply afterwards still counts.
         assert!(matches!(
             rs.admit(1, Msg::Silence { round: 5, worker: 1, local_f: 0.2 }),
@@ -267,8 +441,28 @@ mod tests {
     }
 
     #[test]
+    fn stale_beyond_window_expires() {
+        // Window 2, round 9: an update from round 7 (age 2) pools, one
+        // from round 6 (age 3) expires — the hard staleness bound.
+        let mut rs = RoundState::new(9, 3, 2);
+        match rs.admit(0, Msg::Update { round: 7, worker: 0, update: upd(4, 1), local_f: 0.0 })
+        {
+            Admit::Stale(s) => assert_eq!(s.age, 2),
+            other => panic!("{other:?}"),
+        }
+        match rs.admit(1, Msg::Update { round: 6, worker: 1, update: upd(4, 2), local_f: 0.0 })
+        {
+            Admit::Expired(s) => assert_eq!((s.age, s.update.nnz()), (3, 1)),
+            other => panic!("{other:?}"),
+        }
+        // Only the admitted one is in the histogram (age-2 bin).
+        assert_eq!(rs.stale_age_hist(), [0, 1, 0, 0]);
+        assert!(!rs.replied(0) && !rs.replied(1));
+    }
+
+    #[test]
     fn cut_ranks_by_delay_then_worker() {
-        let mut rs = RoundState::new(2, 4);
+        let mut rs = RoundState::new(2, 4, 1);
         for w in 0..4 {
             rs.admit(w, Msg::Silence { round: 2, worker: w as u32, local_f: 0.0 });
         }
@@ -289,7 +483,7 @@ mod tests {
 
     #[test]
     fn cut_with_fewer_repliers_than_quorum() {
-        let mut rs = RoundState::new(1, 3);
+        let mut rs = RoundState::new(1, 3, 1);
         rs.admit(2, Msg::Silence { round: 1, worker: 2, local_f: 0.0 });
         let cut = rs.cut(3, &DelayPlan::None);
         assert!(cut.late.is_empty());

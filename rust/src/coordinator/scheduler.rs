@@ -1,7 +1,14 @@
 //! Worker participation schedulers (paper §IV-G1: bandwidth-limited
 //! operation where the server schedules only a fraction of workers each
-//! round).
+//! round) and the **delay-adaptive quorum controller**: the logic that
+//! picks each round's quorum size K online from the observed virtual
+//! arrival distribution ([`Quorum::Adaptive`]), plus the
+//! [`QuorumSim`] harness that drives the same cut/park/fold decisions
+//! through [`Engine::step_quorum_aged`](crate::algo::engine::Engine)
+//! single-process that the coordinator round loop makes distributed.
 
+use super::round::{delivery_age, Quorum};
+use super::transport::DelayPlan;
 use crate::util::rng::Pcg64;
 
 /// Scheduling policy.
@@ -53,6 +60,166 @@ impl Scheduler {
                 set
             }
         }
+    }
+}
+
+/// EMA coefficient for the per-worker delay estimate: one observation
+/// moves the estimate a quarter of the way — slow enough to ignore
+/// one-round jitter, fast enough to track a phase shift in a handful of
+/// rounds.
+pub const ADAPT_EMA: f64 = 0.25;
+
+/// Multiplicative slack on the quantile threshold: a worker predicted
+/// within `ADAPT_SLACK ×` the target order statistic still makes the
+/// quorum, so jitter around a tight fast cluster does not randomly
+/// evict cluster members — only genuine stragglers (far beyond the
+/// cluster) are cut.
+pub const ADAPT_SLACK: f64 = 2.0;
+
+/// Online quorum-size decisions for a [`Quorum`] policy. Fixed policies
+/// (`All`/`Count`/`Fraction`) pass through [`Quorum::k_of`];
+/// [`Quorum::Adaptive`] keeps a per-worker EMA of observed virtual
+/// arrival delays and cuts each round at the workers predicted within
+/// [`ADAPT_SLACK`] of the `target_quantile`-th delay order statistic,
+/// floored at `ceil(min_frac · expected)`.
+///
+/// Both drivers use it identically: decide K from the PRE-round
+/// estimates ([`k_for`](QuorumController::k_for)), gather, then
+/// [`observe`](QuorumController::observe) every replier's delay. State
+/// depends only on the deterministic [`DelayPlan`], so adaptive
+/// trajectories stay reproducible and thread-count independent.
+pub struct QuorumController {
+    policy: Quorum,
+    ema: Vec<f64>,
+    seen: Vec<bool>,
+    scratch: Vec<f64>,
+}
+
+impl QuorumController {
+    pub fn new(policy: Quorum, m: usize) -> QuorumController {
+        QuorumController {
+            policy,
+            ema: vec![0.0; m],
+            seen: vec![false; m],
+            scratch: Vec::with_capacity(m),
+        }
+    }
+
+    pub fn policy(&self) -> Quorum {
+        self.policy
+    }
+
+    /// The quorum size for a round whose live scheduled workers are
+    /// `expected`. Until every expected worker has at least one
+    /// observation, `Adaptive` answers with its `min_frac` floor — a
+    /// cheap cold start: the cut's late replies fold as stale, so
+    /// starting aggressive costs bounded staleness, never waiting on an
+    /// unknown straggler.
+    pub fn k_for(&mut self, expected: &[usize]) -> usize {
+        let n = expected.len();
+        let Quorum::Adaptive { target_quantile, min_frac } = self.policy else {
+            return self.policy.k_of(n);
+        };
+        if n == 0 {
+            return 0;
+        }
+        let floor = ((min_frac * n as f64).ceil() as usize).clamp(1, n);
+        if expected.iter().any(|&w| !self.seen[w]) {
+            return floor;
+        }
+        self.scratch.clear();
+        self.scratch.extend(expected.iter().map(|&w| self.ema[w]));
+        self.scratch.sort_by(f64::total_cmp);
+        let rank = ((target_quantile * n as f64).ceil() as usize).clamp(1, n);
+        let tau = self.scratch[rank - 1] * ADAPT_SLACK;
+        let k = self.scratch.iter().filter(|&&e| e <= tau).count();
+        k.clamp(floor, n)
+    }
+
+    /// Feed one observed virtual arrival delay for worker `w` (called
+    /// for every replier after the gather, cut-late repliers included —
+    /// their delay is exactly the signal the next round's K needs).
+    pub fn observe(&mut self, w: usize, units: u64) {
+        let x = units as f64;
+        if self.seen[w] {
+            self.ema[w] += ADAPT_EMA * (x - self.ema[w]);
+        } else {
+            self.ema[w] = x;
+            self.seen[w] = true;
+        }
+    }
+}
+
+/// Deterministic single-process driver for semi-synchronous engine runs:
+/// per round it ranks the available workers' virtual arrivals under a
+/// [`DelayPlan`], asks the [`QuorumController`] for K, cuts, assigns
+/// each late reply its [`delivery_age`] (the rounds its excess delay
+/// spans, clamped to the staleness window), and tracks in-flight workers
+/// so they sit out the rounds their update spends in transit. The
+/// decide-K → cut → observe logic is the coordinator round loop's; the
+/// in-flight model is stricter — a slow worker here computes nothing
+/// while its update is in transit (and is only observed when it
+/// arrives), whereas the coordinator's links pipeline, so a cut-late
+/// worker keeps replying every round. The two drivers are therefore NOT
+/// bit-pinned to each other under cuts, only under `Quorum::All`. Feed
+/// the returned late set straight into
+/// [`Engine::step_quorum_aged`](crate::algo::engine::Engine::step_quorum_aged).
+pub struct QuorumSim {
+    plan: DelayPlan,
+    ctrl: QuorumController,
+    window: usize,
+    /// Per worker: the first round it is available again (an in-flight
+    /// update from round k with age a occupies it through round k+a−1).
+    busy_until: Vec<usize>,
+    expected: Vec<usize>,
+    arrivals: Vec<(u64, usize)>,
+    late: Vec<(usize, u32)>,
+}
+
+impl QuorumSim {
+    pub fn new(m: usize, policy: Quorum, plan: DelayPlan, window: usize) -> QuorumSim {
+        QuorumSim {
+            plan,
+            ctrl: QuorumController::new(policy, m),
+            window: window.max(1),
+            busy_until: vec![0; m],
+            expected: Vec::with_capacity(m),
+            arrivals: Vec::with_capacity(m),
+            late: Vec::with_capacity(m),
+        }
+    }
+
+    /// Cut round `k` (1-based) over the workers in `act` (`None` = all)
+    /// that are not mid-flight. Returns the `(worker, delivery age)`
+    /// late set (ascending worker id — pass to `step_quorum_aged`) and
+    /// the round's virtual units (the K-th arrival's delay: what the
+    /// quorum waited for).
+    pub fn round(&mut self, k: usize, act: Option<&[usize]>) -> (&[(usize, u32)], u64) {
+        self.expected.clear();
+        self.arrivals.clear();
+        for w in 0..self.busy_until.len() {
+            if self.busy_until[w] <= k && act.map_or(true, |set| set.contains(&w)) {
+                self.expected.push(w);
+                self.arrivals.push((self.plan.delay(w, k), w));
+            }
+        }
+        // K from the PRE-round estimates (predictive, like the
+        // coordinator), then observe this round's arrivals.
+        let kq = self.ctrl.k_for(&self.expected);
+        self.arrivals.sort_unstable();
+        for &(d, w) in &self.arrivals {
+            self.ctrl.observe(w, d);
+        }
+        let on_time = kq.min(self.arrivals.len());
+        let units = self.arrivals[..on_time].iter().map(|&(d, _)| d).max().unwrap_or(0);
+        self.late.clear();
+        for &(d, w) in &self.arrivals[on_time..] {
+            let age = delivery_age(d, units, self.window);
+            self.busy_until[w] = k + age as usize;
+            self.late.push((w, age));
+        }
+        self.late.sort_unstable();
+        (&self.late, units)
     }
 }
 
@@ -120,6 +287,82 @@ mod tests {
         assert_eq!(s.active_count(5), 1);
         let s = Scheduler::RoundRobin { fraction: 2.0 };
         assert_eq!(s.active_count(5), 5);
+    }
+
+    #[test]
+    fn adaptive_controller_tracks_straggler_sets() {
+        let policy = Quorum::Adaptive { target_quantile: 0.3, min_frac: 0.25 };
+        let mut ctrl = QuorumController::new(policy, 8);
+        let all: Vec<usize> = (0..8).collect();
+        // Cold start: the min_frac floor (ceil(0.25·8) = 2).
+        assert_eq!(ctrl.k_for(&all), 2);
+        // One observed round: 7 fast workers at 2 units, one at 40.
+        for w in 0..7 {
+            ctrl.observe(w, 2);
+        }
+        ctrl.observe(7, 40);
+        // rank = ceil(0.3·8) = 3 ⇒ τ = 2·SLACK = 4 ⇒ the fast 7 make it.
+        assert_eq!(ctrl.k_for(&all), 7);
+        // Workers 3..7 turn into stragglers; the EMA needs a few
+        // observations to cross τ, then K settles on the fast 3.
+        for _ in 0..12 {
+            for w in 0..3 {
+                ctrl.observe(w, 2);
+            }
+            for w in 3..8 {
+                ctrl.observe(w, 40);
+            }
+        }
+        assert_eq!(ctrl.k_for(&all), 3);
+        // The floor always binds.
+        let tight = Quorum::Adaptive { target_quantile: 0.3, min_frac: 0.9 };
+        let mut ctrl = QuorumController::new(tight, 4);
+        for w in 0..4 {
+            ctrl.observe(w, if w == 0 { 1 } else { 500 });
+        }
+        assert_eq!(ctrl.k_for(&[0, 1, 2, 3]), 4); // ceil(0.9·4)
+        // Fixed policies pass through k_of.
+        let mut fixed = QuorumController::new(Quorum::Count(2), 5);
+        assert_eq!(fixed.k_for(&[0, 1, 2, 3, 4]), 2);
+        assert_eq!(fixed.k_for(&[]), 0);
+    }
+
+    #[test]
+    fn adaptive_no_delays_stays_synchronous() {
+        // With every arrival tied at 0 the quantile threshold is 0 and
+        // everyone is within it: adaptive must not cut a homogeneous
+        // fleet (after the one cold-start round at the floor).
+        let policy = Quorum::Adaptive { target_quantile: 0.5, min_frac: 0.25 };
+        let mut sim = QuorumSim::new(4, policy, DelayPlan::None, 1);
+        let (late, units) = sim.round(1, None);
+        assert_eq!((late.len(), units), (3, 0)); // cold-start floor K=1
+        for k in 2..10 {
+            let (late, units) = sim.round(k, None);
+            assert!(late.is_empty(), "round {k} cut a homogeneous fleet: {late:?}");
+            assert_eq!(units, 0);
+        }
+    }
+
+    #[test]
+    fn quorum_sim_parks_straggler_and_tracks_flight_time() {
+        // One hard straggler under Count(2): cut at the fast pair, the
+        // straggler's excess spans the window and it sits out its
+        // in-flight rounds.
+        let plan = DelayPlan::PerWorker(vec![1, 1, 900]);
+        let mut sim = QuorumSim::new(3, Quorum::Count(2), plan, 3);
+        let (late, units) = sim.round(1, None);
+        assert_eq!(units, 1);
+        assert_eq!(late, &[(2, 3)]); // ceil(899/1) clamped to the window
+        // Rounds 2 and 3: the straggler is mid-flight — only the fast
+        // pair arrives, nobody is late.
+        for k in 2..=3 {
+            let (late, units) = sim.round(k, None);
+            assert!(late.is_empty(), "round {k}");
+            assert_eq!(units, 1);
+        }
+        // Round 4: it is back, and gets cut again.
+        let (late, _) = sim.round(4, None);
+        assert_eq!(late, &[(2, 3)]);
     }
 
     #[test]

@@ -36,6 +36,13 @@ pub enum DelayPlan {
     /// Seeded pseudo-random delay in `[lo, hi)` drawn independently per
     /// (worker, round) — i.i.d. jitter, reproducible from the seed.
     Jitter { seed: u64, lo: u64, hi: u64 },
+    /// Piecewise-constant per-worker delays: each `(start_round,
+    /// units)` phase applies from its start round (1-based, inclusive)
+    /// until the next phase begins. Rounds before the first phase, and
+    /// workers past a phase's vector, default to 0. Models straggler
+    /// sets that drift over a run — the regime a delay-adaptive quorum
+    /// exists for (a fixed K is wrong in at least one phase).
+    Phased(Vec<(usize, Vec<u64>)>),
 }
 
 impl DelayPlan {
@@ -44,6 +51,11 @@ impl DelayPlan {
         match self {
             DelayPlan::None => 0,
             DelayPlan::PerWorker(units) => units.get(w).copied().unwrap_or(0),
+            DelayPlan::Phased(phases) => phases
+                .iter()
+                .rev()
+                .find(|(start, _)| k >= *start)
+                .map_or(0, |(_, units)| units.get(w).copied().unwrap_or(0)),
             DelayPlan::Jitter { seed, lo, hi } => {
                 if hi <= lo {
                     return *lo;
@@ -247,6 +259,23 @@ mod tests {
         // Degenerate range collapses to lo.
         let flat = DelayPlan::Jitter { seed: 1, lo: 3, hi: 3 };
         assert_eq!(flat.delay(0, 1), 3);
+    }
+
+    #[test]
+    fn phased_plan_switches_at_phase_starts() {
+        let p = DelayPlan::Phased(vec![
+            (1, vec![2, 2, 40]),
+            (10, vec![2, 40, 40]),
+        ]);
+        assert_eq!(p.delay(2, 1), 40);
+        assert_eq!(p.delay(1, 9), 2);
+        assert_eq!(p.delay(1, 10), 40); // switch round is inclusive
+        assert_eq!(p.delay(1, 99), 40);
+        assert_eq!(p.delay(7, 5), 0); // worker past the vector ⇒ 0
+        // Rounds before the first phase default to 0.
+        let late_start = DelayPlan::Phased(vec![(5, vec![9])]);
+        assert_eq!(late_start.delay(0, 4), 0);
+        assert_eq!(late_start.delay(0, 5), 9);
     }
 
     #[test]

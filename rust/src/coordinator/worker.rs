@@ -67,6 +67,13 @@ pub struct FailurePlan {
 /// Run the worker loop until Shutdown (or link loss). `factory` is invoked
 /// on this thread to build the provider. `wire` selects the uplink update
 /// codec (the paper's sparse format, or the adaptive tagged format).
+/// `stale_window` is the staleness bound S: a worker that fell behind
+/// replies to every queued broadcast within S−1 rounds of the newest —
+/// tagging each reply with its TRUE round id so the server folds it as a
+/// stale contribution instead of the worker discarding the backlog —
+/// and skips only broadcasts the window has already expired (S = 1
+/// reproduces the PR 4 skip-to-newest behavior exactly).
+#[allow(clippy::too_many_arguments)]
 pub fn worker_loop(
     id: u32,
     m_workers: usize,
@@ -75,7 +82,9 @@ pub fn worker_loop(
     end: WorkerEnd,
     failure: FailurePlan,
     wire: WireFormat,
+    stale_window: usize,
 ) {
+    let stale_window = stale_window.max(1) as u32;
     let mut provider = factory();
     let d = provider.dim();
     let mut state = WorkerState::new(d);
@@ -92,60 +101,60 @@ pub fn worker_loop(
         };
         match msg {
             Msg::Shutdown => return,
-            Msg::Broadcast { mut round, mut theta, mut active } => {
+            Msg::Broadcast { round, theta, active } => {
                 // Quorum rounds let the server race ahead of a straggler:
-                // if newer broadcasts are already queued, the one in hand
-                // is superseded — skip straight to the newest so the
-                // worker computes at most one stale round, never a
-                // backlog. (In the synchronous protocol the inbox never
-                // holds two broadcasts, so this drain is a no-op there.)
-                while let Some(r) = end.rx.try_recv() {
-                    match r {
-                        Recv::Frame(f) => match protocol::decode(&f, d as u32) {
+                // collect the queued backlog (in round order — the link
+                // is FIFO), then reply to every broadcast still within
+                // the staleness window of the newest, oldest first, and
+                // merely advance the iterate history past the expired
+                // ones. Skipped θs still advance theta_prev — exactly
+                // what processing them sequentially would have done — so
+                // censoring thresholds stay bitwise identical to the
+                // one-at-a-time path. (In the synchronous protocol the
+                // inbox never holds two broadcasts, so the drain is a
+                // no-op there.)
+                let mut pending: Vec<(u32, Vec<f64>, bool)> = vec![(round, theta, active)];
+                loop {
+                    match end.rx.try_recv() {
+                        None => break,
+                        Some(Recv::Frame(f)) => match protocol::decode(&f, d as u32) {
                             Ok(Msg::Broadcast { round: r2, theta: t2, active: a2 })
-                                if r2 > round =>
+                                if r2 > pending.last().map_or(0, |p| p.0) =>
                             {
-                                // The superseded θ still advances the
-                                // iterate history — exactly what
-                                // processing it sequentially would have
-                                // done to theta_prev — so censoring
-                                // thresholds stay bitwise identical to
-                                // the one-at-a-time path.
-                                theta_prev.copy_from_slice(&theta);
-                                round = r2;
-                                theta = t2;
-                                active = a2;
+                                pending.push((r2, t2, a2));
                             }
                             Ok(Msg::Shutdown) => return,
                             _ => {} // corrupt/out-of-order: drop
                         },
-                        Recv::Disconnected => return,
-                        // try_recv never yields Timeout (it returns None
-                        // on an empty queue, which ends the drain above);
-                        // the arm only keeps the match exhaustive.
-                        Recv::Timeout => break,
+                        Some(Recv::Disconnected) => return,
+                        // try_recv never yields Timeout; the arm only
+                        // keeps the match exhaustive.
+                        Some(Recv::Timeout) => break,
                     }
                 }
-                if failure.silent_from_round.is_some_and(|r| round >= r) {
+                let newest = pending.last().map_or(round, |p| p.0);
+                for (round, theta, active) in pending {
+                    // `newest - round` broadcasts behind: computable only
+                    // while strictly inside the window (its reply would
+                    // reach the server at age newest − round + 1 ≤ S).
+                    let superseded = newest - round >= stale_window;
+                    let silent = failure.silent_from_round.is_some_and(|r| round >= r);
+                    if superseded || silent || !active {
+                        theta_prev.copy_from_slice(&theta);
+                        continue;
+                    }
+                    linalg::sub(&theta, &theta_prev, &mut theta_diff);
+                    let local_f = provider.loss_grad(&theta, state.grad_mut());
+                    let update = state.sparsify_step(&cfg, m_workers, &theta_diff);
+                    let reply = if update.nnz() > 0 {
+                        Msg::Update { round, worker: id, update, local_f }
+                    } else {
+                        Msg::Silence { round, worker: id, local_f }
+                    };
                     theta_prev.copy_from_slice(&theta);
-                    continue;
-                }
-                if !active {
-                    // Not scheduled this round: track iterate history only.
-                    theta_prev.copy_from_slice(&theta);
-                    continue;
-                }
-                linalg::sub(&theta, &theta_prev, &mut theta_diff);
-                let local_f = provider.loss_grad(&theta, state.grad_mut());
-                let update = state.sparsify_step(&cfg, m_workers, &theta_diff);
-                let reply = if update.nnz() > 0 {
-                    Msg::Update { round, worker: id, update, local_f }
-                } else {
-                    Msg::Silence { round, worker: id, local_f }
-                };
-                theta_prev.copy_from_slice(&theta);
-                if !end.tx.send(protocol::encode_wire(&reply, d as u32, wire)) {
-                    return;
+                    if !end.tx.send(protocol::encode_wire(&reply, d as u32, wire)) {
+                        return;
+                    }
                 }
             }
             // Workers ignore uplink-kind messages.
@@ -187,7 +196,7 @@ mod tests {
             Box::new(move || Box::new(NativeProvider::new(local)) as Box<dyn GradProvider>);
         let (server, worker) = duplex();
         let h = std::thread::spawn(move || {
-            worker_loop(0, 1, cfg, factory, worker, failure, WireFormat::Sparse)
+            worker_loop(0, 1, cfg, factory, worker, failure, WireFormat::Sparse, 1)
         });
         (server, h, d)
     }
@@ -275,8 +284,9 @@ mod tests {
             &Msg::Broadcast { round: 2, theta: vec![0.01; d], active: true },
             d as u32,
         ));
+        let failure = FailurePlan::default();
         let h = std::thread::spawn(move || {
-            worker_loop(0, 1, cfg, factory, worker, FailurePlan::default(), WireFormat::Sparse)
+            worker_loop(0, 1, cfg, factory, worker, failure, WireFormat::Sparse, 1)
         });
         match server.rx.recv() {
             Recv::Frame(f) => match protocol::decode(&f, d as u32).unwrap() {
@@ -289,6 +299,49 @@ mod tests {
         match server.rx.recv_timeout(silence_probe()) {
             Recv::Timeout => {}
             other => panic!("expected exactly one reply, got {other:?}"),
+        }
+        server.tx.send(protocol::encode(&Msg::Shutdown, d as u32));
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn backlog_within_window_replies_to_each_true_round() {
+        // Window 3, three queued broadcasts: the worker replies to ALL of
+        // them, oldest first, each tagged with its true round id —
+        // instead of discarding the backlog. A fourth broadcast beyond
+        // the window would be skipped (covered by the window-1 test
+        // above).
+        let cfg = GdSecConfig { xi: Xi::Uniform(1.0), ..Default::default() };
+        let prob = Problem::linear(synthetic::dna_like(1, 30), 1, 0.1);
+        let d = prob.d;
+        let local = prob.locals[0].clone();
+        let factory: ProviderFactory =
+            Box::new(move || Box::new(NativeProvider::new(local)) as Box<dyn GradProvider>);
+        let (server, worker) = duplex();
+        for (round, scale) in [(1u32, 0.0), (2, 0.01), (3, 0.02)] {
+            server.tx.send(protocol::encode(
+                &Msg::Broadcast { round, theta: vec![scale; d], active: true },
+                d as u32,
+            ));
+        }
+        let failure = FailurePlan::default();
+        let h = std::thread::spawn(move || {
+            worker_loop(0, 1, cfg, factory, worker, failure, WireFormat::Sparse, 3)
+        });
+        for expect in 1..=3u32 {
+            match server.rx.recv() {
+                Recv::Frame(f) => match protocol::decode(&f, d as u32).unwrap() {
+                    Msg::Update { round, .. } | Msg::Silence { round, .. } => {
+                        assert_eq!(round, expect, "backlog replies out of order")
+                    }
+                    other => panic!("expected reply, got {other:?}"),
+                },
+                other => panic!("{other:?}"),
+            }
+        }
+        match server.rx.recv_timeout(silence_probe()) {
+            Recv::Timeout => {}
+            other => panic!("expected exactly three replies, got {other:?}"),
         }
         server.tx.send(protocol::encode(&Msg::Shutdown, d as u32));
         h.join().unwrap();

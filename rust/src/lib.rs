@@ -35,15 +35,18 @@
 //! [`objectives::GradSplit`] lanes covering the M < cores regime.
 //! The threaded [`coordinator`] runs the same math over framed links
 //! with an event-driven round state machine: semi-synchronous quorum
-//! rounds ([`coordinator::round::Quorum`], deterministic virtual
+//! rounds ([`coordinator::round::Quorum`] — fixed K, or adapted online
+//! to the observed delay distribution by
+//! [`coordinator::scheduler::QuorumController`]; deterministic virtual
 //! straggler schedules via [`coordinator::transport::DelayPlan`]) fold
-//! late updates one round later through
+//! late updates up to `GDSEC_STALE_WINDOW` rounds later through
 //! [`algo::engine::CompressRule::fold_stale`] instead of dropping them;
-//! `quorum = All` stays bit-identical to the serial reference.
-//! `GDSEC_THREADS` sets the fan-out width of the shared pool
+//! `quorum = All` with window 1 stays bit-identical to the serial
+//! reference. `GDSEC_THREADS` sets the fan-out width of the shared pool
 //! ([`util::pool::Pool::global`]); `GDSEC_NNZ_BUDGET` tunes the nested
-//! lane cut; `GDSEC_QUORUM` / `GDSEC_WIRE` select the coordinator
-//! quorum and the (default-adaptive) uplink codec/accounting;
+//! lane cut; `GDSEC_QUORUM` / `GDSEC_STALE_WINDOW` / `GDSEC_WIRE`
+//! select the coordinator quorum, the staleness bound, and the
+//! (default-adaptive) uplink codec/accounting;
 //! `benches/hotpath_micro.rs` writes the machine-readable perf
 //! trajectory to `BENCH_hotpath.json`. See EXPERIMENTS.md §Perf.
 

@@ -133,7 +133,7 @@ fn steady_state_round_allocates_nothing() {
     //     (worker, row-block) lanes forced multi-block, pooled fan-out,
     //     full-participation schedule) must also be allocation-free once
     //     the engine's buffers are built. ---
-    let opts = EngineOpts { nnz_budget: 256, ..EngineOpts::default() };
+    let opts = EngineOpts { nnz_budget: 256, stale_window: 3, ..EngineOpts::default() };
     let mut eng = Engine::new(&prob, GdSecRule::new(cfg.clone()), &pool, &opts, 0.0);
     for _ in 0..3 {
         eng.step(None);
@@ -171,4 +171,25 @@ fn steady_state_round_allocates_nothing() {
         "steady-state quorum (stale-fold) engine rounds performed heap allocations"
     );
     assert!(eng.iter() == 56);
+
+    // --- Multi-round staleness window: the aged quorum path (worker 1's
+    //     transmission spends 2 rounds in flight — it sits out a round,
+    //     then `fold_stale` fires at age 2) must also be allocation-free:
+    //     the in-flight bookkeeping is two pre-sized index vectors and
+    //     the fold scans a fixed (origin round, worker) grid. ---
+    const LATE_AGED: [(usize, u32); 1] = [(1, 2)];
+    for _ in 0..4 {
+        eng.step_quorum_aged(None, Some(&LATE_AGED));
+    }
+    let before = ALLOC_CALLS.load(Ordering::SeqCst);
+    for _ in 0..24 {
+        eng.step_quorum_aged(None, Some(&LATE_AGED));
+    }
+    let after = ALLOC_CALLS.load(Ordering::SeqCst);
+    assert_eq!(
+        after - before,
+        0,
+        "steady-state aged-quorum (staleness window) engine rounds performed heap allocations"
+    );
+    assert!(eng.iter() == 84);
 }

@@ -127,6 +127,65 @@ fn quorum_straggler_converges_with_fewer_virtual_units_and_stale_folds() {
 }
 
 #[test]
+fn multi_round_window_folds_aged_and_bounds_age() {
+    // Staleness window 2 with one hard straggler: its cut-late updates
+    // spend two rounds in transit (delivery age 2), so the pool holds
+    // them across a round and folds them at their due round — ages
+    // beyond the window never fold (the hard bound), the run still
+    // converges, and the trace's cumulative age histogram agrees with
+    // the per-round metrics.
+    let prob = problem();
+    let m = prob.m();
+    let cfg = cfg_for(&prob);
+    let iters = 80;
+    let fstar = prob.estimate_fstar(2000);
+    let factories: Vec<ProviderFactory> = prob
+        .locals
+        .iter()
+        .map(|l| {
+            let local = l.clone();
+            Box::new(move || Box::new(NativeProvider::new(local)) as Box<dyn GradProvider>)
+                as ProviderFactory
+        })
+        .collect();
+    let failures = vec![FailurePlan::default(); m];
+    let prob2 = prob.clone();
+    let mut ccfg = CoordConfig::new(cfg, iters);
+    ccfg.problem_name = prob.name.clone();
+    ccfg.fstar = fstar;
+    ccfg.evaluator = Some(Arc::new(move |t: &[f64]| prob2.value(t)));
+    ccfg.quorum = Quorum::Count(2);
+    ccfg.delay = DelayPlan::PerWorker(vec![1, 1, 900]);
+    ccfg.stale_window = 2;
+    let out = Coordinator::spawn(ccfg, prob.d, factories, failures).run();
+
+    // Every fold is the straggler's, at delivery age 2 (its 899-unit
+    // excess spans far more than one 1-unit round, clamped to S = 2).
+    let folded: u64 = out.rounds.iter().map(|r| r.stale_folded).sum();
+    assert!(folded >= 1, "no stale update folded");
+    let mut hist = [0u64; 4];
+    for r in &out.rounds {
+        for (b, c) in hist.iter_mut().zip(r.stale_age_hist.iter()) {
+            *b += c;
+        }
+    }
+    assert_eq!(hist.iter().sum::<u64>(), folded, "histogram disagrees with fold count");
+    assert_eq!(hist[2] + hist[3], 0, "fold older than the S=2 window");
+    assert!(hist[1] >= 1, "multi-round (age 2) staleness never exercised");
+    assert_eq!(out.trace.rows.last().unwrap().stale_ages, hist);
+    assert_eq!(out.trace.total_stale(), folded);
+    // Nothing expired here (the worker never falls physically behind).
+    assert_eq!(out.rounds.iter().map(|r| r.stale_expired).sum::<u64>(), 0);
+
+    // Still converging, still cheap in virtual time: the quorum cut
+    // bounds every round at the fast workers' delay.
+    let errs = out.trace.errors();
+    assert!(errs.last().unwrap().is_finite());
+    assert!(errs.last().unwrap() < &(errs[0] * 0.2), "{} -> {}", errs[0], errs.last().unwrap());
+    assert!(out.rounds.iter().all(|r| r.virtual_units <= 1));
+}
+
+#[test]
 fn quorum_dead_worker_mid_run_keeps_converging() {
     // Failure injection ON TOP of quorum rounds: worker 1 exceeds
     // `dead_after` strikes mid-run; the round machine shrinks the quorum

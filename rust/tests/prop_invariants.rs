@@ -11,6 +11,74 @@ use gdsec::testing::{check, gen};
 use gdsec::util::rng::Pcg64;
 
 #[test]
+fn prop_staleness_window_is_a_hard_bound() {
+    // For ANY quorum policy, delay plan, and window S, an engine run
+    // driven by the QuorumSim must never fold an update older than S
+    // rounds: every entry of the trace's staleness-age histogram beyond
+    // bin S stays zero, and the bins sum to the stale total. (The
+    // histogram is fed by the same fold loop that stages the updates, so
+    // pinning it pins the folds.)
+    use gdsec::algo::engine::{Engine, EngineOpts};
+    use gdsec::algo::gdsec::GdSecRule;
+    use gdsec::coordinator::round::Quorum;
+    use gdsec::coordinator::scheduler::QuorumSim;
+    use gdsec::coordinator::transport::DelayPlan;
+    use gdsec::objectives::Problem;
+    use gdsec::util::pool::Pool;
+    check("staleness window hard bound", |rng| {
+        let m = 3 + rng.index(4); // 3..=6 workers
+        let prob = Problem::linear(synthetic::dna_like(rng.next_u64(), 40), m, 0.1);
+        let window = 1 + rng.index(3); // S ∈ {1, 2, 3}
+        let quorum = match rng.index(3) {
+            0 => Quorum::Count(1 + rng.index(m)),
+            1 => Quorum::Fraction(0.2 + rng.uniform() * 0.7),
+            _ => Quorum::Adaptive {
+                target_quantile: 0.3 + rng.uniform() * 0.6,
+                min_frac: 0.2 + rng.uniform() * 0.3,
+            },
+        };
+        let plan = match rng.index(3) {
+            0 => DelayPlan::PerWorker((0..m).map(|_| rng.below(500)).collect()),
+            1 => DelayPlan::Jitter { seed: rng.next_u64(), lo: 0, hi: 1 + rng.below(300) },
+            _ => DelayPlan::None,
+        };
+        let cfg = GdSecConfig {
+            alpha: 1.0 / prob.lipschitz(),
+            beta: 0.05,
+            xi: Xi::Uniform(rng.uniform() * 50.0),
+            fstar: Some(0.0),
+            ..Default::default()
+        };
+        let pool = Pool::new(1);
+        let opts = EngineOpts { stale_window: window, ..EngineOpts::default() };
+        let mut sim = QuorumSim::new(m, quorum, plan, window);
+        let mut eng = Engine::new(&prob, GdSecRule::new(cfg), &pool, &opts, 0.0);
+        for k in 1..=25 {
+            let (late, _units) = sim.round(k, None);
+            for &(_, age) in late {
+                if age < 1 || age as usize > window {
+                    return Err(format!("sim produced age {age} outside [1, {window}]"));
+                }
+            }
+            eng.step_quorum_aged(None, Some(late));
+        }
+        eng.record();
+        let run = eng.into_run();
+        let last = run.trace.rows.last().unwrap();
+        if last.stale_ages.iter().skip(window).any(|&c| c > 0) {
+            return Err(format!(
+                "fold with age > S={window}: histogram {:?} (quorum {quorum:?})",
+                last.stale_ages
+            ));
+        }
+        if last.stale_ages.iter().sum::<u64>() != last.stale {
+            return Err("age histogram does not sum to the stale total".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn prop_rle_gap_roundtrip_arbitrary_index_sets() {
     check("rle roundtrip", |rng| {
         let n = 1 + rng.index(500);

@@ -359,6 +359,93 @@ fn prop_engine_quorum_stale_fold_parity() {
 }
 
 #[test]
+fn prop_engine_quorum_window_adaptive_parity() {
+    // The tentpole contract: a multi-round staleness window (S > 1, aged
+    // parks through `step_quorum_aged`) driven by the delay-adaptive
+    // quorum controller (`QuorumSim` mirrors the coordinator's
+    // decide-K → cut → observe loop) must still produce bit-identical
+    // trajectories and server state at 1 vs 4 threads — the cut, ages,
+    // and EMA state depend only on the deterministic DelayPlan, never on
+    // the pool.
+    use gdsec::coordinator::round::Quorum;
+    use gdsec::coordinator::scheduler::QuorumSim;
+    use gdsec::coordinator::transport::DelayPlan;
+    check_with(
+        PropConfig { cases: 6, seed: 0xADA97 },
+        "engine aged-quorum + adaptive scheduler 1 vs 4 threads bit parity",
+        |rng| {
+            let prob = random_problem(rng);
+            let m = prob.m();
+            let window = 2 + rng.index(2); // S ∈ {2, 3}
+            let cfg = GdSecConfig {
+                alpha: 1.0 / prob.lipschitz(),
+                beta: rng.uniform() * 0.3,
+                xi: Xi::Uniform(rng.uniform() * 80.0),
+                fstar: Some(0.0),
+                ..Default::default()
+            };
+            // One hard straggler whose identity flips mid-run, fast
+            // cluster jittered by worker id — forces real cuts, aged
+            // parks, and an EMA that actually moves.
+            let mut early: Vec<u64> = (0..m).map(|w| 2 + w as u64).collect();
+            let mut late_phase = early.clone();
+            early[m - 1] = 400;
+            late_phase[0] = 400;
+            let plan = DelayPlan::Phased(vec![(1, early), (ITERS / 2, late_phase)]);
+            let quorum = Quorum::Adaptive {
+                target_quantile: 0.4 + rng.uniform() * 0.3,
+                min_frac: 0.3,
+            };
+            let budget = 48 + rng.index(80); // force multi-block nested lanes
+            let run = |threads: usize| {
+                let pool = Pool::new(threads);
+                let opts = EngineOpts {
+                    nnz_budget: budget,
+                    stale_window: window,
+                    ..EngineOpts::default()
+                };
+                let mut sim = QuorumSim::new(m, quorum, plan.clone(), window);
+                let mut eng =
+                    engine::Engine::new(&prob, GdSecRule::new(cfg.clone()), &pool, &opts, 0.0);
+                eng.record();
+                for k in 1..=ITERS {
+                    let (late, _units) = sim.round(k, None);
+                    eng.step_quorum_aged(None, Some(late));
+                    eng.record();
+                }
+                eng.into_run()
+            };
+            let s = run(1);
+            let p = run(4);
+            assert_traces_bit_equal("engine-aged-quorum", &s.trace, &p.trace)?;
+            if s.trace.total_stale() == 0 {
+                return Err("aged-quorum run never folded a stale update".into());
+            }
+            let (sl, pl) = (s.trace.rows.last().unwrap(), p.trace.rows.last().unwrap());
+            if sl.stale_ages != pl.stale_ages {
+                return Err("stale-age histograms diverged across thread counts".into());
+            }
+            // The hard bound: no fold older than the window, and the
+            // multi-round path was actually exercised.
+            if sl.stale_ages.iter().skip(window).any(|&c| c > 0) {
+                return Err(format!("fold beyond the S={window} window: {:?}", sl.stale_ages));
+            }
+            if sl.stale_ages.iter().skip(1).take(window - 1).sum::<u64>() == 0 {
+                return Err("no multi-round (age > 1) fold ever happened".into());
+            }
+            for i in 0..prob.d {
+                if s.server.theta[i].to_bits() != p.server.theta[i].to_bits()
+                    || s.server.h[i].to_bits() != p.server.h[i].to_bits()
+                {
+                    return Err(format!("server state diverged at {i}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
 fn prop_gdsec_nested_schedule_parity_and_states() {
     // Nested lanes + partial participation through the public
     // run_states_opts surface: server AND worker states bit-equal.
