@@ -210,6 +210,16 @@ pub trait CompressRule: Sync {
         lane: &mut Self::Lane,
         age: u32,
     );
+
+    /// Reset worker `w`'s server-side slot for a crash → restart
+    /// re-admission ([`Engine::rejoin_worker`]): the restarted worker
+    /// comes back with zeroed local memories (h_m, e_m), so any
+    /// server-side mirror of its state must be retired — otherwise the
+    /// server keeps stepping with an h share the worker will never
+    /// again account for and the EC identity is permanently broken.
+    /// GD-SEC-family rules subtract the lane's h_m from the server's h
+    /// and zero the lane; stateless rules need nothing.
+    fn rejoin_worker(&mut self, _server: &mut ServerState, _w: usize, _lane: &mut Self::Lane) {}
 }
 
 /// Staging buffer behind the dense rules' [`CompressRule::fold_stale`]:
@@ -427,7 +437,23 @@ impl<'p, R: CompressRule> Engine<'p, R> {
             entries: self.acct.entries,
             stale: self.acct.stale,
             stale_ages: self.acct.stale_ages,
+            ..TraceRow::default()
         });
+    }
+
+    /// Re-admit worker `w` after a crash → restart: drop any in-flight
+    /// parked transmission (the pre-crash computation never folds) and
+    /// let the rule retire the worker's server-side state mirror
+    /// ([`CompressRule::rejoin_worker`]). The distributed coordinator
+    /// calls the same rule hook through its re-admission handshake; this
+    /// engine-side entry point exists for in-process simulation and for
+    /// unit-testing the hook's EC identity.
+    pub fn rejoin_worker(&mut self, w: usize) {
+        self.parked_due[w] = 0;
+        self.parked_round[w] = 0;
+        let lane = &mut self.lanes[w];
+        lane.sent = None;
+        self.rule.rejoin_worker(&mut self.server, w, &mut lane.lane);
     }
 
     /// The pre-loop memory-seeding round (rules with

@@ -129,6 +129,14 @@ impl WorkerState {
         &mut self.grad
     }
 
+    /// Zero the state-variable and error memories — a crashed worker
+    /// restarts cold. Keeps allocations (re-admission is not a
+    /// steady-state path, but there is no reason to churn the heap).
+    pub fn reset(&mut self) {
+        linalg::zero(&mut self.h);
+        linalg::zero(&mut self.e);
+    }
+
     /// After-the-fact correction when the transmitted values change again
     /// post-sparsification (QSGD-SEC quantizes the survivors): rewrites h
     /// and e as if `wire` (the dequantized message) had been transmitted
@@ -412,6 +420,22 @@ impl CompressRule for GdSecRule {
         // holds at any fold age — no aging factor needed.
         server.fold_update(&lane.up);
     }
+
+    fn rejoin_worker(&mut self, server: &mut ServerState, _w: usize, lane: &mut WorkerLane) {
+        // The restarted worker comes back with h_m = e_m = 0, so the
+        // server must retire this worker's share of its mirrored h:
+        // h = Σ_m h_m, and the lane still holds the pre-crash h_m
+        // exactly, so subtracting it componentwise is the exact
+        // retirement (bitwise: h_after = h_before − h_m per component).
+        if self.cfg.state_variable {
+            for (hi, wi) in server.h.iter_mut().zip(lane.ws.h.iter()) {
+                *hi -= *wi;
+            }
+        }
+        lane.ws.reset();
+        lane.up.idx.clear();
+        lane.up.val.clear();
+    }
 }
 
 /// Full output of a GD-SEC run — final server and worker states alongside
@@ -543,6 +567,50 @@ mod tests {
 
     fn small_problem() -> Problem {
         Problem::logistic(synthetic::dna_like(3, 60), 3, 0.05)
+    }
+
+    #[test]
+    fn engine_rejoin_retires_h_share_bitwise() {
+        // Re-admission EC identity: after `rejoin_worker(0)` the server's
+        // mirrored h must equal (component-wise, bitwise) its old value
+        // minus worker 0's lane h_m — the exact retirement of the share
+        // the restarted worker will never again account for — and worker
+        // 0 restarts with zeroed memories while every other lane is
+        // untouched. Pinned by running the same deterministic engine
+        // twice, with and without the rejoin.
+        let prob = small_problem();
+        let alpha = 1.0 / prob.lipschitz();
+        let cfg = GdSecConfig { alpha, ..Default::default() };
+        let pool = Pool::new(2);
+        let opts = EngineOpts::default();
+        let run_to = |rejoin: bool| {
+            let mut eng =
+                engine::Engine::new(&prob, GdSecRule::new(cfg.clone()), &pool, &opts, 0.0);
+            for _ in 0..5 {
+                eng.step(None);
+            }
+            if rejoin {
+                eng.rejoin_worker(0);
+            }
+            eng.into_run()
+        };
+        let before = run_to(false);
+        let after = run_to(true);
+        let h0 = &before.lanes[0].ws.h;
+        assert!(h0.iter().any(|&v| v != 0.0), "worker 0 accrued no h — vacuous test");
+        for i in 0..prob.d {
+            assert_eq!(
+                after.server.h[i].to_bits(),
+                (before.server.h[i] - h0[i]).to_bits(),
+                "server h share not retired exactly at coord {i}"
+            );
+        }
+        assert!(after.lanes[0].ws.h.iter().all(|&v| v == 0.0));
+        assert!(after.lanes[0].ws.e.iter().all(|&v| v == 0.0));
+        assert_eq!(after.lanes[0].up.nnz(), 0);
+        for i in 0..prob.d {
+            assert_eq!(after.lanes[1].ws.h[i].to_bits(), before.lanes[1].ws.h[i].to_bits());
+        }
     }
 
     #[test]

@@ -275,6 +275,22 @@ impl CompressRule for SgdSecRule {
         let quantizing = self.cfg.quantize_s.is_some();
         server.fold_update(if quantizing { &lane.wire } else { &lane.up });
     }
+
+    fn rejoin_worker(&mut self, server: &mut ServerState, _w: usize, lane: &mut SgdSecLane) {
+        // Same EC-safe re-admission as GD-SEC: retire the restarted
+        // worker's h share from the server mirror (the lane still holds
+        // the pre-crash h_m exactly) and restart its memories cold.
+        if self.step_cfg.state_variable {
+            for (hi, wi) in server.h.iter_mut().zip(lane.ws.h.iter()) {
+                *hi -= *wi;
+            }
+        }
+        lane.ws.reset();
+        lane.up.idx.clear();
+        lane.up.val.clear();
+        lane.wire.idx.clear();
+        lane.wire.val.clear();
+    }
 }
 
 /// SGD-SEC / QSGD-SEC.

@@ -17,7 +17,7 @@ pub fn stale_age_bin(age: u32) -> usize {
 }
 
 /// One recorded iteration.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone, Copy, Default)]
 pub struct TraceRow {
     pub iter: usize,
     /// Objective value f(θ^k).
@@ -36,6 +36,17 @@ pub struct TraceRow {
     /// transmission. Sums to `stale`; ages are hard-bounded by the
     /// staleness window, so bins past `GDSEC_STALE_WINDOW` stay 0.
     pub stale_ages: [u64; STALE_AGE_BINS],
+    /// Workers dead (struck out or disconnected) as of this iteration.
+    /// A level, not a cumulative count: a re-admitted worker leaves it.
+    pub dead: u64,
+    /// Cumulative re-admissions (crash → restart handshakes) completed.
+    pub rejoined: u64,
+    /// Cumulative uplink frames the fault-injected link dropped.
+    pub dropped_frames: u64,
+    /// Cumulative uplink frames that failed to decode (corrupted on the
+    /// link or genuinely malformed) — each one costs its worker a
+    /// liveness strike.
+    pub corrupt_frames: u64,
 }
 
 /// A full run trace for one algorithm on one problem.
@@ -90,8 +101,9 @@ impl Trace {
     }
 
     /// Write CSV: iter, err, fval, bits, transmissions, entries, stale,
-    /// plus the staleness-age histogram columns (`stale_age1..3`,
-    /// `stale_age4p` = ages ≥ 4).
+    /// the staleness-age histogram columns (`stale_age1..3`,
+    /// `stale_age4p` = ages ≥ 4), and the fault columns (`dead`,
+    /// `rejoined`, `dropped`, `corrupt`).
     pub fn write_csv<P: AsRef<Path>>(&self, path: P) -> std::io::Result<()> {
         let mut w = CsvWriter::create(
             path,
@@ -107,6 +119,10 @@ impl Trace {
                 "stale_age2",
                 "stale_age3",
                 "stale_age4p",
+                "dead",
+                "rejoined",
+                "dropped",
+                "corrupt",
             ],
         )?;
         for r in &self.rows {
@@ -122,6 +138,10 @@ impl Trace {
                 r.stale_ages[1] as f64,
                 r.stale_ages[2] as f64,
                 r.stale_ages[3] as f64,
+                r.dead as f64,
+                r.rejoined as f64,
+                r.dropped_frames as f64,
+                r.corrupt_frames as f64,
             ])?;
         }
         w.flush()
@@ -149,9 +169,7 @@ mod tests {
                 fval,
                 bits,
                 transmissions: iter as u64,
-                entries: 0,
-                stale: 0,
-                stale_ages: [0; STALE_AGE_BINS],
+                ..TraceRow::default()
             });
         }
         t

@@ -24,9 +24,19 @@
 //! * straggler ordering is **virtual**: a seeded
 //!   [`transport::DelayPlan`] ranks replies deterministically, so quorum
 //!   trajectories are reproducible in CI (no wall-clock races);
-//! * crashes are handled by a receive timeout: a worker that misses a
-//!   deadline is treated as silent and marked dead after `dead_after`
-//!   consecutive timeouts (failure injection in tests);
+//! * faults are first-class: a seeded [`transport::FaultPlan`]
+//!   (`GDSEC_FAULTS`) drops or corrupts uplink frames and
+//!   crashes/restarts workers deterministically. The server tracks a
+//!   per-worker liveness state machine (Active → Suspect → Dead, with
+//!   exponential-backoff probe rounds between strikes) and
+//!   re-admits a restarted worker through an explicit `Join` handshake:
+//!   the worker's parked stale updates are evicted, its share of the
+//!   server's error-correction state variable h is retired, and its
+//!   first post-rejoin reply is a fresh full update from zeroed local
+//!   state — so a rejoin is a clean enrollment, not a replay of
+//!   pre-crash memory. While workers are dead, [`DegradePolicy`] decides
+//!   whether aggregation renormalizes to the survivors or freezes the
+//!   lost contributions in place;
 //! * aggregation is performed in worker-id order (stale folds first, in
 //!   (round, worker) order) so the synchronous trajectory
 //!   (`quorum = All`) is bit-for-bit equal to the single-threaded
@@ -45,19 +55,63 @@ use crate::compress::SparseUpdate;
 use crate::linalg;
 use crate::util::pool::Pool;
 use protocol::Msg;
-use round::{delivery_age, Admit, Quorum, RoundState, StaleUpdate};
+use round::{delivery_age, evict_worker, Admit, Quorum, RoundState, StaleUpdate};
 use scheduler::{QuorumController, Scheduler};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
-use transport::{duplex, DelayPlan, Recv, ServerEnd};
-use worker::{FailurePlan, ProviderFactory};
+use transport::{duplex, DelayPlan, FaultPlan, Recv, ServerEnd};
+use worker::ProviderFactory;
+
+/// What the server does with a dead worker's standing contribution while
+/// it is down (graceful degradation policy, `GDSEC_DEGRADE`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum DegradePolicy {
+    /// Keep the dead worker's share of the state variable h in place and
+    /// fold its already-parked stale updates as they come due: the
+    /// server keeps descending along the last gradient memory the worker
+    /// left behind. Cheapest, bitwise-neutral for live workers, and the
+    /// pre-fault-tolerance behavior — the default.
+    #[default]
+    Freeze,
+    /// Evict the dead worker's parked updates, withdraw its share of h,
+    /// and rescale each round's aggregate by M/live so the step stays an
+    /// (approximately) unbiased mean over the survivors. Changes the
+    /// trajectory the moment a worker dies, so tests that pin bitwise
+    /// parity must pin `Freeze`.
+    Renormalize,
+}
+
+impl DegradePolicy {
+    /// Honor the `GDSEC_DEGRADE` env override (`freeze` | `renorm`).
+    pub fn from_env() -> DegradePolicy {
+        match std::env::var("GDSEC_DEGRADE").ok().as_deref() {
+            None | Some("") | Some("freeze") => DegradePolicy::Freeze,
+            Some("renorm") | Some("renormalize") => DegradePolicy::Renormalize,
+            Some(other) => panic!("GDSEC_DEGRADE must be `freeze` or `renorm`, got {other:?}"),
+        }
+    }
+}
+
+/// The `GDSEC_RECV_TIMEOUT_MS` override for the per-round receive
+/// deadline (30 s when unset).
+fn recv_timeout_from_env() -> Duration {
+    match std::env::var("GDSEC_RECV_TIMEOUT_MS") {
+        Ok(s) => Duration::from_millis(
+            s.parse().unwrap_or_else(|e| panic!("GDSEC_RECV_TIMEOUT_MS must be integer ms: {e}")),
+        ),
+        Err(_) => Duration::from_secs(30),
+    }
+}
 
 /// Coordinator configuration.
 pub struct CoordConfig {
     pub gdsec: GdSecConfig,
     pub iters: usize,
     pub scheduler: Scheduler,
-    /// Per-round worker receive deadline.
+    /// Per-round worker receive deadline. Default honors the
+    /// `GDSEC_RECV_TIMEOUT_MS` env override (30 s otherwise) — the CI
+    /// fault matrix shortens it so a scripted crash costs one brief
+    /// timeout instead of a 30-second stall.
     pub recv_timeout: Duration,
     /// Consecutive timeouts before a worker is declared dead.
     pub dead_after: u32,
@@ -101,6 +155,15 @@ pub struct CoordConfig {
     /// within S instead of discarding them. Default honors
     /// `GDSEC_STALE_WINDOW`.
     pub stale_window: usize,
+    /// Deterministic fault injection: seeded link-level frame
+    /// drops/corruptions plus scripted worker crash/restart rounds.
+    /// Default honors the `GDSEC_FAULTS` env override (see
+    /// [`FaultPlan::parse`] for the spec grammar); tests that pin exact
+    /// trajectories pin `FaultPlan::default()`.
+    pub faults: FaultPlan,
+    /// Graceful-degradation policy while workers are dead. Default
+    /// honors `GDSEC_DEGRADE`.
+    pub degrade: DegradePolicy,
 }
 
 impl CoordConfig {
@@ -109,7 +172,7 @@ impl CoordConfig {
             gdsec,
             iters,
             scheduler: Scheduler::All,
-            recv_timeout: Duration::from_secs(30),
+            recv_timeout: recv_timeout_from_env(),
             dead_after: 1,
             evaluator: None,
             problem_name: String::new(),
@@ -120,6 +183,8 @@ impl CoordConfig {
             quorum: Quorum::from_env(),
             delay: DelayPlan::default(),
             stale_window: crate::algo::engine::stale_window_from_env(),
+            faults: FaultPlan::from_env(),
+            degrade: DegradePolicy::from_env(),
         }
     }
 }
@@ -154,17 +219,182 @@ pub struct RoundMetrics {
     /// over rounds is the quantity a straggler inflates in synchronous
     /// mode and a quorum cut bounds.
     pub virtual_units: u64,
+    /// Workers dead at the end of this round's gather (a level, not a
+    /// per-round count — a re-admitted worker leaves it).
+    pub dead: u64,
+    /// Crash → restart re-admission handshakes completed this round.
+    pub rejoined: u64,
+    /// Uplink frames the fault-injected link dropped this round (full
+    /// frame bits charged as overhead; the sender still paid them).
+    pub dropped_frames: u64,
+    /// Uplink frames that failed to decode this round (link corruption
+    /// or genuinely malformed bytes) — each costs its worker a liveness
+    /// strike, exactly like a timeout.
+    pub corrupt_frames: u64,
 }
 
 /// Result of a coordinated run.
 pub struct CoordOutcome {
     pub trace: Trace,
     pub rounds: Vec<RoundMetrics>,
-    /// Worker ids declared dead during the run.
+    /// Worker ids still dead when the run ended (a worker that died and
+    /// was later re-admitted is not listed).
     pub dead_workers: Vec<usize>,
     /// Total uplink frame bytes (headers + payloads + silence frames).
     pub uplink_frame_bytes: u64,
     pub downlink_frame_bytes: u64,
+}
+
+/// Server-side per-worker liveness. `Suspect` carries an
+/// exponential-backoff probe schedule: between probes the server does
+/// not wait on the worker (its frames queue on the link), bounding the
+/// per-round timeout cost a flapping worker can inflict.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Life {
+    Active,
+    /// Struck at least once; waited on again at round `next_probe`.
+    Suspect { strikes: u32, backoff: usize, next_probe: usize },
+    /// `Join` accepted; flips to Active once the next broadcast (its
+    /// fresh enrollment snapshot) is delivered.
+    Rejoining,
+    Dead,
+}
+
+impl Life {
+    /// Is this worker waited on in round `k`'s gather?
+    fn waited(&self, k: usize) -> bool {
+        match self {
+            Life::Active | Life::Rejoining => true,
+            Life::Suspect { next_probe, .. } => k >= *next_probe,
+            Life::Dead => false,
+        }
+    }
+
+    fn is_dead(&self) -> bool {
+        matches!(self, Life::Dead)
+    }
+}
+
+/// One liveness strike (timeout, dropped frame, or undecodable frame)
+/// against `life` during round `k`. Returns true when the worker just
+/// died. With `dead_after ≤ 2` the probe schedule degenerates to
+/// consecutive rounds, matching the pre-lifecycle strike counter.
+fn strike(life: &mut Life, k: usize, dead_after: u32) -> bool {
+    match *life {
+        Life::Active | Life::Rejoining => {
+            if dead_after <= 1 {
+                *life = Life::Dead;
+                true
+            } else {
+                *life = Life::Suspect { strikes: 1, backoff: 1, next_probe: k + 1 };
+                false
+            }
+        }
+        Life::Suspect { strikes, backoff, .. } => {
+            if strikes + 1 >= dead_after {
+                *life = Life::Dead;
+                true
+            } else {
+                let backoff = (backoff * 2).min(8);
+                *life = Life::Suspect { strikes: strikes + 1, backoff, next_probe: k + backoff };
+                false
+            }
+        }
+        Life::Dead => false,
+    }
+}
+
+/// Subtract worker `w`'s booked share out of the server's state variable
+/// h and zero the share. Per-component subtraction of exactly what was
+/// added, so retirement is bitwise-exact for the retired worker while
+/// every other share stays untouched.
+fn withdraw_share(w: usize, h: &mut [f64], h_shares: &mut [Vec<f64>]) {
+    if let Some(share) = h_shares.get_mut(w) {
+        for (hv, sv) in h.iter_mut().zip(share.iter_mut()) {
+            *hv -= *sv;
+            *sv = 0.0;
+        }
+    }
+}
+
+/// Remove a just-died worker's standing contribution under
+/// [`DegradePolicy::Renormalize`]: evict its parked stale updates and
+/// withdraw its h-share. Under `Freeze` this is a no-op — the dead
+/// worker's parked updates still fold when due and its h-share keeps
+/// steering the descent (the pre-fault-tolerance behavior).
+fn retire(
+    w: usize,
+    degrade: DegradePolicy,
+    state_variable: bool,
+    stale: &mut Vec<StaleUpdate>,
+    h: &mut [f64],
+    h_shares: &mut [Vec<f64>],
+) {
+    if degrade != DegradePolicy::Renormalize {
+        return;
+    }
+    evict_worker(stale, w);
+    if state_variable {
+        withdraw_share(w, h, h_shares);
+    }
+}
+
+/// EC-safe re-admission on a `Join` frame: drop every parked update the
+/// worker left behind, withdraw its h-share (the worker restarts with
+/// h_m = e_m = 0, so the server must forget the matching memory — under
+/// either degrade policy), and mark it [`Life::Rejoining`] so the next
+/// delivered broadcast becomes its fresh enrollment snapshot. The caller
+/// counts the rejoin.
+fn readmit(
+    w: usize,
+    life: &mut [Life],
+    state_variable: bool,
+    stale: &mut Vec<StaleUpdate>,
+    h: &mut [f64],
+    h_shares: &mut [Vec<f64>],
+) {
+    life[w] = Life::Rejoining;
+    evict_worker(stale, w);
+    if state_variable {
+        withdraw_share(w, h, h_shares);
+    }
+}
+
+/// Book β·(scaled) update into one worker's h-share ledger.
+fn book_one(share: &mut [f64], bs: f64, u: &SparseUpdate) {
+    for (&ix, &v) in u.idx.iter().zip(u.val.iter()) {
+        share[ix as usize] += bs * v as f64;
+    }
+}
+
+/// Book this round's folded contributions into the per-worker h-share
+/// ledgers, mirroring `h += β·agg` attribution-by-worker (the ledger
+/// tracks sums per worker; it need not be bitwise equal to h, only an
+/// exact record of what [`withdraw_share`] must subtract).
+fn book_shares(
+    h_shares: &mut [Vec<f64>],
+    bs: f64,
+    due: &[StaleUpdate],
+    updates: &[Option<SparseUpdate>],
+) {
+    for s in due {
+        book_one(&mut h_shares[s.worker], bs, &s.update);
+    }
+    for (w, u) in updates.iter().enumerate() {
+        if let Some(u) = u {
+            book_one(&mut h_shares[w], bs, u);
+        }
+    }
+}
+
+/// The round id at bytes 2..6 of a frame header (0 for runts) — the
+/// fault plan keys drop/corrupt draws on the round the reply answers, so
+/// injection stays deterministic under retries and backlogs.
+fn frame_round(frame: &[u8]) -> u32 {
+    match frame {
+        [_, _, a, b, c, d, ..] => u32::from_le_bytes([*a, *b, *c, *d]),
+        _ => 0,
+    }
 }
 
 /// The leader. Owns the server side of every link.
@@ -179,24 +409,22 @@ impl Coordinator {
     /// Spawn one worker thread per provider factory. Factories run on
     /// their worker's thread so non-`Send` PJRT state never migrates.
     /// `dim` is the model dimension (known from the problem or manifest).
-    pub fn spawn(
-        cfg: CoordConfig,
-        dim: usize,
-        factories: Vec<ProviderFactory>,
-        failures: Vec<FailurePlan>,
-    ) -> Coordinator {
+    /// Each worker gets its scripted crash/restart schedule from
+    /// [`CoordConfig::faults`]; the link-level drop/corrupt draws stay
+    /// server-side.
+    pub fn spawn(cfg: CoordConfig, dim: usize, factories: Vec<ProviderFactory>) -> Coordinator {
         assert!(!factories.is_empty());
-        assert_eq!(factories.len(), failures.len());
         let m = factories.len();
         let mut ends = Vec::with_capacity(m);
         let mut handles = Vec::with_capacity(m);
-        for (w, (factory, failure)) in factories.into_iter().zip(failures).enumerate() {
+        for (w, factory) in factories.into_iter().enumerate() {
             let (server_end, worker_end) = duplex();
             let wcfg = cfg.gdsec.clone();
             let wire = cfg.wire;
             let sw = cfg.stale_window;
+            let faults = cfg.faults.faults_for(w);
             handles.push(std::thread::spawn(move || {
-                worker::worker_loop(w as u32, m, wcfg, factory, worker_end, failure, wire, sw)
+                worker::worker_loop(w as u32, m, wcfg, factory, worker_end, faults, wire, sw)
             }));
             ends.push(server_end);
         }
@@ -211,10 +439,17 @@ impl Coordinator {
         let d = self.d;
         let m = self.ends.len();
         let iters = self.cfg.iters;
+        let sv = self.cfg.gdsec.state_variable;
+        let degrade = self.cfg.degrade;
         let mut trace = Trace::new("GD-SEC(dist)", &self.cfg.problem_name, self.cfg.fstar);
         let mut rounds: Vec<RoundMetrics> = Vec::with_capacity(iters);
-        let mut dead = vec![false; m];
-        let mut timeout_strikes = vec![0u32; m];
+        let mut life = vec![Life::Active; m];
+        // Per-worker attribution ledger for the server's state variable:
+        // h_shares[w] records exactly the β-scaled mass worker w's folded
+        // updates added to h, so death (Renormalize) and re-admission can
+        // withdraw that worker's memory without touching anyone else's.
+        let mut h_shares: Vec<Vec<f64>> =
+            if sv { vec![vec![0.0; d]; m] } else { Vec::new() };
 
         let mut theta = self.cfg.init_theta.take().unwrap_or_else(|| vec![0.0; d]);
         assert_eq!(theta.len(), d, "init_theta dimension mismatch");
@@ -243,6 +478,7 @@ impl Coordinator {
 
         let (mut cum_bits, mut cum_tx, mut cum_entries, mut cum_stale) = (0u64, 0u64, 0u64, 0u64);
         let mut cum_stale_ages = [0u64; STALE_AGE_BINS];
+        let (mut cum_rejoined, mut cum_dropped, mut cum_corrupt) = (0u64, 0u64, 0u64);
         // One extra eval round so the final iterate's objective is recorded
         // (round k's reports evaluate θ^k, the iterate after k−1 updates).
         for k in 1..=iters + 1 {
@@ -250,27 +486,54 @@ impl Coordinator {
             let eval_only = k == iters + 1;
             let active =
                 if eval_only { (0..m).collect::<Vec<_>>() } else { sched.active(k, m) };
-            let full_round = active.len() == m && !dead.iter().any(|&x| x);
-            // Quorum size is relative to the workers actually expected to
-            // report: live AND scheduled this round. Decided from the
-            // PRE-round delay estimates (the controller is fed after the
-            // gather below) — the same decide-K → cut → observe logic as
-            // the engine-side QuorumSim. (The in-flight MODELS differ:
-            // here a cut-late worker keeps computing and replying while
-            // its parked update is in transit — the links pipeline — so
-            // it is observed every round; the sim's workers sit out
-            // their delivery age. Trajectories are not cross-pinned
-            // between the two drivers except at Quorum::All.)
-            let expected_ids: Vec<usize> =
-                active.iter().copied().filter(|&w| !dead[w]).collect();
-            let k_quorum = ctrl.k_for(&expected_ids);
             let mut metrics = RoundMetrics { round: k, ..Default::default() };
 
-            // Broadcast θ^k with per-worker active flags.
-            for (w, end) in self.ends.iter().enumerate() {
-                if dead[w] {
+            // Drain dead workers' links. A dead worker may still be a
+            // live process replying to broadcasts; those frames are
+            // discarded (full frame bits as overhead — the sender paid
+            // them) EXCEPT a `Join`, which re-admits the worker. No
+            // fault injection here: the re-admission control path must
+            // not be flaky, or a lossy link could wedge a restarted
+            // worker out of the fleet forever.
+            for w in 0..m {
+                if life[w] != Life::Dead {
                     continue;
                 }
+                while let Some(Recv::Frame(frame)) = self.ends[w].rx.try_recv() {
+                    metrics.overhead_bits += frame.len() as u64 * 8;
+                    if life[w] == Life::Dead
+                        && matches!(protocol::decode(&frame, d as u32), Ok(Msg::Join { .. }))
+                    {
+                        readmit(w, &mut life, sv, &mut stale, &mut h, &mut h_shares);
+                        metrics.rejoined += 1;
+                    }
+                }
+            }
+
+            let full_round = active.len() == m && life.iter().all(|l| *l == Life::Active);
+            // Quorum size is relative to the workers actually expected to
+            // report: scheduled this round AND waited on by the liveness
+            // machine (Active, Rejoining, or a Suspect whose probe round
+            // has come). Decided from the PRE-round delay estimates (the
+            // controller is fed after the gather below) — the same
+            // decide-K → cut → observe logic as the engine-side
+            // QuorumSim. (The in-flight MODELS differ: here a cut-late
+            // worker keeps computing and replying while its parked
+            // update is in transit — the links pipeline — so it is
+            // observed every round; the sim's workers sit out their
+            // delivery age. Trajectories are not cross-pinned between
+            // the two drivers except at Quorum::All.)
+            let expected_ids: Vec<usize> =
+                active.iter().copied().filter(|&w| life[w].waited(k)).collect();
+            let k_quorum = ctrl.k_for(&expected_ids);
+
+            // Broadcast θ^k with per-worker active flags — to EVERY
+            // worker, dead ones included: a crashed worker's process
+            // drains broadcasts while down, and the first broadcast
+            // delivered after its `Join` is its fresh enrollment
+            // snapshot (it replies with a full update from zeroed local
+            // state).
+            for (w, end) in self.ends.iter().enumerate() {
                 let msg = Msg::Broadcast {
                     round: k as u32,
                     theta: theta.clone(),
@@ -278,36 +541,60 @@ impl Coordinator {
                 };
                 let frame = protocol::encode(&msg, d as u32);
                 metrics.downlink_bits += frame.len() as u64 * 8;
-                if !end.tx.send(frame) {
-                    dead[w] = true;
+                let delivered = end.tx.send(frame);
+                if !delivered && life[w] != Life::Dead {
+                    life[w] = Life::Dead;
+                    retire(w, degrade, sv, &mut stale, &mut h, &mut h_shares);
+                } else if delivered && life[w] == Life::Rejoining {
+                    life[w] = Life::Active;
                 }
             }
 
             // Event-driven gather: admit frames in arrival order until
-            // every live active worker resolves (fresh reply, timeout, or
-            // death). Round-id routing sends an older round's update to
-            // the stale pool instead of misreading it as this round's
+            // every waited-on worker resolves (fresh reply, strike-out,
+            // or death). Round-id routing sends an older round's update
+            // to the stale pool instead of misreading it as this round's
             // reply — and keeps waiting for that worker's fresh frame
-            // within the same deadline.
+            // within the same deadline. Fault injection happens here, at
+            // the receive edge: a dropped frame is charged and never
+            // seen (a strike, like a timeout); a corrupted frame is
+            // decoded from flipped bytes and strikes when it fails.
             let mut rs = RoundState::new(k as u32, m, window as u32);
             let mut arrived_stale_entries = 0u64;
-            for &w in &active {
-                if dead[w] {
-                    continue;
+            for &w in &expected_ids {
+                if life[w].is_dead() {
+                    continue; // died during this round's broadcast
                 }
                 let deadline = Instant::now() + self.cfg.recv_timeout;
                 loop {
                     let remaining = deadline.saturating_duration_since(Instant::now());
                     match self.ends[w].rx.recv_timeout(remaining) {
-                        Recv::Frame(frame) => {
-                            metrics.overhead_bits += protocol::HEADER_LEN as u64 * 8;
+                        Recv::Frame(mut frame) => {
+                            let frame_bits = frame.len() as u64 * 8;
+                            let fround = frame_round(&frame);
+                            if self.cfg.faults.drops(w, fround) {
+                                metrics.dropped_frames += 1;
+                                metrics.overhead_bits += frame_bits;
+                                if strike(&mut life[w], k, self.cfg.dead_after) {
+                                    retire(w, degrade, sv, &mut stale, &mut h, &mut h_shares);
+                                }
+                                break;
+                            }
+                            if self.cfg.faults.corrupts(w, fround) {
+                                frame[0] ^= 0xFF;
+                            }
                             match protocol::decode(&frame, d as u32) {
                                 Ok(msg @ (Msg::Update { .. } | Msg::Silence { .. })) => {
                                     // Codec-exact for either wire format
                                     // (the adaptive tag byte is real
                                     // payload; silence payloads cost 0).
-                                    metrics.payload_bits += protocol::update_payload_bits(&frame);
-                                    metrics.overhead_bits += 64; // reported loss
+                                    // Everything that is not payload —
+                                    // header + reported loss — is
+                                    // overhead, so payload + overhead
+                                    // equals the frame exactly.
+                                    let payload = protocol::update_payload_bits(&frame);
+                                    metrics.payload_bits += payload;
+                                    metrics.overhead_bits += frame_bits - payload;
                                     if matches!(msg, Msg::Update { .. }) {
                                         metrics.transmissions += 1;
                                     }
@@ -318,14 +605,14 @@ impl Coordinator {
                                     };
                                     match rs.admit(w, msg) {
                                         Admit::Fresh => {
-                                            // Only a FRESH reply clears the
-                                            // strike count: a worker
+                                            // Only a FRESH reply restores
+                                            // full liveness: a worker
                                             // forever delivering last
                                             // round's update one round
                                             // late must still accrue
                                             // strikes, or `dead_after` is
                                             // defeated.
-                                            timeout_strikes[w] = 0;
+                                            life[w] = Life::Active;
                                             break;
                                         }
                                         Admit::Stale(su) => {
@@ -346,18 +633,50 @@ impl Coordinator {
                                         Admit::Ignored => break,
                                     }
                                 }
-                                _ => break, // malformed/unexpected: treat as silent
+                                Ok(Msg::Join { .. }) => {
+                                    // A crash + restart that fit inside
+                                    // the strike window: the server never
+                                    // declared the worker dead, but the
+                                    // worker's state is gone. Re-admit
+                                    // from any state; no strike — a Join
+                                    // proves liveness.
+                                    metrics.overhead_bits += frame_bits;
+                                    readmit(w, &mut life, sv, &mut stale, &mut h, &mut h_shares);
+                                    metrics.rejoined += 1;
+                                    break;
+                                }
+                                Ok(_) => {
+                                    // Protocol-valid but senseless here
+                                    // (e.g. an echoed broadcast): treat
+                                    // as silent, no strike.
+                                    metrics.overhead_bits += frame_bits;
+                                    break;
+                                }
+                                Err(_) => {
+                                    // Corrupted on the link or genuinely
+                                    // malformed: the bytes were paid for
+                                    // but carry nothing, and the worker
+                                    // is charged a strike — an endless
+                                    // babbler must strike out just like
+                                    // an endless timeout.
+                                    metrics.corrupt_frames += 1;
+                                    metrics.overhead_bits += frame_bits;
+                                    if strike(&mut life[w], k, self.cfg.dead_after) {
+                                        retire(w, degrade, sv, &mut stale, &mut h, &mut h_shares);
+                                    }
+                                    break;
+                                }
                             }
                         }
                         Recv::Timeout => {
-                            timeout_strikes[w] += 1;
-                            if timeout_strikes[w] >= self.cfg.dead_after {
-                                dead[w] = true;
+                            if strike(&mut life[w], k, self.cfg.dead_after) {
+                                retire(w, degrade, sv, &mut stale, &mut h, &mut h_shares);
                             }
                             break;
                         }
                         Recv::Disconnected => {
-                            dead[w] = true;
+                            life[w] = Life::Dead;
+                            retire(w, degrade, sv, &mut stale, &mut h, &mut h_shares);
                             break;
                         }
                     }
@@ -371,6 +690,7 @@ impl Coordinator {
                     ctrl.observe(w, self.cfg.delay.delay(w, k));
                 }
             }
+            metrics.dead = life.iter().filter(|l| l.is_dead()).count() as u64;
 
             // Record the objective of θ^k (the pre-update iterate), paired
             // with the bits accumulated through round k−1 — exactly the
@@ -390,6 +710,10 @@ impl Coordinator {
                 entries: cum_entries,
                 stale: cum_stale,
                 stale_ages: cum_stale_ages,
+                dead: metrics.dead,
+                rejoined: cum_rejoined,
+                dropped_frames: cum_dropped,
+                corrupt_frames: cum_corrupt,
             });
 
             if eval_only {
@@ -407,6 +731,9 @@ impl Coordinator {
             cum_entries += arrived_stale_entries;
             cum_bits += metrics.payload_bits;
             cum_tx += metrics.transmissions;
+            cum_rejoined += metrics.rejoined;
+            cum_dropped += metrics.dropped_frames;
+            cum_corrupt += metrics.corrupt_frames;
 
             // Cut the round at the quorum (virtual arrival order — seeded
             // delays, then worker id — so the trajectory is deterministic
@@ -442,6 +769,16 @@ impl Coordinator {
                 metrics.stale_age_hist[stale_age_bin(s.age)] += 1;
                 cum_stale_ages[stale_age_bin(s.age)] += 1;
             }
+            // Graceful degradation: under Renormalize the fold rescales
+            // by M/live so the step approximates the survivors' mean;
+            // under Freeze the scale is exactly 1.0 and the arithmetic
+            // below is bit-identical to the fault-free path.
+            let live = life.iter().filter(|l| !l.is_dead()).count();
+            let fold_scale = if degrade == DegradePolicy::Renormalize {
+                m as f64 / live.max(1) as f64
+            } else {
+                1.0
+            };
             apply_round_blocked(
                 &mut theta,
                 &mut h,
@@ -449,8 +786,12 @@ impl Coordinator {
                 &due,
                 rs.updates(),
                 &self.cfg.gdsec,
+                fold_scale,
                 &self.cfg.pool,
             );
+            if sv {
+                book_shares(&mut h_shares, self.cfg.gdsec.beta * fold_scale, &due, rs.updates());
+            }
             cum_stale += due.len() as u64;
             stale = pending;
             stale.append(&mut parked);
@@ -474,10 +815,10 @@ impl Coordinator {
         CoordOutcome {
             trace,
             rounds,
-            dead_workers: dead
+            dead_workers: life
                 .iter()
                 .enumerate()
-                .filter_map(|(w, &dd)| dd.then_some(w))
+                .filter_map(|(w, l)| l.is_dead().then_some(w))
                 .collect(),
             uplink_frame_bytes: uplink_bytes,
             downlink_frame_bytes: downlink_bytes,
@@ -490,13 +831,16 @@ impl Coordinator {
 /// column blocks of (θ, h, agg). Each block zeroes its agg slice, folds
 /// the stale pool's in-range entries in (round, worker) order, then the
 /// fresh updates' in worker-id order
-/// ([`SparseUpdate::add_range_into`]), and steps its θ/h slice, keeping
-/// the working set cache-resident at RCV1 scale. Blocks are cut by the
-/// canonical [`Pool::block_width`] (the same contract as
-/// [`Pool::scatter_blocks`]; three zipped slices keep the hand-rolled
-/// scatter here). Per element the operation sequence is identical to the
-/// serial loop, so the trajectory is bit-for-bit
-/// thread-count-independent.
+/// ([`SparseUpdate::add_range_into`]), rescales the aggregate by
+/// `fold_scale` (1.0 except under [`DegradePolicy::Renormalize`] with
+/// dead workers — the `!= 1.0` guard keeps the fault-free path bitwise
+/// untouched), and steps its θ/h slice, keeping the working set
+/// cache-resident at RCV1 scale. Blocks are cut by the canonical
+/// [`Pool::block_width`] (the same contract as [`Pool::scatter_blocks`];
+/// three zipped slices keep the hand-rolled scatter here). Per element
+/// the operation sequence is identical to the serial loop, so the
+/// trajectory is bit-for-bit thread-count-independent.
+#[allow(clippy::too_many_arguments)]
 fn apply_round_blocked(
     theta: &mut [f64],
     h: &mut [f64],
@@ -504,6 +848,7 @@ fn apply_round_blocked(
     stale: &[StaleUpdate],
     updates: &[Option<SparseUpdate>],
     cfg: &GdSecConfig,
+    fold_scale: f64,
     pool: &Pool,
 ) {
     let d = theta.len();
@@ -532,6 +877,11 @@ fn apply_round_blocked(
         for u in updates.iter().flatten() {
             u.add_range_into(blk.j0, blk.agg);
         }
+        if fold_scale != 1.0 {
+            for v in blk.agg.iter_mut() {
+                *v *= fold_scale;
+            }
+        }
         if cfg.state_variable {
             for j in 0..blk.theta.len() {
                 blk.theta[j] -= cfg.alpha * (blk.h[j] + blk.agg[j]);
@@ -545,30 +895,15 @@ fn apply_round_blocked(
     });
 }
 
-/// Convenience: run distributed GD-SEC over a [`crate::objectives::Problem`]
-/// with native gradient providers. Quorum honors the `GDSEC_QUORUM` env
-/// override (the CI matrix runs the integration suite once with
-/// `quorum < M`); use [`run_native_opts`] to pin it.
-pub fn run_native(
+/// Shared setup for the native-provider convenience runners: fstar
+/// estimate, one [`worker::NativeProvider`] factory per local shard, and
+/// a [`CoordConfig`] wired with the problem's exact evaluator.
+fn native_setup(
     prob: &crate::objectives::Problem,
     gdsec: GdSecConfig,
     iters: usize,
     sched: Scheduler,
-) -> CoordOutcome {
-    run_native_opts(prob, gdsec, iters, sched, Quorum::from_env(), DelayPlan::default())
-}
-
-/// [`run_native`] with an explicit quorum policy and virtual delay
-/// schedule (parity tests pin `Quorum::All`; straggler tests inject
-/// deterministic [`DelayPlan`]s).
-pub fn run_native_opts(
-    prob: &crate::objectives::Problem,
-    gdsec: GdSecConfig,
-    iters: usize,
-    sched: Scheduler,
-    quorum: Quorum,
-    delay: DelayPlan,
-) -> CoordOutcome {
+) -> (CoordConfig, Vec<ProviderFactory>) {
     let fstar = prob.estimate_fstar(crate::algo::gdsec::fstar_iters(iters));
     let factories: Vec<ProviderFactory> = prob
         .locals
@@ -580,16 +915,49 @@ pub fn run_native_opts(
             }) as ProviderFactory
         })
         .collect();
-    let failures = vec![FailurePlan::default(); factories.len()];
     let prob2 = prob.clone();
     let mut cfg = CoordConfig::new(gdsec, iters);
     cfg.scheduler = sched;
     cfg.problem_name = prob.name.clone();
     cfg.fstar = fstar;
     cfg.evaluator = Some(Arc::new(move |theta: &[f64]| prob2.value(theta)));
+    (cfg, factories)
+}
+
+/// Convenience: run distributed GD-SEC over a [`crate::objectives::Problem`]
+/// with native gradient providers. Honors the `GDSEC_QUORUM`,
+/// `GDSEC_FAULTS`, and `GDSEC_DEGRADE` env overrides (the CI matrix runs
+/// the integration suite under each); use [`run_native_opts`] to pin
+/// them.
+pub fn run_native(
+    prob: &crate::objectives::Problem,
+    gdsec: GdSecConfig,
+    iters: usize,
+    sched: Scheduler,
+) -> CoordOutcome {
+    let (cfg, factories) = native_setup(prob, gdsec, iters, sched);
+    Coordinator::spawn(cfg, prob.d, factories).run()
+}
+
+/// [`run_native`] with an explicit quorum policy and virtual delay
+/// schedule, and the fault plan + degradation policy pinned to none
+/// (parity tests pin `Quorum::All`; straggler tests inject deterministic
+/// [`DelayPlan`]s — either way the trajectory must not depend on the CI
+/// fault environment).
+pub fn run_native_opts(
+    prob: &crate::objectives::Problem,
+    gdsec: GdSecConfig,
+    iters: usize,
+    sched: Scheduler,
+    quorum: Quorum,
+    delay: DelayPlan,
+) -> CoordOutcome {
+    let (mut cfg, factories) = native_setup(prob, gdsec, iters, sched);
     cfg.quorum = quorum;
     cfg.delay = delay;
-    Coordinator::spawn(cfg, prob.d, factories, failures).run()
+    cfg.faults = FaultPlan::default();
+    cfg.degrade = DegradePolicy::Freeze;
+    Coordinator::spawn(cfg, prob.d, factories).run()
 }
 
 pub use worker::NativeProvider;
@@ -646,6 +1014,8 @@ mod tests {
         cfg.dead_after = 2;
         cfg.quorum = Quorum::All;
         cfg.stale_window = 4;
+        cfg.faults = FaultPlan::default();
+        cfg.degrade = DegradePolicy::Freeze;
         cfg.problem_name = prob.name.clone();
         cfg.evaluator = Some(Arc::new(move |t: &[f64]| prob2.value(t)));
         let coord = Coordinator { cfg, ends: vec![server_end], handles: vec![handle], d };
@@ -655,5 +1025,87 @@ mod tests {
         // accounted) before death — staleness tolerance is not the same
         // thing as liveness.
         assert!(out.trace.total_stale() >= 1);
+    }
+
+    #[test]
+    fn strike_schedule_matches_legacy_for_small_dead_after() {
+        // dead_after = 1: first strike kills.
+        let mut l = Life::Active;
+        assert!(strike(&mut l, 5, 1));
+        assert_eq!(l, Life::Dead);
+        // dead_after = 2: Suspect probes the very next round, dies on the
+        // second consecutive strike — the legacy counter's timing.
+        let mut l = Life::Active;
+        assert!(!strike(&mut l, 5, 2));
+        assert!(l.waited(6));
+        assert!(strike(&mut l, 6, 2));
+        assert_eq!(l, Life::Dead);
+        // dead_after = 4: backoff doubles (1, 2, 4 rounds between probes)
+        // and the worker is not waited on between probes.
+        let mut l = Life::Active;
+        assert!(!strike(&mut l, 1, 4));
+        assert!(l.waited(2));
+        assert!(!strike(&mut l, 2, 4));
+        assert!(!l.waited(3));
+        assert!(l.waited(4));
+        assert!(!strike(&mut l, 4, 4));
+        assert!(!l.waited(7));
+        assert!(l.waited(8));
+        assert!(strike(&mut l, 8, 4));
+        assert!(l.is_dead());
+        // Dead workers never strike again and are never waited on.
+        assert!(!strike(&mut l, 9, 4));
+        assert!(!l.waited(100));
+    }
+
+    #[test]
+    fn withdraw_share_is_exact_and_isolated() {
+        let mut h = vec![0.0f64; 4];
+        let mut shares = vec![vec![0.0f64; 4]; 2];
+        let mut u0 = SparseUpdate::empty(4);
+        u0.idx.extend_from_slice(&[0, 2]);
+        u0.val.extend_from_slice(&[1.5, -0.25]);
+        let mut u1 = SparseUpdate::empty(4);
+        u1.idx.extend_from_slice(&[2, 3]);
+        u1.val.extend_from_slice(&[0.125, 2.0]);
+        // Book both workers the way the fold does (h += β·u, per worker).
+        let beta = 0.5;
+        book_one(&mut shares[0], beta, &u0);
+        book_one(&mut shares[1], beta, &u1);
+        for w in 0..2 {
+            for j in 0..4 {
+                h[j] += shares[w][j];
+            }
+        }
+        let h1_expected: Vec<f64> = shares[1].clone();
+        withdraw_share(0, &mut h, &mut shares);
+        // Worker 0's memory is gone exactly; worker 1's is intact.
+        for j in 0..4 {
+            assert_eq!(h[j].to_bits(), h1_expected[j].to_bits());
+            assert_eq!(shares[0][j].to_bits(), 0.0f64.to_bits());
+            assert_eq!(shares[1][j].to_bits(), h1_expected[j].to_bits());
+        }
+        // Withdrawing with an empty ledger (state_variable off) is a
+        // no-op, not a panic.
+        let mut none: Vec<Vec<f64>> = Vec::new();
+        withdraw_share(0, &mut h, &mut none);
+    }
+
+    #[test]
+    fn frame_round_reads_header() {
+        let frame = protocol::encode(&Msg::Join { round: 7, worker: 3 }, 4);
+        assert_eq!(frame_round(&frame), 7);
+        assert_eq!(frame_round(&[0xA5, 2]), 0); // runt
+    }
+
+    #[test]
+    fn degrade_policy_parses() {
+        assert_eq!(DegradePolicy::default(), DegradePolicy::Freeze);
+        // from_env reads the ambient var; only exercise the default path
+        // here (the parse arms are covered by construction above —
+        // setting env vars in-process races parallel tests).
+        if std::env::var("GDSEC_DEGRADE").is_err() {
+            assert_eq!(DegradePolicy::from_env(), DegradePolicy::Freeze);
+        }
     }
 }

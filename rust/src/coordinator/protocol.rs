@@ -39,6 +39,11 @@ pub enum MsgKind {
     /// cheaper of sparse-RLE and dense f32; caps weak-censoring rounds
     /// at `8 + 32·d` payload bits). Decodes to the same [`Msg::Update`].
     UpdateAdaptive = 5,
+    /// Worker → server: re-admission announcement from a restarted
+    /// worker. `round` carries the last round the worker saw before
+    /// crashing (0 if it never completed one); the server answers with
+    /// the next θ broadcast and treats it as a fresh snapshot.
+    Join = 6,
 }
 
 impl MsgKind {
@@ -49,6 +54,7 @@ impl MsgKind {
             3 => Some(MsgKind::Silence),
             4 => Some(MsgKind::Shutdown),
             5 => Some(MsgKind::UpdateAdaptive),
+            6 => Some(MsgKind::Join),
             _ => None,
         }
     }
@@ -68,6 +74,9 @@ pub enum Msg {
     Broadcast { round: u32, theta: Vec<f64>, active: bool },
     Update { round: u32, worker: u32, update: SparseUpdate, local_f: f64 },
     Silence { round: u32, worker: u32, local_f: f64 },
+    /// Re-admission handshake opener; `round` is the worker's last-seen
+    /// round (0 if none).
+    Join { round: u32, worker: u32 },
     Shutdown,
 }
 
@@ -107,6 +116,7 @@ pub fn encode_wire(msg: &Msg, dim: u32, wire: WireFormat) -> Vec<u8> {
         Msg::Silence { round, worker, local_f } => {
             (MsgKind::Silence, *round, *worker, local_f.to_le_bytes().to_vec())
         }
+        Msg::Join { round, worker } => (MsgKind::Join, *round, *worker, Vec::new()),
         Msg::Shutdown => (MsgKind::Shutdown, 0, SERVER_ID, Vec::new()),
     };
     let mut out = Vec::with_capacity(HEADER_LEN + payload.len());
@@ -201,6 +211,12 @@ pub fn decode(buf: &[u8], dim: u32) -> Result<Msg, ProtoError> {
             let local_f = f64::from_le_bytes([p[0], p[1], p[2], p[3], p[4], p[5], p[6], p[7]]);
             Ok(Msg::Silence { round, worker: sender, local_f })
         }
+        MsgKind::Join => {
+            if !p.is_empty() {
+                return Err(ProtoError::BadPayload);
+            }
+            Ok(Msg::Join { round, worker: sender })
+        }
         MsgKind::Shutdown => Ok(Msg::Shutdown),
     }
 }
@@ -261,6 +277,22 @@ mod tests {
     fn shutdown_roundtrip() {
         let buf = encode(&Msg::Shutdown, 1);
         assert_eq!(decode(&buf, 1).unwrap(), Msg::Shutdown);
+    }
+
+    #[test]
+    fn join_roundtrip_and_rejects_payload() {
+        let m = Msg::Join { round: 5, worker: 2 };
+        let buf = encode(&m, 10);
+        assert_eq!(uplink_payload_bits(&m), 0);
+        assert_eq!(decode(&buf, 10).unwrap(), m);
+        // Never-completed-a-round join.
+        let fresh = Msg::Join { round: 0, worker: 0 };
+        assert_eq!(decode(&encode(&fresh, 1), 1).unwrap(), fresh);
+        // A Join with payload bytes is malformed.
+        let mut bad = buf.clone();
+        bad[10..14].copy_from_slice(&1u32.to_le_bytes());
+        bad.push(0);
+        assert_eq!(decode(&bad, 10), Err(ProtoError::BadPayload));
     }
 
     #[test]

@@ -172,6 +172,18 @@ pub struct StaleUpdate {
     pub update: SparseUpdate,
 }
 
+/// Evict every parked entry originating from `worker`, returning how
+/// many were removed. Re-admission calls this so a transmission computed
+/// BEFORE a worker's crash can never fold after its EC state restarted
+/// from zero (the parked wire image belongs to an h_m/e_m history that no
+/// longer exists); permanent-death renormalization uses it for the same
+/// reason in reverse — the booked share is being withdrawn.
+pub fn evict_worker(stale: &mut Vec<StaleUpdate>, worker: usize) -> usize {
+    let before = stale.len();
+    stale.retain(|s| s.worker != worker);
+    before - stale.len()
+}
+
 /// Routing verdict for one admitted reply.
 #[derive(Debug)]
 pub enum Admit {
@@ -346,6 +358,34 @@ mod tests {
         let a = Quorum::Adaptive { target_quantile: 0.75, min_frac: 0.5 };
         assert_eq!(a.k_of(5), 3); // ceil(2.5)
         assert_eq!(a.k_of(0), 0);
+    }
+
+    #[test]
+    fn evict_worker_removes_only_that_workers_entries() {
+        let mut pool = vec![
+            StaleUpdate { round: 3, worker: 1, age: 1, update: upd(4, 0) },
+            StaleUpdate { round: 3, worker: 2, age: 2, update: upd(4, 1) },
+            StaleUpdate { round: 4, worker: 1, age: 2, update: upd(4, 2) },
+        ];
+        assert_eq!(evict_worker(&mut pool, 1), 2);
+        assert_eq!(pool.len(), 1);
+        assert_eq!(pool[0].worker, 2);
+        assert_eq!(evict_worker(&mut pool, 1), 0);
+    }
+
+    #[test]
+    fn rejoined_worker_first_reply_is_fresh_not_stale() {
+        // Re-admission contract: the rejoined worker replies to the
+        // CURRENT round (it adopted the fresh θ snapshot), so admission
+        // must classify it Fresh — counting toward the quorum and
+        // resetting strikes — never as a stale/expired delivery.
+        let mut rs = RoundState::new(7, 3, 2);
+        let verdict = rs.admit(
+            1,
+            Msg::Update { round: 7, worker: 1, update: upd(4, 0), local_f: 0.5 },
+        );
+        assert!(matches!(verdict, Admit::Fresh));
+        assert!(rs.replied(1));
     }
 
     #[test]

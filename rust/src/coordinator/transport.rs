@@ -68,6 +68,184 @@ impl DelayPlan {
     }
 }
 
+/// Per-worker scripted fault schedule (one slot of a [`FaultPlan`]).
+///
+/// `crash_at` without `restart_at` is a permanent death: the worker goes
+/// dark from that round on (the old `FailurePlan::silent_from_round`).
+/// With `restart_at` set, the worker stays dark through `restart_at - 1`
+/// and announces itself for re-admission at the first broadcast it sees
+/// from round `restart_at` onward.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct WorkerFaults {
+    /// Rounds whose uplink reply the link drops (scripted).
+    pub drop_rounds: Vec<u32>,
+    /// Rounds whose uplink reply the link corrupts (scripted).
+    pub corrupt_rounds: Vec<u32>,
+    /// First round the worker is crashed for (1-based, inclusive).
+    pub crash_at: Option<u32>,
+    /// First round the worker asks to rejoin from (1-based, inclusive).
+    pub restart_at: Option<u32>,
+}
+
+impl WorkerFaults {
+    pub fn is_none(&self) -> bool {
+        self.drop_rounds.is_empty()
+            && self.corrupt_rounds.is_empty()
+            && self.crash_at.is_none()
+            && self.restart_at.is_none()
+    }
+
+    /// Is the worker crashed (dark) during round `k`?
+    pub fn crashed(&self, k: u32) -> bool {
+        match (self.crash_at, self.restart_at) {
+            (Some(c), Some(r)) => k >= c && k < r,
+            (Some(c), None) => k >= c,
+            _ => false,
+        }
+    }
+}
+
+// Distinct SplitMix64 stream tags so the drop and corrupt draws for the
+// same (worker, round) cell are independent (and independent of
+// `DelayPlan::Jitter`, which uses the raw seed).
+const FAULT_STREAM_DROP: u64 = 0x6472_6f70; // "drop"
+const FAULT_STREAM_CORRUPT: u64 = 0x636f_7272; // "corr"
+
+/// Deterministic fault-injection harness, sibling of [`DelayPlan`]: a
+/// seeded, wall-clock-free schedule of frame drops, payload corruption,
+/// crashes, and restarts, reproducible from `(seed, worker, round)`
+/// alone.
+///
+/// Drops and corruption are applied by the *server* at receive time
+/// (keyed by the gather round), so a "dropped" frame costs the link its
+/// bytes but never reaches `protocol::decode`, and a "corrupt" frame
+/// arrives with its magic byte flipped — exercising the same strike path
+/// a genuinely malformed frame takes. Crash/restart schedules are
+/// shipped to the worker thread via [`FaultPlan::faults_for`].
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FaultPlan {
+    /// Seed for the probabilistic drop/corrupt draws.
+    pub seed: u64,
+    /// Per-(worker, round) i.i.d. frame-drop probability.
+    pub drop_p: f64,
+    /// Per-(worker, round) i.i.d. frame-corruption probability.
+    pub corrupt_p: f64,
+    /// Scripted per-worker schedules (index = worker id; missing workers
+    /// have no scripted faults).
+    pub workers: Vec<WorkerFaults>,
+}
+
+impl FaultPlan {
+    /// Fast path: a default plan injects nothing.
+    pub fn is_none(&self) -> bool {
+        self.drop_p == 0.0 && self.corrupt_p == 0.0 && self.workers.iter().all(|w| w.is_none())
+    }
+
+    fn chance(&self, stream: u64, w: usize, k: u32, p: f64) -> bool {
+        if p <= 0.0 {
+            return false;
+        }
+        // Stateless, like DelayPlan::Jitter: one child stream per
+        // (worker, round) cell, tagged per fault kind.
+        let cell = SplitMix64::child(self.seed ^ stream, ((w as u64) << 32) ^ k as u64);
+        Pcg64::seeded(cell).uniform() < p
+    }
+
+    /// Does the link drop worker `w`'s reply for round `k`?
+    pub fn drops(&self, w: usize, k: u32) -> bool {
+        self.workers.get(w).is_some_and(|f| f.drop_rounds.contains(&k))
+            || self.chance(FAULT_STREAM_DROP, w, k, self.drop_p)
+    }
+
+    /// Does the link corrupt worker `w`'s reply for round `k`?
+    pub fn corrupts(&self, w: usize, k: u32) -> bool {
+        self.workers.get(w).is_some_and(|f| f.corrupt_rounds.contains(&k))
+            || self.chance(FAULT_STREAM_CORRUPT, w, k, self.corrupt_p)
+    }
+
+    /// Clone worker `w`'s scripted schedule for its thread (crash and
+    /// restart rounds; the link-level drop/corrupt draws stay
+    /// server-side).
+    pub fn faults_for(&self, w: usize) -> WorkerFaults {
+        self.workers.get(w).cloned().unwrap_or_default()
+    }
+
+    fn worker_mut(&mut self, w: usize) -> &mut WorkerFaults {
+        if self.workers.len() <= w {
+            self.workers.resize(w + 1, WorkerFaults::default());
+        }
+        &mut self.workers[w]
+    }
+
+    /// Parse a `GDSEC_FAULTS` spec: comma-separated clauses, e.g.
+    /// `seed=7,drop=0.05,corrupt=0.01,crash=1@3,restart=1@6,drop=2@4`.
+    ///
+    /// `drop=`/`corrupt=` take either a probability (`drop=0.05`, all
+    /// workers, i.i.d. per round) or a scripted `worker@round` cell
+    /// (`drop=2@4`). `crash=W@R` / `restart=W@R` are always scripted.
+    /// Panics on a malformed spec so CI misconfiguration is loud.
+    pub fn parse(spec: &str) -> FaultPlan {
+        let mut plan = FaultPlan::default();
+        for clause in spec.split(',').map(str::trim).filter(|c| !c.is_empty()) {
+            let (key, val) = clause
+                .split_once('=')
+                .unwrap_or_else(|| panic!("GDSEC_FAULTS clause without '=': {clause:?}"));
+            let at = |val: &str| -> (usize, u32) {
+                let (w, r) = val
+                    .split_once('@')
+                    .unwrap_or_else(|| panic!("GDSEC_FAULTS {key}={val}: expected worker@round"));
+                let w: usize = w.parse().unwrap_or_else(|_| panic!("bad worker id {w:?}"));
+                let r: u32 = r.parse().unwrap_or_else(|_| panic!("bad round {r:?}"));
+                assert!(r > 0, "GDSEC_FAULTS rounds are 1-based ({clause:?})");
+                (w, r)
+            };
+            match key {
+                "seed" => plan.seed = val.parse().unwrap_or_else(|_| panic!("bad seed {val:?}")),
+                "drop" | "corrupt" if !val.contains('@') => {
+                    let p: f64 = val.parse().unwrap_or_else(|_| panic!("bad prob {val:?}"));
+                    assert!((0.0..=1.0).contains(&p), "GDSEC_FAULTS {key} prob out of [0,1]");
+                    if key == "drop" {
+                        plan.drop_p = p;
+                    } else {
+                        plan.corrupt_p = p;
+                    }
+                }
+                "drop" => {
+                    let (w, r) = at(val);
+                    plan.worker_mut(w).drop_rounds.push(r);
+                }
+                "corrupt" => {
+                    let (w, r) = at(val);
+                    plan.worker_mut(w).corrupt_rounds.push(r);
+                }
+                "crash" => {
+                    let (w, r) = at(val);
+                    plan.worker_mut(w).crash_at = Some(r);
+                }
+                "restart" => {
+                    let (w, r) = at(val);
+                    plan.worker_mut(w).restart_at = Some(r);
+                }
+                other => panic!("unknown GDSEC_FAULTS clause {other:?}"),
+            }
+        }
+        for (w, f) in plan.workers.iter().enumerate() {
+            if let (Some(c), Some(r)) = (f.crash_at, f.restart_at) {
+                assert!(r > c, "GDSEC_FAULTS: worker {w} restart round {r} <= crash round {c}");
+            }
+        }
+        plan
+    }
+
+    /// Plan from the `GDSEC_FAULTS` environment variable (default: none).
+    pub fn from_env() -> FaultPlan {
+        match std::env::var("GDSEC_FAULTS") {
+            Ok(spec) => FaultPlan::parse(&spec),
+            Err(_) => FaultPlan::default(),
+        }
+    }
+}
+
 /// Shared byte counters for one direction of one link.
 #[derive(Debug, Default)]
 pub struct LinkStats {
@@ -276,6 +454,61 @@ mod tests {
         let late_start = DelayPlan::Phased(vec![(5, vec![9])]);
         assert_eq!(late_start.delay(0, 4), 0);
         assert_eq!(late_start.delay(0, 5), 9);
+    }
+
+    #[test]
+    fn fault_plan_default_injects_nothing() {
+        let p = FaultPlan::default();
+        assert!(p.is_none());
+        for w in 0..4 {
+            for k in 1..50 {
+                assert!(!p.drops(w, k));
+                assert!(!p.corrupts(w, k));
+            }
+            assert!(p.faults_for(w).is_none());
+        }
+    }
+
+    #[test]
+    fn fault_plan_scripted_cells_fire_exactly() {
+        let p = FaultPlan::parse("drop=1@4,corrupt=2@7,crash=0@3,restart=0@6");
+        assert!(p.drops(1, 4) && !p.drops(1, 5) && !p.drops(0, 4));
+        assert!(p.corrupts(2, 7) && !p.corrupts(2, 6));
+        let f = p.faults_for(0);
+        assert_eq!((f.crash_at, f.restart_at), (Some(3), Some(6)));
+        assert!(!f.crashed(2) && f.crashed(3) && f.crashed(5) && !f.crashed(6));
+        // Permanent crash: no restart round.
+        let perm = FaultPlan::parse("crash=1@10").faults_for(1);
+        assert!(perm.crashed(10) && perm.crashed(1000));
+    }
+
+    #[test]
+    fn fault_plan_seeded_draws_deterministic_and_rate_plausible() {
+        let p = FaultPlan::parse("seed=42,drop=0.3,corrupt=0.1");
+        let q = FaultPlan::parse("seed=42,drop=0.3,corrupt=0.1");
+        let mut drops = 0u32;
+        let mut corrupts = 0u32;
+        let n = 4 * 500;
+        for w in 0..4 {
+            for k in 1..=500 {
+                assert_eq!(p.drops(w, k), q.drops(w, k), "drop draw not deterministic");
+                assert_eq!(p.corrupts(w, k), q.corrupts(w, k));
+                drops += p.drops(w, k) as u32;
+                corrupts += p.corrupts(w, k) as u32;
+            }
+        }
+        let (dr, cr) = (drops as f64 / n as f64, corrupts as f64 / n as f64);
+        assert!((dr - 0.3).abs() < 0.05, "drop rate {dr}");
+        assert!((cr - 0.1).abs() < 0.05, "corrupt rate {cr}");
+        // Different seeds give different draw patterns.
+        let r = FaultPlan::parse("seed=43,drop=0.3");
+        assert!((1..=500).any(|k| p.drops(0, k) != r.drops(0, k)));
+    }
+
+    #[test]
+    #[should_panic(expected = "restart round")]
+    fn fault_plan_rejects_restart_before_crash() {
+        FaultPlan::parse("crash=0@6,restart=0@3");
     }
 
     #[test]

@@ -3,7 +3,7 @@
 //! XLA executable), run the GD-SEC censor/EC step, and reply.
 
 use super::protocol::{self, Msg, WireFormat};
-use super::transport::{Recv, WorkerEnd};
+use super::transport::{Recv, WorkerEnd, WorkerFaults};
 use crate::algo::engine::EngineOpts;
 use crate::algo::gdsec::{GdSecConfig, WorkerState};
 use crate::linalg;
@@ -56,12 +56,18 @@ impl GradProvider for NativeProvider {
 /// (so non-`Send` PJRT state never crosses threads).
 pub type ProviderFactory = Box<dyn FnOnce() -> Box<dyn GradProvider> + Send>;
 
-/// Failure plan for chaos testing: the worker stops responding from the
-/// given round on (it still drains broadcasts so channels stay open, like
-/// a straggler rather than a closed socket).
-#[derive(Debug, Clone, Copy, Default)]
-pub struct FailurePlan {
-    pub silent_from_round: Option<u32>,
+/// Worker-side liveness phase driven by the scripted
+/// [`WorkerFaults`] crash/restart schedule.
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum Phase {
+    /// Normal operation.
+    Live,
+    /// Crashed: drains broadcasts (channels stay open, like a straggler
+    /// rather than a closed socket) but never replies.
+    Crashed,
+    /// Restarted and announced via [`Msg::Join`]; waiting for the next
+    /// usable θ broadcast to adopt as its fresh snapshot.
+    Announced,
 }
 
 /// Run the worker loop until Shutdown (or link loss). `factory` is invoked
@@ -73,6 +79,13 @@ pub struct FailurePlan {
 /// stale contribution instead of the worker discarding the backlog —
 /// and skips only broadcasts the window has already expired (S = 1
 /// reproduces the PR 4 skip-to-newest behavior exactly).
+///
+/// `faults` scripts crash/restart rounds. From `crash_at` the worker goes
+/// dark; from `restart_at` it sends [`Msg::Join`] carrying its last-seen
+/// round, then adopts the next usable broadcast as a fresh snapshot:
+/// EC/memory state zeroed (the error term re-accumulates from zero —
+/// safe for every compress rule) and `theta_prev = θ`, so its first
+/// reply is a full transmission exactly like round 1.
 #[allow(clippy::too_many_arguments)]
 pub fn worker_loop(
     id: u32,
@@ -80,7 +93,7 @@ pub fn worker_loop(
     cfg: GdSecConfig,
     factory: ProviderFactory,
     end: WorkerEnd,
-    failure: FailurePlan,
+    faults: WorkerFaults,
     wire: WireFormat,
     stale_window: usize,
 ) {
@@ -90,6 +103,8 @@ pub fn worker_loop(
     let mut state = WorkerState::new(d);
     let mut theta_prev = vec![0.0; d];
     let mut theta_diff = vec![0.0; d];
+    let mut phase = Phase::Live;
+    let mut last_seen: u32 = 0;
     loop {
         let frame = match end.rx.recv() {
             Recv::Frame(f) => f,
@@ -134,15 +149,48 @@ pub fn worker_loop(
                 }
                 let newest = pending.last().map_or(round, |p| p.0);
                 for (round, theta, active) in pending {
+                    if faults.crashed(round) {
+                        // Dark, but keep the iterate history moving so a
+                        // permanent crash behaves like the old silent
+                        // failure plan.
+                        phase = Phase::Crashed;
+                        theta_prev.copy_from_slice(&theta);
+                        continue;
+                    }
+                    if phase == Phase::Crashed {
+                        // Back up (round ≥ restart_at): announce with the
+                        // last round seen before the crash and wait for a
+                        // usable snapshot.
+                        if !end.tx.send(protocol::encode_wire(
+                            &Msg::Join { round: last_seen, worker: id },
+                            d as u32,
+                            wire,
+                        )) {
+                            return;
+                        }
+                        phase = Phase::Announced;
+                        theta_prev.copy_from_slice(&theta);
+                        continue;
+                    }
                     // `newest - round` broadcasts behind: computable only
                     // while strictly inside the window (its reply would
                     // reach the server at age newest − round + 1 ≤ S).
                     let superseded = newest - round >= stale_window;
-                    let silent = failure.silent_from_round.is_some_and(|r| round >= r);
-                    if superseded || silent || !active {
+                    if superseded || !active {
+                        last_seen = round;
                         theta_prev.copy_from_slice(&theta);
                         continue;
                     }
+                    if phase == Phase::Announced {
+                        // Fresh snapshot: EC/memory state restarts from
+                        // zero and θ_prev adopts this θ, so the censor
+                        // sees a zero θ-diff and transmits in full —
+                        // round-1 semantics for the rejoined worker.
+                        state = WorkerState::new(d);
+                        theta_prev.copy_from_slice(&theta);
+                        phase = Phase::Live;
+                    }
+                    last_seen = round;
                     linalg::sub(&theta, &theta_prev, &mut theta_diff);
                     let local_f = provider.loss_grad(&theta, state.grad_mut());
                     let update = state.sparsify_step(&cfg, m_workers, &theta_diff);
@@ -158,7 +206,7 @@ pub fn worker_loop(
                 }
             }
             // Workers ignore uplink-kind messages.
-            Msg::Update { .. } | Msg::Silence { .. } => {}
+            Msg::Update { .. } | Msg::Silence { .. } | Msg::Join { .. } => {}
         }
     }
 }
@@ -187,7 +235,7 @@ mod tests {
 
     fn spawn_one(
         cfg: GdSecConfig,
-        failure: FailurePlan,
+        faults: WorkerFaults,
     ) -> (crate::coordinator::transport::ServerEnd, std::thread::JoinHandle<()>, usize) {
         let prob = Problem::linear(synthetic::dna_like(1, 30), 1, 0.1);
         let d = prob.d;
@@ -196,7 +244,7 @@ mod tests {
             Box::new(move || Box::new(NativeProvider::new(local)) as Box<dyn GradProvider>);
         let (server, worker) = duplex();
         let h = std::thread::spawn(move || {
-            worker_loop(0, 1, cfg, factory, worker, failure, WireFormat::Sparse, 1)
+            worker_loop(0, 1, cfg, factory, worker, faults, WireFormat::Sparse, 1)
         });
         (server, h, d)
     }
@@ -204,7 +252,7 @@ mod tests {
     #[test]
     fn first_broadcast_gets_full_update() {
         let cfg = GdSecConfig { xi: Xi::Uniform(1.0), ..Default::default() };
-        let (server, h, d) = spawn_one(cfg, FailurePlan::default());
+        let (server, h, d) = spawn_one(cfg, WorkerFaults::default());
         let theta = vec![0.0; d];
         server.tx.send(protocol::encode(
             &Msg::Broadcast { round: 1, theta, active: true },
@@ -229,7 +277,7 @@ mod tests {
     #[test]
     fn inactive_worker_stays_silent() {
         let cfg = GdSecConfig { xi: Xi::Uniform(1.0), ..Default::default() };
-        let (server, h, d) = spawn_one(cfg, FailurePlan::default());
+        let (server, h, d) = spawn_one(cfg, WorkerFaults::default());
         server.tx.send(protocol::encode(
             &Msg::Broadcast { round: 1, theta: vec![0.0; d], active: false },
             d as u32,
@@ -246,7 +294,7 @@ mod tests {
     fn failed_worker_goes_dark_but_drains() {
         let cfg = GdSecConfig { xi: Xi::Uniform(1.0), ..Default::default() };
         let (server, h, d) =
-            spawn_one(cfg, FailurePlan { silent_from_round: Some(2) });
+            spawn_one(cfg, WorkerFaults { crash_at: Some(2), ..Default::default() });
         server.tx.send(protocol::encode(
             &Msg::Broadcast { round: 1, theta: vec![0.0; d], active: true },
             d as u32,
@@ -284,9 +332,9 @@ mod tests {
             &Msg::Broadcast { round: 2, theta: vec![0.01; d], active: true },
             d as u32,
         ));
-        let failure = FailurePlan::default();
+        let faults = WorkerFaults::default();
         let h = std::thread::spawn(move || {
-            worker_loop(0, 1, cfg, factory, worker, failure, WireFormat::Sparse, 1)
+            worker_loop(0, 1, cfg, factory, worker, faults, WireFormat::Sparse, 1)
         });
         match server.rx.recv() {
             Recv::Frame(f) => match protocol::decode(&f, d as u32).unwrap() {
@@ -324,9 +372,9 @@ mod tests {
                 d as u32,
             ));
         }
-        let failure = FailurePlan::default();
+        let faults = WorkerFaults::default();
         let h = std::thread::spawn(move || {
-            worker_loop(0, 1, cfg, factory, worker, failure, WireFormat::Sparse, 3)
+            worker_loop(0, 1, cfg, factory, worker, faults, WireFormat::Sparse, 3)
         });
         for expect in 1..=3u32 {
             match server.rx.recv() {
@@ -348,9 +396,74 @@ mod tests {
     }
 
     #[test]
+    fn crashed_worker_announces_and_rejoins_with_full_update() {
+        // Crash at round 2, restart at round 4: rounds 2–3 are dark, the
+        // round-4 broadcast triggers a Join tagged with the last round
+        // the worker saw (1), and the round-5 broadcast is adopted as the
+        // fresh snapshot — answered with a FULL transmission (θ-diff is
+        // zero after the state reset, round-1 semantics).
+        let cfg = GdSecConfig { xi: Xi::Uniform(1.0), ..Default::default() };
+        let (server, h, d) = spawn_one(
+            cfg,
+            WorkerFaults { crash_at: Some(2), restart_at: Some(4), ..Default::default() },
+        );
+        let bcast = |round: u32, scale: f64| {
+            protocol::encode(
+                &Msg::Broadcast { round, theta: vec![scale; d], active: true },
+                d as u32,
+            )
+        };
+        server.tx.send(bcast(1, 0.0));
+        let first = match server.rx.recv() {
+            Recv::Frame(f) => protocol::decode(&f, d as u32).unwrap(),
+            other => panic!("{other:?}"),
+        };
+        let full_nnz = match first {
+            Msg::Update { round: 1, update, .. } => update.nnz(),
+            other => panic!("expected round-1 update, got {other:?}"),
+        };
+        assert!(full_nnz > 0, "round 1 transmits uncensored");
+        // Rounds 2 and 3: crashed, no replies.
+        server.tx.send(bcast(2, 0.01));
+        server.tx.send(bcast(3, 0.02));
+        match server.rx.recv_timeout(silence_probe()) {
+            Recv::Timeout => {}
+            other => panic!("expected dark worker, got {other:?}"),
+        }
+        // Round 4: restart → Join announcement with last_seen = 1.
+        server.tx.send(bcast(4, 0.03));
+        match server.rx.recv() {
+            Recv::Frame(f) => match protocol::decode(&f, d as u32).unwrap() {
+                Msg::Join { round, worker } => {
+                    assert_eq!((round, worker), (1, 0));
+                }
+                other => panic!("expected join, got {other:?}"),
+            },
+            other => panic!("{other:?}"),
+        }
+        // Round 5: fresh snapshot → full update tagged with the true round.
+        server.tx.send(bcast(5, 0.04));
+        match server.rx.recv() {
+            Recv::Frame(f) => match protocol::decode(&f, d as u32).unwrap() {
+                Msg::Update { round, update, .. } => {
+                    assert_eq!(round, 5);
+                    // Zero θ-diff after the snapshot reset ⇒ zero censor
+                    // threshold ⇒ every nonzero gradient coordinate goes
+                    // on the wire, exactly like round 1.
+                    assert!(update.nnz() >= full_nnz, "rejoin reply must be uncensored");
+                }
+                other => panic!("expected update, got {other:?}"),
+            },
+            other => panic!("{other:?}"),
+        }
+        server.tx.send(protocol::encode(&Msg::Shutdown, d as u32));
+        h.join().unwrap();
+    }
+
+    #[test]
     fn corrupt_frame_survivable() {
         let cfg = GdSecConfig { xi: Xi::Uniform(1.0), ..Default::default() };
-        let (server, h, d) = spawn_one(cfg, FailurePlan::default());
+        let (server, h, d) = spawn_one(cfg, WorkerFaults::default());
         server.tx.send(vec![0xde, 0xad]);
         server.tx.send(protocol::encode(
             &Msg::Broadcast { round: 1, theta: vec![0.0; d], active: true },

@@ -255,6 +255,12 @@ fn cmd_coordinate(args: &Args) -> Result<()> {
         out.rounds.iter().map(|r| r.wall_us as f64).sum::<f64>() / out.rounds.len() as f64,
         out.dead_workers
     );
+    let dropped: u64 = out.rounds.iter().map(|r| r.dropped_frames).sum();
+    let corrupt: u64 = out.rounds.iter().map(|r| r.corrupt_frames).sum();
+    let rejoined: u64 = out.rounds.iter().map(|r| r.rejoined).sum();
+    if dropped + corrupt + rejoined > 0 {
+        println!("faults: {dropped} frames dropped, {corrupt} corrupted, {rejoined} rejoins");
+    }
     if let Some(path) = &cfg.out_csv {
         out.trace.write_csv(path)?;
         println!("trace -> {path}");

@@ -1,0 +1,234 @@
+//! Chaos properties of the fault-tolerant coordinator: under a seeded
+//! [`FaultPlan`] mixing scripted crash/restart with probabilistic frame
+//! drops and corruptions, the run must (1) keep converging as long as a
+//! majority stays live, (2) be bitwise deterministic — the same plan
+//! replayed gives the same trajectory, byte counts, and fault ledger —
+//! and (3) be bitwise TRANSPARENT when the plan is empty: the fault
+//! machinery at rest must not move a single bit of the serial-parity
+//! trajectory.
+//!
+//! Every fault here is pinned in the config (never read from the
+//! environment), so these tests mean the same thing under the CI fault
+//! matrix as under a bare `cargo test`.
+
+use gdsec::algo::gdsec::{GdSecConfig, Xi};
+use gdsec::coordinator::round::Quorum;
+use gdsec::coordinator::scheduler::Scheduler;
+use gdsec::coordinator::transport::{DelayPlan, FaultPlan, WorkerFaults};
+use gdsec::coordinator::worker::{GradProvider, NativeProvider, ProviderFactory};
+use gdsec::coordinator::{CoordConfig, CoordOutcome, Coordinator, DegradePolicy};
+use gdsec::data::synthetic;
+use gdsec::objectives::Problem;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn problem() -> Problem {
+    Problem::logistic(synthetic::dna_like(13, 96), 3, 0.05)
+}
+
+fn cfg_for(prob: &Problem) -> GdSecConfig {
+    GdSecConfig {
+        alpha: 1.0 / prob.lipschitz(),
+        beta: 0.05,
+        xi: Xi::Uniform(40.0),
+        ..Default::default()
+    }
+}
+
+fn native_factories(prob: &Problem) -> Vec<ProviderFactory> {
+    prob.locals
+        .iter()
+        .map(|l| {
+            let local = l.clone();
+            Box::new(move || Box::new(NativeProvider::new(local)) as Box<dyn GradProvider>)
+                as ProviderFactory
+        })
+        .collect()
+}
+
+/// One minority-fault storm: worker 1 crashes at round 5 and restarts at
+/// round 9, worker 0 loses its round-7 reply, worker 2's round-11 reply
+/// is corrupted on the link — plus seeded i.i.d. drop/corrupt noise on
+/// every uplink frame. A majority (2 of 3) is live at every round.
+fn storm_plan() -> FaultPlan {
+    let mut workers = vec![WorkerFaults::default(); 3];
+    workers[0].drop_rounds = vec![7];
+    workers[1].crash_at = Some(5);
+    workers[1].restart_at = Some(9);
+    workers[2].corrupt_rounds = vec![11];
+    FaultPlan { seed: 0xC0FFEE, drop_p: 0.03, corrupt_p: 0.03, workers }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn run_chaos(
+    prob: &Problem,
+    iters: usize,
+    faults: FaultPlan,
+    quorum: Quorum,
+    window: usize,
+    degrade: DegradePolicy,
+    dead_after: u32,
+) -> CoordOutcome {
+    let prob2 = prob.clone();
+    let mut ccfg = CoordConfig::new(cfg_for(prob), iters);
+    ccfg.recv_timeout = Duration::from_millis(500);
+    ccfg.dead_after = dead_after;
+    ccfg.problem_name = prob.name.clone();
+    ccfg.fstar = prob.estimate_fstar(2000);
+    ccfg.evaluator = Some(Arc::new(move |t: &[f64]| prob2.value(t)));
+    ccfg.quorum = quorum;
+    ccfg.delay = DelayPlan::Jitter { seed: 11, lo: 0, hi: 10 };
+    ccfg.stale_window = window;
+    ccfg.faults = faults;
+    ccfg.degrade = degrade;
+    Coordinator::spawn(ccfg, prob.d, native_factories(prob)).run()
+}
+
+#[test]
+fn minority_fault_storm_still_converges() {
+    // The storm under two protocol regimes: strictly synchronous, and a
+    // 2-of-3 quorum with a 2-round staleness window. Either way the
+    // objective must keep falling — faults cost rounds, not correctness.
+    let prob = problem();
+    for (label, quorum, window) in
+        [("sync", Quorum::All, 1), ("quorum", Quorum::Fraction(0.6), 2)]
+    {
+        // dead_after = 3: the crashed worker still strikes out well
+        // before its restart (strikes at rounds 5, 6, 8), while an
+        // unlucky chain of random drops/corrupts cannot permanently
+        // kill a live worker (a fresh reply between probes resets it).
+        let out = run_chaos(
+            &prob,
+            60,
+            storm_plan(),
+            quorum,
+            window,
+            DegradePolicy::Freeze,
+            3,
+        );
+        let errs = out.trace.errors();
+        assert!(errs.last().unwrap().is_finite(), "[{label}] diverged");
+        assert!(
+            errs.last().unwrap() < &(errs[0] * 0.5),
+            "[{label}] fault storm stalled convergence: {} -> {}",
+            errs[0],
+            errs.last().unwrap()
+        );
+        // The scripted faults really fired and were really ledgered.
+        let dropped: u64 = out.rounds.iter().map(|r| r.dropped_frames).sum();
+        let corrupt: u64 = out.rounds.iter().map(|r| r.corrupt_frames).sum();
+        let rejoined: u64 = out.rounds.iter().map(|r| r.rejoined).sum();
+        assert!(dropped >= 1, "[{label}] scripted drop never fired");
+        assert!(corrupt >= 1, "[{label}] scripted corruption never fired");
+        assert_eq!(rejoined, 1, "[{label}] crash/restart handshake miscounted");
+        // The crashed worker came back: nobody is dead at the end.
+        assert!(out.dead_workers.is_empty(), "[{label}] worker 1 never re-admitted");
+        assert!(out.trace.rows.iter().any(|r| r.dead >= 1), "[{label}] death never recorded");
+        assert_eq!(out.trace.rows.last().unwrap().dead, 0);
+    }
+}
+
+#[test]
+fn same_plan_replayed_is_bitwise_deterministic() {
+    // Faults are part of the experiment definition: replaying the exact
+    // same seeded plan must reproduce the trajectory, the byte counts,
+    // and the fault ledger bit for bit — otherwise no faulted figure is
+    // reproducible. The plan has no restart: a rejoin's round depends on
+    // when the worker's `Join` frame lands relative to the server's
+    // drain pass (real wall-clock), which is exactly the kind of timing
+    // this virtual-everything-else design quarantines — crash, drop, and
+    // corrupt schedules are fully deterministic.
+    let prob = problem();
+    let plan = || {
+        let mut workers = vec![WorkerFaults::default(); 3];
+        workers[0].drop_rounds = vec![7];
+        workers[1].crash_at = Some(5);
+        workers[2].corrupt_rounds = vec![11];
+        FaultPlan { seed: 0xC0FFEE, drop_p: 0.03, corrupt_p: 0.03, workers }
+    };
+    let run = || {
+        run_chaos(
+            &prob,
+            40,
+            plan(),
+            Quorum::Fraction(0.6),
+            2,
+            DegradePolicy::Renormalize,
+            2,
+        )
+    };
+    let a = run();
+    let b = run();
+    assert_eq!(a.trace.rows.len(), b.trace.rows.len());
+    for (x, y) in a.trace.rows.iter().zip(b.trace.rows.iter()) {
+        assert_eq!(x.fval.to_bits(), y.fval.to_bits(), "fval replay drift at iter {}", x.iter);
+        assert_eq!(x.bits, y.bits);
+        assert_eq!(x.entries, y.entries);
+        assert_eq!(x.stale, y.stale);
+        assert_eq!(x.dead, y.dead);
+        assert_eq!(x.rejoined, y.rejoined);
+        assert_eq!(x.dropped_frames, y.dropped_frames);
+        assert_eq!(x.corrupt_frames, y.corrupt_frames);
+    }
+    assert_eq!(a.dead_workers, b.dead_workers);
+    assert_eq!(a.uplink_frame_bytes, b.uplink_frame_bytes);
+    assert_eq!(a.downlink_frame_bytes, b.downlink_frame_bytes);
+}
+
+#[test]
+fn empty_plan_is_bitwise_transparent() {
+    // With the fault plan empty and degradation at Freeze, the entire
+    // fault-tolerance layer (liveness machine, h-share ledger, drain
+    // pass, fold rescale) must be invisible: bitwise identical to the
+    // serial reference, with an all-zero fault ledger.
+    let prob = problem();
+    let cfg = cfg_for(&prob);
+    let iters = 50;
+    let serial = gdsec::algo::gdsec::run(&prob, &cfg, iters);
+    let prob2 = prob.clone();
+    let mut ccfg = CoordConfig::new(cfg, iters);
+    ccfg.problem_name = prob.name.clone();
+    ccfg.fstar = prob.estimate_fstar(2000);
+    ccfg.evaluator = Some(Arc::new(move |t: &[f64]| prob2.value(t)));
+    ccfg.quorum = Quorum::All;
+    ccfg.stale_window = 1;
+    ccfg.faults = FaultPlan::default();
+    ccfg.degrade = DegradePolicy::Freeze;
+    let out = Coordinator::spawn(ccfg, prob.d, native_factories(&prob)).run();
+    assert_eq!(serial.rows.len(), out.trace.rows.len());
+    for (s, d) in serial.rows.iter().zip(out.trace.rows.iter()) {
+        assert_eq!(s.fval.to_bits(), d.fval.to_bits(), "transparency broken at iter {}", s.iter);
+        assert_eq!(s.bits, d.bits);
+        assert_eq!(d.dead, 0);
+        assert_eq!(d.rejoined, 0);
+        assert_eq!(d.dropped_frames, 0);
+        assert_eq!(d.corrupt_frames, 0);
+    }
+    assert!(out.dead_workers.is_empty());
+}
+
+#[test]
+fn renormalize_survives_permanent_minority_crash() {
+    // Renormalize: a permanently-crashed worker is fully retired — its
+    // parked updates evicted, its h-share withdrawn — and the survivors'
+    // aggregate is rescaled by M/live. The run keeps converging on the
+    // surviving shards' objective direction, and the dead level sticks.
+    let prob = problem();
+    let mut workers = vec![WorkerFaults::default(); 3];
+    workers[1].crash_at = Some(5);
+    let plan = FaultPlan { workers, ..FaultPlan::default() };
+    let out = run_chaos(&prob, 60, plan, Quorum::All, 1, DegradePolicy::Renormalize, 1);
+    assert_eq!(out.dead_workers, vec![1]);
+    assert_eq!(out.trace.rows.last().unwrap().dead, 1);
+    assert_eq!(out.trace.rows.last().unwrap().rejoined, 0);
+    let errs = out.trace.errors();
+    assert!(errs.last().unwrap().is_finite());
+    // f* is the full-problem optimum, which 2 of 3 shards cannot reach
+    // exactly — but the error must still shrink hard from f(0).
+    assert!(
+        errs.last().unwrap() < &(errs[0] * 0.5),
+        "renormalized survivors stalled: {} -> {}",
+        errs[0],
+        errs.last().unwrap()
+    );
+}

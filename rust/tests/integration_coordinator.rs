@@ -1,15 +1,22 @@
 //! Integration tests: the threaded coordinator must reproduce the serial
 //! GD-SEC reference bit-for-bit (in synchronous mode — pinned with the
 //! quorum explicitly at `All`, with and without injected delays, so the
-//! round state machine refactor cannot drift), survive worker failures,
-//! fold stale updates under quorum cuts, and account bytes exactly.
+//! round state machine refactor cannot drift), survive worker crashes and
+//! re-admit restarted workers, fold stale updates under quorum cuts, and
+//! account bytes exactly.
+//!
+//! Tests that pin exact trajectories set `cfg.faults`/`cfg.degrade`
+//! explicitly (or go through `run_native_opts`, which pins them), so the
+//! CI fault matrix (`GDSEC_FAULTS=...`) cannot perturb them; the
+//! `run_native` tests deliberately inherit the ambient fault environment
+//! and must stay correct under it.
 
 use gdsec::algo::gdsec::{GdSecConfig, Xi};
 use gdsec::coordinator::round::Quorum;
 use gdsec::coordinator::scheduler::Scheduler;
-use gdsec::coordinator::transport::DelayPlan;
-use gdsec::coordinator::worker::{FailurePlan, GradProvider, NativeProvider, ProviderFactory};
-use gdsec::coordinator::{run_native_opts, CoordConfig, Coordinator};
+use gdsec::coordinator::transport::{DelayPlan, FaultPlan, WorkerFaults};
+use gdsec::coordinator::worker::{GradProvider, NativeProvider, ProviderFactory};
+use gdsec::coordinator::{run_native_opts, CoordConfig, Coordinator, DegradePolicy};
 use gdsec::data::synthetic;
 use gdsec::objectives::Problem;
 use std::sync::Arc;
@@ -26,6 +33,26 @@ fn cfg_for(prob: &Problem) -> GdSecConfig {
         xi: Xi::Uniform(40.0),
         ..Default::default()
     }
+}
+
+fn native_factories(prob: &Problem) -> Vec<ProviderFactory> {
+    prob.locals
+        .iter()
+        .map(|l| {
+            let local = l.clone();
+            Box::new(move || Box::new(NativeProvider::new(local)) as Box<dyn GradProvider>)
+                as ProviderFactory
+        })
+        .collect()
+}
+
+/// A fault plan crashing one worker (and optionally restarting it),
+/// everything else fault-free.
+fn crash_plan(m: usize, w: usize, crash_at: u32, restart_at: Option<u32>) -> FaultPlan {
+    let mut workers = vec![WorkerFaults::default(); m];
+    workers[w].crash_at = Some(crash_at);
+    workers[w].restart_at = restart_at;
+    FaultPlan { workers, ..FaultPlan::default() }
 }
 
 #[test]
@@ -135,20 +162,10 @@ fn multi_round_window_folds_aged_and_bounds_age() {
     // converges, and the trace's cumulative age histogram agrees with
     // the per-round metrics.
     let prob = problem();
-    let m = prob.m();
     let cfg = cfg_for(&prob);
     let iters = 80;
     let fstar = prob.estimate_fstar(2000);
-    let factories: Vec<ProviderFactory> = prob
-        .locals
-        .iter()
-        .map(|l| {
-            let local = l.clone();
-            Box::new(move || Box::new(NativeProvider::new(local)) as Box<dyn GradProvider>)
-                as ProviderFactory
-        })
-        .collect();
-    let failures = vec![FailurePlan::default(); m];
+    let factories = native_factories(&prob);
     let prob2 = prob.clone();
     let mut ccfg = CoordConfig::new(cfg, iters);
     ccfg.problem_name = prob.name.clone();
@@ -157,7 +174,9 @@ fn multi_round_window_folds_aged_and_bounds_age() {
     ccfg.quorum = Quorum::Count(2);
     ccfg.delay = DelayPlan::PerWorker(vec![1, 1, 900]);
     ccfg.stale_window = 2;
-    let out = Coordinator::spawn(ccfg, prob.d, factories, failures).run();
+    ccfg.faults = FaultPlan::default(); // pin: exact fold/age assertions
+    ccfg.degrade = DegradePolicy::Freeze;
+    let out = Coordinator::spawn(ccfg, prob.d, factories).run();
 
     // Every fold is the straggler's, at delivery age 2 (its 899-unit
     // excess spans far more than one 1-unit round, clamped to S = 2).
@@ -187,25 +206,15 @@ fn multi_round_window_folds_aged_and_bounds_age() {
 
 #[test]
 fn quorum_dead_worker_mid_run_keeps_converging() {
-    // Failure injection ON TOP of quorum rounds: worker 1 exceeds
-    // `dead_after` strikes mid-run; the round machine shrinks the quorum
-    // to the live fleet and keeps folding the remaining straggler's
-    // stale updates.
+    // Failure injection ON TOP of quorum rounds: worker 1 crashes (no
+    // restart) and exceeds `dead_after` strikes mid-run; the round
+    // machine shrinks the quorum to the live fleet and keeps folding the
+    // remaining straggler's stale updates.
     let prob = problem();
     let m = prob.m();
     let cfg = cfg_for(&prob);
     let fstar = prob.estimate_fstar(2000);
-    let factories: Vec<ProviderFactory> = prob
-        .locals
-        .iter()
-        .map(|l| {
-            let local = l.clone();
-            Box::new(move || Box::new(NativeProvider::new(local)) as Box<dyn GradProvider>)
-                as ProviderFactory
-        })
-        .collect();
-    let mut failures = vec![FailurePlan::default(); m];
-    failures[1] = FailurePlan { silent_from_round: Some(10) };
+    let factories = native_factories(&prob);
     let prob2 = prob.clone();
     let mut ccfg = CoordConfig::new(cfg, 60);
     ccfg.recv_timeout = Duration::from_millis(200);
@@ -215,13 +224,102 @@ fn quorum_dead_worker_mid_run_keeps_converging() {
     ccfg.evaluator = Some(Arc::new(move |t: &[f64]| prob2.value(t)));
     ccfg.quorum = Quorum::Fraction(0.5);
     ccfg.delay = DelayPlan::PerWorker(vec![0, 0, 50]);
-    let out = Coordinator::spawn(ccfg, prob.d, factories, failures).run();
+    ccfg.faults = crash_plan(m, 1, 10, None);
+    ccfg.degrade = DegradePolicy::Freeze;
+    let out = Coordinator::spawn(ccfg, prob.d, factories).run();
     assert_eq!(out.dead_workers, vec![1]);
     let errs = out.trace.errors();
     assert!(errs.last().unwrap().is_finite());
     assert!(errs.last().unwrap() < &errs[2], "no progress after failure");
     // Quorum cuts still happened and stale updates still folded.
     assert!(out.trace.total_stale() >= 1, "quorum machine stopped folding");
+    // The trace's dead column saw the death and never a rejoin.
+    assert_eq!(out.trace.rows.last().unwrap().dead, 1);
+    assert_eq!(out.trace.rows.last().unwrap().rejoined, 0);
+}
+
+#[test]
+fn quorum_count_clamps_to_live_fleet() {
+    // Regression: a fixed Count(M) quorum must clamp to the live worker
+    // count once a worker dies — otherwise every post-death round would
+    // wait out the full timeout for a reply that can never come (and
+    // with Count > live the cut could never fire at all).
+    let prob = problem();
+    let m = prob.m();
+    let cfg = cfg_for(&prob);
+    let fstar = prob.estimate_fstar(2000);
+    let factories = native_factories(&prob);
+    let prob2 = prob.clone();
+    let mut ccfg = CoordConfig::new(cfg, 40);
+    ccfg.recv_timeout = Duration::from_millis(200);
+    ccfg.dead_after = 1;
+    ccfg.problem_name = prob.name.clone();
+    ccfg.fstar = fstar;
+    ccfg.evaluator = Some(Arc::new(move |t: &[f64]| prob2.value(t)));
+    ccfg.quorum = Quorum::Count(m); // full-fleet quorum, then one dies
+    ccfg.faults = crash_plan(m, 1, 5, None);
+    ccfg.degrade = DegradePolicy::Freeze;
+    let t0 = std::time::Instant::now();
+    let out = Coordinator::spawn(ccfg, prob.d, factories).run();
+    assert_eq!(out.dead_workers, vec![1]);
+    // The survivors' rounds kept stepping: progress after the death.
+    let errs = out.trace.errors();
+    assert!(errs.last().unwrap().is_finite());
+    assert!(errs.last().unwrap() < &errs[4], "no progress after the quorum shrank");
+    // And they kept stepping FAST: only the single death round pays a
+    // timeout. 35 post-death rounds at 200 ms each would take 7 s.
+    assert!(
+        t0.elapsed() < Duration::from_secs(5),
+        "post-death rounds still waiting on the dead worker"
+    );
+}
+
+#[test]
+fn crash_restart_readmits_with_ec_reset() {
+    // The full fault → recovery arc, deterministically scripted: worker 1
+    // crashes at round 3, is declared dead, restarts at round 6, announces
+    // itself with a `Join`, and is re-admitted — the server retires its
+    // error-correction share and the worker re-enrolls with a fresh full
+    // update. The run must end with an empty dead list, exactly one
+    // rejoin on the books, and real convergence.
+    let prob = problem();
+    let m = prob.m();
+    let cfg = cfg_for(&prob);
+    let iters = 40;
+    let fstar = prob.estimate_fstar(2000);
+    let factories = native_factories(&prob);
+    let prob2 = prob.clone();
+    let mut ccfg = CoordConfig::new(cfg, iters);
+    ccfg.recv_timeout = Duration::from_millis(300);
+    ccfg.dead_after = 1;
+    ccfg.problem_name = prob.name.clone();
+    ccfg.fstar = fstar;
+    ccfg.evaluator = Some(Arc::new(move |t: &[f64]| prob2.value(t)));
+    ccfg.quorum = Quorum::All;
+    ccfg.faults = crash_plan(m, 1, 3, Some(6));
+    ccfg.degrade = DegradePolicy::Freeze;
+    let out = Coordinator::spawn(ccfg, prob.d, factories).run();
+
+    // Recovered: dead while down, alive at the end.
+    assert!(out.dead_workers.is_empty(), "restarted worker never re-admitted");
+    let last = out.trace.rows.last().unwrap();
+    assert_eq!(last.rejoined, 1, "exactly one Join handshake expected");
+    assert_eq!(last.dead, 0);
+    assert!(
+        out.trace.rows.iter().any(|r| r.dead == 1),
+        "the crash never showed up in the dead column"
+    );
+    assert_eq!(out.rounds.iter().map(|r| r.rejoined).sum::<u64>(), 1);
+
+    // The outage is 3 rounds of one worker in 40 — convergence survives.
+    let errs = out.trace.errors();
+    assert!(errs.last().unwrap().is_finite());
+    assert!(
+        errs.last().unwrap() < &(errs[0] * 0.5),
+        "{} -> {}",
+        errs[0],
+        errs.last().unwrap()
+    );
 }
 
 #[test]
@@ -237,16 +335,7 @@ fn adaptive_wire_same_trajectory_tagged_bits() {
     let iters = 30;
     let fstar = prob.estimate_fstar(2000);
     let spawn_with = |wire: gdsec::coordinator::protocol::WireFormat| {
-        let factories: Vec<ProviderFactory> = prob
-            .locals
-            .iter()
-            .map(|l| {
-                let local = l.clone();
-                Box::new(move || Box::new(NativeProvider::new(local)) as Box<dyn GradProvider>)
-                    as ProviderFactory
-            })
-            .collect();
-        let failures = vec![FailurePlan::default(); prob.m()];
+        let factories = native_factories(&prob);
         let prob2 = prob.clone();
         let mut ccfg = CoordConfig::new(cfg.clone(), iters);
         ccfg.problem_name = prob.name.clone();
@@ -254,7 +343,9 @@ fn adaptive_wire_same_trajectory_tagged_bits() {
         ccfg.evaluator = Some(Arc::new(move |t: &[f64]| prob2.value(t)));
         ccfg.wire = wire;
         ccfg.quorum = Quorum::All; // pin: this test compares wire formats
-        Coordinator::spawn(ccfg, prob.d, factories, failures).run()
+        ccfg.faults = FaultPlan::default(); // pin: bitwise comparison
+        ccfg.degrade = DegradePolicy::Freeze;
+        Coordinator::spawn(ccfg, prob.d, factories).run()
     };
     let sparse = spawn_with(gdsec::coordinator::protocol::WireFormat::Sparse);
     let adaptive = spawn_with(gdsec::coordinator::protocol::WireFormat::Adaptive);
@@ -293,6 +384,11 @@ fn adaptive_wire_same_trajectory_tagged_bits() {
 
 #[test]
 fn uplink_frame_bytes_cover_payload_plus_headers() {
+    // Runs under the ambient environment ON PURPOSE: the CI fault matrix
+    // re-runs this with crash/restart faults injected, and the identity
+    // must still hold — dropped, corrupted, drained, and `Join` frames
+    // are all charged (payload or overhead), so sent bytes and accounted
+    // bits never diverge.
     let prob = problem();
     let cfg = cfg_for(&prob);
     let out = gdsec::coordinator::run_native(&prob, cfg, 20, Scheduler::All);
@@ -323,6 +419,9 @@ fn round_robin_partial_participation() {
         errs[0],
         errs.last().unwrap()
     );
+    // No worker is dead at the END: fault-free runs never kill anyone,
+    // and the CI fault matrix's crash=1@3,restart=1@6 must finish with
+    // the worker re-admitted.
     assert!(out.dead_workers.is_empty());
 }
 
@@ -332,18 +431,7 @@ fn worker_failure_tolerated() {
     let m = prob.m();
     let cfg = cfg_for(&prob);
     let fstar = prob.estimate_fstar(2000);
-    let factories: Vec<ProviderFactory> = prob
-        .locals
-        .iter()
-        .map(|l| {
-            let local = l.clone();
-            Box::new(move || Box::new(NativeProvider::new(local)) as Box<dyn GradProvider>)
-                as ProviderFactory
-        })
-        .collect();
-    // Worker 1 goes silent from round 10.
-    let mut failures = vec![FailurePlan::default(); m];
-    failures[1] = FailurePlan { silent_from_round: Some(10) };
+    let factories = native_factories(&prob);
     let prob2 = prob.clone();
     let mut ccfg = CoordConfig::new(cfg, 60);
     ccfg.recv_timeout = Duration::from_millis(200);
@@ -351,7 +439,10 @@ fn worker_failure_tolerated() {
     ccfg.problem_name = prob.name.clone();
     ccfg.fstar = fstar;
     ccfg.evaluator = Some(Arc::new(move |t: &[f64]| prob2.value(t)));
-    let out = Coordinator::spawn(ccfg, prob.d, factories, failures).run();
+    // Worker 1 crashes at round 10 and never comes back.
+    ccfg.faults = crash_plan(m, 1, 10, None);
+    ccfg.degrade = DegradePolicy::Freeze;
+    let out = Coordinator::spawn(ccfg, prob.d, factories).run();
     assert_eq!(out.dead_workers, vec![1]);
     // Run completes and the survivors keep optimizing.
     let errs = out.trace.errors();
@@ -363,22 +454,16 @@ fn worker_failure_tolerated() {
 fn all_workers_fail_run_still_terminates() {
     let prob = problem();
     let m = prob.m();
-    let factories: Vec<ProviderFactory> = prob
-        .locals
-        .iter()
-        .map(|l| {
-            let local = l.clone();
-            Box::new(move || Box::new(NativeProvider::new(local)) as Box<dyn GradProvider>)
-                as ProviderFactory
-        })
-        .collect();
-    let failures = vec![FailurePlan { silent_from_round: Some(1) }; m];
+    let factories = native_factories(&prob);
+    let workers = vec![WorkerFaults { crash_at: Some(1), ..WorkerFaults::default() }; m];
     let prob2 = prob.clone();
     let mut ccfg = CoordConfig::new(cfg_for(&prob), 10);
     ccfg.recv_timeout = Duration::from_millis(100);
     ccfg.problem_name = prob.name.clone();
     ccfg.evaluator = Some(Arc::new(move |t: &[f64]| prob2.value(t)));
-    let out = Coordinator::spawn(ccfg, prob.d, factories, failures).run();
+    ccfg.faults = FaultPlan { workers, ..FaultPlan::default() };
+    ccfg.degrade = DegradePolicy::Freeze;
+    let out = Coordinator::spawn(ccfg, prob.d, factories).run();
     assert_eq!(out.dead_workers.len(), m);
     // θ never moves: every recorded objective equals f(0).
     let f0 = out.trace.rows[0].fval;

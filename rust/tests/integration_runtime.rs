@@ -10,7 +10,8 @@
 
 use gdsec::algo::gdsec::{GdSecConfig, WorkerState, Xi};
 use gdsec::coordinator::scheduler::Scheduler;
-use gdsec::coordinator::worker::{FailurePlan, GradProvider, ProviderFactory};
+use gdsec::coordinator::transport::FaultPlan;
+use gdsec::coordinator::worker::{GradProvider, ProviderFactory};
 use gdsec::coordinator::{CoordConfig, Coordinator};
 use gdsec::data::{synthetic, Features};
 use gdsec::objectives::{LocalObjective, ObjectiveKind, Problem};
@@ -197,8 +198,8 @@ fn coordinator_runs_on_xla_engine_end_to_end() {
     ccfg.problem_name = prob.name.clone();
     ccfg.fstar = prob.estimate_fstar(2000);
     ccfg.evaluator = Some(Arc::new(move |t: &[f64]| prob2.value(t)));
-    let failures = vec![FailurePlan::default(); prob.m()];
-    let out = Coordinator::spawn(ccfg, prob.d, factories, failures).run();
+    ccfg.faults = FaultPlan::default(); // pin: tracks the native run
+    let out = Coordinator::spawn(ccfg, prob.d, factories).run();
 
     let native = gdsec::algo::gdsec::run(&prob, &gd_cfg, iters);
     assert_eq!(out.trace.rows.len(), native.rows.len());
