@@ -1,0 +1,368 @@
+//! Server saturation bench: update-absorption throughput of the
+//! coordinate-sharded server fold (custom harness — no criterion
+//! offline).
+//!
+//! Measures how fast the server absorbs a round of admitted
+//! [`SparseUpdate`]s at fixed model dimension (d = 262144): the full
+//! per-round server work — zero/stage the aggregate, fold every update
+//! through the persistent [`ShardPlan`], step θ/h, book the per-worker
+//! h-share ledgers — swept over worker count (M ∈ {4, 16, 64} synthetic
+//! providers) and update density (nnz ∈ {256, 4096, 32768}). Reported
+//! as updates/sec and MB/s of absorbed wire traffic (decoded payload
+//! bytes per round / round time).
+//!
+//! A verbatim replica of the pre-shard `apply_round_blocked` (one column
+//! block per pool thread, per-(block, update) `add_range_into` binary
+//! search, post-apply full-scan `book_shares`) is timed at M = 64 as the
+//! seed baseline; `server_sharded_speedup_m64*` context keys track the
+//! ratio. Before any timing, both paths are checked for BITWISE parity
+//! on θ, h, agg, and the ledgers — the shard plan must be a pure
+//! reorganization of the same arithmetic.
+//!
+//! Results are printed AND written to `BENCH_server.json` at the repo
+//! root (override with `GDSEC_BENCH_OUT`), schema `gdsec-bench-v1`; see
+//! EXPERIMENTS.md §Server saturation. Set `GDSEC_BENCH_QUICK=1` for the
+//! CI smoke run (same keys, shorter timing windows). `GDSEC_SHARDS` and
+//! `GDSEC_THREADS` steer the plan/pool exactly as in the coordinator.
+
+use gdsec::algo::gdsec::GdSecConfig;
+use gdsec::compress::{self, SparseUpdate};
+use gdsec::coordinator::round::StaleUpdate;
+use gdsec::linalg;
+use gdsec::util::bench::{self, BenchStats, Bencher};
+use gdsec::util::json::Json;
+use gdsec::util::pool::Pool;
+use gdsec::util::rng::Pcg64;
+use gdsec::util::shard::{ShardApply, ShardPlan};
+use std::path::PathBuf;
+
+/// The model dimension for every sweep point (quick mode included, so
+/// the JSON keys stay identical run-over-run): 2 MiB of f64 per model
+/// buffer — large enough that the pre-shard fold's agg scatter misses
+/// L1/L2 while the sharded fold's slices stay cache-resident.
+const DIM: usize = 1 << 18;
+
+/// Pre-PR server fold, replicated verbatim from the coordinator before
+/// the shard plan: per-round `Vec<Block>` collect, per-(block, update)
+/// `add_range_into` (binary search + scan), blocks cut one per thread.
+#[allow(clippy::too_many_arguments)]
+fn seed_apply_round_blocked(
+    theta: &mut [f64],
+    h: &mut [f64],
+    agg: &mut [f64],
+    stale: &[StaleUpdate],
+    updates: &[Option<SparseUpdate>],
+    cfg: &GdSecConfig,
+    fold_scale: f64,
+    pool: &Pool,
+) {
+    let d = theta.len();
+    if d == 0 {
+        return;
+    }
+    struct Block<'a> {
+        j0: usize,
+        theta: &'a mut [f64],
+        h: &'a mut [f64],
+        agg: &'a mut [f64],
+    }
+    let chunk = pool.block_width(d);
+    let mut blocks: Vec<Block<'_>> = theta
+        .chunks_mut(chunk)
+        .zip(h.chunks_mut(chunk))
+        .zip(agg.chunks_mut(chunk))
+        .enumerate()
+        .map(|(b, ((tc, hc), ac))| Block { j0: b * chunk, theta: tc, h: hc, agg: ac })
+        .collect();
+    pool.scatter(&mut blocks, |_, blk| {
+        linalg::zero(blk.agg);
+        for s in stale {
+            s.update.add_range_into(blk.j0, blk.agg);
+        }
+        for u in updates.iter().flatten() {
+            u.add_range_into(blk.j0, blk.agg);
+        }
+        if fold_scale != 1.0 {
+            for v in blk.agg.iter_mut() {
+                *v *= fold_scale;
+            }
+        }
+        if cfg.state_variable {
+            for j in 0..blk.theta.len() {
+                blk.theta[j] -= cfg.alpha * (blk.h[j] + blk.agg[j]);
+                blk.h[j] += cfg.beta * blk.agg[j];
+            }
+        } else {
+            for j in 0..blk.theta.len() {
+                blk.theta[j] -= cfg.alpha * blk.agg[j];
+            }
+        }
+    });
+}
+
+/// Pre-PR ledger booking: a post-apply pass over every update's full
+/// index list (replicated from the removed `book_shares`).
+fn seed_book_shares(
+    h_shares: &mut [Vec<f64>],
+    bs: f64,
+    due: &[StaleUpdate],
+    updates: &[Option<SparseUpdate>],
+) {
+    let mut book_one = |share: &mut [f64], u: &SparseUpdate| {
+        for (&ix, &v) in u.idx.iter().zip(u.val.iter()) {
+            share[ix as usize] += bs * v as f64;
+        }
+    };
+    for s in due {
+        book_one(&mut h_shares[s.worker], &s.update);
+    }
+    for (w, u) in updates.iter().enumerate() {
+        if let Some(u) = u {
+            book_one(&mut h_shares[w], u);
+        }
+    }
+}
+
+/// One synthetic provider's admitted update: `nnz` strictly increasing
+/// indices spread evenly over `[0, d)` with per-slot jitter (stride
+/// sampling keeps every shard populated, like a censored-gradient wire
+/// image at this density).
+fn synthetic_update(rng: &mut Pcg64, d: usize, nnz: usize) -> SparseUpdate {
+    let step = d / nnz;
+    assert!(step >= 1, "nnz must divide into d");
+    let mut u = SparseUpdate::empty(d);
+    for i in 0..nnz {
+        u.idx.push((i * step + rng.index(step)) as u32);
+        u.val.push((rng.normal() * 1e-6) as f32);
+    }
+    u
+}
+
+/// Static context keys per sweep point (the artifact schema never
+/// depends on which mode ran).
+fn ups_key(m: usize, nnz: usize) -> &'static str {
+    match (m, nnz) {
+        (4, 256) => "server_updates_per_sec_m4_nnz256",
+        (4, 4096) => "server_updates_per_sec_m4_nnz4096",
+        (4, 32768) => "server_updates_per_sec_m4_nnz32768",
+        (16, 256) => "server_updates_per_sec_m16_nnz256",
+        (16, 4096) => "server_updates_per_sec_m16_nnz4096",
+        (16, 32768) => "server_updates_per_sec_m16_nnz32768",
+        (64, 256) => "server_updates_per_sec_m64_nnz256",
+        (64, 4096) => "server_updates_per_sec_m64_nnz4096",
+        (64, 32768) => "server_updates_per_sec_m64_nnz32768",
+        _ => unreachable!("unexpected sweep point"),
+    }
+}
+
+fn mbps_key(m: usize, nnz: usize) -> &'static str {
+    match (m, nnz) {
+        (4, 256) => "server_mbps_m4_nnz256",
+        (4, 4096) => "server_mbps_m4_nnz4096",
+        (4, 32768) => "server_mbps_m4_nnz32768",
+        (16, 256) => "server_mbps_m16_nnz256",
+        (16, 4096) => "server_mbps_m16_nnz4096",
+        (16, 32768) => "server_mbps_m16_nnz32768",
+        (64, 256) => "server_mbps_m64_nnz256",
+        (64, 4096) => "server_mbps_m64_nnz4096",
+        (64, 32768) => "server_mbps_m64_nnz32768",
+        _ => unreachable!("unexpected sweep point"),
+    }
+}
+
+fn speedup_key(nnz: usize) -> &'static str {
+    match nnz {
+        256 => "server_sharded_speedup_m64_nnz256",
+        4096 => "server_sharded_speedup_m64_nnz4096",
+        32768 => "server_sharded_speedup_m64_nnz32768",
+        _ => unreachable!("unexpected sweep point"),
+    }
+}
+
+fn out_path() -> PathBuf {
+    if let Ok(p) = std::env::var("GDSEC_BENCH_OUT") {
+        return PathBuf::from(p);
+    }
+    // rust/ -> repo root
+    let manifest = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+    manifest.parent().unwrap_or(&manifest).join("BENCH_server.json")
+}
+
+fn main() {
+    let b = Bencher::from_env();
+    let quick = std::env::var("GDSEC_BENCH_QUICK").ok().as_deref() == Some("1");
+    let pool = Pool::from_env();
+    let cfg = GdSecConfig { alpha: 1e-3, beta: 0.01, ..Default::default() };
+    let mut plan = ShardPlan::new();
+    plan.ensure(DIM, &pool);
+    let mut reports: Vec<BenchStats> = Vec::new();
+    let mut context: Vec<(&str, Json)> = vec![
+        ("bench", Json::str("server_saturation")),
+        ("quick", Json::Bool(quick)),
+        ("threads", Json::num(pool.threads() as f64)),
+        ("shards", Json::num(plan.shards() as f64)),
+        ("dim", Json::num(DIM as f64)),
+    ];
+
+    let mut speedup_product = 1.0f64;
+    let mut speedup_points = 0usize;
+    for &nnz in &[256usize, 4096, 32768] {
+        let mut baseline_mean_ns = None;
+        for &m in &[4usize, 16, 64] {
+            let mut rng = Pcg64::seeded((m * 1_000_003 + nnz) as u64);
+            let updates: Vec<Option<SparseUpdate>> =
+                (0..m).map(|_| Some(synthetic_update(&mut rng, DIM, nnz))).collect();
+            // Wire bytes absorbed per round: the decoded payload sizes.
+            let mut buf = Vec::new();
+            let mut round_bytes = 0usize;
+            for u in updates.iter().flatten() {
+                buf.clear();
+                compress::encode_sparse(u, &mut buf);
+                round_bytes += buf.len();
+            }
+            let theta0: Vec<f64> = (0..DIM).map(|_| rng.normal() * 0.01).collect();
+            let h0: Vec<f64> = (0..DIM).map(|_| rng.normal() * 1e-3).collect();
+
+            // Bitwise parity gate before any timing: the shard plan must
+            // be a pure reorganization of the seed fold's arithmetic.
+            {
+                let (mut t_a, mut h_a) = (theta0.clone(), h0.clone());
+                let mut agg_a = vec![0.0f64; DIM];
+                let mut sh_a = vec![vec![0.0f64; DIM]; m];
+                seed_apply_round_blocked(
+                    &mut t_a, &mut h_a, &mut agg_a, &[], &updates, &cfg, 1.0, &pool,
+                );
+                seed_book_shares(&mut sh_a, cfg.beta, &[], &updates);
+                let (mut t_b, mut h_b) = (theta0.clone(), h0.clone());
+                let mut agg_b = vec![0.0f64; DIM];
+                let mut sh_b = vec![vec![0.0f64; DIM]; m];
+                plan.fold(
+                    &pool,
+                    updates.iter().enumerate().filter_map(|(w, u)| u.as_ref().map(|u| (w, u))),
+                    ShardApply {
+                        theta: &mut t_b,
+                        h: &mut h_b,
+                        agg: &mut agg_b,
+                        theta_prev: None,
+                        alpha: cfg.alpha,
+                        beta: cfg.beta,
+                        state_variable: true,
+                        fold_scale: 1.0,
+                        staged_agg: false,
+                        shares: Some((&mut sh_b, cfg.beta)),
+                    },
+                );
+                for j in 0..DIM {
+                    assert_eq!(
+                        t_a[j].to_bits(),
+                        t_b[j].to_bits(),
+                        "sharded/seed θ parity broke at {j} (M={m} nnz={nnz})"
+                    );
+                    assert_eq!(h_a[j].to_bits(), h_b[j].to_bits(), "h parity broke at {j}");
+                    assert_eq!(agg_a[j].to_bits(), agg_b[j].to_bits(), "agg parity broke at {j}");
+                }
+                for w in 0..m {
+                    assert_eq!(sh_a[w], sh_b[w], "ledger parity broke at worker {w}");
+                }
+            }
+
+            // --- sharded fold timing ---
+            let mut theta = theta0.clone();
+            let mut h = h0.clone();
+            let mut agg = vec![0.0f64; DIM];
+            let mut h_shares = vec![vec![0.0f64; DIM]; m];
+            let stats = b.run_units(
+                &format!(
+                    "server fold sharded M={m} nnz={nnz} t={} shards={}",
+                    pool.threads(),
+                    plan.shards()
+                ),
+                m as f64,
+                "upd",
+                || {
+                    plan.fold(
+                        &pool,
+                        updates
+                            .iter()
+                            .enumerate()
+                            .filter_map(|(w, u)| u.as_ref().map(|u| (w, u))),
+                        ShardApply {
+                            theta: &mut theta,
+                            h: &mut h,
+                            agg: &mut agg,
+                            theta_prev: None,
+                            alpha: cfg.alpha,
+                            beta: cfg.beta,
+                            state_variable: true,
+                            fold_scale: 1.0,
+                            staged_agg: false,
+                            shares: Some((&mut h_shares, cfg.beta)),
+                        },
+                    );
+                    std::hint::black_box(theta[0]);
+                },
+            );
+            context.push((ups_key(m, nnz), Json::num(stats.throughput().unwrap_or(0.0))));
+            context.push((
+                mbps_key(m, nnz),
+                Json::num(round_bytes as f64 / 1e6 / (stats.mean_ns * 1e-9)),
+            ));
+
+            // --- seed baseline at the saturation point (M = 64) ---
+            if m == 64 {
+                let mut theta_s = theta0.clone();
+                let mut h_s = h0.clone();
+                let mut agg_s = vec![0.0f64; DIM];
+                let mut sh_s = vec![vec![0.0f64; DIM]; m];
+                let seed_stats = b.run_units(
+                    &format!("server fold seed-baseline M={m} nnz={nnz} t={}", pool.threads()),
+                    m as f64,
+                    "upd",
+                    || {
+                        seed_apply_round_blocked(
+                            &mut theta_s,
+                            &mut h_s,
+                            &mut agg_s,
+                            &[],
+                            &updates,
+                            &cfg,
+                            1.0,
+                            &pool,
+                        );
+                        seed_book_shares(&mut sh_s, cfg.beta, &[], &updates);
+                        std::hint::black_box(theta_s[0]);
+                    },
+                );
+                let speedup = seed_stats.mean_ns / stats.mean_ns;
+                context.push((speedup_key(nnz), Json::num(speedup)));
+                speedup_product *= speedup;
+                speedup_points += 1;
+                baseline_mean_ns = Some(seed_stats.mean_ns);
+                reports.push(seed_stats);
+            }
+            reports.push(stats);
+        }
+        if let Some(ns) = baseline_mean_ns {
+            println!("seed baseline M=64 nnz={nnz}: {}", bench::fmt_ns(ns));
+        }
+    }
+    context.push((
+        "server_sharded_speedup_m64",
+        Json::num(speedup_product.powf(1.0 / speedup_points.max(1) as f64)),
+    ));
+
+    println!("\n== server saturation ==");
+    for r in &reports {
+        println!("{}", r.report());
+    }
+    for (k, v) in &context {
+        if let Some(x) = v.as_f64() {
+            println!("{k}: {x:.2}");
+        }
+    }
+    let path = out_path();
+    match bench::write_json(&path, context, &reports) {
+        Ok(()) => println!("bench artifact -> {}", path.display()),
+        Err(e) => eprintln!("could not write {}: {e}", path.display()),
+    }
+}

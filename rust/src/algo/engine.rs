@@ -400,11 +400,16 @@ impl<'p, R: CompressRule> Engine<'p, R> {
             GradMode::Custom => (None, Vec::new()),
         };
         let trace = Trace::new(&rule.name(), &prob.name, fstar);
+        // Pre-build the server's coordinate-shard plan so the first
+        // pooled apply doesn't pay the slot-table build inside the
+        // zero-alloc steady state.
+        let mut server = ServerState::new(d);
+        server.warm_shard_plan(pool);
         Engine {
             prob,
             pool,
             rule,
-            server: ServerState::new(d),
+            server,
             lanes,
             split,
             spans,

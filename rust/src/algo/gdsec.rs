@@ -43,6 +43,7 @@ use crate::compress::{self, SparseUpdate};
 use crate::linalg;
 use crate::objectives::Problem;
 use crate::util::pool::Pool;
+use crate::util::shard::{ShardApply, ShardPlan};
 
 /// Censoring thresholds ξ_i. The paper's experiments report ξ/M; configs
 /// here carry ξ (the threshold used is ξ_i/M · |θ_i diff|).
@@ -253,13 +254,18 @@ impl WorkerState {
     }
 }
 
-/// Server-side state: θ, θ^{k−1}, mirrored h, aggregation scratch.
+/// Server-side state: θ, θ^{k−1}, mirrored h, aggregation scratch, and
+/// the persistent coordinate-shard plan behind
+/// [`apply_round_pooled`](Self::apply_round_pooled).
 #[derive(Debug, Clone)]
 pub struct ServerState {
     pub theta: Vec<f64>,
     pub theta_prev: Vec<f64>,
     pub h: Vec<f64>,
     agg: Vec<f64>,
+    /// Shard boundaries + cut scratch for the pooled apply; empty of
+    /// borrowed state between rounds, so the Clone derive stays sound.
+    plan: ShardPlan,
 }
 
 impl ServerState {
@@ -269,7 +275,16 @@ impl ServerState {
             theta_prev: vec![0.0; d],
             h: vec![0.0; d],
             agg: vec![0.0; d],
+            plan: ShardPlan::new(),
         }
+    }
+
+    /// Pre-build the shard plan for this model's dimension on `pool` so
+    /// the first pooled round doesn't pay the slot-table build inside
+    /// the zero-alloc steady state.
+    pub fn warm_shard_plan(&mut self, pool: &Pool) {
+        let d = self.theta.len();
+        self.plan.ensure(d, pool);
     }
 
     /// θ^k − θ^{k−1} into `out`.
@@ -330,6 +345,39 @@ impl ServerState {
                 self.agg[i] = 0.0;
             }
         }
+    }
+
+    /// [`apply_round`](Self::apply_round), fanned over the persistent
+    /// coordinate-shard plan on `pool` — the engine-side mirror of the
+    /// coordinator's sharded server fold. Same contract as the serial
+    /// apply: `agg` may carry staged stale entries
+    /// ([`fold_update`](Self::fold_update)), the fresh updates fold on
+    /// top in the order `updates` yields them, θ snapshots into θ_prev,
+    /// and `agg` is all-zeros again on return. Per element the operation
+    /// sequence matches the serial loop (fold → step; the snapshot and
+    /// the re-zero touch no other element), so the result is bitwise
+    /// identical at any shard and thread count.
+    pub fn apply_round_pooled<'a, I>(&mut self, cfg: &GdSecConfig, updates: I, pool: &Pool)
+    where
+        I: IntoIterator<Item = (usize, &'a SparseUpdate)>,
+    {
+        let ServerState { theta, theta_prev, h, agg, plan } = self;
+        plan.fold(
+            pool,
+            updates,
+            ShardApply {
+                theta,
+                h,
+                agg,
+                theta_prev: Some(theta_prev),
+                alpha: cfg.alpha,
+                beta: cfg.beta,
+                state_variable: cfg.state_variable,
+                fold_scale: 1.0,
+                staged_agg: true,
+                shares: None,
+            },
+        );
     }
 }
 
@@ -396,11 +444,16 @@ impl CompressRule for GdSecRule {
         _k: usize,
         server: &mut ServerState,
         lanes: &[EngineLane<WorkerLane>],
-        _pool: &Pool,
+        pool: &Pool,
     ) {
-        server.apply_round(
+        server.apply_round_pooled(
             &self.cfg,
-            lanes.iter().filter(|el| el.sent.is_some()).map(|el| &el.lane.up),
+            lanes
+                .iter()
+                .enumerate()
+                .filter(|(_, el)| el.sent.is_some())
+                .map(|(w, el)| (w, &el.lane.up)),
+            pool,
         );
     }
 

@@ -88,6 +88,28 @@ impl SparseUpdate {
         }
     }
 
+    /// Cut this update into per-shard `[lo, hi)` entry subranges for
+    /// `shards` contiguous coordinate ranges of `width` (last shard
+    /// short), appending `shards + 1` offsets to `out`: shard `s` owns
+    /// entries `out[base + s]..out[base + s + 1]`. One pass of
+    /// `partition_point`s over the strictly increasing indices, each
+    /// search restarting from the previous cut — the admission-time
+    /// replacement for the per-block binary search
+    /// [`add_range_into`](Self::add_range_into) pays on every fold.
+    /// Iterating shard `s`'s subrange visits exactly the entries
+    /// `add_range_into(s·width, …)` would, in the same ascending order.
+    pub fn cut_shards(&self, width: usize, shards: usize, out: &mut Vec<u32>) {
+        debug_assert!(width >= 1 && shards >= 1);
+        out.push(0);
+        let mut lo = 0usize;
+        for s in 1..shards {
+            let bound = (s * width).min(self.dim as usize) as u32;
+            lo += self.idx[lo..].partition_point(|&i| i < bound);
+            out.push(lo as u32);
+        }
+        out.push(self.idx.len() as u32);
+    }
+
     /// Densify.
     pub fn to_dense(&self) -> Vec<f64> {
         let mut out = vec![0.0; self.dim as usize];
@@ -430,6 +452,39 @@ mod tests {
             }
             for j in 0..d {
                 assert_eq!(whole[j].to_bits(), blocked[j].to_bits(), "d={d} j={j}");
+            }
+        }
+    }
+
+    #[test]
+    fn cut_shards_matches_add_range_into() {
+        let mut rng = Pcg64::seeded(777);
+        for _ in 0..50 {
+            let d = 1 + rng.index(400);
+            let v: Vec<f64> =
+                (0..d).map(|_| if rng.bernoulli(0.6) { 0.0 } else { rng.normal() }).collect();
+            let u = SparseUpdate::from_dense(&v);
+            let shards = 1 + rng.index(9);
+            let width = d.div_ceil(shards).max(1);
+            let nshards = d.div_ceil(width);
+            let mut cuts = Vec::new();
+            u.cut_shards(width, nshards, &mut cuts);
+            assert_eq!(cuts.len(), nshards + 1);
+            assert_eq!(cuts[0], 0);
+            assert_eq!(*cuts.last().unwrap() as usize, u.nnz());
+            assert!(cuts.windows(2).all(|w| w[0] <= w[1]));
+            for s in 0..nshards {
+                let j0 = s * width;
+                let j1 = (j0 + width).min(d);
+                let mut by_range = vec![0.0f64; j1 - j0];
+                u.add_range_into(j0, &mut by_range);
+                let mut by_cut = vec![0.0f64; j1 - j0];
+                for t in cuts[s] as usize..cuts[s + 1] as usize {
+                    by_cut[u.idx[t] as usize - j0] += u.val[t] as f64;
+                }
+                for (a, b) in by_range.iter().zip(&by_cut) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "d={d} shards={nshards} s={s}");
+                }
             }
         }
     }

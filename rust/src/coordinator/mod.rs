@@ -52,10 +52,10 @@ pub mod worker;
 use crate::algo::gdsec::GdSecConfig;
 use crate::algo::trace::{stale_age_bin, Trace, TraceRow, STALE_AGE_BINS};
 use crate::compress::SparseUpdate;
-use crate::linalg;
 use crate::util::pool::Pool;
+use crate::util::shard::{ShardApply, ShardPlan};
 use protocol::Msg;
-use round::{delivery_age, evict_worker, Admit, Quorum, RoundState, StaleUpdate};
+use round::{delivery_age, evict_worker, split_due, Admit, Quorum, RoundState, StaleUpdate};
 use scheduler::{QuorumController, Scheduler};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -360,30 +360,14 @@ fn readmit(
     }
 }
 
-/// Book β·(scaled) update into one worker's h-share ledger.
+/// Book β·(scaled) update into one worker's h-share ledger — the serial
+/// reference for the sharded fold's in-pass booking (kept as the test
+/// oracle for [`withdraw_share`]; production rounds book through
+/// [`ShardPlan::fold`], one pass over each shard's owned slices).
+#[cfg(test)]
 fn book_one(share: &mut [f64], bs: f64, u: &SparseUpdate) {
     for (&ix, &v) in u.idx.iter().zip(u.val.iter()) {
         share[ix as usize] += bs * v as f64;
-    }
-}
-
-/// Book this round's folded contributions into the per-worker h-share
-/// ledgers, mirroring `h += β·agg` attribution-by-worker (the ledger
-/// tracks sums per worker; it need not be bitwise equal to h, only an
-/// exact record of what [`withdraw_share`] must subtract).
-fn book_shares(
-    h_shares: &mut [Vec<f64>],
-    bs: f64,
-    due: &[StaleUpdate],
-    updates: &[Option<SparseUpdate>],
-) {
-    for s in due {
-        book_one(&mut h_shares[s.worker], bs, &s.update);
-    }
-    for (w, u) in updates.iter().enumerate() {
-        if let Some(u) = u {
-            book_one(&mut h_shares[w], bs, u);
-        }
     }
 }
 
@@ -475,6 +459,13 @@ impl Coordinator {
         // like any frame in the pipe, its bits already charged — the
         // trace's last row reflects the θ the server actually served.
         let mut stale: Vec<StaleUpdate> = Vec::new();
+        // Round-persistent scratch: the due split, the quorum cut's
+        // parked updates, and the coordinate-shard plan all reuse their
+        // capacity across rounds (the zero-alloc steady-state pin covers
+        // this loop).
+        let mut due: Vec<StaleUpdate> = Vec::new();
+        let mut parked: Vec<StaleUpdate> = Vec::new();
+        let mut plan = ShardPlan::new();
 
         let (mut cum_bits, mut cum_tx, mut cum_entries, mut cum_stale) = (0u64, 0u64, 0u64, 0u64);
         let mut cum_stale_ages = [0u64; STALE_AGE_BINS];
@@ -743,7 +734,6 @@ impl Coordinator {
             let cut = rs.cut(k_quorum, &self.cfg.delay);
             metrics.virtual_units = cut.units;
             metrics.late = cut.late.len() as u64;
-            let mut parked: Vec<StaleUpdate> = Vec::new();
             for &w in &cut.late {
                 if let Some(u) = rs.take_update(w) {
                     let age = delivery_age(self.cfg.delay.delay(w, k), cut.units, window);
@@ -751,18 +741,17 @@ impl Coordinator {
                 }
             }
 
-            // Aggregate and step, fanned over contiguous column blocks:
-            // the pool's DUE stale entries (round + age ≤ k) fold first
-            // in (round, worker) order, then this round's on-time
-            // updates in worker-id order — every element sees the same
-            // fixed sequence at any thread count, so with `quorum = All`
-            // (stale always empty) the bits equal the serial loop's
-            // exactly (pinned by the integration tests). Not-yet-due
-            // entries stay in the pool for a later round (with S = 1
-            // everything is due immediately — the PR 4 behavior).
-            stale.sort_by_key(|s| (s.round, s.worker));
-            let (due, pending): (Vec<StaleUpdate>, Vec<StaleUpdate>) =
-                stale.drain(..).partition(|s| (s.round + s.age) as usize <= k);
+            // Aggregate and step, fanned over the coordinate shards: the
+            // pool's DUE stale entries (round + age ≤ k) fold first in
+            // (round, worker) order, then this round's on-time updates
+            // in worker-id order — every element sees the same fixed
+            // sequence at any shard and thread count, so with
+            // `quorum = All` (stale always empty) the bits equal the
+            // serial loop's exactly (pinned by the integration tests).
+            // Not-yet-due entries stay in the pool for a later round
+            // (with S = 1 everything is due immediately — the PR 4
+            // behavior).
+            split_due(&mut stale, k, &mut due);
             debug_assert!(due.iter().all(|s| s.age as usize <= window));
             metrics.stale_folded = due.len() as u64;
             for s in &due {
@@ -779,21 +768,31 @@ impl Coordinator {
             } else {
                 1.0
             };
-            apply_round_blocked(
-                &mut theta,
-                &mut h,
-                &mut agg,
-                &due,
-                rs.updates(),
-                &self.cfg.gdsec,
-                fold_scale,
+            let bs = self.cfg.gdsec.beta * fold_scale;
+            plan.fold(
                 &self.cfg.pool,
+                due.iter()
+                    .map(|s| (s.worker, &s.update))
+                    .chain(
+                        rs.updates()
+                            .iter()
+                            .enumerate()
+                            .filter_map(|(w, u)| u.as_ref().map(|u| (w, u))),
+                    ),
+                ShardApply {
+                    theta: &mut theta,
+                    h: &mut h,
+                    agg: &mut agg,
+                    theta_prev: None,
+                    alpha: self.cfg.gdsec.alpha,
+                    beta: self.cfg.gdsec.beta,
+                    state_variable: sv,
+                    fold_scale,
+                    staged_agg: false,
+                    shares: sv.then_some((&mut h_shares[..], bs)),
+                },
             );
-            if sv {
-                book_shares(&mut h_shares, self.cfg.gdsec.beta * fold_scale, &due, rs.updates());
-            }
             cum_stale += due.len() as u64;
-            stale = pending;
             stale.append(&mut parked);
             metrics.wall_us = t0.elapsed().as_micros() as u64;
             rounds.push(metrics);
@@ -824,75 +823,6 @@ impl Coordinator {
             downlink_frame_bytes: downlink_bytes,
         }
     }
-}
-
-/// The server's per-round work — zero + aggregate the worker updates and
-/// apply θ^{k+1} = θ^k − α(h + Δ̂), h += β·Δ̂ — fanned over contiguous
-/// column blocks of (θ, h, agg). Each block zeroes its agg slice, folds
-/// the stale pool's in-range entries in (round, worker) order, then the
-/// fresh updates' in worker-id order
-/// ([`SparseUpdate::add_range_into`]), rescales the aggregate by
-/// `fold_scale` (1.0 except under [`DegradePolicy::Renormalize`] with
-/// dead workers — the `!= 1.0` guard keeps the fault-free path bitwise
-/// untouched), and steps its θ/h slice, keeping the working set
-/// cache-resident at RCV1 scale. Blocks are cut by the canonical
-/// [`Pool::block_width`] (the same contract as [`Pool::scatter_blocks`];
-/// three zipped slices keep the hand-rolled scatter here). Per element
-/// the operation sequence is identical to the serial loop, so the
-/// trajectory is bit-for-bit thread-count-independent.
-#[allow(clippy::too_many_arguments)]
-fn apply_round_blocked(
-    theta: &mut [f64],
-    h: &mut [f64],
-    agg: &mut [f64],
-    stale: &[StaleUpdate],
-    updates: &[Option<SparseUpdate>],
-    cfg: &GdSecConfig,
-    fold_scale: f64,
-    pool: &Pool,
-) {
-    let d = theta.len();
-    if d == 0 {
-        return;
-    }
-    struct Block<'a> {
-        j0: usize,
-        theta: &'a mut [f64],
-        h: &'a mut [f64],
-        agg: &'a mut [f64],
-    }
-    let chunk = pool.block_width(d);
-    let mut blocks: Vec<Block<'_>> = theta
-        .chunks_mut(chunk)
-        .zip(h.chunks_mut(chunk))
-        .zip(agg.chunks_mut(chunk))
-        .enumerate()
-        .map(|(b, ((tc, hc), ac))| Block { j0: b * chunk, theta: tc, h: hc, agg: ac })
-        .collect();
-    pool.scatter(&mut blocks, |_, blk| {
-        linalg::zero(blk.agg);
-        for s in stale {
-            s.update.add_range_into(blk.j0, blk.agg);
-        }
-        for u in updates.iter().flatten() {
-            u.add_range_into(blk.j0, blk.agg);
-        }
-        if fold_scale != 1.0 {
-            for v in blk.agg.iter_mut() {
-                *v *= fold_scale;
-            }
-        }
-        if cfg.state_variable {
-            for j in 0..blk.theta.len() {
-                blk.theta[j] -= cfg.alpha * (blk.h[j] + blk.agg[j]);
-                blk.h[j] += cfg.beta * blk.agg[j];
-            }
-        } else {
-            for j in 0..blk.theta.len() {
-                blk.theta[j] -= cfg.alpha * blk.agg[j];
-            }
-        }
-    });
 }
 
 /// Shared setup for the native-provider convenience runners: fstar

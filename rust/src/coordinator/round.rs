@@ -184,6 +184,35 @@ pub fn evict_worker(stale: &mut Vec<StaleUpdate>, worker: usize) -> usize {
     before - stale.len()
 }
 
+/// Split the stale pool for round `k`: move every entry whose fold round
+/// `round + age` has arrived into `due` (cleared first), keeping the
+/// rest pooled. The pool is sorted by `(round, worker)` beforehand so
+/// `due` carries the canonical fold order — the per-element accumulation
+/// order the bitwise pin is defined over. The sort is unstable (keys are
+/// unique: a worker parks at most one update per round) and both moves
+/// are in-place swaps, so a warm caller-owned `due` makes the whole
+/// split allocation-free — unlike the `drain(..).partition()` it
+/// replaces, which built two fresh `Vec`s every round.
+pub fn split_due(pool: &mut Vec<StaleUpdate>, k: usize, due: &mut Vec<StaleUpdate>) {
+    pool.sort_unstable_by_key(|s| (s.round, s.worker));
+    due.clear();
+    let mut keep = 0;
+    for i in 0..pool.len() {
+        if (pool[i].round + pool[i].age) as usize <= k {
+            // An empty SparseUpdate holds no heap storage, so the
+            // placeholder costs nothing.
+            due.push(std::mem::replace(
+                &mut pool[i],
+                StaleUpdate { round: 0, worker: 0, age: 0, update: SparseUpdate::empty(0) },
+            ));
+        } else {
+            pool.swap(keep, i);
+            keep += 1;
+        }
+    }
+    pool.truncate(keep);
+}
+
 /// Routing verdict for one admitted reply.
 #[derive(Debug)]
 pub enum Admit {
@@ -371,6 +400,31 @@ mod tests {
         assert_eq!(pool.len(), 1);
         assert_eq!(pool[0].worker, 2);
         assert_eq!(evict_worker(&mut pool, 1), 0);
+    }
+
+    #[test]
+    fn split_due_orders_and_keeps_pending() {
+        let mut pool = vec![
+            StaleUpdate { round: 5, worker: 2, age: 1, update: upd(4, 0) }, // due at 6
+            StaleUpdate { round: 4, worker: 0, age: 2, update: upd(4, 1) }, // due at 6
+            StaleUpdate { round: 5, worker: 1, age: 2, update: upd(4, 2) }, // due at 7
+            StaleUpdate { round: 4, worker: 3, age: 1, update: upd(4, 3) }, // due at 5 (overdue)
+        ];
+        let mut due = vec![StaleUpdate { round: 9, worker: 9, age: 9, update: upd(4, 0) }];
+        split_due(&mut pool, 6, &mut due);
+        // Due entries in (round, worker) order; the stale `due` content
+        // was cleared.
+        let order: Vec<(u32, usize)> = due.iter().map(|s| (s.round, s.worker)).collect();
+        assert_eq!(order, vec![(4, 0), (4, 3), (5, 2)]);
+        assert_eq!(due[1].update.idx, vec![3]);
+        // Pending entry survives with its payload intact.
+        assert_eq!(pool.len(), 1);
+        assert_eq!((pool[0].round, pool[0].worker), (5, 1));
+        assert_eq!(pool[0].update.idx, vec![2]);
+        // Nothing due: pool unchanged, due empty.
+        split_due(&mut pool, 6, &mut due);
+        assert!(due.is_empty());
+        assert_eq!(pool.len(), 1);
     }
 
     #[test]

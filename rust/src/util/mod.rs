@@ -8,6 +8,7 @@ pub mod error;
 pub mod json;
 pub mod pool;
 pub mod rng;
+pub mod shard;
 pub mod tablefmt;
 
 use std::time::Instant;

@@ -342,11 +342,21 @@ impl Pool {
     /// Canonical width of the contiguous blocks this pool fans a
     /// length-`n` range into: one block per thread, last block short.
     /// Every column-blocked kernel in the crate (`scatter_blocks`, the
-    /// coordinator's blocked server apply) derives its chunking from
+    /// coordinator's sharded server apply) derives its chunking from
     /// this ONE function, so the bitwise contract — each element owned
     /// by exactly one block, blocks ascending — is pinned in one place.
     pub fn block_width(&self, n: usize) -> usize {
-        n.div_ceil(self.threads).max(1)
+        Pool::block_width_for(n, self.threads)
+    }
+
+    /// The same canonical chunk-width contract for an arbitrary number
+    /// of parts: `parts` contiguous ascending blocks, last block short,
+    /// every element owned by exactly one block. The coordinate-shard
+    /// planner ([`crate::util::shard::ShardPlan`]) cuts shard boundaries
+    /// with it, which is what decouples shard count from thread count
+    /// without forking the chunking contract.
+    pub fn block_width_for(n: usize, parts: usize) -> usize {
+        n.div_ceil(parts.max(1)).max(1)
     }
 
     /// Fan `f(j0, block)` over the canonical contiguous blocks of `out`

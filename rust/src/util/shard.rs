@@ -1,0 +1,571 @@
+//! Coordinate-sharded server aggregation: the persistent [`ShardPlan`].
+//!
+//! The server's per-round work — zero/stage the aggregate, fold every
+//! admitted [`SparseUpdate`], rescale, step θ/h — is embarrassingly
+//! parallel **by coordinate**: each model coordinate's arithmetic is
+//! independent of every other's. The pre-shard fold exploited that with
+//! one column block per pool thread, but paid a per-round `Vec` of block
+//! handles and a per-(block, update) binary search: every block
+//! re-searched every update's index list to find its in-range run.
+//!
+//! The plan inverts that: shard boundaries are cut ONCE (from the
+//! canonical [`Pool::block_width_for`] contract, so the chunking rules
+//! stay pinned in one place), and each admitted update is cut ONCE into
+//! per-shard `[lo, hi)` entry subranges by a single pass of
+//! `partition_point`s ([`SparseUpdate::cut_shards`]). The fold's shard
+//! lanes then jump straight to their owned slice of every update — no
+//! searches, no per-round allocation (every table lives in the plan and
+//! reuses its capacity), and shard count is decoupled from thread count:
+//! by default shards are sized so each agg slice is L1-resident
+//! ([`DEFAULT_SHARD_COORDS`]), which is what turns the fold's random
+//! scatter-adds into cache-hot writes at large M·nnz. `GDSEC_SHARDS`
+//! overrides the count.
+//!
+//! ## Determinism contract
+//!
+//! Within each shard the staged updates fold in exactly the order the
+//! caller staged them — the coordinator stages due-stale entries in
+//! (round, worker) order, then fresh updates in worker-id order — and
+//! every per-element operation sequence (accumulate, rescale, step) is
+//! identical to the serial reference loop. Since no coordinate's
+//! arithmetic ever crosses a shard boundary, the result is **bitwise
+//! identical at every shard count and every thread count** (pinned by
+//! `tests/prop_parallel_parity.rs` and the coordinator's `Quorum::All`
+//! integration pins).
+
+use crate::compress::SparseUpdate;
+use crate::util::pool::Pool;
+
+/// Target coordinates per shard when neither `GDSEC_SHARDS` nor
+/// [`ShardPlan::with_shards`] pins the count: 4096 f64 aggregate slots ≈
+/// 32 KiB, an L1-resident scatter window. The shard count is
+/// `max(threads, d / this)` so small models still fan one shard per
+/// thread.
+pub const DEFAULT_SHARD_COORDS: usize = 4096;
+
+/// The `GDSEC_SHARDS` override, parsed once per process (the plan calls
+/// this on every rebuild check; caching keeps the steady-state round
+/// free of env-var reads, which allocate).
+fn shards_from_env() -> Option<usize> {
+    static CACHE: std::sync::OnceLock<Option<usize>> = std::sync::OnceLock::new();
+    *CACHE.get_or_init(|| match std::env::var("GDSEC_SHARDS").ok().as_deref() {
+        None | Some("") => None,
+        Some(s) => match s.parse::<usize>() {
+            Ok(n) if n >= 1 => Some(n),
+            _ => panic!("GDSEC_SHARDS must be a positive integer, got {s:?}"),
+        },
+    })
+}
+
+/// One staged update's wire image, borrowed for the duration of a single
+/// [`ShardPlan::fold`] call (staged and consumed inside that call, so
+/// the raw pointers never outlive the caller's borrows).
+#[derive(Debug, Clone, Copy)]
+struct UpdRef {
+    idx: *const u32,
+    val: *const f32,
+    nnz: u32,
+    worker: u32,
+}
+
+// SAFETY: an UpdRef is only dereferenced inside the scatter round of the
+// fold() call that created it, while the caller's `&SparseUpdate`
+// borrows are provably alive (fold holds them through its iterator
+// argument until the scatter barrier clears).
+unsafe impl Send for UpdRef {}
+unsafe impl Sync for UpdRef {}
+
+/// One shard's slot in the fan-out: its index and owned coordinate range.
+#[derive(Debug, Clone, Copy)]
+struct Slot {
+    s: usize,
+    j0: usize,
+    j1: usize,
+}
+
+/// Base pointers of the round's model buffers, shared read-only across
+/// shard lanes; each lane touches only its own `[j0, j1)` range.
+#[derive(Clone, Copy)]
+struct Bufs {
+    theta: *mut f64,
+    h: *mut f64,
+    agg: *mut f64,
+    /// Null when the caller keeps no θ_prev snapshot.
+    prev: *mut f64,
+}
+
+// SAFETY: every shard lane dereferences these only within its disjoint
+// owned range, while the caller's &mut borrows are held across the
+// scatter barrier.
+unsafe impl Send for Bufs {}
+unsafe impl Sync for Bufs {}
+
+/// One worker's h-share ledger base pointer (disjoint-range writes, same
+/// argument as [`Bufs`]).
+#[derive(Debug, Clone, Copy)]
+struct SharePtr(*mut f64);
+
+unsafe impl Send for SharePtr {}
+unsafe impl Sync for SharePtr {}
+
+/// One sharded server round's buffers and scalars — the argument block
+/// of [`ShardPlan::fold`].
+pub struct ShardApply<'a> {
+    /// θ (stepped in place).
+    pub theta: &'a mut [f64],
+    /// The server's state variable h (stepped when `state_variable`).
+    pub h: &'a mut [f64],
+    /// The aggregation buffer. See [`staged_agg`](Self::staged_agg) for
+    /// its two contracts.
+    pub agg: &'a mut [f64],
+    /// When set, each shard snapshots θ into this buffer before stepping
+    /// (the engine's θ_prev bookkeeping); the coordinator passes `None`.
+    pub theta_prev: Option<&'a mut [f64]>,
+    pub alpha: f64,
+    pub beta: f64,
+    pub state_variable: bool,
+    /// Aggregate rescale (1.0 except under renormalizing degradation;
+    /// the `!= 1.0` guard keeps the fault-free path bitwise untouched).
+    pub fold_scale: f64,
+    /// `false` (coordinator contract): `agg` is scratch — each shard
+    /// zeroes its slice first and leaves the scaled aggregate behind.
+    /// `true` (engine contract): `agg` arrives pre-staged (stale entries
+    /// already folded in by [`ServerState::fold_update`]
+    /// (crate::algo::gdsec::ServerState::fold_update)), the fresh
+    /// updates fold on top, and the slice is re-zeroed after the step —
+    /// all-zeros between rounds, exactly the serial `apply_round`
+    /// contract.
+    pub staged_agg: bool,
+    /// Per-worker h-share ledgers plus the booking scale (β·fold_scale):
+    /// each shard books `scale·Δ̂` into its owned slice of the staging
+    /// worker's ledger — the one-pass replacement for the post-apply
+    /// full-dimension `book_shares` rescan. `None` when the state
+    /// variable is off (no ledger exists).
+    pub shares: Option<(&'a mut [Vec<f64>], f64)>,
+}
+
+/// The persistent coordinate-shard plan (see module docs). Build one
+/// next to the model buffers and call [`fold`](Self::fold) once per
+/// round; boundaries, slot table, cut tables, and pointer scratch all
+/// live here and reuse their capacity, so steady-state rounds allocate
+/// nothing (pinned by `tests/alloc_free_round.rs`).
+#[derive(Debug, Clone, Default)]
+pub struct ShardPlan {
+    /// Model dimension the slots were built for (`usize::MAX` = never).
+    d: usize,
+    /// Shard width in coordinates (from [`Pool::block_width_for`]).
+    width: usize,
+    /// The shard count the slots were built for (requested, pre-clamp).
+    built_for: usize,
+    /// Test/bench override: pin the shard count, ignoring `GDSEC_SHARDS`
+    /// and the thread-count default.
+    pinned: Option<usize>,
+    slots: Vec<Slot>,
+    /// Flat per-(update, shard) cut table: update `u`'s shard `s` owns
+    /// entries `cuts[u·(slots+1) + s] .. cuts[u·(slots+1) + s + 1]`.
+    cuts: Vec<u32>,
+    ups: Vec<UpdRef>,
+    share_ptrs: Vec<SharePtr>,
+}
+
+impl ShardPlan {
+    pub fn new() -> ShardPlan {
+        ShardPlan { d: usize::MAX, ..ShardPlan::default() }
+    }
+
+    /// A plan pinned to an explicit shard count (parity tests sweep
+    /// counts; benches pin the sweep axis). `GDSEC_SHARDS` and the
+    /// cache-sized default are both ignored.
+    pub fn with_shards(shards: usize) -> ShardPlan {
+        assert!(shards >= 1, "shard count must be positive");
+        ShardPlan { pinned: Some(shards), ..ShardPlan::new() }
+    }
+
+    /// The number of shard slots the current build fans over (0 before
+    /// the first [`fold`](Self::fold)/[`ensure`](Self::ensure)).
+    pub fn shards(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// (Re)build the shard boundaries for dimension `d` if the plan is
+    /// not already built for it. Precedence for the requested count:
+    /// [`with_shards`](Self::with_shards) pin, then `GDSEC_SHARDS`, then
+    /// `max(threads, d / DEFAULT_SHARD_COORDS)` — one L1-sized slice per
+    /// lane at scale, one shard per thread for small models. Boundaries
+    /// are cut by [`Pool::block_width_for`]; a request beyond `d`
+    /// clamps to `d` single-coordinate shards.
+    pub fn ensure(&mut self, d: usize, pool: &Pool) {
+        let requested = self.pinned.unwrap_or_else(|| {
+            shards_from_env()
+                .unwrap_or_else(|| pool.threads().max(d.div_ceil(DEFAULT_SHARD_COORDS.max(1))))
+        });
+        if self.d == d && self.built_for == requested {
+            return;
+        }
+        self.d = d;
+        self.built_for = requested;
+        self.width = Pool::block_width_for(d, requested);
+        self.slots.clear();
+        let mut j0 = 0;
+        let mut s = 0;
+        while j0 < d {
+            let j1 = (j0 + self.width).min(d);
+            self.slots.push(Slot { s, j0, j1 });
+            j0 = j1;
+            s += 1;
+        }
+    }
+
+    /// Run one sharded server round: stage every `(worker, update)` pair
+    /// from `staged` — cutting each update into per-shard subranges in
+    /// one `partition_point` pass — then fan the fold + rescale + θ/h
+    /// step (+ optional h-share booking) over the shard slots on `pool`.
+    /// Updates fold within each shard in exactly the order `staged`
+    /// yields them, so the caller's (round, worker) order is the
+    /// per-element accumulation order at any shard/thread count.
+    pub fn fold<'u, I>(&mut self, pool: &Pool, staged: I, mut a: ShardApply<'_>)
+    where
+        I: IntoIterator<Item = (usize, &'u SparseUpdate)>,
+    {
+        let d = a.theta.len();
+        debug_assert_eq!(a.h.len(), d);
+        debug_assert_eq!(a.agg.len(), d);
+        if let Some(prev) = &a.theta_prev {
+            debug_assert_eq!(prev.len(), d);
+        }
+        self.ensure(d, pool);
+        self.ups.clear();
+        self.cuts.clear();
+        self.share_ptrs.clear();
+        let nshards = self.slots.len();
+        for (w, u) in staged {
+            debug_assert_eq!(u.dim as usize, d, "staged update dimension mismatch");
+            self.ups.push(UpdRef {
+                idx: u.idx.as_ptr(),
+                val: u.val.as_ptr(),
+                nnz: u.idx.len() as u32,
+                worker: w as u32,
+            });
+            u.cut_shards(self.width, nshards, &mut self.cuts);
+        }
+        if d == 0 {
+            self.ups.clear();
+            self.cuts.clear();
+            return;
+        }
+        let mut book_scale = 0.0;
+        if let Some((shares, scale)) = &mut a.shares {
+            book_scale = *scale;
+            for share in shares.iter_mut() {
+                assert_eq!(share.len(), d, "h-share ledger dimension mismatch");
+                self.share_ptrs.push(SharePtr(share.as_mut_ptr()));
+            }
+            debug_assert!(self.ups.iter().all(|u| (u.worker as usize) < self.share_ptrs.len()));
+        }
+        let bufs = Bufs {
+            theta: a.theta.as_mut_ptr(),
+            h: a.h.as_mut_ptr(),
+            agg: a.agg.as_mut_ptr(),
+            prev: a
+                .theta_prev
+                .as_deref_mut()
+                .map_or(std::ptr::null_mut(), |p| p.as_mut_ptr()),
+        };
+        let stride = nshards + 1;
+        let (alpha, beta) = (a.alpha, a.beta);
+        let (sv, fold_scale, staged_agg) = (a.state_variable, a.fold_scale, a.staged_agg);
+        let ShardPlan { slots, cuts, ups, share_ptrs, .. } = self;
+        let cuts: &[u32] = cuts;
+        let ups: &[UpdRef] = ups;
+        let share_ptrs: &[SharePtr] = share_ptrs;
+        pool.scatter(slots, |_, slot| {
+            let (s, j0, n) = (slot.s, slot.j0, slot.j1 - slot.j0);
+            // SAFETY: this lane owns the disjoint range [j0, j1) of every
+            // buffer; the caller's &mut borrows (and the staged updates'
+            // & borrows) are held across the scatter barrier.
+            unsafe {
+                let agg = std::slice::from_raw_parts_mut(bufs.agg.add(j0), n);
+                if !staged_agg {
+                    crate::linalg::zero(agg);
+                }
+                for (ui, u) in ups.iter().enumerate() {
+                    let lo = cuts[ui * stride + s] as usize;
+                    let hi = cuts[ui * stride + s + 1] as usize;
+                    let idx = std::slice::from_raw_parts(u.idx, u.nnz as usize);
+                    let val = std::slice::from_raw_parts(u.val, u.nnz as usize);
+                    for t in lo..hi {
+                        agg[idx[t] as usize - j0] += val[t] as f64;
+                    }
+                }
+                if fold_scale != 1.0 {
+                    for v in agg.iter_mut() {
+                        *v *= fold_scale;
+                    }
+                }
+                let theta = std::slice::from_raw_parts_mut(bufs.theta.add(j0), n);
+                let h = std::slice::from_raw_parts_mut(bufs.h.add(j0), n);
+                if bufs.prev.is_null() {
+                    if sv {
+                        for j in 0..n {
+                            theta[j] -= alpha * (h[j] + agg[j]);
+                            h[j] += beta * agg[j];
+                        }
+                    } else {
+                        for j in 0..n {
+                            theta[j] -= alpha * agg[j];
+                        }
+                    }
+                } else {
+                    let prev = std::slice::from_raw_parts_mut(bufs.prev.add(j0), n);
+                    if sv {
+                        for j in 0..n {
+                            let t = theta[j];
+                            prev[j] = t;
+                            theta[j] = t - alpha * (h[j] + agg[j]);
+                            h[j] += beta * agg[j];
+                        }
+                    } else {
+                        for j in 0..n {
+                            let t = theta[j];
+                            prev[j] = t;
+                            theta[j] = t - alpha * agg[j];
+                        }
+                    }
+                }
+                if staged_agg {
+                    crate::linalg::zero(agg);
+                }
+                if !share_ptrs.is_empty() {
+                    for (ui, u) in ups.iter().enumerate() {
+                        let lo = cuts[ui * stride + s] as usize;
+                        let hi = cuts[ui * stride + s + 1] as usize;
+                        let idx = std::slice::from_raw_parts(u.idx, u.nnz as usize);
+                        let val = std::slice::from_raw_parts(u.val, u.nnz as usize);
+                        let share = share_ptrs[u.worker as usize].0;
+                        for t in lo..hi {
+                            *share.add(idx[t] as usize) += book_scale * val[t] as f64;
+                        }
+                    }
+                }
+            }
+        });
+        // Drop the borrowed wire images before returning: a plan never
+        // holds pointers past the fold that staged them.
+        self.ups.clear();
+        self.cuts.clear();
+        self.share_ptrs.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sparse(d: usize, entries: &[(u32, f32)]) -> SparseUpdate {
+        let mut u = SparseUpdate::empty(d);
+        for &(i, v) in entries {
+            u.idx.push(i);
+            u.val.push(v);
+        }
+        u
+    }
+
+    #[test]
+    fn fold_matches_serial_reference_across_shard_counts() {
+        let d = 37;
+        let ups = [
+            (1usize, sparse(d, &[(0, 1.5), (7, -2.0), (36, 0.25)])),
+            (0usize, sparse(d, &[(7, 0.5), (8, 1.0), (20, -1.0)])),
+            (2usize, sparse(d, &[(3, 4.0)])),
+        ];
+        let (alpha, beta, fs) = (0.1, 0.3, 1.25);
+        // Serial reference: per-element accumulate → rescale → step.
+        let mut agg_ref = vec![0.0f64; d];
+        for (_, u) in &ups {
+            u.add_into(&mut agg_ref);
+        }
+        for v in agg_ref.iter_mut() {
+            *v *= fs;
+        }
+        let mut theta_ref: Vec<f64> = (0..d).map(|j| j as f64 * 0.01).collect();
+        let mut h_ref = vec![0.05f64; d];
+        let mut shares_ref = vec![vec![0.0f64; d]; 3];
+        for j in 0..d {
+            theta_ref[j] -= alpha * (h_ref[j] + agg_ref[j]);
+            h_ref[j] += beta * agg_ref[j];
+        }
+        for (w, u) in &ups {
+            for (&i, &v) in u.idx.iter().zip(u.val.iter()) {
+                shares_ref[*w][i as usize] += beta * fs * v as f64;
+            }
+        }
+        for shards in [1usize, 2, 5, 37, 64] {
+            for threads in [1usize, 3] {
+                let pool = Pool::new(threads);
+                let mut plan = ShardPlan::with_shards(shards);
+                let mut theta: Vec<f64> = (0..d).map(|j| j as f64 * 0.01).collect();
+                let mut h = vec![0.05f64; d];
+                let mut agg = vec![0.0f64; d];
+                let mut shares = vec![vec![0.0f64; d]; 3];
+                plan.fold(
+                    &pool,
+                    ups.iter().map(|(w, u)| (*w, u)),
+                    ShardApply {
+                        theta: &mut theta,
+                        h: &mut h,
+                        agg: &mut agg,
+                        theta_prev: None,
+                        alpha,
+                        beta,
+                        state_variable: true,
+                        fold_scale: fs,
+                        staged_agg: false,
+                        shares: Some((&mut shares, beta * fs)),
+                    },
+                );
+                assert!(plan.shards() <= shards && plan.shards() >= 1);
+                for j in 0..d {
+                    assert_eq!(theta[j].to_bits(), theta_ref[j].to_bits(), "θ shards={shards}");
+                    assert_eq!(h[j].to_bits(), h_ref[j].to_bits(), "h shards={shards}");
+                    assert_eq!(agg[j].to_bits(), agg_ref[j].to_bits(), "agg shards={shards}");
+                    for w in 0..3 {
+                        assert_eq!(
+                            shares[w][j].to_bits(),
+                            shares_ref[w][j].to_bits(),
+                            "share w={w} shards={shards}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn staged_mode_folds_on_top_and_rezeros() {
+        let d = 10;
+        let u = sparse(d, &[(2, 1.0), (9, -1.0)]);
+        let pool = Pool::new(2);
+        let mut plan = ShardPlan::with_shards(3);
+        let mut theta = vec![1.0f64; d];
+        let mut prev = vec![0.0f64; d];
+        let mut h = vec![0.0f64; d];
+        let mut agg = vec![0.0f64; d];
+        agg[2] = 0.5; // pre-staged stale entry
+        plan.fold(
+            &pool,
+            std::iter::once((0usize, &u)),
+            ShardApply {
+                theta: &mut theta,
+                h: &mut h,
+                agg: &mut agg,
+                theta_prev: Some(&mut prev),
+                alpha: 0.5,
+                beta: 0.25,
+                state_variable: true,
+                fold_scale: 1.0,
+                staged_agg: true,
+                shares: None,
+            },
+        );
+        // agg is re-zeroed (the serial apply_round contract)…
+        assert!(agg.iter().all(|&v| v == 0.0));
+        // …the staged entry folded on top of the fresh update…
+        assert_eq!(theta[2], 1.0 - 0.5 * (0.0 + 1.5));
+        assert_eq!(h[2], 0.25 * 1.5);
+        // …and θ_prev snapshots the pre-step iterate.
+        assert!(prev.iter().all(|&v| v == 1.0));
+    }
+
+    #[test]
+    fn empty_round_still_steps_theta_from_h() {
+        // No updates: with the state variable on, θ still descends along
+        // h (the same contract as the block fold it replaces).
+        let d = 5;
+        let pool = Pool::new(1);
+        let mut plan = ShardPlan::with_shards(2);
+        let mut theta = vec![1.0f64; d];
+        let mut h = vec![0.5f64; d];
+        let mut agg = vec![7.0f64; d]; // stale garbage: scratch mode zeroes it
+        plan.fold(
+            &pool,
+            std::iter::empty(),
+            ShardApply {
+                theta: &mut theta,
+                h: &mut h,
+                agg: &mut agg,
+                theta_prev: None,
+                alpha: 0.1,
+                beta: 0.9,
+                state_variable: true,
+                fold_scale: 1.0,
+                staged_agg: false,
+                shares: None,
+            },
+        );
+        assert!(theta.iter().all(|&t| t == 1.0 - 0.1 * 0.5));
+        assert!(agg.iter().all(|&v| v == 0.0));
+        assert!(h.iter().all(|&v| v == 0.5));
+    }
+
+    #[test]
+    fn zero_dimension_is_a_no_op() {
+        let pool = Pool::new(2);
+        let mut plan = ShardPlan::new();
+        plan.fold(
+            &pool,
+            std::iter::empty(),
+            ShardApply {
+                theta: &mut [],
+                h: &mut [],
+                agg: &mut [],
+                theta_prev: None,
+                alpha: 0.1,
+                beta: 0.9,
+                state_variable: true,
+                fold_scale: 1.0,
+                staged_agg: false,
+                shares: None,
+            },
+        );
+        assert_eq!(plan.shards(), 0);
+    }
+
+    #[test]
+    fn ensure_rebuilds_only_on_change() {
+        let pool = Pool::new(2);
+        let mut plan = ShardPlan::with_shards(4);
+        plan.ensure(100, &pool);
+        assert_eq!(plan.shards(), 4);
+        assert_eq!(plan.width, 25);
+        let before = plan.slots.as_ptr();
+        plan.ensure(100, &pool);
+        assert_eq!(plan.slots.as_ptr(), before, "unchanged ensure must not rebuild");
+        plan.ensure(7, &pool);
+        assert_eq!(plan.shards(), 4);
+        assert_eq!(plan.width, 2);
+        // Requests beyond d clamp to single-coordinate shards.
+        let mut wide = ShardPlan::with_shards(64);
+        wide.ensure(3, &pool);
+        assert_eq!(wide.shards(), 3);
+    }
+
+    #[test]
+    fn default_plan_is_cache_sized_at_scale() {
+        let pool = Pool::new(2);
+        let mut plan = ShardPlan::new();
+        // Small model: one shard per thread (the pre-shard chunking) —
+        // unless GDSEC_SHARDS overrides, in which case just require a
+        // valid cover.
+        plan.ensure(100, &pool);
+        if std::env::var("GDSEC_SHARDS").is_err() {
+            assert_eq!(plan.shards(), 2);
+            // Large model: L1-sized slices.
+            let mut big = ShardPlan::new();
+            big.ensure(1 << 18, &pool);
+            assert_eq!(big.shards(), (1usize << 18) / DEFAULT_SHARD_COORDS);
+            assert!(big.width <= DEFAULT_SHARD_COORDS);
+        }
+        let covered: usize = plan.slots.iter().map(|s| s.j1 - s.j0).sum();
+        assert_eq!(covered, 100);
+    }
+}

@@ -12,6 +12,7 @@ use gdsec::algo::gdsec as gdsec_algo;
 use gdsec::algo::gdsec::{GdSecConfig, GdSecRule, Xi};
 use gdsec::algo::trace::Trace;
 use gdsec::algo::{cgd, gd, iag, qgd, sgdsec, topj};
+use gdsec::compress::SparseUpdate;
 use gdsec::data::{synthetic, Features};
 use gdsec::objectives::{GradSplit, ObjectiveKind, Problem};
 use gdsec::testing::{check_with, PropConfig};
@@ -488,6 +489,206 @@ fn prop_gdsec_nested_schedule_parity_and_states() {
                         || sw.e[i].to_bits() != pw.e[i].to_bits()
                     {
                         return Err(format!("worker {w} state diverged at {i}"));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// A random wire-shaped sparse update: strictly increasing indices,
+/// f32 values (exactly what the coordinator admits off the link).
+fn random_update(rng: &mut Pcg64, d: usize) -> SparseUpdate {
+    let nnz = rng.index(d + 1);
+    let mut picked = rng.sample_indices(d, nnz);
+    picked.sort_unstable();
+    let mut u = SparseUpdate::empty(d);
+    for i in picked {
+        u.idx.push(i as u32);
+        u.val.push((rng.normal() * 2.0) as f32);
+    }
+    u
+}
+
+#[test]
+fn prop_sharded_fold_serial_parity() {
+    // The coordinate-sharded server fold (persistent ShardPlan: per-shard
+    // subrange cuts, fold_scale rescale, θ/h step, in-pass h-share
+    // booking) must be BITWISE identical to the serial reference — plain
+    // `add_into` accumulation in the same staged order, then the scalar
+    // step and ledger loops — over random stale/fresh mixes, for every
+    // shard count in {1, 3, 7}, fold_scale ∈ {1.0, M/live}, and 1 vs 4
+    // threads. Shard boundaries never cross a coordinate, so the cut
+    // count must not leak into a single bit of θ, h, agg, or the ledger.
+    use gdsec::coordinator::round::StaleUpdate;
+    use gdsec::util::shard::{ShardApply, ShardPlan};
+    check_with(
+        PropConfig { cases: 12, seed: 0x5AA2DED },
+        "sharded fold vs serial add_into fold bit parity",
+        |rng| {
+            let d = 1 + rng.index(500);
+            let m = 1 + rng.index(6);
+            let (alpha, beta) = (rng.uniform() * 0.5, rng.uniform() * 0.5);
+            // Random stale mix: 0..=3 due entries in (round, worker)
+            // order, then random fresh updates (some workers silent).
+            let n_stale = rng.index(4);
+            let due: Vec<StaleUpdate> = (0..n_stale)
+                .map(|i| StaleUpdate {
+                    round: 1 + i as u32,
+                    worker: rng.index(m),
+                    age: 1,
+                    update: random_update(rng, d),
+                })
+                .collect();
+            let fresh: Vec<Option<SparseUpdate>> = (0..m)
+                .map(|_| rng.bernoulli(0.7).then(|| random_update(rng, d)))
+                .collect();
+            let theta0: Vec<f64> = (0..d).map(|_| rng.normal()).collect();
+            let h0: Vec<f64> = (0..d).map(|_| rng.normal() * 0.1).collect();
+            let live = 1 + rng.index(m);
+            for fold_scale in [1.0, m as f64 / live as f64] {
+                // Serial reference: accumulate in staged order, rescale,
+                // step, book — scalar loops, no pool, no shards.
+                let mut agg_ref = vec![0.0f64; d];
+                for s in &due {
+                    s.update.add_into(&mut agg_ref);
+                }
+                for u in fresh.iter().flatten() {
+                    u.add_into(&mut agg_ref);
+                }
+                if fold_scale != 1.0 {
+                    for v in agg_ref.iter_mut() {
+                        *v *= fold_scale;
+                    }
+                }
+                let mut theta_ref = theta0.clone();
+                let mut h_ref = h0.clone();
+                for j in 0..d {
+                    theta_ref[j] -= alpha * (h_ref[j] + agg_ref[j]);
+                    h_ref[j] += beta * agg_ref[j];
+                }
+                let bs = beta * fold_scale;
+                let mut shares_ref = vec![vec![0.0f64; d]; m];
+                for s in &due {
+                    for (&i, &v) in s.update.idx.iter().zip(s.update.val.iter()) {
+                        shares_ref[s.worker][i as usize] += bs * v as f64;
+                    }
+                }
+                for (w, u) in fresh.iter().enumerate() {
+                    if let Some(u) = u {
+                        for (&i, &v) in u.idx.iter().zip(u.val.iter()) {
+                            shares_ref[w][i as usize] += bs * v as f64;
+                        }
+                    }
+                }
+                for shards in [1usize, 3, 7] {
+                    for threads in [1usize, 4] {
+                        let pool = Pool::new(threads);
+                        let mut plan = ShardPlan::with_shards(shards);
+                        let mut theta = theta0.clone();
+                        let mut h = h0.clone();
+                        let mut agg = vec![0.0f64; d];
+                        let mut shares = vec![vec![0.0f64; d]; m];
+                        plan.fold(
+                            &pool,
+                            due.iter().map(|s| (s.worker, &s.update)).chain(
+                                fresh
+                                    .iter()
+                                    .enumerate()
+                                    .filter_map(|(w, u)| u.as_ref().map(|u| (w, u))),
+                            ),
+                            ShardApply {
+                                theta: &mut theta,
+                                h: &mut h,
+                                agg: &mut agg,
+                                theta_prev: None,
+                                alpha,
+                                beta,
+                                state_variable: true,
+                                fold_scale,
+                                staged_agg: false,
+                                shares: Some((&mut shares, bs)),
+                            },
+                        );
+                        for j in 0..d {
+                            if theta[j].to_bits() != theta_ref[j].to_bits()
+                                || h[j].to_bits() != h_ref[j].to_bits()
+                                || agg[j].to_bits() != agg_ref[j].to_bits()
+                            {
+                                return Err(format!(
+                                    "θ/h/agg diverged at j={j} (d={d} m={m} shards={shards} \
+                                     threads={threads} scale={fold_scale})"
+                                ));
+                            }
+                        }
+                        for w in 0..m {
+                            for j in 0..d {
+                                if shares[w][j].to_bits() != shares_ref[w][j].to_bits() {
+                                    return Err(format!(
+                                        "h-share ledger diverged at w={w} j={j} \
+                                         (shards={shards} threads={threads})"
+                                    ));
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+            // Engine mode on top: staged agg (stale pre-folded via
+            // fold_update semantics), θ_prev snapshot, no booking — the
+            // serial oracle is ServerState::apply_round itself.
+            {
+                let mut sref = gdsec_algo::ServerState::new(d);
+                sref.theta.copy_from_slice(&theta0);
+                sref.h.copy_from_slice(&h0);
+                let cfg = GdSecConfig { alpha, beta, fstar: Some(0.0), ..Default::default() };
+                for s in &due {
+                    sref.fold_update(&s.update);
+                }
+                sref.apply_round(&cfg, fresh.iter().flatten());
+                for shards in [1usize, 3, 7] {
+                    for threads in [1usize, 4] {
+                        let pool = Pool::new(threads);
+                        let mut plan = ShardPlan::with_shards(shards);
+                        let mut theta = theta0.clone();
+                        let mut prev = vec![0.0f64; d];
+                        let mut h = h0.clone();
+                        let mut agg = vec![0.0f64; d];
+                        for s in &due {
+                            s.update.add_into(&mut agg);
+                        }
+                        plan.fold(
+                            &pool,
+                            fresh
+                                .iter()
+                                .enumerate()
+                                .filter_map(|(w, u)| u.as_ref().map(|u| (w, u))),
+                            ShardApply {
+                                theta: &mut theta,
+                                h: &mut h,
+                                agg: &mut agg,
+                                theta_prev: Some(&mut prev),
+                                alpha,
+                                beta,
+                                state_variable: true,
+                                fold_scale: 1.0,
+                                staged_agg: true,
+                                shares: None,
+                            },
+                        );
+                        for j in 0..d {
+                            if theta[j].to_bits() != sref.theta[j].to_bits()
+                                || h[j].to_bits() != sref.h[j].to_bits()
+                                || prev[j].to_bits() != sref.theta_prev[j].to_bits()
+                                || agg[j] != 0.0
+                            {
+                                return Err(format!(
+                                    "engine-mode fold diverged from apply_round at j={j} \
+                                     (shards={shards} threads={threads})"
+                                ));
+                            }
+                        }
                     }
                 }
             }
