@@ -21,6 +21,7 @@ use gdsec::data::{synthetic, Features};
 use gdsec::linalg::{self, DenseMat};
 use gdsec::objectives::Problem;
 use gdsec::util::bench::{self, BenchStats, Bencher};
+use gdsec::util::cache;
 use gdsec::util::json::Json;
 use gdsec::util::pool::Pool;
 use gdsec::util::rng::Pcg64;
@@ -97,6 +98,116 @@ fn seed_dot(x: &[f64], y: &[f64]) -> f64 {
     (s0 + s1) + (s2 + s3) + tail
 }
 
+// ---------------------------------------------------------------------
+// Verbatim replicas of the kernels as they stood immediately before the
+// fixed-lane rewrite (8 independent chains / zip loops, autovectorized by
+// LLVM at the SSE2 baseline). The rewritten dispatch kernels must match
+// these bitwise — asserted before any timing — and the per-kernel
+// `*_speedup_vs_prepr` keys measure what the rewrite (lane-structured
+// scalar + optional AVX path) buys over them.
+// ---------------------------------------------------------------------
+
+/// Pre-rewrite axpy: zip loop, LLVM-autovectorized.
+fn prepr_axpy(a: f64, x: &[f64], y: &mut [f64]) {
+    for (yi, &xi) in y.iter_mut().zip(x) {
+        *yi += a * xi;
+    }
+}
+
+/// Pre-rewrite dot: 8 independent chains, fixed pairwise combine.
+fn prepr_dot(x: &[f64], y: &[f64]) -> f64 {
+    let mut s = [0.0f64; 8];
+    let xc = x.chunks_exact(8);
+    let yc = y.chunks_exact(8);
+    let (xr, yr) = (xc.remainder(), yc.remainder());
+    for (a, b) in xc.zip(yc) {
+        for j in 0..8 {
+            s[j] += a[j] * b[j];
+        }
+    }
+    let mut tail = 0.0;
+    for (a, b) in xr.iter().zip(yr) {
+        tail += a * b;
+    }
+    ((s[0] + s[1]) + (s[2] + s[3])) + ((s[4] + s[5]) + (s[6] + s[7])) + tail
+}
+
+/// Pre-rewrite dot2: two rows against a shared `x` stream.
+fn prepr_dot2(r0: &[f64], r1: &[f64], x: &[f64]) -> (f64, f64) {
+    let mut s = [0.0f64; 8];
+    let mut t = [0.0f64; 8];
+    let xc = x.chunks_exact(8);
+    let r0c = r0.chunks_exact(8);
+    let r1c = r1.chunks_exact(8);
+    let (xr, r0r, r1r) = (xc.remainder(), r0c.remainder(), r1c.remainder());
+    for ((b, a0), a1) in xc.zip(r0c).zip(r1c) {
+        for j in 0..8 {
+            s[j] += a0[j] * b[j];
+            t[j] += a1[j] * b[j];
+        }
+    }
+    let (mut tail0, mut tail1) = (0.0, 0.0);
+    for (k, &b) in xr.iter().enumerate() {
+        tail0 += r0r[k] * b;
+        tail1 += r1r[k] * b;
+    }
+    (
+        ((s[0] + s[1]) + (s[2] + s[3])) + ((s[4] + s[5]) + (s[6] + s[7])) + tail0,
+        ((t[0] + t[1]) + (t[2] + t[3])) + ((t[4] + t[5]) + (t[6] + t[7])) + tail1,
+    )
+}
+
+/// Pre-rewrite sub: zip loop.
+fn prepr_sub(x: &[f64], y: &[f64], out: &mut [f64]) {
+    for (o, (&a, &b)) in out.iter_mut().zip(x.iter().zip(y)) {
+        *o = a - b;
+    }
+}
+
+/// Pre-rewrite fused sub + |·|max: single sequential running max.
+fn prepr_sub_abs_max(x: &[f64], y: &[f64], out: &mut [f64]) -> f64 {
+    let mut m = 0.0f64;
+    for (o, (&a, &b)) in out.iter_mut().zip(x.iter().zip(y)) {
+        let v = a - b;
+        *o = v;
+        m = m.max(v.abs());
+    }
+    m
+}
+
+/// Pre-rewrite gemv: row pairs through [`prepr_dot2`], odd row via dot.
+fn prepr_gemv(m: &DenseMat, x: &[f64], out: &mut [f64]) {
+    let mut i = 0;
+    while i + 2 <= m.rows {
+        let (d0, d1) = prepr_dot2(m.row(i), m.row(i + 1), x);
+        out[i] = d0;
+        out[i + 1] = d1;
+        i += 2;
+    }
+    if i < m.rows {
+        out[i] = prepr_dot(m.row(i), x);
+    }
+}
+
+/// Pre-rewrite gemv_t_acc: fixed 1024-column blocks + zip axpy.
+fn prepr_gemv_t_acc(m: &DenseMat, alpha: f64, r: &[f64], out: &mut [f64]) {
+    const COL_BLOCK: usize = 1024;
+    let cols = m.cols;
+    let mut j0 = 0;
+    while j0 < cols {
+        let j1 = (j0 + COL_BLOCK).min(cols);
+        let ob = &mut out[j0..j1];
+        for i in 0..m.rows {
+            let a = alpha * r[i];
+            if a != 0.0 {
+                let row = &m.data[i * cols + j0..i * cols + j1];
+                prepr_axpy(a, row, ob);
+            }
+        }
+        j0 = j1;
+    }
+}
+
 fn out_path() -> PathBuf {
     if let Ok(p) = std::env::var("GDSEC_BENCH_OUT") {
         return PathBuf::from(p);
@@ -116,6 +227,12 @@ fn main() {
         ("bench", Json::str("hotpath_micro")),
         ("quick", Json::Bool(quick)),
         ("threads", Json::num(par_pool.threads() as f64)),
+        // Which kernel path this run measured, and the cache model the
+        // block trees were derived from (EXPERIMENTS.md §Cache model).
+        ("simd_active", Json::Bool(linalg::simd_active())),
+        ("cache_l1d_bytes", Json::num(cache::model().l1d_bytes as f64)),
+        ("cache_l2_bytes", Json::num(cache::model().l2_bytes as f64)),
+        ("nnz_budget_auto", Json::num(cache::auto_nnz_budget() as f64)),
     ];
 
     // --- sparsify at the paper's dimensions (reused buffer = hot path) ---
@@ -199,6 +316,210 @@ fn main() {
     context.push(("dot_47236_speedup_vs_seed", Json::num(dot_seed.mean_ns / dot_new.mean_ns)));
     reports.push(dot_new);
     reports.push(dot_seed);
+
+    // --- fixed-lane kernels vs verbatim pre-rewrite replicas. d=2048
+    //     keeps every operand L1/L2-resident so the timing isolates the
+    //     kernel, not DRAM bandwidth. The dispatch path (scalar lanes,
+    //     or AVX when built with `--features simd` on a capable CPU)
+    //     must stay bitwise identical to the pre-rewrite kernels —
+    //     asserted across tail remainders before any timing. ---
+    {
+        let n = 2048usize;
+        let lrows = 64usize;
+        let mut rng = Pcg64::seeded(71);
+        let xv: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let yv: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let lm = DenseMat {
+            rows: lrows,
+            cols: n,
+            data: (0..lrows * n).map(|_| rng.normal()).collect(),
+        };
+        let rv: Vec<f64> = (0..lrows).map(|_| rng.normal()).collect();
+        let mut out_a = vec![0.0; n];
+        let mut out_b = vec![0.0; n];
+        let mut outr_a = vec![0.0; lrows];
+        let mut outr_b = vec![0.0; lrows];
+
+        // Bitwise parity before timing, covering the 8-chunk body plus
+        // both tail shapes (mod 8 and mod 4 remainders).
+        for len in [n, n - 3, n - 5, 17, 4, 1, 0] {
+            let (x, y) = (&xv[..len], &yv[..len]);
+            assert_eq!(
+                linalg::dot(x, y).to_bits(),
+                prepr_dot(x, y).to_bits(),
+                "dot dispatch/pre-rewrite parity broke at len={len}"
+            );
+            let (n0, n1) = linalg::dot2(x, y, x);
+            let (p0, p1) = prepr_dot2(x, y, x);
+            assert_eq!((n0.to_bits(), n1.to_bits()), (p0.to_bits(), p1.to_bits()));
+            out_a[..len].copy_from_slice(y);
+            out_b[..len].copy_from_slice(y);
+            linalg::axpy(0.37, x, &mut out_a[..len]);
+            prepr_axpy(0.37, x, &mut out_b[..len]);
+            let mut sm_a = vec![0.0; len];
+            let mut sm_b = vec![0.0; len];
+            linalg::sub(x, y, &mut sm_a);
+            prepr_sub(x, y, &mut sm_b);
+            let ma = linalg::sub_abs_max(x, y, &mut out_a[..len]);
+            let mb = prepr_sub_abs_max(x, y, &mut out_b[..len]);
+            assert_eq!(ma.to_bits(), mb.to_bits());
+            for j in 0..len {
+                assert_eq!(sm_a[j].to_bits(), sm_b[j].to_bits());
+                assert_eq!(out_a[j].to_bits(), out_b[j].to_bits());
+            }
+        }
+        lm.gemv(&xv, &mut outr_a);
+        prepr_gemv(&lm, &xv, &mut outr_b);
+        for i in 0..lrows {
+            assert_eq!(outr_a[i].to_bits(), outr_b[i].to_bits(), "gemv parity broke");
+        }
+        linalg::zero(&mut out_a);
+        linalg::zero(&mut out_b);
+        lm.gemv_t_acc(1.0, &rv, &mut out_a);
+        prepr_gemv_t_acc(&lm, 1.0, &rv, &mut out_b);
+        for j in 0..n {
+            assert_eq!(out_a[j].to_bits(), out_b[j].to_bits(), "gemv_t_acc parity broke");
+        }
+
+        // Timed pairs. Each key is new-kernel speedup over its verbatim
+        // pre-rewrite replica; the geomean is the PR's headline number.
+        let mut lane_ratios: Vec<f64> = Vec::new();
+        fn push_pair(
+            key: &'static str,
+            new: BenchStats,
+            old: BenchStats,
+            context: &mut Vec<(&str, Json)>,
+            reports: &mut Vec<BenchStats>,
+            ratios: &mut Vec<f64>,
+        ) {
+            let ratio = old.mean_ns / new.mean_ns;
+            context.push((key, Json::num(ratio)));
+            ratios.push(ratio);
+            reports.push(new);
+            reports.push(old);
+        }
+
+        let k_new = b.run_units("dot 2048 lane-dispatch", n as f64, "madd", || {
+            std::hint::black_box(linalg::dot(&xv, &yv));
+        });
+        let k_old = b.run_units("dot 2048 pre-rewrite", n as f64, "madd", || {
+            std::hint::black_box(prepr_dot(&xv, &yv));
+        });
+        push_pair(
+            "dot_2048_speedup_vs_prepr",
+            k_new,
+            k_old,
+            &mut context,
+            &mut reports,
+            &mut lane_ratios,
+        );
+
+        let k_new = b.run_units("dot2 2048 lane-dispatch", 2.0 * n as f64, "madd", || {
+            std::hint::black_box(linalg::dot2(&xv, &yv, &xv));
+        });
+        let k_old = b.run_units("dot2 2048 pre-rewrite", 2.0 * n as f64, "madd", || {
+            std::hint::black_box(prepr_dot2(&xv, &yv, &xv));
+        });
+        push_pair(
+            "dot2_2048_speedup_vs_prepr",
+            k_new,
+            k_old,
+            &mut context,
+            &mut reports,
+            &mut lane_ratios,
+        );
+
+        let k_new = b.run_units("axpy 2048 lane-dispatch", n as f64, "madd", || {
+            linalg::axpy(1e-9, &xv, &mut out_a);
+            std::hint::black_box(out_a[0]);
+        });
+        let k_old = b.run_units("axpy 2048 pre-rewrite", n as f64, "madd", || {
+            prepr_axpy(1e-9, &xv, &mut out_b);
+            std::hint::black_box(out_b[0]);
+        });
+        push_pair(
+            "axpy_2048_speedup_vs_prepr",
+            k_new,
+            k_old,
+            &mut context,
+            &mut reports,
+            &mut lane_ratios,
+        );
+
+        let k_new = b.run_units("sub 2048 lane-dispatch", n as f64, "elem", || {
+            linalg::sub(&xv, &yv, &mut out_a);
+            std::hint::black_box(out_a[0]);
+        });
+        let k_old = b.run_units("sub 2048 pre-rewrite", n as f64, "elem", || {
+            prepr_sub(&xv, &yv, &mut out_b);
+            std::hint::black_box(out_b[0]);
+        });
+        push_pair(
+            "sub_2048_speedup_vs_prepr",
+            k_new,
+            k_old,
+            &mut context,
+            &mut reports,
+            &mut lane_ratios,
+        );
+
+        let k_new = b.run_units("sub_abs_max 2048 lane-dispatch", n as f64, "elem", || {
+            std::hint::black_box(linalg::sub_abs_max(&xv, &yv, &mut out_a));
+        });
+        let k_old = b.run_units("sub_abs_max 2048 pre-rewrite", n as f64, "elem", || {
+            std::hint::black_box(prepr_sub_abs_max(&xv, &yv, &mut out_b));
+        });
+        push_pair(
+            "sub_abs_max_2048_speedup_vs_prepr",
+            k_new,
+            k_old,
+            &mut context,
+            &mut reports,
+            &mut lane_ratios,
+        );
+
+        let madds2 = (lrows * n) as f64;
+        let k_new = b.run_units("gemv 64x2048 lane-dispatch", madds2, "madd", || {
+            lm.gemv(&xv, &mut outr_a);
+            std::hint::black_box(outr_a[0]);
+        });
+        let k_old = b.run_units("gemv 64x2048 pre-rewrite", madds2, "madd", || {
+            prepr_gemv(&lm, &xv, &mut outr_b);
+            std::hint::black_box(outr_b[0]);
+        });
+        push_pair(
+            "gemv_2048_speedup_vs_prepr",
+            k_new,
+            k_old,
+            &mut context,
+            &mut reports,
+            &mut lane_ratios,
+        );
+
+        let k_new = b.run_units("gemv_t_acc 64x2048 lane-dispatch", madds2, "madd", || {
+            linalg::zero(&mut out_a);
+            lm.gemv_t_acc(1.0, &rv, &mut out_a);
+            std::hint::black_box(out_a[0]);
+        });
+        let k_old = b.run_units("gemv_t_acc 64x2048 pre-rewrite", madds2, "madd", || {
+            linalg::zero(&mut out_b);
+            prepr_gemv_t_acc(&lm, 1.0, &rv, &mut out_b);
+            std::hint::black_box(out_b[0]);
+        });
+        push_pair(
+            "gemv_t_acc_2048_speedup_vs_prepr",
+            k_new,
+            k_old,
+            &mut context,
+            &mut reports,
+            &mut lane_ratios,
+        );
+
+        let geo = (lane_ratios.iter().map(|r| r.ln()).sum::<f64>()
+            / lane_ratios.len() as f64)
+            .exp();
+        context.push(("lane_kernel_geomean_speedup_vs_prepr", Json::num(geo)));
+    }
 
     // --- fused server-side helpers ---
     let y47: Vec<f64> = (0..d).map(|_| rng.normal()).collect();
@@ -502,7 +823,29 @@ fn main() {
             ..Default::default()
         };
         let sweep_iters = if quick { 3 } else { 10 };
-        for budget in [16_384usize, 65_536, 262_144] {
+        // Parity before timing: `EngineOpts::default()` and the
+        // GDSEC_NNZ_BUDGET=auto resolution must derive the same budget
+        // from the same cache model — identical block tree, identical
+        // trajectory, bit for bit.
+        {
+            let auto_opts =
+                EngineOpts { nnz_budget: cache::auto_nnz_budget(), ..EngineOpts::default() };
+            let def_opts = EngineOpts::default();
+            let r_def =
+                gdsec_algo::run_states_opts(&prob_b, &cfg_b, 2, |_k| None, &par_pool, &def_opts);
+            let r_auto =
+                gdsec_algo::run_states_opts(&prob_b, &cfg_b, 2, |_k| None, &par_pool, &auto_opts);
+            for (td, ta) in r_def.server.theta.iter().zip(r_auto.server.theta.iter()) {
+                assert_eq!(td.to_bits(), ta.to_bits(), "default/auto budget parity broke");
+            }
+        }
+        let auto_budget = cache::auto_nnz_budget();
+        for (budget, key) in [
+            (16_384usize, "engine_budget_sweep_ns_16384"),
+            (65_536, "engine_budget_sweep_ns_65536"),
+            (262_144, "engine_budget_sweep_ns_262144"),
+            (auto_budget, "engine_budget_sweep_ns_auto"),
+        ] {
             let opts = EngineOpts { nnz_budget: budget, ..EngineOpts::default() };
             let stats = b.run_once(
                 &format!(
@@ -520,11 +863,6 @@ fn main() {
                     ));
                 },
             );
-            let key = match budget {
-                16_384 => "engine_budget_sweep_ns_16384",
-                65_536 => "engine_budget_sweep_ns_65536",
-                _ => "engine_budget_sweep_ns_262144",
-            };
             context.push((key, Json::num(stats.mean_ns / sweep_iters as f64)));
             reports.push(stats);
         }

@@ -179,6 +179,18 @@ fn speedup_key(nnz: usize) -> &'static str {
     }
 }
 
+/// Admission-cut placement: fold time with the cut pinned to the
+/// coordinator thread (pre-PR placement, `ShardPlan::set_serial_cut`)
+/// over fold time with the cut fanned out across the pool.
+fn cut_key(nnz: usize) -> &'static str {
+    match nnz {
+        256 => "server_cut_fanout_speedup_m64_nnz256",
+        4096 => "server_cut_fanout_speedup_m64_nnz4096",
+        32768 => "server_cut_fanout_speedup_m64_nnz32768",
+        _ => unreachable!("unexpected sweep point"),
+    }
+}
+
 fn out_path() -> PathBuf {
     if let Ok(p) = std::env::var("GDSEC_BENCH_OUT") {
         return PathBuf::from(p);
@@ -264,6 +276,37 @@ fn main() {
                 for w in 0..m {
                     assert_eq!(sh_a[w], sh_b[w], "ledger parity broke at worker {w}");
                 }
+                // Cut placement is a scheduling choice, never an
+                // arithmetic one: the serial-cut fold must match the
+                // fanned-cut fold bit for bit.
+                let (mut t_c, mut h_c) = (theta0.clone(), h0.clone());
+                let mut agg_c = vec![0.0f64; DIM];
+                let mut sh_c = vec![vec![0.0f64; DIM]; m];
+                plan.set_serial_cut(true);
+                plan.fold(
+                    &pool,
+                    updates.iter().enumerate().filter_map(|(w, u)| u.as_ref().map(|u| (w, u))),
+                    ShardApply {
+                        theta: &mut t_c,
+                        h: &mut h_c,
+                        agg: &mut agg_c,
+                        theta_prev: None,
+                        alpha: cfg.alpha,
+                        beta: cfg.beta,
+                        state_variable: true,
+                        fold_scale: 1.0,
+                        staged_agg: false,
+                        shares: Some((&mut sh_c, cfg.beta)),
+                    },
+                );
+                plan.set_serial_cut(false);
+                for j in 0..DIM {
+                    assert_eq!(
+                        t_b[j].to_bits(),
+                        t_c[j].to_bits(),
+                        "serial/fanned cut parity broke at {j} (M={m} nnz={nnz})"
+                    );
+                }
             }
 
             // --- sharded fold timing ---
@@ -339,6 +382,44 @@ fn main() {
                 speedup_points += 1;
                 baseline_mean_ns = Some(seed_stats.mean_ns);
                 reports.push(seed_stats);
+
+                // --- admission cut on the coordinator thread (pre-PR
+                //     placement) vs the pooled fan-out ---
+                let mut theta_c = theta0.clone();
+                let mut h_c = h0.clone();
+                let mut agg_c = vec![0.0f64; DIM];
+                let mut sh_c = vec![vec![0.0f64; DIM]; m];
+                plan.set_serial_cut(true);
+                let cut_stats = b.run_units(
+                    &format!("server fold serial-cut M={m} nnz={nnz} t={}", pool.threads()),
+                    m as f64,
+                    "upd",
+                    || {
+                        plan.fold(
+                            &pool,
+                            updates
+                                .iter()
+                                .enumerate()
+                                .filter_map(|(w, u)| u.as_ref().map(|u| (w, u))),
+                            ShardApply {
+                                theta: &mut theta_c,
+                                h: &mut h_c,
+                                agg: &mut agg_c,
+                                theta_prev: None,
+                                alpha: cfg.alpha,
+                                beta: cfg.beta,
+                                state_variable: true,
+                                fold_scale: 1.0,
+                                staged_agg: false,
+                                shares: Some((&mut sh_c, cfg.beta)),
+                            },
+                        );
+                        std::hint::black_box(theta_c[0]);
+                    },
+                );
+                plan.set_serial_cut(false);
+                context.push((cut_key(nnz), Json::num(cut_stats.mean_ns / stats.mean_ns)));
+                reports.push(cut_stats);
             }
             reports.push(stats);
         }

@@ -27,9 +27,10 @@
 //! both reductions (block→gradient and lane→server) run in a fixed
 //! order, so trajectories are **bit-for-bit identical for any thread
 //! count** (pinned by `tests/prop_parallel_parity.rs`, including forced
-//! multi-block lanes). With the default budget, shards below ~64k nnz
-//! stay single-block, and a one-block fold is bitwise equal to the
-//! serial fused gradient pass — which is how the engine also stays
+//! multi-block lanes). With the default (cache-derived, ≥64k-scale)
+//! budget, test-suite shards stay single-block, and a one-block fold is
+//! bitwise equal to the serial fused gradient pass — which is how the
+//! engine also stays
 //! bit-identical to the threaded [`crate::coordinator`] (whose native
 //! workers run the same tree via
 //! [`LocalObjective::grad_blocked`](crate::objectives::LocalObjective::grad_blocked)).
@@ -272,10 +273,14 @@ impl StalePending {
 /// Engine tuning knobs.
 #[derive(Debug, Clone)]
 pub struct EngineOpts {
-    /// nnz budget per nested row-block lane
-    /// ([`GradSplit::DEFAULT_NNZ_BUDGET`] unless overridden). Smaller ⇒
-    /// more intra-worker parallelism (and a different — still
-    /// thread-count-independent — summation tree).
+    /// nnz budget per nested row-block lane. Default: the shared cache
+    /// model's L2-resident budget
+    /// ([`crate::util::cache::auto_nnz_budget`]; 64k on the 1 MiB-L2
+    /// reference machine, the old fixed constant). Smaller ⇒ more
+    /// intra-worker parallelism (and a different — still
+    /// thread-count-independent — summation tree);
+    /// `GDSEC_NNZ_BUDGET=<n>` pins the tree for cross-machine
+    /// reproduction.
     pub nnz_budget: usize,
     /// Uplink accounting format for sparse-update rules. Default
     /// [`WireFormat::Adaptive`] (tag byte + cheaper of sparse/dense —
@@ -293,7 +298,7 @@ pub struct EngineOpts {
 impl Default for EngineOpts {
     fn default() -> EngineOpts {
         EngineOpts {
-            nnz_budget: GradSplit::DEFAULT_NNZ_BUDGET,
+            nnz_budget: crate::util::cache::auto_nnz_budget(),
             wire: WireFormat::default(),
             stale_window: 1,
         }
@@ -302,17 +307,14 @@ impl Default for EngineOpts {
 
 impl EngineOpts {
     /// Default opts with the `GDSEC_NNZ_BUDGET` / `GDSEC_WIRE` /
-    /// `GDSEC_STALE_WINDOW` env overrides (read per call; constant
-    /// within a process, so every run in a process sees the same block
-    /// tree and accounting).
+    /// `GDSEC_STALE_WINDOW` env overrides (cached/constant within a
+    /// process, so every run in a process sees the same block tree and
+    /// accounting). `GDSEC_NNZ_BUDGET` accepts `auto` (or unset) for
+    /// the cache-derived L2-resident budget, or a positive integer to
+    /// pin the tree ([`crate::util::cache::nnz_budget_from_env`]).
     pub fn from_env() -> EngineOpts {
-        let nnz_budget = std::env::var("GDSEC_NNZ_BUDGET")
-            .ok()
-            .and_then(|s| s.parse::<usize>().ok())
-            .filter(|&b| b >= 1)
-            .unwrap_or(GradSplit::DEFAULT_NNZ_BUDGET);
         EngineOpts {
-            nnz_budget,
+            nnz_budget: crate::util::cache::nnz_budget_from_env(),
             wire: WireFormat::from_env(),
             stale_window: stale_window_from_env(),
         }

@@ -100,14 +100,9 @@ impl SparseUpdate {
     /// `add_range_into(s·width, …)` would, in the same ascending order.
     pub fn cut_shards(&self, width: usize, shards: usize, out: &mut Vec<u32>) {
         debug_assert!(width >= 1 && shards >= 1);
-        out.push(0);
-        let mut lo = 0usize;
-        for s in 1..shards {
-            let bound = (s * width).min(self.dim as usize) as u32;
-            lo += self.idx[lo..].partition_point(|&i| i < bound);
-            out.push(lo as u32);
-        }
-        out.push(self.idx.len() as u32);
+        let base = out.len();
+        out.resize(base + shards + 1, 0);
+        cut_entries(&self.idx, self.dim as usize, width, shards, &mut out[base..]);
     }
 
     /// Densify.
@@ -116,6 +111,28 @@ impl SparseUpdate {
         self.add_into(&mut out);
         out
     }
+}
+
+/// The slice-writing core of [`SparseUpdate::cut_shards`]: cut one
+/// strictly increasing index list over `dim` coordinates into `shards`
+/// contiguous ranges of `width` (last shard short), writing exactly
+/// `shards + 1` offsets into `out` (shard `s` owns entries
+/// `out[s]..out[s + 1]`). Split out as a free function so the server's
+/// admission cut can fan per-update rows of one flat table across the
+/// pool ([`crate::util::shard::ShardPlan::fold`]) — each row is written
+/// independently, so the cut parallelizes without changing a single
+/// byte of the table.
+pub fn cut_entries(idx: &[u32], dim: usize, width: usize, shards: usize, out: &mut [u32]) {
+    debug_assert!(width >= 1 && shards >= 1);
+    debug_assert_eq!(out.len(), shards + 1);
+    out[0] = 0;
+    let mut lo = 0usize;
+    for s in 1..shards {
+        let bound = (s * width).min(dim) as u32;
+        lo += idx[lo..].partition_point(|&i| i < bound);
+        out[s] = lo as u32;
+    }
+    out[shards] = idx.len() as u32;
 }
 
 /// Uplink payload encoding for sparse worker updates — shared by the

@@ -6,94 +6,422 @@
 //! full-precision; the wire format (32-bit) is a property of the codec,
 //! not of the compute.
 //!
-//! Kernel design (EXPERIMENTS.md §Perf): reductions carry 8 independent
-//! accumulators streamed through `chunks_exact` so LLVM autovectorizes
-//! without bounds checks; `gemv` processes row pairs to reuse the `x`
-//! stream; `gemv_t_acc` is blocked over column ranges so the `out`
-//! accumulator stays cache-resident instead of being re-streamed per row.
-//! Per-element floating-point accumulation ORDER is part of each kernel's
-//! contract: it must not depend on thread count or blocking, so serial
-//! and pooled trainer runs stay bit-for-bit identical.
+//! ## Fixed-lane kernel contract (EXPERIMENTS.md §Perf)
+//!
+//! Every kernel is an explicit fixed-width lane kernel: data streams in
+//! [`LANE`]-wide (4× f64) groups, reductions carry whole lane vectors as
+//! accumulators ([`dot`]/[`dot2`] carry two, for eight independent
+//! chains), lanes collapse through ONE documented reduction tree, and
+//! the sub-lane remainder is a deterministic scalar tail. That shape is
+//! the whole determinism story: per-element floating-point accumulation
+//! ORDER is part of each kernel's contract — it must not depend on
+//! thread count, blocking, or instruction set, so serial and pooled
+//! trainer runs stay bit-for-bit identical.
+//!
+//! Two implementations share the contract:
+//!
+//! * [`scalar`] — the portable default: plain Rust structured exactly as
+//!   the lane kernels above (LLVM autovectorizes the lane bodies).
+//! * An AVX path (`core::arch` intrinsics, `--features simd`,
+//!   x86_64 + runtime AVX detection): one 256-bit vector per lane
+//!   group, multiply-then-add (never FMA — fusing would change
+//!   rounding), lanes extracted and folded through the same tree.
+//!
+//! The public kernels dispatch between them; results are **bitwise
+//! identical** either way (pinned per tail remainder and per thread
+//! count by `tests/prop_simd_parity.rs`). NaN inputs are outside the
+//! [`sub_abs_max`] contract: its max-reduction folds lanes in tree
+//! order, which only agrees with a sequential scan for non-NaN values.
+//!
+//! `gemv` processes row pairs to reuse the `x` stream; `gemv_t_acc` is
+//! blocked over column ranges so the `out` accumulator stays
+//! cache-resident instead of being re-streamed per row — the block width
+//! comes from the shared cache model ([`crate::util::cache`]).
 
-/// y += a * x
+/// Lane width of every kernel in this module: 4 × f64 = one 256-bit
+/// vector. The lane count is part of the bitwise contract (it fixes the
+/// accumulation order), NOT a tuning knob.
+pub const LANE: usize = 4;
+
+/// Whether the dispatching kernels currently take the `core::arch` SIMD
+/// path (compiled in via `--features simd` AND supported by this CPU).
+/// `false` means the [`scalar`] lane kernels run everywhere.
+pub fn simd_active() -> bool {
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    {
+        simd::usable()
+    }
+    #[cfg(not(all(feature = "simd", target_arch = "x86_64")))]
+    {
+        false
+    }
+}
+
+/// Column-block width (in f64 slots) for [`DenseMat::gemv_t_acc`]: a
+/// quarter of L1d, leaving room for the streamed `A` rows (1024 on the
+/// 32 KiB reference machine — the pre-cache-model constant). Blocking
+/// never changes per-element accumulation order, so this width is a pure
+/// tuning quantity, not part of the bitwise contract.
+#[inline]
+fn col_block() -> usize {
+    (crate::util::cache::model().l1d_bytes / 32).max(LANE)
+}
+
+/// The lane-structured scalar reference kernels — the portable default
+/// implementation AND the bitwise oracle the SIMD path is pinned
+/// against. Each function documents the exact lane/fold order the
+/// dispatching kernel of the same name must reproduce.
+pub mod scalar {
+    use super::{col_block, DenseMat, LANE};
+
+    /// y += a * x. Element-wise (no loop-carried dependency): the lane
+    /// grouping fixes nothing here, but keeps the code shape identical
+    /// to the SIMD path.
+    #[inline]
+    pub fn axpy(a: f64, x: &[f64], y: &mut [f64]) {
+        debug_assert_eq!(x.len(), y.len());
+        let n = y.len();
+        let nl = n - n % LANE;
+        for (yc, xc) in y[..nl].chunks_exact_mut(LANE).zip(x[..nl].chunks_exact(LANE)) {
+            for j in 0..LANE {
+                yc[j] += a * xc[j];
+            }
+        }
+        for (yk, &xk) in y[nl..].iter_mut().zip(&x[nl..]) {
+            *yk += a * xk;
+        }
+    }
+
+    /// x - y into out. Element-wise, same shape argument as [`axpy`].
+    #[inline]
+    pub fn sub(x: &[f64], y: &[f64], out: &mut [f64]) {
+        debug_assert_eq!(x.len(), y.len());
+        debug_assert_eq!(x.len(), out.len());
+        let n = out.len();
+        let nl = n - n % LANE;
+        for ((oc, xc), yc) in out[..nl]
+            .chunks_exact_mut(LANE)
+            .zip(x[..nl].chunks_exact(LANE))
+            .zip(y[..nl].chunks_exact(LANE))
+        {
+            for j in 0..LANE {
+                oc[j] = xc[j] - yc[j];
+            }
+        }
+        for ((ok, &xk), &yk) in out[nl..].iter_mut().zip(&x[nl..]).zip(&y[nl..]) {
+            *ok = xk - yk;
+        }
+    }
+
+    /// Dot product: two LANE-wide accumulator groups (eight independent
+    /// chains, one per FMA port times unroll) streamed through
+    /// `chunks_exact(2·LANE)`. Fold order — part of the contract because
+    /// `gemv` promises bitwise-identical per-row results:
+    /// `((s0+s1)+(s2+s3)) + ((s4+s5)+(s6+s7)) + tail`, i.e. each lane
+    /// group collapses pairwise, the two groups add, the scalar tail
+    /// adds last.
+    #[inline]
+    pub fn dot(x: &[f64], y: &[f64]) -> f64 {
+        debug_assert_eq!(x.len(), y.len());
+        let mut s = [0.0f64; 2 * LANE];
+        let xc = x.chunks_exact(2 * LANE);
+        let yc = y.chunks_exact(2 * LANE);
+        let (xr, yr) = (xc.remainder(), yc.remainder());
+        for (a, b) in xc.zip(yc) {
+            for j in 0..2 * LANE {
+                s[j] += a[j] * b[j];
+            }
+        }
+        let mut tail = 0.0;
+        for (a, b) in xr.iter().zip(yr) {
+            tail += a * b;
+        }
+        ((s[0] + s[1]) + (s[2] + s[3])) + ((s[4] + s[5]) + (s[6] + s[7])) + tail
+    }
+
+    /// Two dot products against a shared `x` in one streaming pass — the
+    /// row blocking inside [`DenseMat::gemv`]. Each row uses the SAME
+    /// lane/fold order as [`dot`], so `dot2(r0, r1, x) == (dot(r0, x),
+    /// dot(r1, x))` bitwise while loading `x` once instead of twice.
+    #[inline]
+    pub fn dot2(r0: &[f64], r1: &[f64], x: &[f64]) -> (f64, f64) {
+        debug_assert_eq!(r0.len(), x.len());
+        debug_assert_eq!(r1.len(), x.len());
+        let mut s = [0.0f64; 2 * LANE];
+        let mut t = [0.0f64; 2 * LANE];
+        let xc = x.chunks_exact(2 * LANE);
+        let r0c = r0.chunks_exact(2 * LANE);
+        let r1c = r1.chunks_exact(2 * LANE);
+        let (xr, r0r, r1r) = (xc.remainder(), r0c.remainder(), r1c.remainder());
+        for ((b, a0), a1) in xc.zip(r0c).zip(r1c) {
+            for j in 0..2 * LANE {
+                s[j] += a0[j] * b[j];
+            }
+            for j in 0..2 * LANE {
+                t[j] += a1[j] * b[j];
+            }
+        }
+        let (mut tail0, mut tail1) = (0.0, 0.0);
+        for (k, &b) in xr.iter().enumerate() {
+            tail0 += r0r[k] * b;
+            tail1 += r1r[k] * b;
+        }
+        (
+            ((s[0] + s[1]) + (s[2] + s[3])) + ((s[4] + s[5]) + (s[6] + s[7])) + tail0,
+            ((t[0] + t[1]) + (t[2] + t[3])) + ((t[4] + t[5]) + (t[6] + t[7])) + tail1,
+        )
+    }
+
+    /// Fused `out = x - y` + `max_i |out_i|` in ONE pass — bitwise the
+    /// same `out` as [`sub`], without a second sweep over a d≈47k
+    /// vector. The max carries one LANE-wide group: lane `j` sees
+    /// elements `i ≡ j (mod LANE)`, lanes fold as
+    /// `(m0.max(m1)).max(m2.max(m3)).max(tail)`. For non-NaN inputs
+    /// (the contract) this equals the sequential running max bitwise.
+    #[inline]
+    pub fn sub_abs_max(x: &[f64], y: &[f64], out: &mut [f64]) -> f64 {
+        debug_assert_eq!(x.len(), y.len());
+        debug_assert_eq!(x.len(), out.len());
+        let n = out.len();
+        let nl = n - n % LANE;
+        let mut m = [0.0f64; LANE];
+        for ((oc, xc), yc) in out[..nl]
+            .chunks_exact_mut(LANE)
+            .zip(x[..nl].chunks_exact(LANE))
+            .zip(y[..nl].chunks_exact(LANE))
+        {
+            for j in 0..LANE {
+                let v = xc[j] - yc[j];
+                oc[j] = v;
+                m[j] = m[j].max(v.abs());
+            }
+        }
+        let mut mt = 0.0f64;
+        for ((ok, &xk), &yk) in out[nl..].iter_mut().zip(&x[nl..]).zip(&y[nl..]) {
+            let v = xk - yk;
+            *ok = v;
+            mt = mt.max(v.abs());
+        }
+        (m[0].max(m[1])).max(m[2].max(m[3])).max(mt)
+    }
+
+    /// out = A * x — the reference for [`DenseMat::gemv`]: row pairs via
+    /// [`dot2`], odd last row via [`dot`].
+    pub fn gemv(a: &DenseMat, x: &[f64], out: &mut [f64]) {
+        assert_eq!(x.len(), a.cols);
+        assert_eq!(out.len(), a.rows);
+        let mut i = 0;
+        while i + 2 <= a.rows {
+            let (d0, d1) = dot2(a.row(i), a.row(i + 1), x);
+            out[i] = d0;
+            out[i + 1] = d1;
+            i += 2;
+        }
+        if i < a.rows {
+            out[i] = dot(a.row(i), x);
+        }
+    }
+
+    /// out += alpha * A^T * r — the reference for
+    /// [`DenseMat::gemv_t_acc`]: identical column blocking, [`axpy`]
+    /// inner loop.
+    pub fn gemv_t_acc(a: &DenseMat, alpha: f64, r: &[f64], out: &mut [f64]) {
+        assert_eq!(r.len(), a.rows);
+        assert_eq!(out.len(), a.cols);
+        let block = col_block();
+        let cols = a.cols;
+        let mut j0 = 0;
+        while j0 < cols {
+            let j1 = (j0 + block).min(cols);
+            let ob = &mut out[j0..j1];
+            for i in 0..a.rows {
+                let s = alpha * r[i];
+                if s != 0.0 {
+                    axpy(s, &a.data[i * cols + j0..i * cols + j1], ob);
+                }
+            }
+            j0 = j1;
+        }
+    }
+}
+
+/// AVX implementations of the lane kernels (see module docs): one
+/// `__m256d` per lane group, multiply-then-add (no FMA — contraction
+/// would change rounding vs the scalar reference), lane extraction +
+/// the documented scalar fold at the end. Every function here is pinned
+/// bitwise against its [`scalar`] twin by `tests/prop_simd_parity.rs`.
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+mod simd {
+    use super::LANE;
+    use core::arch::x86_64::*;
+
+    /// Runtime gate (std caches the CPUID probe in an atomic, so this is
+    /// a load + test on the hot path — and never allocates).
+    #[inline]
+    pub fn usable() -> bool {
+        std::arch::is_x86_feature_detected!("avx")
+    }
+
+    /// Collapse one lane group with the contract fold `(l0+l1)+(l2+l3)`.
+    #[inline]
+    #[target_feature(enable = "avx")]
+    unsafe fn fold4(v: __m256d) -> f64 {
+        let a: [f64; LANE] = core::mem::transmute(v);
+        (a[0] + a[1]) + (a[2] + a[3])
+    }
+
+    #[target_feature(enable = "avx")]
+    pub unsafe fn dot(x: &[f64], y: &[f64]) -> f64 {
+        let n = x.len();
+        let nl = n - n % (2 * LANE);
+        let (xp, yp) = (x.as_ptr(), y.as_ptr());
+        let mut lo = _mm256_setzero_pd();
+        let mut hi = _mm256_setzero_pd();
+        let mut i = 0;
+        while i < nl {
+            let p0 = _mm256_mul_pd(_mm256_loadu_pd(xp.add(i)), _mm256_loadu_pd(yp.add(i)));
+            lo = _mm256_add_pd(lo, p0);
+            let p1 =
+                _mm256_mul_pd(_mm256_loadu_pd(xp.add(i + LANE)), _mm256_loadu_pd(yp.add(i + LANE)));
+            hi = _mm256_add_pd(hi, p1);
+            i += 2 * LANE;
+        }
+        let mut tail = 0.0;
+        for k in nl..n {
+            tail += *xp.add(k) * *yp.add(k);
+        }
+        (fold4(lo) + fold4(hi)) + tail
+    }
+
+    #[target_feature(enable = "avx")]
+    pub unsafe fn dot2(r0: &[f64], r1: &[f64], x: &[f64]) -> (f64, f64) {
+        let n = x.len();
+        let nl = n - n % (2 * LANE);
+        let (xp, p0, p1) = (x.as_ptr(), r0.as_ptr(), r1.as_ptr());
+        let mut s_lo = _mm256_setzero_pd();
+        let mut s_hi = _mm256_setzero_pd();
+        let mut t_lo = _mm256_setzero_pd();
+        let mut t_hi = _mm256_setzero_pd();
+        let mut i = 0;
+        while i < nl {
+            let b0 = _mm256_loadu_pd(xp.add(i));
+            let b1 = _mm256_loadu_pd(xp.add(i + LANE));
+            s_lo = _mm256_add_pd(s_lo, _mm256_mul_pd(_mm256_loadu_pd(p0.add(i)), b0));
+            s_hi = _mm256_add_pd(s_hi, _mm256_mul_pd(_mm256_loadu_pd(p0.add(i + LANE)), b1));
+            t_lo = _mm256_add_pd(t_lo, _mm256_mul_pd(_mm256_loadu_pd(p1.add(i)), b0));
+            t_hi = _mm256_add_pd(t_hi, _mm256_mul_pd(_mm256_loadu_pd(p1.add(i + LANE)), b1));
+            i += 2 * LANE;
+        }
+        let (mut tail0, mut tail1) = (0.0, 0.0);
+        for k in nl..n {
+            let b = *xp.add(k);
+            tail0 += *p0.add(k) * b;
+            tail1 += *p1.add(k) * b;
+        }
+        ((fold4(s_lo) + fold4(s_hi)) + tail0, (fold4(t_lo) + fold4(t_hi)) + tail1)
+    }
+
+    #[target_feature(enable = "avx")]
+    pub unsafe fn axpy(a: f64, x: &[f64], y: &mut [f64]) {
+        let n = y.len();
+        let nl = n - n % LANE;
+        let va = _mm256_set1_pd(a);
+        let xp = x.as_ptr();
+        let yp = y.as_mut_ptr();
+        let mut i = 0;
+        while i < nl {
+            let v = _mm256_add_pd(
+                _mm256_loadu_pd(yp.add(i)),
+                _mm256_mul_pd(va, _mm256_loadu_pd(xp.add(i))),
+            );
+            _mm256_storeu_pd(yp.add(i), v);
+            i += LANE;
+        }
+        for k in nl..n {
+            *yp.add(k) += a * *xp.add(k);
+        }
+    }
+
+    #[target_feature(enable = "avx")]
+    pub unsafe fn sub(x: &[f64], y: &[f64], out: &mut [f64]) {
+        let n = out.len();
+        let nl = n - n % LANE;
+        let (xp, yp, op) = (x.as_ptr(), y.as_ptr(), out.as_mut_ptr());
+        let mut i = 0;
+        while i < nl {
+            let v = _mm256_sub_pd(_mm256_loadu_pd(xp.add(i)), _mm256_loadu_pd(yp.add(i)));
+            _mm256_storeu_pd(op.add(i), v);
+            i += LANE;
+        }
+        for k in nl..n {
+            *op.add(k) = *xp.add(k) - *yp.add(k);
+        }
+    }
+
+    #[target_feature(enable = "avx")]
+    pub unsafe fn sub_abs_max(x: &[f64], y: &[f64], out: &mut [f64]) -> f64 {
+        let n = out.len();
+        let nl = n - n % LANE;
+        let (xp, yp, op) = (x.as_ptr(), y.as_ptr(), out.as_mut_ptr());
+        // abs = clear the sign bit (andnot with -0.0).
+        let sign = _mm256_set1_pd(-0.0);
+        let mut vm = _mm256_setzero_pd();
+        let mut i = 0;
+        while i < nl {
+            let v = _mm256_sub_pd(_mm256_loadu_pd(xp.add(i)), _mm256_loadu_pd(yp.add(i)));
+            _mm256_storeu_pd(op.add(i), v);
+            vm = _mm256_max_pd(vm, _mm256_andnot_pd(sign, v));
+            i += LANE;
+        }
+        let m: [f64; LANE] = core::mem::transmute(vm);
+        let mut mt = 0.0f64;
+        for k in nl..n {
+            let v = *xp.add(k) - *yp.add(k);
+            *op.add(k) = v;
+            mt = mt.max(v.abs());
+        }
+        (m[0].max(m[1])).max(m[2].max(m[3])).max(mt)
+    }
+}
+
+/// y += a * x (dispatching lane kernel; see [`scalar::axpy`]).
 #[inline]
 pub fn axpy(a: f64, x: &[f64], y: &mut [f64]) {
     debug_assert_eq!(x.len(), y.len());
-    // Element-wise with no loop-carried dependency; the zip form drops
-    // the bounds checks that block vectorization of an indexed loop.
-    for (yi, &xi) in y.iter_mut().zip(x) {
-        *yi += a * xi;
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    if simd::usable() {
+        // SAFETY: AVX availability checked at runtime; bitwise parity
+        // with the scalar path pinned by tests/prop_simd_parity.rs.
+        return unsafe { simd::axpy(a, x, y) };
     }
+    scalar::axpy(a, x, y)
 }
 
-/// Dot product. 8 independent accumulation chains (one FMA port each),
-/// combined pairwise — the combine order is fixed and documented because
-/// `gemv` promises bitwise-identical per-row results.
+/// Dot product (dispatching lane kernel; fold order in [`scalar::dot`]).
 #[inline]
 pub fn dot(x: &[f64], y: &[f64]) -> f64 {
     debug_assert_eq!(x.len(), y.len());
-    let mut s = [0.0f64; 8];
-    let xc = x.chunks_exact(8);
-    let yc = y.chunks_exact(8);
-    let (xr, yr) = (xc.remainder(), yc.remainder());
-    for (a, b) in xc.zip(yc) {
-        s[0] += a[0] * b[0];
-        s[1] += a[1] * b[1];
-        s[2] += a[2] * b[2];
-        s[3] += a[3] * b[3];
-        s[4] += a[4] * b[4];
-        s[5] += a[5] * b[5];
-        s[6] += a[6] * b[6];
-        s[7] += a[7] * b[7];
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    if simd::usable() {
+        // SAFETY: see axpy.
+        return unsafe { simd::dot(x, y) };
     }
-    let mut tail = 0.0;
-    for (a, b) in xr.iter().zip(yr) {
-        tail += a * b;
-    }
-    ((s[0] + s[1]) + (s[2] + s[3])) + ((s[4] + s[5]) + (s[6] + s[7])) + tail
+    scalar::dot(x, y)
 }
 
-/// Two dot products against a shared `x` in one streaming pass — the row
-/// blocking inside [`DenseMat::gemv`]. Each row uses the SAME chain/
-/// combine order as [`dot`], so `dot2(r0, r1, x) == (dot(r0, x),
-/// dot(r1, x))` bitwise while loading `x` once instead of twice.
+/// Two dot products against a shared `x` in one streaming pass
+/// (dispatching; see [`scalar::dot2`]). Public so the parity property
+/// tests and benches can pin it directly.
 #[inline]
-fn dot2(r0: &[f64], r1: &[f64], x: &[f64]) -> (f64, f64) {
+pub fn dot2(r0: &[f64], r1: &[f64], x: &[f64]) -> (f64, f64) {
     debug_assert_eq!(r0.len(), x.len());
     debug_assert_eq!(r1.len(), x.len());
-    let mut s = [0.0f64; 8];
-    let mut t = [0.0f64; 8];
-    let xc = x.chunks_exact(8);
-    let r0c = r0.chunks_exact(8);
-    let r1c = r1.chunks_exact(8);
-    let (xr, r0r, r1r) = (xc.remainder(), r0c.remainder(), r1c.remainder());
-    for ((b, a0), a1) in xc.zip(r0c).zip(r1c) {
-        s[0] += a0[0] * b[0];
-        s[1] += a0[1] * b[1];
-        s[2] += a0[2] * b[2];
-        s[3] += a0[3] * b[3];
-        s[4] += a0[4] * b[4];
-        s[5] += a0[5] * b[5];
-        s[6] += a0[6] * b[6];
-        s[7] += a0[7] * b[7];
-        t[0] += a1[0] * b[0];
-        t[1] += a1[1] * b[1];
-        t[2] += a1[2] * b[2];
-        t[3] += a1[3] * b[3];
-        t[4] += a1[4] * b[4];
-        t[5] += a1[5] * b[5];
-        t[6] += a1[6] * b[6];
-        t[7] += a1[7] * b[7];
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    if simd::usable() {
+        // SAFETY: see axpy.
+        return unsafe { simd::dot2(r0, r1, x) };
     }
-    let (mut tail0, mut tail1) = (0.0, 0.0);
-    for (k, &b) in xr.iter().enumerate() {
-        tail0 += r0r[k] * b;
-        tail1 += r1r[k] * b;
-    }
-    (
-        ((s[0] + s[1]) + (s[2] + s[3])) + ((s[4] + s[5]) + (s[6] + s[7])) + tail0,
-        ((t[0] + t[1]) + (t[2] + t[3])) + ((t[4] + t[5]) + (t[6] + t[7])) + tail1,
-    )
+    scalar::dot2(r0, r1, x)
 }
 
 /// Squared L2 norm.
@@ -120,30 +448,32 @@ pub fn nrm_inf(x: &[f64]) -> f64 {
     x.iter().fold(0.0, |m, v| m.max(v.abs()))
 }
 
-/// x - y into out.
+/// x - y into out (dispatching lane kernel; see [`scalar::sub`]).
 #[inline]
 pub fn sub(x: &[f64], y: &[f64], out: &mut [f64]) {
     debug_assert_eq!(x.len(), y.len());
     debug_assert_eq!(x.len(), out.len());
-    for (o, (&a, &b)) in out.iter_mut().zip(x.iter().zip(y)) {
-        *o = a - b;
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    if simd::usable() {
+        // SAFETY: see axpy.
+        return unsafe { simd::sub(x, y, out) };
     }
+    scalar::sub(x, y, out)
 }
 
-/// Fused `out = x - y` + `max_i |out_i|` in ONE pass — bitwise the same
-/// `out` as [`sub`] and the same max as [`nrm_inf`], without the second
-/// sweep over a d≈47k vector.
+/// Fused `out = x - y` + `max_i |out_i|` in ONE pass (dispatching; lane
+/// max-fold order in [`scalar::sub_abs_max`] — NaN inputs are outside
+/// the contract).
 #[inline]
 pub fn sub_abs_max(x: &[f64], y: &[f64], out: &mut [f64]) -> f64 {
     debug_assert_eq!(x.len(), y.len());
     debug_assert_eq!(x.len(), out.len());
-    let mut m = 0.0f64;
-    for (o, (&a, &b)) in out.iter_mut().zip(x.iter().zip(y)) {
-        let v = a - b;
-        *o = v;
-        m = m.max(v.abs());
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    if simd::usable() {
+        // SAFETY: see axpy.
+        return unsafe { simd::sub_abs_max(x, y, out) };
     }
-    m
+    scalar::sub_abs_max(x, y, out)
 }
 
 /// Scale in place.
@@ -220,21 +550,20 @@ impl DenseMat {
     /// Blocked over column ranges: the unblocked form re-streams the full
     /// d-length `out` accumulator from L2/L3 for every row, tripling
     /// memory traffic at RCV1 scale (d=47236 ⇒ 370 KB per row). Each
-    /// `COL_BLOCK`-wide slice of `out` instead stays L1-resident while
-    /// all rows accumulate into it. Per element the accumulation order is
+    /// block-wide slice of `out` (width from the shared cache model —
+    /// see [`crate::util::cache`]) instead stays L1-resident while all
+    /// rows accumulate into it. Per element the accumulation order is
     /// still "rows in ascending order", and rows with `alpha·r_i == 0`
     /// are skipped entirely — both bitwise identical to the naive loop
     /// (pinned by `gemv_t_blocked_matches_naive`).
     pub fn gemv_t_acc(&self, alpha: f64, r: &[f64], out: &mut [f64]) {
         assert_eq!(r.len(), self.rows);
         assert_eq!(out.len(), self.cols);
-        // 1024 f64 = 8 KB: a quarter of a typical 32 KB L1d, leaving
-        // room for the streamed A rows.
-        const COL_BLOCK: usize = 1024;
+        let block = col_block();
         let cols = self.cols;
         let mut j0 = 0;
         while j0 < cols {
-            let j1 = (j0 + COL_BLOCK).min(cols);
+            let j1 = (j0 + block).min(cols);
             let ob = &mut out[j0..j1];
             for i in 0..self.rows {
                 let a = alpha * r[i];
@@ -426,5 +755,53 @@ mod tests {
         assert_eq!(m, 7.0);
         let zeros = vec![0.0; 3];
         assert_eq!(sub_abs_max(&zeros, &zeros, &mut out), 0.0);
+    }
+
+    #[test]
+    fn dispatch_matches_scalar_reference_bitwise() {
+        // Unit-level smoke of the contract tests/prop_simd_parity.rs
+        // pins exhaustively: whatever path dispatch takes, every kernel
+        // must equal its scalar lane reference bitwise, across lengths
+        // covering every tail remainder mod 2·LANE.
+        for n in 0..=(4 * LANE + 3) {
+            let x = pseudo_vec(21, n);
+            let y = pseudo_vec(22, n);
+            assert_eq!(dot(&x, &y).to_bits(), scalar::dot(&x, &y).to_bits(), "dot n={n}");
+            let (a0, a1) = dot2(&x, &y, &x);
+            let (b0, b1) = scalar::dot2(&x, &y, &x);
+            assert_eq!((a0.to_bits(), a1.to_bits()), (b0.to_bits(), b1.to_bits()), "dot2 n={n}");
+            let mut y1 = y.clone();
+            let mut y2 = y.clone();
+            axpy(0.73, &x, &mut y1);
+            scalar::axpy(0.73, &x, &mut y2);
+            assert_eq!(y1, y2, "axpy n={n}");
+            let mut o1 = vec![0.0; n];
+            let mut o2 = vec![0.0; n];
+            sub(&x, &y, &mut o1);
+            scalar::sub(&x, &y, &mut o2);
+            assert_eq!(o1, o2, "sub n={n}");
+            let m1 = sub_abs_max(&x, &y, &mut o1);
+            let m2 = scalar::sub_abs_max(&x, &y, &mut o2);
+            assert_eq!(m1.to_bits(), m2.to_bits(), "sub_abs_max n={n}");
+            assert_eq!(o1, o2, "sub_abs_max out n={n}");
+        }
+    }
+
+    #[test]
+    fn scalar_sub_abs_max_lane_fold_equals_sequential_scan() {
+        // For non-NaN inputs the lane-grouped max fold must agree with
+        // the old sequential running max (max is order-insensitive on
+        // finite values), so pre-lane trajectories are preserved.
+        for n in [0usize, 1, 3, 4, 5, 11, 64, 103] {
+            let x = pseudo_vec(31, n);
+            let y = pseudo_vec(32, n);
+            let mut out = vec![0.0; n];
+            let m = scalar::sub_abs_max(&x, &y, &mut out);
+            let mut seq = 0.0f64;
+            for j in 0..n {
+                seq = seq.max((x[j] - y[j]).abs());
+            }
+            assert_eq!(m.to_bits(), seq.to_bits(), "n={n}");
+        }
     }
 }

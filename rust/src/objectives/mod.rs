@@ -334,12 +334,15 @@ impl GradSplit {
     /// its d-length reduce.
     pub const DEFAULT_ROW_BLOCK: usize = 512;
 
-    /// Default nnz budget per lane for [`new_by_nnz`](Self::new_by_nnz):
-    /// comparable work to [`DEFAULT_ROW_BLOCK`](Self::DEFAULT_ROW_BLOCK)
-    /// rows of a dense ~128-wide shard, small enough that one RCV1-scale
-    /// shard still splits across every core. Deliberately large relative
-    /// to the test-suite problems so tiny shards stay single-lane (a
-    /// one-block fold is bitwise equal to the serial fused pass).
+    /// Fallback nnz budget per lane for [`new_by_nnz`](Self::new_by_nnz)
+    /// — what [`crate::util::cache::auto_nnz_budget`] derives on the
+    /// 1 MiB-L2 reference machine (the engine defaults now come from
+    /// the probed cache model, not this constant): comparable work to
+    /// [`DEFAULT_ROW_BLOCK`](Self::DEFAULT_ROW_BLOCK) rows of a dense
+    /// ~128-wide shard, small enough that one RCV1-scale shard still
+    /// splits across every core. Deliberately large relative to the
+    /// test-suite problems so tiny shards stay single-lane (a one-block
+    /// fold is bitwise equal to the serial fused pass).
     pub const DEFAULT_NNZ_BUDGET: usize = 65_536;
 
     /// Split every worker's shard into `row_block`-row lanes (the last
@@ -373,10 +376,12 @@ impl GradSplit {
         GradSplit { d: prob.d, lanes }
     }
 
-    /// [`new_by_nnz`](Self::new_by_nnz) with
-    /// [`DEFAULT_NNZ_BUDGET`](Self::DEFAULT_NNZ_BUDGET).
+    /// [`new_by_nnz`](Self::new_by_nnz) with the cache model's
+    /// L2-resident budget ([`crate::util::cache::auto_nnz_budget`]) —
+    /// the same tree the engine builds with default
+    /// [`EngineOpts`](crate::algo::engine::EngineOpts).
     pub fn for_problem(prob: &Problem) -> GradSplit {
-        GradSplit::new_by_nnz(prob, GradSplit::DEFAULT_NNZ_BUDGET)
+        GradSplit::new_by_nnz(prob, crate::util::cache::auto_nnz_budget())
     }
 
     pub fn lanes(&self) -> usize {

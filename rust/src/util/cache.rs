@@ -1,0 +1,184 @@
+//! The crate's ONE cache-size model: probed L1d/L2 capacities and the
+//! block/budget defaults every cache-sized tree derives from them.
+//!
+//! Two block trees key their granularity off the memory hierarchy — the
+//! engine's nested (worker, row-block) gradient lanes cut by an **nnz
+//! budget** ([`crate::objectives::GradSplit`]), and the server's
+//! coordinate shards cut by an **aggregate slice width**
+//! ([`crate::util::shard::ShardPlan`]). Before this module each carried
+//! its own magic constant (64k nnz, 4096 coordinates) tuned for a
+//! 32 KiB L1d / 1 MiB L2 machine. Both now read the same probed model:
+//!
+//! * **Shard width** = `L1d / 8` coordinates — one f64 aggregate slot
+//!   per L1d byte-octet, so a shard lane's scatter window is L1-resident.
+//! * **nnz budget** = `L2 / 16` entries — a CSR block streams 12 bytes
+//!   per entry (f64 value + u32 index), so the budgeted block plus its
+//!   output slice sits inside ¾ of L2 instead of thrashing it.
+//!
+//! On the historical 32 KiB / 1 MiB reference machine these reproduce
+//! the old constants exactly (4096 and 65 536), which is also what the
+//! fallback model reports when probing is unavailable.
+//!
+//! ## Probing and determinism
+//!
+//! Linux exposes per-level sizes under
+//! `/sys/devices/system/cpu/cpu0/cache/index*/`; elsewhere (or when the
+//! sysfs tree is absent) the fallback model applies. The probe runs at
+//! most once per process ([`OnceLock`]) and every derived quantity is
+//! clamped to a sane range, so **within a process** all block trees are
+//! built from one immutable model — trajectories stay bitwise
+//! reproducible at any thread count, and `GDSEC_NNZ_BUDGET=<n>` /
+//! `GDSEC_SHARDS=<n>` still pin the trees exactly for cross-machine
+//! reproduction (EXPERIMENTS.md §Cache model).
+
+use std::sync::OnceLock;
+
+/// L1 data-cache capacity assumed when probing is unavailable (32 KiB —
+/// the reference machine the pre-probe constants were tuned for).
+pub const FALLBACK_L1D_BYTES: usize = 32 * 1024;
+
+/// L2 capacity assumed when probing is unavailable (1 MiB; `/16` gives
+/// back the historical 64k nnz budget).
+pub const FALLBACK_L2_BYTES: usize = 1024 * 1024;
+
+/// The probed (or fallback) cache capacities.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CacheModel {
+    pub l1d_bytes: usize,
+    pub l2_bytes: usize,
+    /// `false` when the fallback constants are in use (non-Linux, or the
+    /// sysfs cache tree was absent/unparseable).
+    pub probed: bool,
+}
+
+impl CacheModel {
+    /// The compile-time fallback model.
+    pub const fn fallback() -> CacheModel {
+        CacheModel { l1d_bytes: FALLBACK_L1D_BYTES, l2_bytes: FALLBACK_L2_BYTES, probed: false }
+    }
+}
+
+/// Parse a sysfs cache size string: decimal digits plus an optional
+/// `K`/`M` suffix (sysfs writes e.g. `48K`, `2048K`, `1M`).
+fn parse_size(s: &str) -> Option<usize> {
+    let s = s.trim();
+    let (digits, mult) = match s.as_bytes().last()? {
+        b'K' | b'k' => (&s[..s.len() - 1], 1024usize),
+        b'M' | b'm' => (&s[..s.len() - 1], 1024 * 1024),
+        _ => (s, 1),
+    };
+    digits.parse::<usize>().ok().map(|n| n.saturating_mul(mult))
+}
+
+/// Probe cpu0's cache levels from sysfs. Returns `None` unless both an
+/// L1 data (or unified) size and an L2 size were found and parsed.
+#[cfg(target_os = "linux")]
+fn probe_sysfs() -> Option<(usize, usize)> {
+    let mut l1d = None;
+    let mut l2 = None;
+    // Cache levels beyond index9 do not occur on cpu0 in practice.
+    for index in 0..10 {
+        let base = format!("/sys/devices/system/cpu/cpu0/cache/index{index}");
+        let Ok(level) = std::fs::read_to_string(format!("{base}/level")) else {
+            break; // indices are contiguous; the first miss ends the scan
+        };
+        let ty = std::fs::read_to_string(format!("{base}/type")).unwrap_or_default();
+        let ty = ty.trim();
+        let size =
+            std::fs::read_to_string(format!("{base}/size")).ok().and_then(|s| parse_size(&s));
+        match (level.trim(), ty) {
+            ("1", "Data") | ("1", "Unified") => l1d = l1d.or(size),
+            ("2", "Data") | ("2", "Unified") => l2 = l2.or(size),
+            _ => {}
+        }
+    }
+    Some((l1d?, l2?))
+}
+
+#[cfg(not(target_os = "linux"))]
+fn probe_sysfs() -> Option<(usize, usize)> {
+    None
+}
+
+/// The process-wide cache model, probed once on first use. Clamped to
+/// [8 KiB, 1 MiB] (L1d) and [128 KiB, 64 MiB] (L2) so a garbled sysfs
+/// entry cannot produce a degenerate block tree.
+pub fn model() -> &'static CacheModel {
+    static MODEL: OnceLock<CacheModel> = OnceLock::new();
+    MODEL.get_or_init(|| match probe_sysfs() {
+        Some((l1d, l2)) => CacheModel {
+            l1d_bytes: l1d.clamp(8 * 1024, 1024 * 1024),
+            l2_bytes: l2.clamp(128 * 1024, 64 * 1024 * 1024),
+            probed: true,
+        },
+        None => CacheModel::fallback(),
+    })
+}
+
+/// Default coordinates per server shard: one L1d-resident slice of f64
+/// aggregate slots (`L1d / 8`). 4096 on the 32 KiB reference machine —
+/// the value [`crate::util::shard::ShardPlan`] was previously hardcoded
+/// to.
+pub fn shard_coords() -> usize {
+    (model().l1d_bytes / 8).max(1)
+}
+
+/// The `GDSEC_NNZ_BUDGET=auto` value: `L2 / 16` nnz entries, i.e. a CSR
+/// block whose 12-byte entries fill ¾ of L2. 65 536 on the 1 MiB
+/// reference machine (the old fixed budget).
+pub fn auto_nnz_budget() -> usize {
+    (model().l2_bytes / 16).clamp(1024, 1 << 22)
+}
+
+/// `GDSEC_NNZ_BUDGET` policy, parsed once per process: unset, empty or
+/// `auto` selects [`auto_nnz_budget`]; a positive integer pins the
+/// budget exactly (the cross-machine reproduction knob). Anything else
+/// falls back to `auto` (matching the engine's historical lenient
+/// parse).
+pub fn nnz_budget_from_env() -> usize {
+    static CACHE: OnceLock<usize> = OnceLock::new();
+    *CACHE.get_or_init(|| match std::env::var("GDSEC_NNZ_BUDGET").ok().as_deref() {
+        None | Some("") | Some("auto") => auto_nnz_budget(),
+        Some(s) => s.parse::<usize>().ok().filter(|&b| b >= 1).unwrap_or_else(auto_nnz_budget),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_size_suffixes() {
+        assert_eq!(parse_size("48K\n"), Some(48 * 1024));
+        assert_eq!(parse_size("2048K"), Some(2048 * 1024));
+        assert_eq!(parse_size("1M"), Some(1024 * 1024));
+        assert_eq!(parse_size("512"), Some(512));
+        assert_eq!(parse_size(""), None);
+        assert_eq!(parse_size("xK"), None);
+    }
+
+    #[test]
+    fn model_is_sane_and_stable() {
+        let m = model();
+        assert!(m.l1d_bytes >= 8 * 1024 && m.l1d_bytes <= 1024 * 1024);
+        assert!(m.l2_bytes >= 128 * 1024 && m.l2_bytes <= 64 * 1024 * 1024);
+        // One immutable model per process.
+        assert_eq!(model(), m);
+    }
+
+    #[test]
+    fn reference_machine_reproduces_historical_constants() {
+        let m = CacheModel::fallback();
+        assert_eq!(m.l1d_bytes / 8, 4096);
+        assert_eq!(m.l2_bytes / 16, 65_536);
+    }
+
+    #[test]
+    fn derived_quantities_track_the_model() {
+        assert_eq!(shard_coords(), model().l1d_bytes / 8);
+        assert_eq!(auto_nnz_budget(), (model().l2_bytes / 16).clamp(1024, 1 << 22));
+        // The env policy is cached; whatever it returned first, it must
+        // keep returning (steady-state rounds may not re-read the env).
+        assert_eq!(nnz_budget_from_env(), nnz_budget_from_env());
+    }
+}

@@ -2,6 +2,7 @@
 //! PRNG, JSON, CLI parsing, bench harness, CSV/table output, timing.
 
 pub mod bench;
+pub mod cache;
 pub mod cli;
 pub mod csv;
 pub mod error;

@@ -52,9 +52,58 @@
 //! `threads == 1` (or a single item) short-circuits to an inline loop:
 //! no helper threads are ever spawned and `scatter` is just the serial
 //! fold — which is why the serial path stays allocation- and park-free.
+//!
+//! ## Core affinity (`GDSEC_PIN_CORES`)
+//!
+//! With `GDSEC_PIN_CORES=1` (or a [`Pool::with_affinity`] pin) each
+//! helper thread pins itself to one CPU (`slot % cores`, via
+//! `sched_setaffinity`; Linux only, a no-op elsewhere) ONCE at spawn —
+//! before it ever parks — so steady-state rounds stay zero-alloc and
+//! syscall-free, and a helper's warm L1/L2 working set (its fixed
+//! scatter chunk touches the same lanes every round) stops migrating
+//! between cores. The calling thread executes slot 0 and is never
+//! pinned: the pool must not constrain its owner. Pinning is a pure
+//! placement hint — item→slot assignment, and therefore every result,
+//! is identical with it on or off.
 
 use std::sync::{Arc, Condvar, Mutex, OnceLock};
 use std::thread::JoinHandle;
+
+/// The `GDSEC_PIN_CORES` opt-in (`1`/`true`/`yes`), parsed once per
+/// process. [`Pool::new`] consults this; [`Pool::with_affinity`]
+/// overrides it explicitly (tests, benches).
+fn pin_from_env() -> bool {
+    static CACHE: OnceLock<bool> = OnceLock::new();
+    *CACHE.get_or_init(|| {
+        matches!(
+            std::env::var("GDSEC_PIN_CORES").ok().as_deref(),
+            Some("1") | Some("true") | Some("yes")
+        )
+    })
+}
+
+/// Pin the calling thread to `core` (mod the kernel's view of the CPU
+/// set). Best-effort: failure (e.g. a cgroup cpuset that excludes the
+/// core) leaves the thread unpinned rather than failing the pool.
+/// Allocation-free: the mask lives on the stack and the call goes
+/// straight to libc (which std already links — the crate stays
+/// zero-dependency).
+#[cfg(target_os = "linux")]
+fn pin_current_thread(core: usize) {
+    extern "C" {
+        // glibc/musl prototype: pid 0 = the calling thread.
+        fn sched_setaffinity(pid: i32, cpusetsize: usize, mask: *const u64) -> i32;
+    }
+    // cpu_set_t is 1024 bits; core indices wrap into it.
+    let mut mask = [0u64; 16];
+    let bit = core % (mask.len() * 64);
+    mask[bit / 64] |= 1u64 << (bit % 64);
+    // SAFETY: the mask pointer/size pair describes a live stack buffer.
+    unsafe { sched_setaffinity(0, std::mem::size_of_val(&mask), mask.as_ptr()) };
+}
+
+#[cfg(not(target_os = "linux"))]
+fn pin_current_thread(_core: usize) {}
 
 /// Poison-tolerant lock: a panic inside a scatter closure unwinds through
 /// `run_round` while guards are held, which would poison these mutexes;
@@ -269,12 +318,28 @@ impl std::fmt::Debug for Pool {
 
 impl Pool {
     /// Pool with an explicit thread count (clamped to ≥ 1). `threads − 1`
-    /// helper threads are spawned immediately and parked.
+    /// helper threads are spawned immediately and parked; they pin
+    /// themselves to cores iff `GDSEC_PIN_CORES` opts in (module docs).
     pub fn new(threads: usize) -> Pool {
+        Pool::with_affinity(threads, pin_from_env())
+    }
+
+    /// [`Pool::new`] with the core-affinity decision made explicitly,
+    /// ignoring `GDSEC_PIN_CORES` — the seam tests and benches use to
+    /// exercise the pinned path without mutating the process env.
+    pub fn with_affinity(threads: usize, pin: bool) -> Pool {
         let threads = threads.max(1);
         if threads == 1 {
             return Pool { threads, inner: None };
         }
+        // Resolve the core count HERE (available_parallelism may read
+        // procfs and allocate): helpers receive a plain number and stay
+        // allocation-free from their first instruction.
+        let cores = if pin {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        } else {
+            0
+        };
         let shared = Arc::new(Shared {
             state: Mutex::new(RoundState {
                 epoch: 0,
@@ -291,7 +356,12 @@ impl Pool {
                 let sh = Arc::clone(&shared);
                 std::thread::Builder::new()
                     .name(format!("gdsec-pool-{slot}"))
-                    .spawn(move || worker_loop(sh, slot))
+                    .spawn(move || {
+                        if cores > 0 {
+                            pin_current_thread(slot % cores);
+                        }
+                        worker_loop(sh, slot)
+                    })
                     .expect("failed to spawn pool worker")
             })
             .collect();
@@ -600,6 +670,30 @@ mod tests {
                 assert!(n.div_ceil(w) <= threads, "n={n} threads={threads} w={w}");
             }
         }
+    }
+
+    #[test]
+    fn pinned_pool_results_match_unpinned() {
+        // Affinity is a placement hint only: same item→slot assignment,
+        // same results — and pinned helpers park/wake like unpinned
+        // ones across many rounds.
+        let pinned = Pool::with_affinity(3, true);
+        let plain = Pool::with_affinity(3, false);
+        let mut a = vec![0u32; 11];
+        let mut b = vec![0u32; 11];
+        pinned.scatter(&mut a, |i, v| *v = (i * i) as u32);
+        plain.scatter(&mut b, |i, v| *v = (i * i) as u32);
+        assert_eq!(a, b);
+        for round in 0..200u32 {
+            pinned.scatter(&mut a, |i, v| *v += i as u32 + round % 2);
+        }
+        let mut expect: Vec<u32> = (0..11).map(|i| (i * i) as u32).collect();
+        for round in 0..200u32 {
+            for (i, v) in expect.iter_mut().enumerate() {
+                *v += i as u32 + round % 2;
+            }
+        }
+        assert_eq!(a, expect);
     }
 
     #[test]

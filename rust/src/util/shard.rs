@@ -12,14 +12,19 @@
 //! canonical [`Pool::block_width_for`] contract, so the chunking rules
 //! stay pinned in one place), and each admitted update is cut ONCE into
 //! per-shard `[lo, hi)` entry subranges by a single pass of
-//! `partition_point`s ([`SparseUpdate::cut_shards`]). The fold's shard
-//! lanes then jump straight to their owned slice of every update — no
-//! searches, no per-round allocation (every table lives in the plan and
-//! reuses its capacity), and shard count is decoupled from thread count:
-//! by default shards are sized so each agg slice is L1-resident
-//! ([`DEFAULT_SHARD_COORDS`]), which is what turns the fold's random
-//! scatter-adds into cache-hot writes at large M·nnz. `GDSEC_SHARDS`
-//! overrides the count.
+//! `partition_point`s ([`crate::compress::cut_entries`]). The cut
+//! itself rides the pool: each update owns a disjoint row of the flat
+//! offset table, so admission cuts fan across threads instead of
+//! serializing on the coordinator thread (the last serial stretch of
+//! the server round; [`ShardPlan::set_serial_cut`] keeps the old path
+//! as a bench baseline). The fold's shard lanes then jump straight to
+//! their owned slice of every update — no searches, no per-round
+//! allocation (every table lives in the plan and reuses its capacity),
+//! and shard count is decoupled from thread count: by default shards
+//! are sized so each agg slice is L1-resident per the probed cache
+//! model ([`default_shard_coords`]), which is what turns the fold's
+//! random scatter-adds into cache-hot writes at large M·nnz.
+//! `GDSEC_SHARDS` overrides the count.
 //!
 //! ## Determinism contract
 //!
@@ -37,11 +42,15 @@ use crate::compress::SparseUpdate;
 use crate::util::pool::Pool;
 
 /// Target coordinates per shard when neither `GDSEC_SHARDS` nor
-/// [`ShardPlan::with_shards`] pins the count: 4096 f64 aggregate slots ≈
-/// 32 KiB, an L1-resident scatter window. The shard count is
+/// [`ShardPlan::with_shards`] pins the count: one L1d-resident slice of
+/// f64 aggregate slots from the shared cache model
+/// ([`crate::util::cache::shard_coords`] — 4096 ≈ 32 KiB on the
+/// reference machine, the pre-probe constant). The shard count is
 /// `max(threads, d / this)` so small models still fan one shard per
 /// thread.
-pub const DEFAULT_SHARD_COORDS: usize = 4096;
+pub fn default_shard_coords() -> usize {
+    crate::util::cache::shard_coords()
+}
 
 /// The `GDSEC_SHARDS` override, parsed once per process (the plan calls
 /// this on every rebuild check; caching keeps the steady-state round
@@ -108,6 +117,28 @@ struct SharePtr(*mut f64);
 unsafe impl Send for SharePtr {}
 unsafe impl Sync for SharePtr {}
 
+/// Base pointer of the flat cut table during the admission-cut fan-out:
+/// update `ui`'s lane writes only row `ui` (a disjoint
+/// `stride`-sized slice), same disjointness argument as [`Bufs`].
+#[derive(Debug, Clone, Copy)]
+struct CutsPtr(*mut u32);
+
+unsafe impl Send for CutsPtr {}
+unsafe impl Sync for CutsPtr {}
+
+/// Cut update `u` into row `ui` of the flat offset table — the
+/// per-update unit of work the admission cut fans over the pool.
+///
+/// SAFETY: the caller guarantees the table holds at least
+/// `(ui + 1) · stride` offsets and that no other lane touches row `ui`;
+/// `u`'s borrowed wire image outlives the scatter barrier (the [`UpdRef`]
+/// contract).
+unsafe fn cut_row(cuts: CutsPtr, ui: usize, stride: usize, d: usize, width: usize, u: &UpdRef) {
+    let row = std::slice::from_raw_parts_mut(cuts.0.add(ui * stride), stride);
+    let idx = std::slice::from_raw_parts(u.idx, u.nnz as usize);
+    crate::compress::cut_entries(idx, d, width, stride - 1, row);
+}
+
 /// One sharded server round's buffers and scalars — the argument block
 /// of [`ShardPlan::fold`].
 pub struct ShardApply<'a> {
@@ -160,6 +191,9 @@ pub struct ShardPlan {
     /// Test/bench override: pin the shard count, ignoring `GDSEC_SHARDS`
     /// and the thread-count default.
     pinned: Option<usize>,
+    /// Run the admission cut serially on the calling thread (the
+    /// pre-fanout behavior) instead of scattering rows over the pool.
+    serial_cut: bool,
     slots: Vec<Slot>,
     /// Flat per-(update, shard) cut table: update `u`'s shard `s` owns
     /// entries `cuts[u·(slots+1) + s] .. cuts[u·(slots+1) + s + 1]`.
@@ -187,17 +221,27 @@ impl ShardPlan {
         self.slots.len()
     }
 
+    /// Force the admission cut back onto the calling thread (the
+    /// pre-fanout behavior). The cut table is byte-identical either way
+    /// — each update's row is a pure function of its index list — so
+    /// this is strictly a measurement seam: `benches/server_saturation`
+    /// times fold rounds under both settings to report the
+    /// `server_cut_fanout_*` before/after keys.
+    pub fn set_serial_cut(&mut self, serial: bool) {
+        self.serial_cut = serial;
+    }
+
     /// (Re)build the shard boundaries for dimension `d` if the plan is
     /// not already built for it. Precedence for the requested count:
     /// [`with_shards`](Self::with_shards) pin, then `GDSEC_SHARDS`, then
-    /// `max(threads, d / DEFAULT_SHARD_COORDS)` — one L1-sized slice per
-    /// lane at scale, one shard per thread for small models. Boundaries
-    /// are cut by [`Pool::block_width_for`]; a request beyond `d`
-    /// clamps to `d` single-coordinate shards.
+    /// `max(threads, d / default_shard_coords())` — one L1-sized slice
+    /// per lane at scale, one shard per thread for small models.
+    /// Boundaries are cut by [`Pool::block_width_for`]; a request beyond
+    /// `d` clamps to `d` single-coordinate shards.
     pub fn ensure(&mut self, d: usize, pool: &Pool) {
         let requested = self.pinned.unwrap_or_else(|| {
             shards_from_env()
-                .unwrap_or_else(|| pool.threads().max(d.div_ceil(DEFAULT_SHARD_COORDS.max(1))))
+                .unwrap_or_else(|| pool.threads().max(d.div_ceil(default_shard_coords().max(1))))
         });
         if self.d == d && self.built_for == requested {
             return;
@@ -217,8 +261,11 @@ impl ShardPlan {
     }
 
     /// Run one sharded server round: stage every `(worker, update)` pair
-    /// from `staged` — cutting each update into per-shard subranges in
-    /// one `partition_point` pass — then fan the fold + rescale + θ/h
+    /// from `staged`, cut each update into per-shard subranges — rows of
+    /// one flat offset table, fanned across `pool` (each row is an
+    /// independent `partition_point` pass, so the cut leaves the
+    /// coordinator thread; [`set_serial_cut`](Self::set_serial_cut)
+    /// restores the serial baseline) — then fan the fold + rescale + θ/h
     /// step (+ optional h-share booking) over the shard slots on `pool`.
     /// Updates fold within each shard in exactly the order `staged`
     /// yields them, so the caller's (round, worker) order is the
@@ -246,12 +293,33 @@ impl ShardPlan {
                 nnz: u.idx.len() as u32,
                 worker: w as u32,
             });
-            u.cut_shards(self.width, nshards, &mut self.cuts);
         }
         if d == 0 {
             self.ups.clear();
-            self.cuts.clear();
             return;
+        }
+        // Admission cut: every update owns a disjoint row of the flat
+        // table, so rows scatter across the pool (resize reuses the
+        // table's capacity at steady state — no allocation).
+        {
+            let stride = nshards + 1;
+            self.cuts.resize(self.ups.len() * stride, 0);
+            let cuts = CutsPtr(self.cuts.as_mut_ptr());
+            let width = self.width;
+            if self.serial_cut {
+                for (ui, u) in self.ups.iter().enumerate() {
+                    // SAFETY: row ui of the just-sized table; serial, so
+                    // trivially exclusive.
+                    unsafe { cut_row(cuts, ui, stride, d, width, u) };
+                }
+            } else {
+                pool.scatter(&mut self.ups, |ui, u| {
+                    // SAFETY: lane ui writes only row ui of the table
+                    // sized above; the caller's update borrows are held
+                    // across the scatter barrier.
+                    unsafe { cut_row(cuts, ui, stride, d, width, u) };
+                });
+            }
         }
         let mut book_scale = 0.0;
         if let Some((shares, scale)) = &mut a.shares {
@@ -550,6 +618,59 @@ mod tests {
     }
 
     #[test]
+    fn serial_and_fanned_admission_cut_fold_identically() {
+        // The cut table is a pure per-update function: folding with the
+        // serial-cut baseline must produce bitwise identical state to
+        // the fanned default at any thread count.
+        let d = 301;
+        let ups: Vec<(usize, SparseUpdate)> = (0..6)
+            .map(|w| {
+                let entries: Vec<(u32, f32)> =
+                    (0..40).map(|k| ((w as u32 * 7 + k * 7) % d as u32, 0.01 * k as f32 - 0.1)).collect();
+                let mut sorted: Vec<(u32, f32)> = entries;
+                sorted.sort_by_key(|e| e.0);
+                sorted.dedup_by_key(|e| e.0);
+                (w, sparse(d, &sorted))
+            })
+            .collect();
+        let run = |serial: bool, threads: usize| {
+            let pool = Pool::new(threads);
+            let mut plan = ShardPlan::with_shards(9);
+            plan.set_serial_cut(serial);
+            let mut theta = vec![0.2f64; d];
+            let mut h = vec![0.1f64; d];
+            let mut agg = vec![0.0f64; d];
+            plan.fold(
+                &pool,
+                ups.iter().map(|(w, u)| (*w, u)),
+                ShardApply {
+                    theta: &mut theta,
+                    h: &mut h,
+                    agg: &mut agg,
+                    theta_prev: None,
+                    alpha: 0.05,
+                    beta: 0.2,
+                    state_variable: true,
+                    fold_scale: 1.0,
+                    staged_agg: false,
+                    shares: None,
+                },
+            );
+            (theta, h)
+        };
+        let (t_ref, h_ref) = run(true, 1);
+        for threads in [1usize, 3] {
+            for serial in [false, true] {
+                let (t, h) = run(serial, threads);
+                for j in 0..d {
+                    assert_eq!(t[j].to_bits(), t_ref[j].to_bits(), "θ serial={serial} j={j}");
+                    assert_eq!(h[j].to_bits(), h_ref[j].to_bits(), "h serial={serial} j={j}");
+                }
+            }
+        }
+    }
+
+    #[test]
     fn default_plan_is_cache_sized_at_scale() {
         let pool = Pool::new(2);
         let mut plan = ShardPlan::new();
@@ -559,11 +680,17 @@ mod tests {
         plan.ensure(100, &pool);
         if std::env::var("GDSEC_SHARDS").is_err() {
             assert_eq!(plan.shards(), 2);
-            // Large model: L1-sized slices.
+            // Large model: L1-sized slices from the probed cache model.
+            let coords = default_shard_coords();
+            let d = 1usize << 18;
             let mut big = ShardPlan::new();
-            big.ensure(1 << 18, &pool);
-            assert_eq!(big.shards(), (1usize << 18) / DEFAULT_SHARD_COORDS);
-            assert!(big.width <= DEFAULT_SHARD_COORDS);
+            big.ensure(d, &pool);
+            let requested = pool.threads().max(d.div_ceil(coords));
+            let width = Pool::block_width_for(d, requested);
+            assert_eq!(big.shards(), d.div_ceil(width));
+            assert!(big.width <= coords);
+            // The slice really is L1-resident under the shared model.
+            assert!(big.width * 8 <= crate::util::cache::model().l1d_bytes);
         }
         let covered: usize = plan.slots.iter().map(|s| s.j1 - s.j0).sum();
         assert_eq!(covered, 100);

@@ -131,6 +131,43 @@ fn steady_state_round_allocates_nothing() {
         "steady-state pooled GD-SEC rounds performed heap allocations"
     );
 
+    // --- Pinned-pool phase: the same scatter round over a pool whose
+    //     helpers pinned themselves to cores at spawn (the
+    //     `GDSEC_PIN_CORES` path, forced on here) must stay
+    //     allocation-free: pinning is a one-shot sched_setaffinity with
+    //     a stack-held CPU mask inside the helper before its first
+    //     park, so the steady-state round path is byte-for-byte the
+    //     unpinned one. ---
+    let pinned = Pool::with_affinity(3, true);
+    let mut pinned_round = |server: &mut ServerState,
+                            lanes: &mut Vec<(WorkerState, SparseUpdate)>,
+                            theta_diff: &mut Vec<f64>| {
+        server.theta_diff(theta_diff);
+        {
+            let theta: &[f64] = &server.theta;
+            let diff: &[f64] = theta_diff;
+            pinned.scatter(lanes, |w, lane| {
+                let (ws, up) = lane;
+                prob.locals[w].grad(theta, ws.grad_mut());
+                ws.sparsify_into(&cfg, m, diff, up);
+            });
+        }
+        server.apply_round(&cfg, lanes.iter().filter(|(_, up)| up.nnz() > 0).map(|(_, up)| up));
+    };
+    for _ in 0..3 {
+        pinned_round(&mut server, &mut lanes, &mut theta_diff);
+    }
+    let before = ALLOC_CALLS.load(Ordering::SeqCst);
+    for _ in 0..25 {
+        pinned_round(&mut server, &mut lanes, &mut theta_diff);
+    }
+    let after = ALLOC_CALLS.load(Ordering::SeqCst);
+    assert_eq!(
+        after - before,
+        0,
+        "steady-state pinned-pool GD-SEC rounds performed heap allocations"
+    );
+
     // --- Unified-engine phase: the REAL `Engine::step` round (nested
     //     (worker, row-block) lanes forced multi-block, pooled fan-out,
     //     full-participation schedule) must also be allocation-free once

@@ -1,0 +1,145 @@
+//! Bitwise parity pins for the fixed-lane kernel dispatch
+//! (`linalg::{dot, dot2, axpy, sub, sub_abs_max}` and the `DenseMat`
+//! GEMV pair): whatever implementation the dispatch selects — the
+//! portable scalar lane kernels, or the AVX path under
+//! `--features simd` — every result must equal the lane-structured
+//! scalar reference (`linalg::scalar`) bit for bit.
+//!
+//! The length sweep covers EVERY tail remainder: kernels stream
+//! 2·LANE-wide (dot/dot2) or LANE-wide (axpy/sub/sub_abs_max) groups,
+//! so lengths 0..=4·(2·LANE)+… exercise each `len % 2·LANE` and
+//! `len % LANE` residue several times, plus the all-tail lengths below
+//! one full group. A trainer-level leg then pins a 1-thread vs 4-thread
+//! engine run bitwise, so the dispatch contract holds through the full
+//! pooled trajectory, not just per call.
+
+use gdsec::algo::gdsec as gdsec_algo;
+use gdsec::algo::gdsec::{GdSecConfig, Xi};
+use gdsec::data::synthetic;
+use gdsec::linalg::{self, scalar, DenseMat, LANE};
+use gdsec::objectives::Problem;
+use gdsec::util::pool::Pool;
+use gdsec::util::rng::Pcg64;
+
+/// Sign-mixed values across several magnitudes (including tiny ones, so
+/// a contracted fma — which the SIMD path must never emit — would show
+/// up as a one-ulp mismatch).
+fn vals(seed: u64, n: usize) -> Vec<f64> {
+    let mut rng = Pcg64::seeded(seed);
+    (0..n)
+        .map(|i| {
+            let scale = match i % 4 {
+                0 => 1.0,
+                1 => 1e-8,
+                2 => 1e8,
+                _ => 1e-300,
+            };
+            rng.normal() * scale
+        })
+        .collect()
+}
+
+#[test]
+fn dispatch_kernels_match_scalar_reference_across_all_tails() {
+    // 0..=67 covers every residue mod 8 (= 2·LANE) and mod 4 (= LANE)
+    // at least eight times, including the sub-group all-tail lengths.
+    for n in 0..=(8 * 2 * LANE + 3) {
+        for seed in [1u64, 2, 3] {
+            let x = vals(seed, n);
+            let y = vals(seed + 100, n);
+
+            assert_eq!(
+                linalg::dot(&x, &y).to_bits(),
+                scalar::dot(&x, &y).to_bits(),
+                "dot n={n} seed={seed}"
+            );
+
+            let (a0, a1) = linalg::dot2(&x, &y, &x);
+            let (b0, b1) = scalar::dot2(&x, &y, &x);
+            assert_eq!(
+                (a0.to_bits(), a1.to_bits()),
+                (b0.to_bits(), b1.to_bits()),
+                "dot2 n={n} seed={seed}"
+            );
+
+            let mut y1 = y.clone();
+            let mut y2 = y.clone();
+            linalg::axpy(-1.75e-3, &x, &mut y1);
+            scalar::axpy(-1.75e-3, &x, &mut y2);
+            for j in 0..n {
+                assert_eq!(y1[j].to_bits(), y2[j].to_bits(), "axpy n={n} j={j}");
+            }
+
+            let mut o1 = vec![0.0; n];
+            let mut o2 = vec![0.0; n];
+            linalg::sub(&x, &y, &mut o1);
+            scalar::sub(&x, &y, &mut o2);
+            for j in 0..n {
+                assert_eq!(o1[j].to_bits(), o2[j].to_bits(), "sub n={n} j={j}");
+            }
+
+            let m1 = linalg::sub_abs_max(&x, &y, &mut o1);
+            let m2 = scalar::sub_abs_max(&x, &y, &mut o2);
+            assert_eq!(m1.to_bits(), m2.to_bits(), "sub_abs_max n={n} seed={seed}");
+            for j in 0..n {
+                assert_eq!(o1[j].to_bits(), o2[j].to_bits(), "sub_abs_max out n={n} j={j}");
+            }
+        }
+    }
+}
+
+#[test]
+fn gemv_pair_matches_scalar_reference_bitwise() {
+    // Row counts cover the even/odd pairing split; column counts cover
+    // whole-group, mixed-tail, and sub-group shapes plus a
+    // multi-col-block width (> L1d/32 f64 slots).
+    for (rows, cols) in [(1usize, 5usize), (2, 16), (5, 67), (8, 128), (3, 4000)] {
+        let a = DenseMat { rows, cols, data: vals(7, rows * cols) };
+        let x = vals(11, cols);
+        let r = vals(13, rows);
+
+        let mut out_d = vec![0.0; rows];
+        let mut out_s = vec![0.0; rows];
+        a.gemv(&x, &mut out_d);
+        scalar::gemv(&a, &x, &mut out_s);
+        for i in 0..rows {
+            assert_eq!(out_d[i].to_bits(), out_s[i].to_bits(), "gemv ({rows},{cols}) i={i}");
+        }
+
+        let mut acc_d = vals(17, cols);
+        let mut acc_s = acc_d.clone();
+        a.gemv_t_acc(0.35, &r, &mut acc_d);
+        scalar::gemv_t_acc(&a, 0.35, &r, &mut acc_s);
+        for j in 0..cols {
+            assert_eq!(acc_d[j].to_bits(), acc_s[j].to_bits(), "gemv_t ({rows},{cols}) j={j}");
+        }
+    }
+}
+
+#[test]
+fn engine_trajectory_is_thread_count_invariant_under_dispatch() {
+    // The whole-trainer pin: with whatever kernel path this build
+    // dispatches to (scalar everywhere, AVX under `--features simd`),
+    // a 1-thread and a 4-thread pooled run must produce the same
+    // trajectory bit for bit — the kernels' fixed lane/fold order is
+    // what makes per-element arithmetic independent of the fan-out.
+    let m = 2;
+    let prob = Problem::linear(synthetic::mnist_like(3, 300), m, 1.0 / 300.0);
+    let cfg = GdSecConfig {
+        alpha: 1.0 / prob.lipschitz(),
+        beta: 0.01,
+        xi: Xi::Uniform(200.0 * m as f64),
+        fstar: Some(0.0),
+        eval_every: 5,
+        ..Default::default()
+    };
+    let pool1 = Pool::new(1);
+    let pool4 = Pool::new(4);
+    let t1 = gdsec_algo::run_scheduled_pooled(&prob, &cfg, 20, |_k| None, &pool1);
+    let t4 = gdsec_algo::run_scheduled_pooled(&prob, &cfg, 20, |_k| None, &pool4);
+    assert_eq!(t1.total_bits(), t4.total_bits(), "bit accounting diverged");
+    assert_eq!(t1.rows.len(), t4.rows.len());
+    for (r1, r4) in t1.rows.iter().zip(t4.rows.iter()) {
+        assert_eq!(r1.fval.to_bits(), r4.fval.to_bits(), "fval diverged at iter {}", r1.iter);
+    }
+}
