@@ -1,0 +1,257 @@
+//! Federated scale-out bench: cohort-sampled GD-SEC rounds at
+//! M ∈ {100, 1k, 10k} workers through the thread-free
+//! [`federated`](gdsec::coordinator::federated) harness (custom harness
+//! — no criterion offline).
+//!
+//! Two sweep axes per fleet size: full participation (`c100`, every
+//! worker every round — the engine-equivalent baseline) and a 10%
+//! seeded cohort (`c10`) with the default idle-horizon ledger eviction.
+//! Reported per point: rounds/sec over the virtual transport and total
+//! uplink bits. Memory telemetry per fleet size: peak server
+//! per-worker-state bytes with the evictable [`StateStore`]
+//! (`resident_state_bytes_m{M}_c10`) against an always-resident O(M·d)
+//! replica of the same cohort schedule
+//! (`resident_state_bytes_dense_m{M}`), plus the ratio
+//! (`federated_state_bytes_ratio_m{M}_c10`).
+//!
+//! Before any timing, the evicting store is pinned BITWISE against the
+//! always-resident replica — θ, h, every per-worker ledger, and the
+//! uplink byte count must be identical; eviction is a memory layout
+//! choice, never an arithmetic one. The byte accounting is
+//! deterministic (slab/parked lengths, no allocator probing), so the
+//! ratio floor at M = 10k (≥ 5×, the rare-feature regime) is asserted
+//! here in-bench; `federated_speedup_m10000_c10` (evicting vs dense
+//! replica wall-clock) is informational — wall times are not CI-stable.
+//!
+//! Results are printed AND written to `BENCH_federated.json` at the
+//! repo root (override with `GDSEC_BENCH_OUT`), schema `gdsec-bench-v1`;
+//! see EXPERIMENTS.md §Federated scale. `GDSEC_BENCH_QUICK=1` shortens
+//! the timing windows (same keys). `GDSEC_THREADS`/`GDSEC_SHARDS`
+//! steer the server fold exactly as in the coordinator.
+
+use gdsec::algo::gdsec::{GdSecConfig, Xi};
+use gdsec::coordinator::federated::{run_federated, FederatedConfig, FederatedOutcome};
+use gdsec::coordinator::scheduler::{CohortPlan, DEFAULT_COHORT_SEED};
+use gdsec::data::synthetic;
+use gdsec::objectives::Problem;
+use gdsec::util::bench::{self, BenchStats, Bencher};
+use gdsec::util::json::Json;
+use gdsec::util::pool::Pool;
+use std::path::PathBuf;
+
+/// Model dimension for every sweep point. With ~8 features per local
+/// shard (the rare-feature regime of sparse federated corpora), each
+/// worker's ledger touches a handful of the 256 coordinates — the
+/// regime where parking a ledger in compact (idx, val) form beats a
+/// dense slab by ~20×.
+const DIM: usize = 256;
+/// Average nonzero features per data row.
+const AVG_NNZ: usize = 8;
+/// Rounds per timed run (fresh state each call; both layouts pay the
+/// same setup).
+const ITERS: usize = 20;
+
+fn gd_cfg() -> GdSecConfig {
+    GdSecConfig {
+        alpha: 0.05,
+        beta: 0.5,
+        xi: Xi::Uniform(0.3),
+        fstar: Some(0.0),
+        eval_every: 1,
+        ..GdSecConfig::default()
+    }
+}
+
+fn problem(m: usize) -> Problem {
+    let ds = synthetic::rcv1_like(42, m, DIM, AVG_NNZ);
+    Problem::logistic(ds, m, 0.0)
+}
+
+/// One federated run: `cohort_pct` = 100 (full participation, dense
+/// always-resident ledger — the engine layout) or 10 (seeded 10%
+/// cohort). `dense_replica` forces the O(M·d) always-resident store
+/// under the SAME cohort schedule (the memory baseline).
+fn run_one(prob: &Problem, cohort_pct: usize, dense_replica: bool, pool: &Pool) -> FederatedOutcome {
+    let mut fc = FederatedConfig::new(gd_cfg(), ITERS);
+    fc.eval_every = 0;
+    if cohort_pct < 100 {
+        fc.cohort = Some(CohortPlan::fraction(cohort_pct as f64 / 100.0, DEFAULT_COHORT_SEED));
+    }
+    if dense_replica {
+        // u32::MAX horizon: slabs materialize on first transmission and
+        // never age out — O(M·d) resident, identical arithmetic.
+        fc.evict_after = Some(u32::MAX);
+    }
+    run_federated(prob, fc, pool)
+}
+
+fn rps_key(m: usize, c: usize) -> &'static str {
+    match (m, c) {
+        (100, 100) => "federated_rounds_per_sec_m100_c100",
+        (100, 10) => "federated_rounds_per_sec_m100_c10",
+        (1000, 100) => "federated_rounds_per_sec_m1000_c100",
+        (1000, 10) => "federated_rounds_per_sec_m1000_c10",
+        (10000, 100) => "federated_rounds_per_sec_m10000_c100",
+        (10000, 10) => "federated_rounds_per_sec_m10000_c10",
+        _ => unreachable!("unexpected sweep point"),
+    }
+}
+
+fn bits_key(m: usize, c: usize) -> &'static str {
+    match (m, c) {
+        (100, 100) => "federated_uplink_bits_m100_c100",
+        (100, 10) => "federated_uplink_bits_m100_c10",
+        (1000, 100) => "federated_uplink_bits_m1000_c100",
+        (1000, 10) => "federated_uplink_bits_m1000_c10",
+        (10000, 100) => "federated_uplink_bits_m10000_c100",
+        (10000, 10) => "federated_uplink_bits_m10000_c10",
+        _ => unreachable!("unexpected sweep point"),
+    }
+}
+
+fn state_key(m: usize) -> &'static str {
+    match m {
+        100 => "resident_state_bytes_m100_c10",
+        1000 => "resident_state_bytes_m1000_c10",
+        10000 => "resident_state_bytes_m10000_c10",
+        _ => unreachable!("unexpected sweep point"),
+    }
+}
+
+fn dense_key(m: usize) -> &'static str {
+    match m {
+        100 => "resident_state_bytes_dense_m100",
+        1000 => "resident_state_bytes_dense_m1000",
+        10000 => "resident_state_bytes_dense_m10000",
+        _ => unreachable!("unexpected sweep point"),
+    }
+}
+
+fn ratio_key(m: usize) -> &'static str {
+    match m {
+        100 => "federated_state_bytes_ratio_m100_c10",
+        1000 => "federated_state_bytes_ratio_m1000_c10",
+        10000 => "federated_state_bytes_ratio_m10000_c10",
+        _ => unreachable!("unexpected sweep point"),
+    }
+}
+
+fn out_path() -> PathBuf {
+    if let Ok(p) = std::env::var("GDSEC_BENCH_OUT") {
+        return PathBuf::from(p);
+    }
+    // rust/ -> repo root
+    let manifest = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+    manifest.parent().unwrap_or(&manifest).join("BENCH_federated.json")
+}
+
+fn to_bits(v: &[f64]) -> Vec<u64> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+fn main() {
+    let b = Bencher::from_env();
+    let quick = std::env::var("GDSEC_BENCH_QUICK").ok().as_deref() == Some("1");
+    let pool = Pool::from_env();
+    let mut reports: Vec<BenchStats> = Vec::new();
+    let mut context: Vec<(&str, Json)> = vec![
+        ("bench", Json::str("federated_scale")),
+        ("quick", Json::Bool(quick)),
+        ("threads", Json::num(pool.threads() as f64)),
+        ("dim", Json::num(DIM as f64)),
+        ("iters_per_run", Json::num(ITERS as f64)),
+    ];
+
+    for &m in &[100usize, 1000, 10000] {
+        let prob = problem(m);
+
+        // Bitwise parity gate before any timing: the evicting store vs
+        // the always-resident replica under the identical cohort
+        // schedule — same θ, h, ledgers, and uplink bytes.
+        let evicting = run_one(&prob, 10, false, &pool);
+        let dense = run_one(&prob, 10, true, &pool);
+        assert_eq!(
+            to_bits(&evicting.theta),
+            to_bits(&dense.theta),
+            "evicting/dense θ parity broke at M={m}"
+        );
+        assert_eq!(to_bits(&evicting.h), to_bits(&dense.h), "h parity broke at M={m}");
+        let mut la = vec![0.0; DIM];
+        let mut lb = vec![0.0; DIM];
+        for w in 0..m {
+            evicting.store.ledger_dense(w, &mut la);
+            dense.store.ledger_dense(w, &mut lb);
+            assert_eq!(to_bits(&la), to_bits(&lb), "ledger parity broke at M={m} worker {w}");
+        }
+        assert_eq!(evicting.uplink_bits, dense.uplink_bits, "uplink bits diverged at M={m}");
+        assert!(evicting.evictions > 0, "evicting store never cycled at M={m}");
+        assert_eq!(dense.evictions, 0, "dense replica must never evict");
+
+        // Deterministic memory telemetry (length-based accounting:
+        // resident slabs × 8 B/coord + parked entries × 12 B/entry).
+        let ratio = dense.peak_state_bytes as f64 / evicting.peak_state_bytes.max(1) as f64;
+        context.push((state_key(m), Json::num(evicting.peak_state_bytes as f64)));
+        context.push((dense_key(m), Json::num(dense.peak_state_bytes as f64)));
+        context.push((ratio_key(m), Json::num(ratio)));
+        if m == 10000 {
+            assert!(
+                ratio >= 5.0,
+                "O(cohort) state floor broke: dense {} B vs evicting {} B ({ratio:.2}x < 5x)",
+                dense.peak_state_bytes,
+                evicting.peak_state_bytes
+            );
+        }
+
+        // --- rounds/sec sweep: full participation and 10% cohort ---
+        let mut speedup_base_ns = None;
+        for &c in &[100usize, 10] {
+            let stats = b.run_units(
+                &format!("federated M={m} cohort={c}% t={}", pool.threads()),
+                ITERS as f64,
+                "round",
+                || {
+                    std::hint::black_box(run_one(&prob, c, false, &pool));
+                },
+            );
+            let bits = run_one(&prob, c, false, &pool).uplink_bits;
+            context.push((rps_key(m, c), Json::num(stats.throughput().unwrap_or(0.0))));
+            context.push((bits_key(m, c), Json::num(bits as f64)));
+            if m == 10000 && c == 10 {
+                speedup_base_ns = Some(stats.mean_ns);
+            }
+            reports.push(stats);
+        }
+
+        // --- O(M)-state replica wall-clock at the 10k saturation point
+        //     (informational: eviction must not cost throughput) ---
+        if m == 10000 {
+            let dense_stats = b.run_units(
+                &format!("federated M={m} cohort=10% dense-replica t={}", pool.threads()),
+                ITERS as f64,
+                "round",
+                || {
+                    std::hint::black_box(run_one(&prob, 10, true, &pool));
+                },
+            );
+            if let Some(evict_ns) = speedup_base_ns {
+                context.push(("federated_speedup_m10000_c10", Json::num(dense_stats.mean_ns / evict_ns)));
+            }
+            reports.push(dense_stats);
+        }
+    }
+
+    println!("\n== federated scale ==");
+    for r in &reports {
+        println!("{}", r.report());
+    }
+    for (k, v) in &context {
+        if let Some(x) = v.as_f64() {
+            println!("{k}: {x:.2}");
+        }
+    }
+    let path = out_path();
+    match bench::write_json(&path, context, &reports) {
+        Ok(()) => println!("bench artifact -> {}", path.display()),
+        Err(e) => eprintln!("could not write {}: {e}", path.display()),
+    }
+}

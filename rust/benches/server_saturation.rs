@@ -33,7 +33,7 @@ use gdsec::util::bench::{self, BenchStats, Bencher};
 use gdsec::util::json::Json;
 use gdsec::util::pool::Pool;
 use gdsec::util::rng::Pcg64;
-use gdsec::util::shard::{ShardApply, ShardPlan};
+use gdsec::util::shard::{ShardApply, ShardPlan, ShareBook};
 use std::path::PathBuf;
 
 /// The model dimension for every sweep point (quick mode included, so
@@ -261,7 +261,7 @@ fn main() {
                         state_variable: true,
                         fold_scale: 1.0,
                         staged_agg: false,
-                        shares: Some((&mut sh_b, cfg.beta)),
+                        shares: Some(ShareBook { slabs: &mut sh_b, slot_of: None, scale: cfg.beta }),
                     },
                 );
                 for j in 0..DIM {
@@ -296,7 +296,7 @@ fn main() {
                         state_variable: true,
                         fold_scale: 1.0,
                         staged_agg: false,
-                        shares: Some((&mut sh_c, cfg.beta)),
+                        shares: Some(ShareBook { slabs: &mut sh_c, slot_of: None, scale: cfg.beta }),
                     },
                 );
                 plan.set_serial_cut(false);
@@ -339,7 +339,11 @@ fn main() {
                             state_variable: true,
                             fold_scale: 1.0,
                             staged_agg: false,
-                            shares: Some((&mut h_shares, cfg.beta)),
+                            shares: Some(ShareBook {
+                                slabs: &mut h_shares,
+                                slot_of: None,
+                                scale: cfg.beta,
+                            }),
                         },
                     );
                     std::hint::black_box(theta[0]);
@@ -411,7 +415,11 @@ fn main() {
                                 state_variable: true,
                                 fold_scale: 1.0,
                                 staged_agg: false,
-                                shares: Some((&mut sh_c, cfg.beta)),
+                                shares: Some(ShareBook {
+                                    slabs: &mut sh_c,
+                                    slot_of: None,
+                                    scale: cfg.beta,
+                                }),
                             },
                         );
                         std::hint::black_box(theta_c[0]);

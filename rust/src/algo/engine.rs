@@ -49,6 +49,16 @@ use crate::compress::{SparseUpdate, WireFormat};
 use crate::objectives::{GradSplit, Problem};
 use crate::util::pool::Pool;
 
+/// Parse a staleness-window spec: a positive round count.
+pub fn parse_stale_window(s: &str) -> Result<usize, String> {
+    match s.parse::<usize>() {
+        Ok(n) if n >= 1 => Ok(n),
+        Ok(n) => Err(format!("window {n} rejected (an update must be allowed to fold at \
+                              least one round late)")),
+        Err(_) => Err(format!("got {s:?}")),
+    }
+}
+
 /// The staleness window S from `GDSEC_STALE_WINDOW` (default 1): the
 /// maximum number of rounds a transmitted update may spend in flight
 /// before it MUST fold (or, at the bound, be dropped). S = 1 is the PR 4
@@ -56,12 +66,18 @@ use crate::util::pool::Pool;
 /// setting the synchronous bitwise pins are stated under. Shared by
 /// [`EngineOpts::from_env`] and the coordinator's
 /// [`CoordConfig`](crate::coordinator::CoordConfig).
+///
+/// Panics on `0` or garbage, matching the strict `GDSEC_QUORUM` error
+/// style: the historical lenient parse silently fell back to 1, so a CI
+/// leg exporting `GDSEC_STALE_WINDOW=O3` (a typo) would quietly pin the
+/// synchronous window while claiming to test multi-round staleness.
 pub fn stale_window_from_env() -> usize {
-    std::env::var("GDSEC_STALE_WINDOW")
-        .ok()
-        .and_then(|s| s.parse::<usize>().ok())
-        .filter(|&s| s >= 1)
-        .unwrap_or(1)
+    match std::env::var("GDSEC_STALE_WINDOW").ok().as_deref() {
+        None | Some("") => 1,
+        Some(s) => parse_stale_window(s).unwrap_or_else(|e| {
+            panic!("GDSEC_STALE_WINDOW must be a positive round count: {e}")
+        }),
+    }
 }
 
 /// Wire accounting for one worker's transmission in one round.
@@ -749,4 +765,20 @@ where
         }
     }
     eng.into_run()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stale_window_parse_contract() {
+        assert_eq!(parse_stale_window("1"), Ok(1));
+        assert_eq!(parse_stale_window("3"), Ok(3));
+        // Zero and garbage are loud errors, not silent fallbacks to 1.
+        assert!(parse_stale_window("0").is_err());
+        assert!(parse_stale_window("-1").is_err());
+        assert!(parse_stale_window("2.5").is_err());
+        assert!(parse_stale_window("O3").is_err());
+    }
 }

@@ -1,0 +1,370 @@
+//! Thread-free federated harness: cohort-sampled GD-SEC rounds at
+//! M = 10,000 workers in a single process.
+//!
+//! The threaded [`Coordinator`](super::Coordinator) spawns one OS thread
+//! per worker — the right shape for exercising the wire protocol and the
+//! liveness machine, and the wrong shape for a 10k-worker fleet (10k
+//! stacks, 10k channels, scheduler thrash). This harness keeps the exact
+//! GD-SEC round semantics ([`WorkerState::sparsify_into`] on the worker,
+//! the sharded Eq. 6 fold on the server) but drives every worker inline
+//! on the calling thread over a virtual transport: an update "arrives"
+//! by reference, bit accounting uses the real wire encoders
+//! ([`compress::wire_bits`]), and nothing is spawned per worker. A
+//! 10k-worker round is just a loop — cheap, portable, and deterministic
+//! for CI.
+//!
+//! Two scale features are threaded through, mirroring the coordinator:
+//!
+//! - **Cohort sampling** ([`CohortPlan`]): each round draws a seeded
+//!   subset of the fleet; everyone else keeps h_m/e_m frozen (the
+//!   paper's §IV-G1 partial-participation semantics — identical to a
+//!   round in which the censoring threshold suppressed every
+//!   component). Full participation (`cohort: None`) reproduces
+//!   [`gdsec::run_states`] op-for-op.
+//! - **O(cohort) server memory** ([`StateStore`]): per-worker h-share
+//!   ledgers live in an evictable slab store. Only the workers that
+//!   transmitted recently are resident; everyone else is parked in
+//!   compact sparse form. The fold books shares through the store's
+//!   slot map ([`ShareBook`]), so server resident state is
+//!   O(active cohort · touched coords), not O(M·d).
+//!
+//! `benches/federated_scale.rs` sweeps M × cohort fraction over this
+//! harness and pins the evicting store bitwise against an always-resident
+//! replica before timing anything.
+
+use crate::algo::engine::EngineOpts;
+use crate::algo::gdsec::{GdSecConfig, WorkerState};
+use crate::compress::{self, SparseUpdate, WireFormat};
+use crate::coordinator::scheduler::CohortPlan;
+use crate::objectives::{BlockedGrad, Problem};
+use crate::util::pool::Pool;
+use crate::util::shard::{ShardApply, ShardPlan, ShareBook};
+use crate::util::state_store::{StateStore, DEFAULT_EVICT_ROUNDS};
+
+/// Configuration for one [`run_federated`] experiment.
+#[derive(Debug)]
+pub struct FederatedConfig {
+    /// GD-SEC hyperparameters (α, β, ξ, EC/state-variable toggles).
+    pub gdsec: GdSecConfig,
+    /// Number of optimization rounds.
+    pub iters: usize,
+    /// Per-round cohort sampler. `None` = full participation every
+    /// round (bitwise the engine's trajectory).
+    pub cohort: Option<CohortPlan>,
+    /// Ledger eviction horizon in rounds. `None` defers to the policy
+    /// of [`effective_horizon`](Self::effective_horizon): evict after
+    /// [`DEFAULT_EVICT_ROUNDS`] idle rounds when a cohort is set,
+    /// always-resident otherwise.
+    pub evict_after: Option<u32>,
+    /// Wire encoding used for the uplink bit accounting.
+    pub wire: WireFormat,
+    /// Record f(θ) every `eval_every` rounds (and always after the
+    /// final round). 0 = never.
+    pub eval_every: usize,
+}
+
+impl FederatedConfig {
+    pub fn new(gdsec: GdSecConfig, iters: usize) -> FederatedConfig {
+        FederatedConfig {
+            gdsec,
+            iters,
+            cohort: None,
+            evict_after: None,
+            wire: WireFormat::default(),
+            eval_every: 10,
+        }
+    }
+
+    /// Same policy as [`CoordConfig::effective_horizon`]
+    /// (super::CoordConfig::effective_horizon): an explicit
+    /// `evict_after` wins; otherwise sampling a cohort implies the
+    /// default idle horizon, and full participation keeps the dense
+    /// always-resident ledger (bitwise and allocation-wise the
+    /// pre-store layout).
+    pub fn effective_horizon(&self) -> Option<u32> {
+        self.evict_after.or(if self.cohort.is_some() { Some(DEFAULT_EVICT_ROUNDS) } else { None })
+    }
+}
+
+/// Everything a bench or test needs from a federated run: the recorded
+/// objective trace, the uplink/censoring counters, the state-store
+/// telemetry, and the final states (for bitwise parity pins).
+#[derive(Debug)]
+pub struct FederatedOutcome {
+    /// (round, f(θ^k)) samples at `eval_every` cadence plus the final round.
+    pub fvals: Vec<(usize, f64)>,
+    /// Total uplink payload across all rounds (real wire encoders).
+    pub uplink_bits: u64,
+    /// Number of worker-rounds that transmitted at least one component.
+    pub transmissions: u64,
+    /// Number of active worker-rounds fully censored (nothing sent).
+    pub censored: u64,
+    /// Ledger slabs evicted / restored over the run.
+    pub evictions: u64,
+    pub restores: u64,
+    /// Server per-worker-state resident bytes after the final round.
+    pub resident_state_bytes: usize,
+    /// High-water mark of the same over the whole run.
+    pub peak_state_bytes: usize,
+    /// Final server model.
+    pub theta: Vec<f64>,
+    /// Final server state variable h (mirror of Σ_m h_m).
+    pub h: Vec<f64>,
+    /// The ledger store (query with
+    /// [`ledger_dense`](StateStore::ledger_dense) for parity checks).
+    pub store: StateStore,
+    /// Final worker states (h_m/e_m, for mirror/parity checks).
+    pub workers: Vec<WorkerState>,
+}
+
+/// Run GD-SEC over the virtual transport: every worker stepped inline,
+/// the server fold sharded over `pool`, cohort + ledger eviction as
+/// configured. Deterministic for a fixed problem/config at any thread
+/// count (worker steps are independent; the sharded fold is bitwise
+/// shard- and thread-count invariant; reductions happen in worker-id
+/// order on the calling thread).
+pub fn run_federated(prob: &Problem, mut fc: FederatedConfig, pool: &Pool) -> FederatedOutcome {
+    let d = prob.d;
+    let m = prob.m();
+    let cfg = fc.gdsec.clone();
+    let sv = cfg.state_variable;
+    let horizon = fc.effective_horizon();
+
+    let mut workers: Vec<WorkerState> = (0..m).map(|_| WorkerState::new(d)).collect();
+    let mut ups: Vec<SparseUpdate> = (0..m).map(|_| SparseUpdate::empty(d)).collect();
+    // Same fixed nnz-budget block tree as the engine's nested lanes and
+    // the coordinator's NativeProvider — gradients are bitwise identical
+    // to both at any block count.
+    let nnz_budget = EngineOpts::from_env().nnz_budget;
+    let mut plans: Vec<BlockedGrad> =
+        prob.locals.iter().map(|l| l.blocked_grad_plan(nnz_budget)).collect();
+    let mut store = if sv { StateStore::new(d, m, horizon) } else { StateStore::resident(0, 0) };
+
+    let mut theta = vec![0.0; d];
+    let mut theta_prev = vec![0.0; d];
+    let mut h = vec![0.0; d];
+    let mut agg = vec![0.0; d];
+    let mut theta_diff = vec![0.0; d];
+    let mut plan = ShardPlan::new();
+    plan.ensure(d, pool);
+
+    let mut cohort = fc.cohort.take();
+    let mut transmitters: Vec<usize> = Vec::with_capacity(m);
+    let mut fvals = Vec::new();
+    let mut uplink_bits = 0u64;
+    let mut transmissions = 0u64;
+    let mut censored = 0u64;
+
+    for k in 1..=fc.iters {
+        if let Some(cp) = &mut cohort {
+            cp.sample(k, m);
+        }
+
+        crate::linalg::sub(&theta, &theta_prev, &mut theta_diff);
+
+        // Worker phase (virtual transport): each active worker computes
+        // its local gradient, censors against θ-diff, and "transmits" by
+        // leaving the survivors in its reused wire buffer. Inactive
+        // workers neither compute nor move h_m/e_m (§IV-G1).
+        transmitters.clear();
+        for w in 0..m {
+            if let Some(cp) = &cohort {
+                if !cp.contains(w) {
+                    continue;
+                }
+            }
+            let ws = &mut workers[w];
+            prob.locals[w].grad_blocked(&theta, &mut plans[w], ws.grad_mut());
+            ws.sparsify_into(&cfg, m, &theta_diff, &mut ups[w]);
+            if ups[w].nnz() == 0 {
+                censored += 1;
+            } else {
+                uplink_bits += compress::wire_bits(&ups[w], fc.wire) as u64;
+                transmissions += 1;
+                transmitters.push(w);
+            }
+        }
+
+        // Server phase: age out ledgers idle past the horizon BEFORE
+        // staging this round's transmitters — with the default horizon
+        // of 1 only the current cohort's slabs are resident through the
+        // fold, which is what makes server memory O(cohort), not O(M).
+        if sv {
+            store.evict_idle(k as u32);
+            for &w in &transmitters {
+                store.stage(w, k as u32, &ups[w].idx);
+            }
+        }
+        let (slabs, slot_of) = store.book_view();
+        plan.fold(
+            pool,
+            transmitters.iter().map(|&w| (w, &ups[w])),
+            ShardApply {
+                theta: &mut theta,
+                h: &mut h,
+                agg: &mut agg,
+                theta_prev: Some(&mut theta_prev),
+                alpha: cfg.alpha,
+                beta: cfg.beta,
+                state_variable: sv,
+                fold_scale: 1.0,
+                // Engine contract: `agg` is all-zeros between rounds
+                // (nothing is ever staged here) and the fold re-zeroes
+                // it after the step.
+                staged_agg: true,
+                shares: sv.then_some(ShareBook { slabs, slot_of, scale: cfg.beta }),
+            },
+        );
+
+        if fc.eval_every != 0 && (k % fc.eval_every == 0 || k == fc.iters) {
+            fvals.push((k, prob.value_pooled(&theta, pool)));
+        }
+    }
+
+    FederatedOutcome {
+        fvals,
+        uplink_bits,
+        transmissions,
+        censored,
+        evictions: store.evictions(),
+        restores: store.restores(),
+        resident_state_bytes: store.resident_bytes(),
+        peak_state_bytes: store.peak_resident_bytes(),
+        theta,
+        h,
+        store,
+        workers,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::gdsec::{self, Xi};
+    use crate::coordinator::scheduler::{CohortPlan, DEFAULT_COHORT_SEED};
+    use crate::data::synthetic;
+
+    fn small_problem(m: usize) -> Problem {
+        let ds = synthetic::rcv1_like(7, m.max(64), 48, 6);
+        Problem::logistic(ds, m, 0.0)
+    }
+
+    fn small_cfg() -> GdSecConfig {
+        GdSecConfig {
+            alpha: 0.05,
+            beta: 0.5,
+            xi: Xi::Uniform(0.3),
+            fstar: Some(0.0),
+            ..GdSecConfig::default()
+        }
+    }
+
+    /// Full participation through the federated harness is bitwise the
+    /// engine's trajectory: same θ, h, and worker states.
+    #[test]
+    fn full_participation_matches_engine_bitwise() {
+        let prob = small_problem(12);
+        let cfg = small_cfg();
+        let iters = 40;
+
+        let fed = run_federated(&prob, FederatedConfig::new(cfg.clone(), iters), Pool::global());
+        let eng = gdsec::run_states(&prob, &cfg, iters, |_k| None, Pool::global());
+
+        assert_eq!(to_bits(&fed.theta), to_bits(&eng.server.theta));
+        assert_eq!(to_bits(&fed.h), to_bits(&eng.server.h));
+        for (fw, ew) in fed.workers.iter().zip(eng.workers.iter()) {
+            assert_eq!(to_bits(&fw.h), to_bits(&ew.h));
+            assert_eq!(to_bits(&fw.e), to_bits(&ew.e));
+        }
+        assert!(fed.transmissions > 0);
+    }
+
+    /// Cohort rounds with the evicting store are bitwise identical to
+    /// the same cohort rounds over an always-resident store, and the
+    /// eviction machinery actually cycles.
+    #[test]
+    fn evicting_store_matches_resident_bitwise_under_cohort() {
+        let prob = small_problem(24);
+        let cfg = small_cfg();
+        let iters = 60;
+        let mk = |evict_after: Option<u32>| {
+            let mut fc = FederatedConfig::new(cfg.clone(), iters);
+            fc.cohort = Some(CohortPlan::count(5, DEFAULT_COHORT_SEED));
+            fc.evict_after = evict_after;
+            run_federated(&prob, fc, Pool::global())
+        };
+        // u32::MAX horizon: the store never ages anything out — the
+        // always-resident baseline with identical cohort schedule.
+        let resident = mk(Some(u32::MAX));
+        let evicting = mk(None);
+
+        assert_eq!(resident.evictions, 0);
+        assert!(evicting.evictions > 0, "horizon-1 store never evicted");
+        assert!(evicting.restores > 0, "no worker ever rejoined the cohort");
+        assert_eq!(to_bits(&evicting.theta), to_bits(&resident.theta));
+        assert_eq!(to_bits(&evicting.h), to_bits(&resident.h));
+        let mut a = vec![0.0; prob.d];
+        let mut b = vec![0.0; prob.d];
+        for w in 0..prob.m() {
+            evicting.store.ledger_dense(w, &mut a);
+            resident.store.ledger_dense(w, &mut b);
+            assert_eq!(to_bits(&a), to_bits(&b), "worker {w} ledger diverged");
+        }
+        assert!(evicting.peak_state_bytes < resident.peak_state_bytes);
+    }
+
+    /// The h mirror holds through cohort sampling and eviction:
+    /// h == Σ_m h_m bit-for-bit at the end of the run.
+    #[test]
+    fn h_mirror_holds_under_cohort_and_eviction() {
+        let prob = small_problem(16);
+        let mut fc = FederatedConfig::new(small_cfg(), 50);
+        fc.cohort = Some(CohortPlan::fraction(0.25, 0xFEED));
+        let out = run_federated(&prob, fc, Pool::global());
+        let mut sum = vec![0.0; prob.d];
+        for ws in &out.workers {
+            for (s, v) in sum.iter_mut().zip(ws.h.iter()) {
+                *s += *v;
+            }
+        }
+        for (i, (hi, si)) in out.h.iter().zip(sum.iter()).enumerate() {
+            assert!(
+                (hi - si).abs() <= 1e-9 * si.abs().max(1.0),
+                "mirror broke at {i}: {hi} vs {si}"
+            );
+        }
+        // Ledgers mirror the workers' own h_m exactly.
+        let mut led = vec![0.0; prob.d];
+        for (w, ws) in out.workers.iter().enumerate() {
+            out.store.ledger_dense(w, &mut led);
+            assert_eq!(to_bits(&led), to_bits(&ws.h), "ledger {w} != worker h");
+        }
+    }
+
+    /// Two runs of the same config are identical — the harness has no
+    /// hidden clock or thread-order dependence.
+    #[test]
+    fn federated_run_is_deterministic() {
+        let prob = small_problem(20);
+        let mk = || {
+            let mut fc = FederatedConfig::new(small_cfg(), 30);
+            fc.cohort = Some(CohortPlan::fraction(0.3, DEFAULT_COHORT_SEED));
+            run_federated(&prob, fc, Pool::global())
+        };
+        let a = mk();
+        let b = mk();
+        assert_eq!(to_bits(&a.theta), to_bits(&b.theta));
+        assert_eq!(a.uplink_bits, b.uplink_bits);
+        assert_eq!(a.evictions, b.evictions);
+        assert_eq!(a.restores, b.restores);
+        assert_eq!(a.fvals.len(), b.fvals.len());
+        for ((ka, fa), (kb, fb)) in a.fvals.iter().zip(b.fvals.iter()) {
+            assert_eq!(ka, kb);
+            assert_eq!(fa.to_bits(), fb.to_bits());
+        }
+    }
+
+    fn to_bits(v: &[f64]) -> Vec<u64> {
+        v.iter().map(|x| x.to_bits()).collect()
+    }
+}

@@ -6,7 +6,13 @@
 //! semi-synchronous quorum mode for the straggler-dominated wireless
 //! setting it targets):
 //! * the server broadcasts θ^k to every worker each round with an
-//!   active-this-round flag from the [`scheduler`];
+//!   active-this-round flag from the [`scheduler`], optionally
+//!   intersected with a seeded cross-device cohort draw
+//!   ([`scheduler::CohortPlan`], `GDSEC_COHORT`) — and with a cohort
+//!   active, per-worker server state lives in an evictable
+//!   [`StateStore`] (`GDSEC_EVICT_ROUNDS`), so resident ledger memory
+//!   is O(active cohort · d), not O(M·d) (the thread-free
+//!   [`federated`] harness drives the same store at M = 10k);
 //! * active workers reply with either an RLE-coded sparse update or an
 //!   explicit `Silence` control frame (payload-bit cost 0, matching the
 //!   paper's accounting; the frame header is reported as overhead);
@@ -49,14 +55,19 @@ pub mod scheduler;
 pub mod transport;
 pub mod worker;
 
+pub mod federated;
+
 use crate::algo::gdsec::GdSecConfig;
 use crate::algo::trace::{stale_age_bin, Trace, TraceRow, STALE_AGE_BINS};
 use crate::compress::SparseUpdate;
 use crate::util::pool::Pool;
-use crate::util::shard::{ShardApply, ShardPlan};
+use crate::util::shard::{ShardApply, ShardPlan, ShareBook};
+use crate::util::state_store::{evict_rounds_from_env, StateStore, DEFAULT_EVICT_ROUNDS};
 use protocol::Msg;
-use round::{delivery_age, evict_worker, split_due, Admit, Quorum, RoundState, StaleUpdate};
-use scheduler::{QuorumController, Scheduler};
+use round::{
+    delivery_age, evict_worker, in_sorted, split_due, Admit, Quorum, RoundState, StaleUpdate,
+};
+use scheduler::{CohortPlan, QuorumController, Scheduler};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 use transport::{duplex, DelayPlan, FaultPlan, Recv, ServerEnd};
@@ -164,6 +175,21 @@ pub struct CoordConfig {
     /// Graceful-degradation policy while workers are dead. Default
     /// honors `GDSEC_DEGRADE`.
     pub degrade: DegradePolicy,
+    /// Cross-device cohort sampling: when set, each round's scheduled
+    /// set is intersected with a seeded uniform cohort draw
+    /// ([`CohortPlan`]) before liveness filtering and the quorum clamp.
+    /// `None` = full participation (today's behavior, bit-for-bit).
+    /// Default honors the `GDSEC_COHORT` env override; tests that pin
+    /// exact trajectories pin `None`.
+    pub cohort: Option<CohortPlan>,
+    /// Idle horizon (rounds) before a worker's h-share ledger slab is
+    /// evicted from the server's [`StateStore`] — resident per-worker
+    /// state becomes O(active cohort · d), not O(M·d). `None` defers to
+    /// the driver default: [`DEFAULT_EVICT_ROUNDS`] when a cohort is
+    /// configured, always-resident otherwise (the pre-store dense
+    /// ledger, allocation-for-allocation). Default honors
+    /// `GDSEC_EVICT_ROUNDS`.
+    pub evict_after: Option<u32>,
 }
 
 impl CoordConfig {
@@ -185,7 +211,16 @@ impl CoordConfig {
             stale_window: crate::algo::engine::stale_window_from_env(),
             faults: FaultPlan::from_env(),
             degrade: DegradePolicy::from_env(),
+            cohort: CohortPlan::from_env(),
+            evict_after: evict_rounds_from_env(),
         }
+    }
+
+    /// The effective ledger-eviction horizon: the explicit config value,
+    /// else [`DEFAULT_EVICT_ROUNDS`] when a cohort is sampled (the
+    /// cross-device regime the store exists for), else always-resident.
+    pub fn effective_horizon(&self) -> Option<u32> {
+        self.evict_after.or(if self.cohort.is_some() { Some(DEFAULT_EVICT_ROUNDS) } else { None })
     }
 }
 
@@ -243,6 +278,15 @@ pub struct CoordOutcome {
     /// Total uplink frame bytes (headers + payloads + silence frames).
     pub uplink_frame_bytes: u64,
     pub downlink_frame_bytes: u64,
+    /// Ledger slabs evicted from the server's [`StateStore`] (0 in
+    /// always-resident mode).
+    pub state_evictions: u64,
+    /// Evicted ledgers rehydrated bitwise on re-admission to the cohort.
+    pub state_restores: u64,
+    /// High-water resident bytes of per-worker ledger state (slabs +
+    /// parked compact images; see
+    /// [`StateStore::resident_bytes`]).
+    pub peak_state_bytes: usize,
 }
 
 /// Server-side per-worker liveness. `Suspect` carries an
@@ -304,59 +348,49 @@ fn strike(life: &mut Life, k: usize, dead_after: u32) -> bool {
     }
 }
 
-/// Subtract worker `w`'s booked share out of the server's state variable
-/// h and zero the share. Per-component subtraction of exactly what was
-/// added, so retirement is bitwise-exact for the retired worker while
-/// every other share stays untouched.
-fn withdraw_share(w: usize, h: &mut [f64], h_shares: &mut [Vec<f64>]) {
-    if let Some(share) = h_shares.get_mut(w) {
-        for (hv, sv) in h.iter_mut().zip(share.iter_mut()) {
-            *hv -= *sv;
-            *sv = 0.0;
-        }
-    }
-}
-
 /// Remove a just-died worker's standing contribution under
 /// [`DegradePolicy::Renormalize`]: evict its parked stale updates and
-/// withdraw its h-share. Under `Freeze` this is a no-op — the dead
-/// worker's parked updates still fold when due and its h-share keeps
-/// steering the descent (the pre-fault-tolerance behavior).
+/// withdraw its h-share ledger from the [`StateStore`] — wherever it
+/// lives (resident slab or evicted compact image). Under `Freeze` this
+/// is a no-op — the dead worker's parked updates still fold when due
+/// and its h-share keeps steering the descent (the pre-fault-tolerance
+/// behavior).
 fn retire(
     w: usize,
     degrade: DegradePolicy,
     state_variable: bool,
     stale: &mut Vec<StaleUpdate>,
     h: &mut [f64],
-    h_shares: &mut [Vec<f64>],
+    store: &mut StateStore,
 ) {
     if degrade != DegradePolicy::Renormalize {
         return;
     }
     evict_worker(stale, w);
     if state_variable {
-        withdraw_share(w, h, h_shares);
+        store.withdraw(w, h);
     }
 }
 
 /// EC-safe re-admission on a `Join` frame: drop every parked update the
-/// worker left behind, withdraw its h-share (the worker restarts with
-/// h_m = e_m = 0, so the server must forget the matching memory — under
-/// either degrade policy), and mark it [`Life::Rejoining`] so the next
-/// delivered broadcast becomes its fresh enrollment snapshot. The caller
-/// counts the rejoin.
+/// worker left behind, withdraw its h-share ledger (the worker restarts
+/// with h_m = e_m = 0, so the server must forget the matching memory —
+/// under either degrade policy, and whether the ledger is a resident
+/// slab or an evicted compact image), and mark it [`Life::Rejoining`]
+/// so the next delivered broadcast becomes its fresh enrollment
+/// snapshot. The caller counts the rejoin.
 fn readmit(
     w: usize,
     life: &mut [Life],
     state_variable: bool,
     stale: &mut Vec<StaleUpdate>,
     h: &mut [f64],
-    h_shares: &mut [Vec<f64>],
+    store: &mut StateStore,
 ) {
     life[w] = Life::Rejoining;
     evict_worker(stale, w);
     if state_variable {
-        withdraw_share(w, h, h_shares);
+        store.withdraw(w, h);
     }
 }
 
@@ -429,11 +463,18 @@ impl Coordinator {
         let mut rounds: Vec<RoundMetrics> = Vec::with_capacity(iters);
         let mut life = vec![Life::Active; m];
         // Per-worker attribution ledger for the server's state variable:
-        // h_shares[w] records exactly the β-scaled mass worker w's folded
-        // updates added to h, so death (Renormalize) and re-admission can
-        // withdraw that worker's memory without touching anyone else's.
-        let mut h_shares: Vec<Vec<f64>> =
-            if sv { vec![vec![0.0; d]; m] } else { Vec::new() };
+        // the store's slab for worker w records exactly the β-scaled
+        // mass its folded updates added to h, so death (Renormalize)
+        // and re-admission can withdraw that worker's memory without
+        // touching anyone else's. With no cohort/eviction configured
+        // this is the dense always-resident ledger (bit-for-bit and
+        // allocation-for-allocation the historical `Vec<Vec<f64>>`);
+        // under an eviction horizon only recently-active workers' slabs
+        // stay resident — O(active cohort · d), not O(M·d).
+        let horizon = self.cfg.effective_horizon();
+        let mut store =
+            if sv { StateStore::new(d, m, horizon) } else { StateStore::resident(0, 0) };
+        let mut cohort = self.cfg.cohort.take();
 
         let mut theta = self.cfg.init_theta.take().unwrap_or_else(|| vec![0.0; d]);
         assert_eq!(theta.len(), d, "init_theta dimension mismatch");
@@ -475,8 +516,19 @@ impl Coordinator {
         for k in 1..=iters + 1 {
             let t0 = Instant::now();
             let eval_only = k == iters + 1;
-            let active =
+            let mut active =
                 if eval_only { (0..m).collect::<Vec<_>>() } else { sched.active(k, m) };
+            // Cohort sampling composes with (not replaces) the
+            // scheduler: the round's participants are the scheduled
+            // workers that also drew into this round's seeded cohort.
+            // The final eval round stays full so the last recorded
+            // iterate is everyone's objective.
+            if !eval_only {
+                if let Some(cp) = &mut cohort {
+                    cp.sample(k, m);
+                    active.retain(|&w| cp.contains(w));
+                }
+            }
             let mut metrics = RoundMetrics { round: k, ..Default::default() };
 
             // Drain dead workers' links. A dead worker may still be a
@@ -495,7 +547,7 @@ impl Coordinator {
                     if life[w] == Life::Dead
                         && matches!(protocol::decode(&frame, d as u32), Ok(Msg::Join { .. }))
                     {
-                        readmit(w, &mut life, sv, &mut stale, &mut h, &mut h_shares);
+                        readmit(w, &mut life, sv, &mut stale, &mut h, &mut store);
                         metrics.rejoined += 1;
                     }
                 }
@@ -528,14 +580,14 @@ impl Coordinator {
                 let msg = Msg::Broadcast {
                     round: k as u32,
                     theta: theta.clone(),
-                    active: active.contains(&w),
+                    active: in_sorted(&active, w),
                 };
                 let frame = protocol::encode(&msg, d as u32);
                 metrics.downlink_bits += frame.len() as u64 * 8;
                 let delivered = end.tx.send(frame);
                 if !delivered && life[w] != Life::Dead {
                     life[w] = Life::Dead;
-                    retire(w, degrade, sv, &mut stale, &mut h, &mut h_shares);
+                    retire(w, degrade, sv, &mut stale, &mut h, &mut store);
                 } else if delivered && life[w] == Life::Rejoining {
                     life[w] = Life::Active;
                 }
@@ -567,7 +619,7 @@ impl Coordinator {
                                 metrics.dropped_frames += 1;
                                 metrics.overhead_bits += frame_bits;
                                 if strike(&mut life[w], k, self.cfg.dead_after) {
-                                    retire(w, degrade, sv, &mut stale, &mut h, &mut h_shares);
+                                    retire(w, degrade, sv, &mut stale, &mut h, &mut store);
                                 }
                                 break;
                             }
@@ -632,7 +684,7 @@ impl Coordinator {
                                     // from any state; no strike — a Join
                                     // proves liveness.
                                     metrics.overhead_bits += frame_bits;
-                                    readmit(w, &mut life, sv, &mut stale, &mut h, &mut h_shares);
+                                    readmit(w, &mut life, sv, &mut stale, &mut h, &mut store);
                                     metrics.rejoined += 1;
                                     break;
                                 }
@@ -653,7 +705,7 @@ impl Coordinator {
                                     metrics.corrupt_frames += 1;
                                     metrics.overhead_bits += frame_bits;
                                     if strike(&mut life[w], k, self.cfg.dead_after) {
-                                        retire(w, degrade, sv, &mut stale, &mut h, &mut h_shares);
+                                        retire(w, degrade, sv, &mut stale, &mut h, &mut store);
                                     }
                                     break;
                                 }
@@ -661,13 +713,13 @@ impl Coordinator {
                         }
                         Recv::Timeout => {
                             if strike(&mut life[w], k, self.cfg.dead_after) {
-                                retire(w, degrade, sv, &mut stale, &mut h, &mut h_shares);
+                                retire(w, degrade, sv, &mut stale, &mut h, &mut store);
                             }
                             break;
                         }
                         Recv::Disconnected => {
                             life[w] = Life::Dead;
-                            retire(w, degrade, sv, &mut stale, &mut h, &mut h_shares);
+                            retire(w, degrade, sv, &mut stale, &mut h, &mut store);
                             break;
                         }
                     }
@@ -769,6 +821,22 @@ impl Coordinator {
                 1.0
             };
             let bs = self.cfg.gdsec.beta * fold_scale;
+            // Ledger residency for this fold: reclaim slabs idle past
+            // the horizon, then admit every staging worker (rehydrating
+            // evicted ledgers bitwise) — both no-ops in always-resident
+            // mode, so the full-participation path is untouched.
+            if sv {
+                store.evict_idle(k as u32);
+                for s in &due {
+                    store.stage(s.worker, k as u32, &s.update.idx);
+                }
+                for (w, u) in rs.updates().iter().enumerate() {
+                    if let Some(u) = u {
+                        store.stage(w, k as u32, &u.idx);
+                    }
+                }
+            }
+            let (slabs, slot_of) = store.book_view();
             plan.fold(
                 &self.cfg.pool,
                 due.iter()
@@ -789,7 +857,7 @@ impl Coordinator {
                     state_variable: sv,
                     fold_scale,
                     staged_agg: false,
-                    shares: sv.then_some((&mut h_shares[..], bs)),
+                    shares: sv.then_some(ShareBook { slabs, slot_of, scale: bs }),
                 },
             );
             cum_stale += due.len() as u64;
@@ -821,6 +889,9 @@ impl Coordinator {
                 .collect(),
             uplink_frame_bytes: uplink_bytes,
             downlink_frame_bytes: downlink_bytes,
+            state_evictions: store.evictions(),
+            state_restores: store.restores(),
+            peak_state_bytes: store.peak_resident_bytes(),
         }
     }
 }
@@ -856,9 +927,9 @@ fn native_setup(
 
 /// Convenience: run distributed GD-SEC over a [`crate::objectives::Problem`]
 /// with native gradient providers. Honors the `GDSEC_QUORUM`,
-/// `GDSEC_FAULTS`, and `GDSEC_DEGRADE` env overrides (the CI matrix runs
-/// the integration suite under each); use [`run_native_opts`] to pin
-/// them.
+/// `GDSEC_FAULTS`, `GDSEC_DEGRADE`, `GDSEC_COHORT`, and
+/// `GDSEC_EVICT_ROUNDS` env overrides (the CI matrix runs the
+/// integration suite under each); use [`run_native_opts`] to pin them.
 pub fn run_native(
     prob: &crate::objectives::Problem,
     gdsec: GdSecConfig,
@@ -870,10 +941,11 @@ pub fn run_native(
 }
 
 /// [`run_native`] with an explicit quorum policy and virtual delay
-/// schedule, and the fault plan + degradation policy pinned to none
-/// (parity tests pin `Quorum::All`; straggler tests inject deterministic
-/// [`DelayPlan`]s — either way the trajectory must not depend on the CI
-/// fault environment).
+/// schedule, and the fault plan, degradation policy, cohort sampler,
+/// and ledger-eviction horizon pinned to none (parity tests pin
+/// `Quorum::All`; straggler tests inject deterministic [`DelayPlan`]s —
+/// either way the trajectory must not depend on the CI fault/cohort
+/// environment).
 pub fn run_native_opts(
     prob: &crate::objectives::Problem,
     gdsec: GdSecConfig,
@@ -887,6 +959,8 @@ pub fn run_native_opts(
     cfg.delay = delay;
     cfg.faults = FaultPlan::default();
     cfg.degrade = DegradePolicy::Freeze;
+    cfg.cohort = None;
+    cfg.evict_after = None;
     Coordinator::spawn(cfg, prob.d, factories).run()
 }
 
@@ -946,6 +1020,8 @@ mod tests {
         cfg.stale_window = 4;
         cfg.faults = FaultPlan::default();
         cfg.degrade = DegradePolicy::Freeze;
+        cfg.cohort = None;
+        cfg.evict_after = None;
         cfg.problem_name = prob.name.clone();
         cfg.evaluator = Some(Arc::new(move |t: &[f64]| prob2.value(t)));
         let coord = Coordinator { cfg, ends: vec![server_end], handles: vec![handle], d };
@@ -991,7 +1067,7 @@ mod tests {
     #[test]
     fn withdraw_share_is_exact_and_isolated() {
         let mut h = vec![0.0f64; 4];
-        let mut shares = vec![vec![0.0f64; 4]; 2];
+        let mut store = StateStore::resident(4, 2);
         let mut u0 = SparseUpdate::empty(4);
         u0.idx.extend_from_slice(&[0, 2]);
         u0.val.extend_from_slice(&[1.5, -0.25]);
@@ -1000,25 +1076,34 @@ mod tests {
         u1.val.extend_from_slice(&[0.125, 2.0]);
         // Book both workers the way the fold does (h += β·u, per worker).
         let beta = 0.5;
-        book_one(&mut shares[0], beta, &u0);
-        book_one(&mut shares[1], beta, &u1);
-        for w in 0..2 {
-            for j in 0..4 {
-                h[j] += shares[w][j];
+        {
+            let (slabs, slot) = store.book_view();
+            assert!(slot.is_none());
+            book_one(&mut slabs[0], beta, &u0);
+            book_one(&mut slabs[1], beta, &u1);
+            for w in 0..2 {
+                for j in 0..4 {
+                    h[j] += slabs[w][j];
+                }
             }
         }
-        let h1_expected: Vec<f64> = shares[1].clone();
-        withdraw_share(0, &mut h, &mut shares);
+        let mut h1_expected = vec![0.0f64; 4];
+        store.ledger_dense(1, &mut h1_expected);
+        store.withdraw(0, &mut h);
         // Worker 0's memory is gone exactly; worker 1's is intact.
+        let mut l0 = vec![1.0f64; 4];
+        let mut l1 = vec![0.0f64; 4];
+        store.ledger_dense(0, &mut l0);
+        store.ledger_dense(1, &mut l1);
         for j in 0..4 {
             assert_eq!(h[j].to_bits(), h1_expected[j].to_bits());
-            assert_eq!(shares[0][j].to_bits(), 0.0f64.to_bits());
-            assert_eq!(shares[1][j].to_bits(), h1_expected[j].to_bits());
+            assert_eq!(l0[j].to_bits(), 0.0f64.to_bits());
+            assert_eq!(l1[j].to_bits(), h1_expected[j].to_bits());
         }
-        // Withdrawing with an empty ledger (state_variable off) is a
+        // Withdrawing with an empty store (state_variable off) is a
         // no-op, not a panic.
-        let mut none: Vec<Vec<f64>> = Vec::new();
-        withdraw_share(0, &mut h, &mut none);
+        let mut none = StateStore::resident(0, 0);
+        none.withdraw(0, &mut h);
     }
 
     #[test]

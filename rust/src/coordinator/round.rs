@@ -172,6 +172,14 @@ pub struct StaleUpdate {
     pub update: SparseUpdate,
 }
 
+/// O(log n) membership in a sorted ascending worker-id set — the
+/// scheduler's active sets and the cohort sampler's draws are always
+/// sorted, so broadcast fan-outs test membership without an O(M) scan
+/// per worker (O(M²) per round at M = 10k).
+pub fn in_sorted(set: &[usize], w: usize) -> bool {
+    set.binary_search(&w).is_ok()
+}
+
 /// Evict every parked entry originating from `worker`, returning how
 /// many were removed. Re-admission calls this so a transmission computed
 /// BEFORE a worker's crash can never fold after its EC state restarted
@@ -387,6 +395,15 @@ mod tests {
         let a = Quorum::Adaptive { target_quantile: 0.75, min_frac: 0.5 };
         assert_eq!(a.k_of(5), 3); // ceil(2.5)
         assert_eq!(a.k_of(0), 0);
+    }
+
+    #[test]
+    fn in_sorted_matches_linear_scan() {
+        let set = [0usize, 3, 4, 9, 17];
+        for w in 0..20 {
+            assert_eq!(in_sorted(&set, w), set.contains(&w), "w={w}");
+        }
+        assert!(!in_sorted(&[], 0));
     }
 
     #[test]

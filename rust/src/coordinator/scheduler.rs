@@ -63,6 +63,162 @@ impl Scheduler {
     }
 }
 
+/// Default seed for [`CohortPlan`] sampling when `GDSEC_COHORT` picks
+/// the cohort (reproduction runs pin it; see EXPERIMENTS.md §Federated
+/// scale).
+pub const DEFAULT_COHORT_SEED: u64 = 0xC0B0;
+
+/// How a [`CohortPlan`] sizes each round's cohort.
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum CohortSize {
+    /// Exactly `k` workers (clamped to `[1, M]`).
+    Count(usize),
+    /// `ceil(frac·M)`, clamped to `[1, M]` — the same formula as
+    /// [`Scheduler::active_count`].
+    Fraction(f64),
+}
+
+/// Seeded per-round cohort sampling for cross-device scale (`M` in the
+/// thousands, only a sampled cohort transmits per round). Each round
+/// draws a uniform without-replacement cohort from a fresh
+/// [`Pcg64`] stream keyed by `(seed, round)` — the sample is a pure
+/// function of (seed, round, M), independent of call history, so
+/// trajectories replay exactly across runs, restarts, and drivers.
+///
+/// The cohort *composes* with the existing machinery rather than
+/// replacing it: the coordinator intersects it with the
+/// [`Scheduler`]'s active set, the liveness machine then drops dead
+/// members, and the [`Quorum`] clamps to the surviving live cohort.
+/// A full cohort (fraction 1.0 / count ≥ M) selects everyone and the
+/// round is bit-for-bit today's behavior.
+///
+/// Steady-state sampling is allocation-free: the permutation, id, and
+/// membership buffers persist and the partial Fisher–Yates touches
+/// only O(cohort) entries.
+#[derive(Debug, Clone)]
+pub struct CohortPlan {
+    size: CohortSize,
+    seed: u64,
+    /// Identity-reset permutation scratch for the partial shuffle.
+    perm: Vec<u32>,
+    /// The current round's cohort, ascending worker id.
+    ids: Vec<usize>,
+    /// Membership flags for O(1) `contains` (cleared via `ids`).
+    member: Vec<bool>,
+}
+
+impl CohortPlan {
+    /// Cohort of exactly `k` workers per round.
+    pub fn count(k: usize, seed: u64) -> CohortPlan {
+        assert!(k >= 1, "cohort count must be positive");
+        CohortPlan::with_size(CohortSize::Count(k), seed)
+    }
+
+    /// Cohort of `ceil(frac·M)` workers per round, `frac` ∈ (0, 1].
+    pub fn fraction(frac: f64, seed: u64) -> CohortPlan {
+        assert!(frac > 0.0 && frac <= 1.0, "cohort fraction must be in (0, 1]");
+        CohortPlan::with_size(CohortSize::Fraction(frac), seed)
+    }
+
+    fn with_size(size: CohortSize, seed: u64) -> CohortPlan {
+        CohortPlan { size, seed, perm: Vec::new(), ids: Vec::new(), member: Vec::new() }
+    }
+
+    /// Parse a `GDSEC_COHORT` spec: a positive worker count (`500`) or
+    /// a fraction in (0, 1] (`0.1`; `1.0` = full participation — well-
+    /// defined, not malformed). `0` and `0.0` are rejected explicitly:
+    /// a zero cohort would otherwise clamp to 1 and silently mean "one
+    /// worker trains the fleet".
+    pub fn parse(spec: &str, seed: u64) -> Result<CohortPlan, String> {
+        if let Ok(k) = spec.parse::<usize>() {
+            return if k == 0 {
+                Err("cohort count 0 rejected".into())
+            } else {
+                Ok(CohortPlan::count(k, seed))
+            };
+        }
+        match spec.parse::<f64>() {
+            Ok(f) if f > 0.0 && f <= 1.0 => Ok(CohortPlan::fraction(f, seed)),
+            Ok(f) => Err(format!("fraction {f} outside (0, 1]")),
+            Err(_) => Err(format!("got {spec:?}")),
+        }
+    }
+
+    /// The `GDSEC_COHORT` env override (`None`/empty = full
+    /// participation, i.e. no cohort sampling at all). Panics loudly on
+    /// zero or garbage, matching the strict `GDSEC_QUORUM` style.
+    pub fn from_env() -> Option<CohortPlan> {
+        match std::env::var("GDSEC_COHORT").ok().as_deref() {
+            None | Some("") => None,
+            Some(s) => Some(CohortPlan::parse(s, DEFAULT_COHORT_SEED).unwrap_or_else(|e| {
+                panic!(
+                    "GDSEC_COHORT must be a positive worker count or a \
+                     fraction in (0, 1]: {e}"
+                )
+            })),
+        }
+    }
+
+    /// This round's cohort size for M workers.
+    pub fn cohort_count(&self, m: usize) -> usize {
+        match self.size {
+            CohortSize::Count(k) => k.clamp(1, m),
+            CohortSize::Fraction(f) => ((f * m as f64).ceil() as usize).clamp(1, m),
+        }
+    }
+
+    /// Draw round `k`'s cohort over M workers. Read it back via
+    /// [`ids`](Self::ids) / [`contains`](Self::contains).
+    pub fn sample(&mut self, k: usize, m: usize) {
+        // Clear the previous round's membership via its id list.
+        for &w in &self.ids {
+            if let Some(f) = self.member.get_mut(w) {
+                *f = false;
+            }
+        }
+        if self.member.len() != m {
+            self.member.clear();
+            self.member.resize(m, false);
+        }
+        self.ids.clear();
+        let c = self.cohort_count(m);
+        if c == m {
+            self.ids.extend(0..m);
+        } else {
+            // Identity-reset permutation + partial Fisher–Yates: c
+            // swaps from a fresh per-round stream.
+            if self.perm.len() != m {
+                self.perm.clear();
+                self.perm.extend(0..m as u32);
+            } else {
+                for (i, p) in self.perm.iter_mut().enumerate() {
+                    *p = i as u32;
+                }
+            }
+            let mut rng = Pcg64::new(self.seed, k as u64);
+            for i in 0..c {
+                let j = i + rng.index(m - i);
+                self.perm.swap(i, j);
+            }
+            self.ids.extend(self.perm[..c].iter().map(|&w| w as usize));
+            self.ids.sort_unstable();
+        }
+        for &w in &self.ids {
+            self.member[w] = true;
+        }
+    }
+
+    /// The most recent sample, ascending worker id.
+    pub fn ids(&self) -> &[usize] {
+        &self.ids
+    }
+
+    /// O(1) membership in the most recent sample.
+    pub fn contains(&self, w: usize) -> bool {
+        self.member.get(w).copied().unwrap_or(false)
+    }
+}
+
 /// EMA coefficient for the per-worker delay estimate: one observation
 /// moves the estimate a quarter of the way — slow enough to ignore
 /// one-round jitter, fast enough to track a phase shift in a handful of
@@ -363,6 +519,75 @@ mod tests {
         // Round 4: it is back, and gets cut again.
         let (late, _) = sim.round(4, None);
         assert_eq!(late, &[(2, 3)]);
+    }
+
+    #[test]
+    fn cohort_sample_is_deterministic_and_history_free() {
+        let (m, k) = (1000usize, 17usize);
+        let mut a = CohortPlan::fraction(0.1, 42);
+        let mut b = CohortPlan::fraction(0.1, 42);
+        // b burns earlier rounds first — history must not matter.
+        for r in 1..k {
+            b.sample(r, m);
+        }
+        a.sample(k, m);
+        b.sample(k, m);
+        assert_eq!(a.ids(), b.ids());
+        assert_eq!(a.ids().len(), 100);
+        assert!(a.ids().windows(2).all(|w| w[0] < w[1]), "sorted unique");
+        assert!(a.ids().iter().all(|&w| w < m));
+        for w in 0..m {
+            assert_eq!(a.contains(w), a.ids().binary_search(&w).is_ok());
+        }
+        // Different rounds and different seeds draw different cohorts.
+        let prev: Vec<usize> = a.ids().to_vec();
+        a.sample(k + 1, m);
+        assert_ne!(a.ids(), prev.as_slice());
+        let mut c = CohortPlan::fraction(0.1, 43);
+        c.sample(k, m);
+        assert_ne!(c.ids(), prev.as_slice());
+    }
+
+    #[test]
+    fn cohort_covers_fleet_over_rounds() {
+        // Uniform sampling must not starve anyone over a long horizon.
+        let m = 60usize;
+        let mut plan = CohortPlan::count(6, 7);
+        let mut seen = vec![false; m];
+        for k in 1..=400 {
+            plan.sample(k, m);
+            for &w in plan.ids() {
+                seen[w] = true;
+            }
+        }
+        assert!(seen.iter().all(|&s| s), "starved workers: {seen:?}");
+    }
+
+    #[test]
+    fn cohort_full_fraction_is_everyone() {
+        let mut plan = CohortPlan::fraction(1.0, 1);
+        plan.sample(5, 7);
+        assert_eq!(plan.ids(), (0..7).collect::<Vec<_>>().as_slice());
+        let mut plan = CohortPlan::count(99, 1);
+        plan.sample(5, 7);
+        assert_eq!(plan.ids().len(), 7);
+        // Count clamps to [1, m]; fraction uses the active_count
+        // formula.
+        assert_eq!(CohortPlan::count(3, 0).cohort_count(10), 3);
+        assert_eq!(CohortPlan::fraction(0.25, 0).cohort_count(10), 3); // ceil(2.5)
+        assert_eq!(CohortPlan::fraction(0.001, 0).cohort_count(10), 1);
+    }
+
+    #[test]
+    fn cohort_parse_contract() {
+        assert!(CohortPlan::parse("500", 0).is_ok());
+        assert!(CohortPlan::parse("0.1", 0).is_ok());
+        assert!(CohortPlan::parse("1.0", 0).is_ok());
+        assert!(CohortPlan::parse("0", 0).is_err());
+        assert!(CohortPlan::parse("0.0", 0).is_err());
+        assert!(CohortPlan::parse("1.5", 0).is_err());
+        assert!(CohortPlan::parse("-2", 0).is_err());
+        assert!(CohortPlan::parse("bogus", 0).is_err());
     }
 
     #[test]

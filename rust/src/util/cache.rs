@@ -130,16 +130,36 @@ pub fn auto_nnz_budget() -> usize {
     (model().l2_bytes / 16).clamp(1024, 1 << 22)
 }
 
+/// Parse a `GDSEC_NNZ_BUDGET` value: `auto` selects the cache-derived
+/// budget, a positive integer pins it exactly (the cross-machine
+/// reproduction knob). Zero, negatives, fractions, and typos are
+/// errors — a silently ignored budget would skew every benchmark that
+/// sweeps it.
+pub fn parse_nnz_budget(s: &str) -> Result<Option<usize>, String> {
+    if s == "auto" {
+        return Ok(None);
+    }
+    match s.parse::<usize>() {
+        Ok(0) => Err("0 disables gradient blocking entirely; use `auto` for the \
+                      cache-derived default"
+            .into()),
+        Ok(b) => Ok(Some(b)),
+        Err(_) => Err(format!("expected `auto` or a positive nnz count, got {s:?}")),
+    }
+}
+
 /// `GDSEC_NNZ_BUDGET` policy, parsed once per process: unset, empty or
 /// `auto` selects [`auto_nnz_budget`]; a positive integer pins the
-/// budget exactly (the cross-machine reproduction knob). Anything else
-/// falls back to `auto` (matching the engine's historical lenient
-/// parse).
+/// budget exactly. Anything else panics loudly at first use — the
+/// historical lenient parse silently fell back to `auto`, so a typo'd
+/// sweep reported auto-budget numbers under the pinned label.
 pub fn nnz_budget_from_env() -> usize {
     static CACHE: OnceLock<usize> = OnceLock::new();
     *CACHE.get_or_init(|| match std::env::var("GDSEC_NNZ_BUDGET").ok().as_deref() {
-        None | Some("") | Some("auto") => auto_nnz_budget(),
-        Some(s) => s.parse::<usize>().ok().filter(|&b| b >= 1).unwrap_or_else(auto_nnz_budget),
+        None | Some("") => auto_nnz_budget(),
+        Some(s) => parse_nnz_budget(s)
+            .unwrap_or_else(|e| panic!("GDSEC_NNZ_BUDGET must be `auto` or a positive nnz count: {e}"))
+            .unwrap_or_else(auto_nnz_budget),
     })
 }
 
@@ -180,5 +200,16 @@ mod tests {
         // The env policy is cached; whatever it returned first, it must
         // keep returning (steady-state rounds may not re-read the env).
         assert_eq!(nnz_budget_from_env(), nnz_budget_from_env());
+    }
+
+    #[test]
+    fn nnz_budget_parse_contract() {
+        assert_eq!(parse_nnz_budget("auto"), Ok(None));
+        assert_eq!(parse_nnz_budget("65536"), Ok(Some(65_536)));
+        assert_eq!(parse_nnz_budget("1"), Ok(Some(1)));
+        assert!(parse_nnz_budget("0").is_err());
+        assert!(parse_nnz_budget("-4").is_err());
+        assert!(parse_nnz_budget("64K").is_err());
+        assert!(parse_nnz_budget("aut0").is_err());
     }
 }

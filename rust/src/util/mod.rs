@@ -10,6 +10,7 @@ pub mod json;
 pub mod pool;
 pub mod rng;
 pub mod shard;
+pub mod state_store;
 pub mod tablefmt;
 
 use std::time::Instant;

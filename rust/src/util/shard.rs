@@ -167,12 +167,28 @@ pub struct ShardApply<'a> {
     /// all-zeros between rounds, exactly the serial `apply_round`
     /// contract.
     pub staged_agg: bool,
-    /// Per-worker h-share ledgers plus the booking scale (β·fold_scale):
-    /// each shard books `scale·Δ̂` into its owned slice of the staging
-    /// worker's ledger — the one-pass replacement for the post-apply
-    /// full-dimension `book_shares` rescan. `None` when the state
-    /// variable is off (no ledger exists).
-    pub shares: Option<(&'a mut [Vec<f64>], f64)>,
+    /// Per-worker h-share ledger booking: each shard books `scale·Δ̂`
+    /// into its owned slice of the staging worker's ledger slab — the
+    /// one-pass replacement for the post-apply full-dimension
+    /// `book_shares` rescan. `None` when the state variable is off (no
+    /// ledger exists).
+    pub shares: Option<ShareBook<'a>>,
+}
+
+/// The h-share ledger view a fold books into: the slab table, an
+/// optional worker→slab indirection, and the booking scale
+/// (β·fold_scale). With `slot_of: None` the slab table is indexed by
+/// worker id directly (the dense always-resident layout — exactly the
+/// pre-store tuple); with an evictable
+/// [`StateStore`](crate::util::state_store::StateStore) the map routes
+/// each staged worker to its resident slab
+/// ([`book_view`](crate::util::state_store::StateStore::book_view)).
+/// Every staged worker must map to a valid slab — only staged workers'
+/// slabs are ever dereferenced, so non-resident workers cost nothing.
+pub struct ShareBook<'a> {
+    pub slabs: &'a mut [Vec<f64>],
+    pub slot_of: Option<&'a [u32]>,
+    pub scale: f64,
 }
 
 /// The persistent coordinate-shard plan (see module docs). Build one
@@ -322,13 +338,20 @@ impl ShardPlan {
             }
         }
         let mut book_scale = 0.0;
-        if let Some((shares, scale)) = &mut a.shares {
-            book_scale = *scale;
-            for share in shares.iter_mut() {
+        let mut slot_of: Option<&[u32]> = None;
+        if let Some(book) = &mut a.shares {
+            book_scale = book.scale;
+            slot_of = book.slot_of;
+            for share in book.slabs.iter_mut() {
                 assert_eq!(share.len(), d, "h-share ledger dimension mismatch");
                 self.share_ptrs.push(SharePtr(share.as_mut_ptr()));
             }
-            debug_assert!(self.ups.iter().all(|u| (u.worker as usize) < self.share_ptrs.len()));
+            // Every staged worker must route to a resident slab — the
+            // scatter below dereferences exactly these.
+            debug_assert!(self.ups.iter().all(|u| {
+                let w = u.worker as usize;
+                slot_of.map_or(w, |m| m[w] as usize) < self.share_ptrs.len()
+            }));
         }
         let bufs = Bufs {
             theta: a.theta.as_mut_ptr(),
@@ -409,7 +432,8 @@ impl ShardPlan {
                         let hi = cuts[ui * stride + s + 1] as usize;
                         let idx = std::slice::from_raw_parts(u.idx, u.nnz as usize);
                         let val = std::slice::from_raw_parts(u.val, u.nnz as usize);
-                        let share = share_ptrs[u.worker as usize].0;
+                        let w = u.worker as usize;
+                        let share = share_ptrs[slot_of.map_or(w, |m| m[w] as usize)].0;
                         for t in lo..hi {
                             *share.add(idx[t] as usize) += book_scale * val[t] as f64;
                         }
@@ -488,7 +512,11 @@ mod tests {
                         state_variable: true,
                         fold_scale: fs,
                         staged_agg: false,
-                        shares: Some((&mut shares, beta * fs)),
+                        shares: Some(ShareBook {
+                            slabs: &mut shares,
+                            slot_of: None,
+                            scale: beta * fs,
+                        }),
                     },
                 );
                 assert!(plan.shards() <= shards && plan.shards() >= 1);
@@ -505,6 +533,59 @@ mod tests {
                     }
                 }
             }
+        }
+    }
+
+    #[test]
+    fn slot_mapped_booking_matches_identity() {
+        // Booking through a worker→slab map lands the same bits as the
+        // dense identity layout, with only the staged workers' slabs
+        // materialized (worker 1 is absent — its map entry is a poison
+        // value the fold must never read).
+        let d = 97usize;
+        let pool = Pool::new(3);
+        let ups = vec![
+            (0usize, sparse(d, &[(3, 1.5), (40, -0.25), (96, 2.0)])),
+            (2usize, sparse(d, &[(0, 0.5), (40, 1.0)])),
+            (0usize, sparse(d, &[(3, -1.5), (77, 4.0)])),
+        ];
+        let run = |slotted: bool| {
+            let mut theta = vec![0.0f64; d];
+            let mut h = vec![0.0f64; d];
+            let mut agg = vec![0.0f64; d];
+            // Identity: 3 worker-indexed slabs. Slotted: 2 slabs, with
+            // worker 0 → slab 1 and worker 2 → slab 0.
+            let mut slabs = vec![vec![0.0f64; d]; if slotted { 2 } else { 3 }];
+            let map = [1u32, u32::MAX, 0];
+            let mut plan = ShardPlan::with_shards(5);
+            plan.fold(
+                &pool,
+                ups.iter().map(|(w, u)| (*w, u)),
+                ShardApply {
+                    theta: &mut theta,
+                    h: &mut h,
+                    agg: &mut agg,
+                    theta_prev: None,
+                    alpha: 0.1,
+                    beta: 0.5,
+                    state_variable: true,
+                    fold_scale: 1.0,
+                    staged_agg: false,
+                    shares: Some(ShareBook {
+                        slabs: &mut slabs,
+                        slot_of: slotted.then_some(&map[..]),
+                        scale: 0.5,
+                    }),
+                },
+            );
+            slabs
+        };
+        let ident = run(false);
+        let slotted = run(true);
+        for j in 0..d {
+            assert_eq!(slotted[1][j].to_bits(), ident[0][j].to_bits(), "w0 j={j}");
+            assert_eq!(slotted[0][j].to_bits(), ident[2][j].to_bits(), "w2 j={j}");
+            assert_eq!(ident[1][j].to_bits(), 0.0f64.to_bits(), "w1 untouched");
         }
     }
 

@@ -18,7 +18,8 @@ use gdsec::coordinator::round::{split_due, StaleUpdate};
 use gdsec::data::synthetic;
 use gdsec::objectives::Problem;
 use gdsec::util::pool::Pool;
-use gdsec::util::shard::{ShardApply, ShardPlan};
+use gdsec::util::shard::{ShardApply, ShardPlan, ShareBook};
+use gdsec::util::state_store::StateStore;
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicU64, Ordering};
 
@@ -247,7 +248,10 @@ fn steady_state_round_allocates_nothing() {
     let mut theta = vec![0.1f64; d];
     let mut h = vec![0.0f64; d];
     let mut agg = vec![0.0f64; d];
-    let mut h_shares: Vec<Vec<f64>> = vec![vec![0.0; d]; m];
+    // Ledgers live in the always-resident state store: bit-for-bit and
+    // allocation-for-allocation the old dense `Vec<Vec<f64>>` (identity
+    // slot map, staging/eviction no-ops).
+    let mut store = StateStore::resident(d, m);
     let fresh: Vec<Option<SparseUpdate>> = (0..m)
         .map(|w| {
             let mut u = SparseUpdate::empty(d);
@@ -271,6 +275,7 @@ fn steady_state_round_allocates_nothing() {
     let mut coord_round = |k: usize| {
         split_due(&mut stale_pool, k, &mut due);
         assert_eq!(due.len(), m, "recycled stale entries must all come due");
+        let (slabs, slot_of) = store.book_view();
         plan.fold(
             &pool,
             due.iter()
@@ -286,7 +291,7 @@ fn steady_state_round_allocates_nothing() {
                 state_variable: true,
                 fold_scale: 1.0,
                 staged_agg: false,
-                shares: Some((&mut h_shares, beta)),
+                shares: Some(ShareBook { slabs, slot_of, scale: beta }),
             },
         );
         // Recycle: the folded entries go back into the pool, due again
@@ -312,5 +317,73 @@ fn steady_state_round_allocates_nothing() {
     );
     // Sanity: the fold actually moved the model and booked the ledger.
     assert!(theta.iter().any(|&t| t != 0.1));
-    assert!(h_shares.iter().all(|s| s.iter().any(|&v| v != 0.0)));
+    {
+        let (slabs, slot_of) = store.book_view();
+        assert!(slot_of.is_none(), "resident store must book through the identity map");
+        assert!(slabs.iter().all(|s| s.iter().any(|&v| v != 0.0)));
+    }
+
+    // --- Evictable state-store phase: cohort rounds with the default
+    //     idle horizon — each round evicts the previous half-cohort's
+    //     ledgers (O(touched) compaction into parked buffers) and
+    //     re-admits the returning half (free-list slab + bitwise
+    //     rehydration + touched-list merge through the shared scratch).
+    //     With alternating half-cohorts every ledger makes a full
+    //     evict → restore round-trip every two rounds; once the parked
+    //     buffers, free list, and scratch are warm, the whole cycle must
+    //     be allocation-free. ---
+    let mut estore = StateStore::evicting(d, m, 1);
+    let mut etheta = vec![0.1f64; d];
+    let mut eh = vec![0.0f64; d];
+    let mut eagg = vec![0.0f64; d];
+    let mut eplan = ShardPlan::new();
+    let mut store_round = |k: u32, estore: &mut StateStore| {
+        estore.evict_idle(k);
+        let par = (k % 2) as usize;
+        for (w, u) in fresh.iter().enumerate() {
+            if w % 2 == par {
+                if let Some(u) = u {
+                    estore.stage(w, k, &u.idx);
+                }
+            }
+        }
+        let (slabs, slot_of) = estore.book_view();
+        eplan.fold(
+            &pool,
+            fresh
+                .iter()
+                .enumerate()
+                .filter(|(w, _)| w % 2 == par)
+                .filter_map(|(w, u)| u.as_ref().map(|u| (w, u))),
+            ShardApply {
+                theta: &mut etheta,
+                h: &mut eh,
+                agg: &mut eagg,
+                theta_prev: None,
+                alpha: 0.01,
+                beta,
+                state_variable: true,
+                fold_scale: 1.0,
+                staged_agg: false,
+                shares: Some(ShareBook { slabs, slot_of, scale: beta }),
+            },
+        );
+    };
+    for k in 1..=4u32 {
+        store_round(k, &mut estore);
+    }
+    let warm_evictions = estore.evictions();
+    assert!(warm_evictions > 0, "alternating cohorts never evicted during warm-up");
+    assert!(estore.restores() > 0, "no ledger ever rehydrated during warm-up");
+    let before = ALLOC_CALLS.load(Ordering::SeqCst);
+    for k in 5..=28u32 {
+        store_round(k, &mut estore);
+    }
+    let after = ALLOC_CALLS.load(Ordering::SeqCst);
+    assert_eq!(
+        after - before,
+        0,
+        "steady-state evict/restore ledger rounds performed heap allocations"
+    );
+    assert!(estore.evictions() > warm_evictions, "measured rounds stopped evicting");
 }

@@ -13,7 +13,7 @@
 
 use gdsec::algo::gdsec::{GdSecConfig, Xi};
 use gdsec::coordinator::round::Quorum;
-use gdsec::coordinator::scheduler::Scheduler;
+use gdsec::coordinator::scheduler::CohortPlan;
 use gdsec::coordinator::transport::{DelayPlan, FaultPlan, WorkerFaults};
 use gdsec::coordinator::worker::{GradProvider, NativeProvider, ProviderFactory};
 use gdsec::coordinator::{CoordConfig, CoordOutcome, Coordinator, DegradePolicy};
@@ -81,6 +81,8 @@ fn run_chaos(
     ccfg.stale_window = window;
     ccfg.faults = faults;
     ccfg.degrade = degrade;
+    ccfg.cohort = None; // pin: chaos plans are env-independent by contract
+    ccfg.evict_after = None;
     Coordinator::spawn(ccfg, prob.d, native_factories(prob)).run()
 }
 
@@ -194,6 +196,8 @@ fn empty_plan_is_bitwise_transparent() {
     ccfg.stale_window = 1;
     ccfg.faults = FaultPlan::default();
     ccfg.degrade = DegradePolicy::Freeze;
+    ccfg.cohort = None; // pin: transparency is against the full-participation serial run
+    ccfg.evict_after = None;
     let out = Coordinator::spawn(ccfg, prob.d, native_factories(&prob)).run();
     assert_eq!(serial.rows.len(), out.trace.rows.len());
     for (s, d) in serial.rows.iter().zip(out.trace.rows.iter()) {
@@ -205,6 +209,68 @@ fn empty_plan_is_bitwise_transparent() {
         assert_eq!(d.corrupt_frames, 0);
     }
     assert!(out.dead_workers.is_empty());
+}
+
+#[test]
+fn eviction_is_bitwise_transparent_under_fault_storm() {
+    // Ledger eviction is a memory layout choice, never an arithmetic
+    // one — even with the fault machinery firing. The same seeded cohort
+    // plus a deterministic storm (crash without restart, scripted and
+    // i.i.d. drops/corrupts — no restart: a rejoin's round depends on
+    // real wall-clock Join timing) is run twice: once with the default
+    // tight idle horizon (slabs cycle through evict → park → restore)
+    // and once with a never-fires horizon (the O(M·d) always-resident
+    // replica). Trajectory, byte counts, fault ledger, and dead set must
+    // match bit for bit; only the residency telemetry may differ.
+    let prob = problem();
+    let storm = || {
+        let mut workers = vec![WorkerFaults::default(); 3];
+        workers[0].drop_rounds = vec![7];
+        workers[1].crash_at = Some(12);
+        workers[2].corrupt_rounds = vec![9];
+        FaultPlan { seed: 0xBEEF, drop_p: 0.02, corrupt_p: 0.02, workers }
+    };
+    let run = |evict_after: Option<u32>| {
+        let prob2 = prob.clone();
+        let mut ccfg = CoordConfig::new(cfg_for(&prob), 40);
+        ccfg.recv_timeout = Duration::from_millis(500);
+        ccfg.dead_after = 2;
+        ccfg.problem_name = prob.name.clone();
+        ccfg.fstar = prob.estimate_fstar(2000);
+        ccfg.evaluator = Some(Arc::new(move |t: &[f64]| prob2.value(t)));
+        ccfg.quorum = Quorum::All;
+        ccfg.delay = DelayPlan::Jitter { seed: 11, lo: 0, hi: 10 };
+        ccfg.faults = storm();
+        ccfg.degrade = DegradePolicy::Renormalize;
+        ccfg.cohort = Some(CohortPlan::fraction(0.67, 0xE71C));
+        ccfg.evict_after = evict_after;
+        Coordinator::spawn(ccfg, prob.d, native_factories(&prob)).run()
+    };
+    let evicting = run(None); // cohort set -> default horizon (1 round)
+    let replica = run(Some(u32::MAX)); // never ages out: always resident
+    assert!(evicting.state_evictions > 0, "tight horizon never evicted");
+    assert_eq!(replica.state_evictions, 0, "replica must never evict");
+    // (No memory comparison here: at m = 3 with near-dense ledgers the
+    // 12 B/entry parked images can cost more than the 8 B/coord slabs
+    // they replace — the O(cohort) win is a fleet-scale, rare-feature
+    // claim, asserted in the federated bench and 10k smoke.)
+    assert_eq!(evicting.trace.rows.len(), replica.trace.rows.len());
+    for (e, r) in evicting.trace.rows.iter().zip(replica.trace.rows.iter()) {
+        assert_eq!(
+            e.fval.to_bits(),
+            r.fval.to_bits(),
+            "eviction moved a bit at iter {}",
+            e.iter
+        );
+        assert_eq!(e.bits, r.bits);
+        assert_eq!(e.entries, r.entries);
+        assert_eq!(e.dead, r.dead);
+        assert_eq!(e.dropped_frames, r.dropped_frames);
+        assert_eq!(e.corrupt_frames, r.corrupt_frames);
+    }
+    assert_eq!(evicting.dead_workers, replica.dead_workers);
+    assert_eq!(evicting.uplink_frame_bytes, replica.uplink_frame_bytes);
+    assert_eq!(evicting.downlink_frame_bytes, replica.downlink_frame_bytes);
 }
 
 #[test]

@@ -1,0 +1,161 @@
+//! Federated scale-out integration: the thread-free cohort harness
+//! ([`gdsec::coordinator::federated`]) at the full M = 10,000 fleet the
+//! paper's cross-device regime targets, plus the evict→restore bitwise
+//! property over randomized cohort schedules.
+//!
+//! The 10k smoke is CI's proof that the tentpole configuration is real:
+//! a fixed-seed 10% cohort run over a small-d sparse logistic problem
+//! must converge to tolerance, keep the server's per-worker ledger state
+//! far below the dense O(M·d) footprint, exercise censoring (fully
+//! skipped worker-rounds) and ledger eviction/restore, and reproduce
+//! bit-for-bit when re-run. Fault-plan composition with eviction is
+//! pinned separately in `chaos_faults.rs`
+//! (`eviction_is_bitwise_transparent_under_fault_storm`) — the virtual
+//! harness here has no transport to fault.
+
+use gdsec::algo::gdsec::{GdSecConfig, Xi};
+use gdsec::coordinator::federated::{run_federated, FederatedConfig, FederatedOutcome};
+use gdsec::coordinator::scheduler::CohortPlan;
+use gdsec::data::synthetic;
+use gdsec::objectives::Problem;
+use gdsec::util::pool::Pool;
+use gdsec::util::rng::Pcg64;
+
+fn to_bits(v: &[f64]) -> Vec<u64> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+#[test]
+fn ten_thousand_worker_cohort_smoke() {
+    const M: usize = 10_000;
+    const D: usize = 64;
+    const ITERS: usize = 40;
+    // One sparse data row per worker: the cross-device regime (each
+    // device's gradient touches a handful of coordinates).
+    let prob = Problem::logistic(synthetic::rcv1_like(33, M, D, 4), M, 0.0);
+    // β = 1: a worker's h_m snaps to its last transmission, so at a
+    // revisit |Δ| collapses to the curvature drift its shard saw since —
+    // tiny against the ξ/M = 5 relative threshold (the repo's serial
+    // integration tests converge at ratio ~13) — and whole worker-rounds
+    // censor: the paper's communication saving at fleet scale,
+    // deterministic enough to assert on.
+    let cfg = GdSecConfig {
+        alpha: 1.0 / prob.lipschitz(),
+        beta: 1.0,
+        xi: Xi::Uniform(5.0 * M as f64),
+        fstar: Some(0.0),
+        ..GdSecConfig::default()
+    };
+    let run = || -> FederatedOutcome {
+        let mut fc = FederatedConfig::new(cfg.clone(), ITERS);
+        fc.cohort = Some(CohortPlan::fraction(0.1, 0x5EED));
+        fc.eval_every = ITERS; // one final objective evaluation
+        run_federated(&prob, fc, Pool::global())
+    };
+    let out = run();
+
+    // Convergence to tolerance from θ = 0 with 10% participation.
+    let f0 = prob.value(&vec![0.0; prob.d]);
+    let &(k_last, f_last) = out.fvals.last().expect("no evaluation recorded");
+    assert_eq!(k_last, ITERS);
+    assert!(f_last.is_finite());
+    assert!(
+        f_last < f0 * 0.9,
+        "10k-worker cohort run failed to converge: f(0) = {f0} -> f({ITERS}) = {f_last}"
+    );
+
+    // O(cohort) resident state: the dense ledger would hold M·d·8 bytes.
+    let dense_bytes = M * D * 8;
+    assert!(out.peak_state_bytes > 0);
+    assert!(
+        out.peak_state_bytes < dense_bytes / 2,
+        "resident state not bounded: peak {} B vs dense {} B",
+        out.peak_state_bytes,
+        dense_bytes
+    );
+
+    // The mechanisms really ran: transmissions happened, censoring
+    // skipped whole worker-rounds, and ledgers cycled out and back.
+    assert!(out.transmissions > 0);
+    assert!(out.censored > 0, "no worker-round was ever fully censored");
+    assert!(out.evictions > 0, "no ledger was ever evicted");
+    assert!(out.restores > 0, "no evicted ledger was ever restored");
+
+    // Fixed seed ⇒ bit-for-bit reproducible at full 10k scale.
+    let again = run();
+    assert_eq!(to_bits(&out.theta), to_bits(&again.theta), "10k run is not deterministic");
+    assert_eq!(out.uplink_bits, again.uplink_bits);
+    assert_eq!(out.transmissions, again.transmissions);
+    assert_eq!(out.censored, again.censored);
+    assert_eq!(out.evictions, again.evictions);
+    assert_eq!(out.restores, again.restores);
+}
+
+#[test]
+fn evict_restore_bitwise_across_random_cohort_schedules() {
+    // Property: over randomized cohort fractions, seeds, and idle
+    // horizons, a run with ledger eviction is bitwise identical to the
+    // always-resident replica of the same schedule — θ, h, every
+    // per-worker ledger, every worker's h_m/e_m, and the uplink
+    // accounting. Eviction must be invisible to the arithmetic no matter
+    // when slabs age out relative to cohort re-entry.
+    let (m, iters) = (40usize, 25usize);
+    let d = 32usize;
+    let prob = Problem::logistic(synthetic::rcv1_like(9, 256, d, 5), m, 0.01);
+    for seed in 0..4u64 {
+        let mut rng = Pcg64::new(0xFED5, seed);
+        let frac = rng.uniform_in(0.15, 0.6);
+        let horizon = 1 + rng.index(3) as u32;
+        let cseed = rng.index(1 << 30) as u64;
+        let cfg = GdSecConfig {
+            alpha: 1.0 / prob.lipschitz(),
+            beta: 0.5,
+            xi: Xi::Uniform(10.0),
+            fstar: Some(0.0),
+            ..GdSecConfig::default()
+        };
+        let run = |evict_after: Option<u32>| -> FederatedOutcome {
+            let mut fc = FederatedConfig::new(cfg.clone(), iters);
+            fc.cohort = Some(CohortPlan::fraction(frac, cseed));
+            fc.evict_after = evict_after;
+            fc.eval_every = 0;
+            run_federated(&prob, fc, Pool::global())
+        };
+        let evicting = run(Some(horizon));
+        let replica = run(Some(u32::MAX)); // never ages out: O(M·d) resident
+        assert!(evicting.evictions > 0, "seed {seed}: horizon {horizon} never evicted");
+        assert!(evicting.restores > 0, "seed {seed}: no ledger ever rehydrated");
+        assert_eq!(replica.evictions, 0, "seed {seed}: replica must never evict");
+        // (No memory comparison at this scale: with m = 40 near-dense
+        // ledgers, parked images at 12 B/entry can outweigh the slabs
+        // they replace — the O(cohort) footprint claim belongs to the
+        // fleet-scale rare-feature tests, not this bitwise property.)
+
+        assert_eq!(
+            to_bits(&evicting.theta),
+            to_bits(&replica.theta),
+            "seed {seed}: eviction moved θ"
+        );
+        assert_eq!(to_bits(&evicting.h), to_bits(&replica.h), "seed {seed}: eviction moved h");
+        assert_eq!(evicting.uplink_bits, replica.uplink_bits, "seed {seed}");
+        assert_eq!(evicting.transmissions, replica.transmissions, "seed {seed}");
+        assert_eq!(evicting.censored, replica.censored, "seed {seed}");
+        let mut la = vec![0.0; d];
+        let mut lb = vec![0.0; d];
+        for w in 0..m {
+            evicting.store.ledger_dense(w, &mut la);
+            replica.store.ledger_dense(w, &mut lb);
+            assert_eq!(to_bits(&la), to_bits(&lb), "seed {seed}: ledger drift at worker {w}");
+            assert_eq!(
+                to_bits(&evicting.workers[w].h),
+                to_bits(&replica.workers[w].h),
+                "seed {seed}: worker {w} h_m drift"
+            );
+            assert_eq!(
+                to_bits(&evicting.workers[w].e),
+                to_bits(&replica.workers[w].e),
+                "seed {seed}: worker {w} e_m drift"
+            );
+        }
+    }
+}

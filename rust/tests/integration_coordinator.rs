@@ -13,7 +13,7 @@
 
 use gdsec::algo::gdsec::{GdSecConfig, Xi};
 use gdsec::coordinator::round::Quorum;
-use gdsec::coordinator::scheduler::Scheduler;
+use gdsec::coordinator::scheduler::{CohortPlan, Scheduler};
 use gdsec::coordinator::transport::{DelayPlan, FaultPlan, WorkerFaults};
 use gdsec::coordinator::worker::{GradProvider, NativeProvider, ProviderFactory};
 use gdsec::coordinator::{run_native_opts, CoordConfig, Coordinator, DegradePolicy};
@@ -176,6 +176,8 @@ fn multi_round_window_folds_aged_and_bounds_age() {
     ccfg.stale_window = 2;
     ccfg.faults = FaultPlan::default(); // pin: exact fold/age assertions
     ccfg.degrade = DegradePolicy::Freeze;
+    ccfg.cohort = None; // pin: the fold/age census assumes full participation
+    ccfg.evict_after = None;
     let out = Coordinator::spawn(ccfg, prob.d, factories).run();
 
     // Every fold is the straggler's, at delivery age 2 (its 899-unit
@@ -226,6 +228,8 @@ fn quorum_dead_worker_mid_run_keeps_converging() {
     ccfg.delay = DelayPlan::PerWorker(vec![0, 0, 50]);
     ccfg.faults = crash_plan(m, 1, 10, None);
     ccfg.degrade = DegradePolicy::Freeze;
+    ccfg.cohort = None; // pin: the scripted death round assumes full scheduling
+    ccfg.evict_after = None;
     let out = Coordinator::spawn(ccfg, prob.d, factories).run();
     assert_eq!(out.dead_workers, vec![1]);
     let errs = out.trace.errors();
@@ -259,6 +263,8 @@ fn quorum_count_clamps_to_live_fleet() {
     ccfg.quorum = Quorum::Count(m); // full-fleet quorum, then one dies
     ccfg.faults = crash_plan(m, 1, 5, None);
     ccfg.degrade = DegradePolicy::Freeze;
+    ccfg.cohort = None; // pin: the wall-clock bound assumes full scheduling
+    ccfg.evict_after = None;
     let t0 = std::time::Instant::now();
     let out = Coordinator::spawn(ccfg, prob.d, factories).run();
     assert_eq!(out.dead_workers, vec![1]);
@@ -298,6 +304,8 @@ fn crash_restart_readmits_with_ec_reset() {
     ccfg.quorum = Quorum::All;
     ccfg.faults = crash_plan(m, 1, 3, Some(6));
     ccfg.degrade = DegradePolicy::Freeze;
+    ccfg.cohort = None; // pin: the scripted crash/restart rounds assume full scheduling
+    ccfg.evict_after = None;
     let out = Coordinator::spawn(ccfg, prob.d, factories).run();
 
     // Recovered: dead while down, alive at the end.
@@ -345,6 +353,8 @@ fn adaptive_wire_same_trajectory_tagged_bits() {
         ccfg.quorum = Quorum::All; // pin: this test compares wire formats
         ccfg.faults = FaultPlan::default(); // pin: bitwise comparison
         ccfg.degrade = DegradePolicy::Freeze;
+        ccfg.cohort = None; // pin: bitwise comparison
+        ccfg.evict_after = None;
         Coordinator::spawn(ccfg, prob.d, factories).run()
     };
     let sparse = spawn_with(gdsec::coordinator::protocol::WireFormat::Sparse);
@@ -411,10 +421,16 @@ fn round_robin_partial_participation() {
         gdsec::coordinator::run_native(&prob, cfg, 80, Scheduler::RoundRobin { fraction: 0.5 });
     // fewer transmissions than full participation
     assert!(out.trace.total_transmissions() <= 80 * 2);
-    // still converging
+    // Still converging. The 2× error-halving target assumes the RR
+    // half-fleet participation rate; under the CI cohort leg
+    // (`GDSEC_COHORT` ambient, intersected with RR) far fewer worker
+    // rounds happen, so there the claim is monotone progress — the
+    // cohort leg checks the sampling/eviction machinery, not the rate.
     let errs = out.trace.errors();
+    let factor =
+        if std::env::var("GDSEC_COHORT").is_ok_and(|s| !s.is_empty()) { 1.0 } else { 0.5 };
     assert!(
-        errs.last().unwrap() < &(errs[0] * 0.5),
+        errs.last().unwrap() < &(errs[0] * factor),
         "{} -> {}",
         errs[0],
         errs.last().unwrap()
@@ -423,6 +439,59 @@ fn round_robin_partial_participation() {
     // and the CI fault matrix's crash=1@3,restart=1@6 must finish with
     // the worker re-admitted.
     assert!(out.dead_workers.is_empty());
+}
+
+#[test]
+fn cohort_rounds_evict_and_readmit_with_faults() {
+    // Cross-device cohort sampling composed with the fault machinery:
+    // a seeded 2-of-3 cohort (so one worker sits out every round and its
+    // ledger slab ages past the default idle horizon), plus a scripted
+    // crash/restart of worker 1. The run must cycle the evictable state
+    // store (evictions AND bitwise restores on cohort re-entry), re-admit
+    // the restarted worker through the EC-safe `Join` path — including
+    // withdrawing its ledger from wherever it lives, resident or parked —
+    // and still make objective progress.
+    let prob = problem();
+    let m = prob.m();
+    let cfg = cfg_for(&prob);
+    let fstar = prob.estimate_fstar(2000);
+    let factories = native_factories(&prob);
+    let prob2 = prob.clone();
+    let mut ccfg = CoordConfig::new(cfg, 60);
+    ccfg.recv_timeout = Duration::from_millis(300);
+    ccfg.dead_after = 1;
+    ccfg.problem_name = prob.name.clone();
+    ccfg.fstar = fstar;
+    ccfg.evaluator = Some(Arc::new(move |t: &[f64]| prob2.value(t)));
+    ccfg.quorum = Quorum::All;
+    ccfg.faults = crash_plan(m, 1, 5, Some(9));
+    ccfg.degrade = DegradePolicy::Freeze;
+    // Explicit cohort (not ambient): 2 of 3 workers per round, default
+    // idle horizon (1 round) via effective_horizon.
+    ccfg.cohort = Some(CohortPlan::fraction(0.67, 0xC0F0));
+    ccfg.evict_after = None;
+    let out = Coordinator::spawn(ccfg, prob.d, factories).run();
+
+    // The store actually cycled: slabs were evicted when their workers
+    // sat out, and parked ledgers rehydrated when they drew back in.
+    assert!(out.state_evictions > 0, "cohort rounds never evicted a ledger");
+    assert!(out.state_restores > 0, "no evicted ledger was ever restored");
+    assert!(out.peak_state_bytes > 0);
+
+    // The crash → restart arc completed under cohort sampling.
+    assert!(out.dead_workers.is_empty(), "restarted worker never re-admitted");
+    assert_eq!(out.rounds.iter().map(|r| r.rejoined).sum::<u64>(), 1);
+    assert_eq!(out.trace.rows.last().unwrap().dead, 0);
+
+    // Partial participation + an outage still optimizes.
+    let errs = out.trace.errors();
+    assert!(errs.last().unwrap().is_finite());
+    assert!(
+        errs.last().unwrap() < &errs[0],
+        "no progress: {} -> {}",
+        errs[0],
+        errs.last().unwrap()
+    );
 }
 
 #[test]
@@ -442,6 +511,8 @@ fn worker_failure_tolerated() {
     // Worker 1 crashes at round 10 and never comes back.
     ccfg.faults = crash_plan(m, 1, 10, None);
     ccfg.degrade = DegradePolicy::Freeze;
+    ccfg.cohort = None; // pin: the scripted death round assumes full scheduling
+    ccfg.evict_after = None;
     let out = Coordinator::spawn(ccfg, prob.d, factories).run();
     assert_eq!(out.dead_workers, vec![1]);
     // Run completes and the survivors keep optimizing.
@@ -463,6 +534,8 @@ fn all_workers_fail_run_still_terminates() {
     ccfg.evaluator = Some(Arc::new(move |t: &[f64]| prob2.value(t)));
     ccfg.faults = FaultPlan { workers, ..FaultPlan::default() };
     ccfg.degrade = DegradePolicy::Freeze;
+    ccfg.cohort = None; // pin: every worker must be scheduled into its crash round
+    ccfg.evict_after = None;
     let out = Coordinator::spawn(ccfg, prob.d, factories).run();
     assert_eq!(out.dead_workers.len(), m);
     // θ never moves: every recorded objective equals f(0).
