@@ -1,0 +1,171 @@
+//! GD-SEC coordinator as a standalone process.
+//!
+//! Binds a TCP listener, waits for `--workers` hello handshakes from
+//! `gdsec-worker` processes, then runs the coordinated protocol over
+//! the real sockets with wall-clock quorum delays. The run spec
+//! (problem seed/size, worker count, horizon) is rebuilt locally from
+//! the same flags the workers receive — see
+//! [`gdsec::coordinator::deploy::DeploySpec`].
+//!
+//! ```text
+//! gdsec-server --listen 127.0.0.1:7700 --workers 3 --iters 30
+//! ```
+//!
+//! With `--check-inproc` the server re-runs the identical spec in-proc
+//! on the virtual transport after the TCP run finishes and asserts
+//! bitwise parity: same final objective, same per-round payload bits,
+//! same total uplink frame bytes. Any divergence exits non-zero — this
+//! is the CI gate that the socket path is an accounting-faithful
+//! transport swap, not a different protocol.
+
+use gdsec::coordinator::deploy::DeploySpec;
+use gdsec::coordinator::round::Quorum;
+use gdsec::coordinator::scheduler::Scheduler;
+use gdsec::coordinator::tcp;
+use gdsec::coordinator::transport::{DelayPlan, FaultPlan, Transport};
+use gdsec::coordinator::{run_native_opts, Coordinator, DegradePolicy};
+use gdsec::util::cli::{usage, Args, OptSpec};
+use std::net::TcpListener;
+
+fn opt(name: &str, help: &str, default: Option<&str>) -> OptSpec {
+    OptSpec { name: name.into(), help: help.into(), default: default.map(|s| s.into()) }
+}
+
+fn main() {
+    let args = match Args::from_env(false) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("gdsec-server: {e}");
+            std::process::exit(2);
+        }
+    };
+    if args.flag("help") {
+        println!("{}", usage_text());
+        return;
+    }
+    let spec = match spec_from(&args) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("gdsec-server: {e}\n\n{}", usage_text());
+            std::process::exit(2);
+        }
+    };
+    let listen = args
+        .get("listen")
+        .map(|s| tcp::parse_addr("--listen", s))
+        .or_else(tcp::listen_from_env)
+        .unwrap_or_else(|| tcp::parse_addr("--listen", "127.0.0.1:7700"));
+    let check_inproc = args.flag("check-inproc");
+
+    let prob = spec.problem();
+    let d = prob.d;
+    let mut cfg = spec.coord_config(&prob);
+    if check_inproc {
+        // Parity is only defined against the pinned synchronous
+        // trajectory: full quorum, no injected faults, no cohort
+        // sampling — exactly what `run_native_opts` pins on the
+        // virtual side.
+        assert!(
+            matches!(cfg.quorum, Quorum::All),
+            "--check-inproc requires Quorum::All (unset GDSEC_QUORUM); got {:?}",
+            cfg.quorum
+        );
+        cfg.faults = FaultPlan::default();
+        cfg.degrade = DegradePolicy::Freeze;
+        cfg.cohort = None;
+        cfg.evict_after = None;
+    }
+    let gdsec_cfg = cfg.gdsec.clone();
+    let iters = cfg.iters;
+
+    let listener = TcpListener::bind(listen)
+        .unwrap_or_else(|e| panic!("gdsec-server: bind {listen}: {e}"));
+    eprintln!("gdsec-server: listening on {listen}, waiting for {} workers", spec.workers);
+    let ends: Vec<Box<dyn Transport>> = tcp::accept_fleet(&listener, spec.workers)
+        .into_iter()
+        .map(|t| Box::new(t) as Box<dyn Transport>)
+        .collect();
+    let newcomers = tcp::spawn_acceptor(listener, spec.workers);
+    eprintln!("gdsec-server: fleet of {} connected, running {} rounds", spec.workers, iters);
+
+    let out = Coordinator::from_transports(cfg, d, ends, Some(newcomers), true).run();
+    for (row, rm) in out.trace.rows.iter().zip(out.rounds.iter()) {
+        println!(
+            "ROUND k={} f={:.12e} quorum_k={} units_us={} payload_bits={} late={}",
+            rm.round, row.fval, rm.quorum_k, rm.virtual_units, rm.payload_bits, rm.late
+        );
+    }
+    let final_f = out.trace.rows.last().map(|r| r.fval).unwrap_or(f64::NAN);
+    println!(
+        "RESULT final_f={:.17e} uplink_bytes={} rounds={} dead={}",
+        final_f,
+        out.uplink_frame_bytes,
+        out.rounds.len(),
+        out.dead_workers.len()
+    );
+
+    if check_inproc {
+        let reference =
+            run_native_opts(&prob, gdsec_cfg, iters, Scheduler::All, Quorum::All, DelayPlan::None);
+        let ref_f = reference.trace.rows.last().map(|r| r.fval).unwrap_or(f64::NAN);
+        let mut ok = true;
+        if final_f.to_bits() != ref_f.to_bits() {
+            eprintln!("INPROC_PARITY MISMATCH final_f tcp={final_f:.17e} virtual={ref_f:.17e}");
+            ok = false;
+        }
+        if out.uplink_frame_bytes != reference.uplink_frame_bytes {
+            eprintln!(
+                "INPROC_PARITY MISMATCH uplink_bytes tcp={} virtual={}",
+                out.uplink_frame_bytes, reference.uplink_frame_bytes
+            );
+            ok = false;
+        }
+        if out.rounds.len() != reference.rounds.len() {
+            eprintln!(
+                "INPROC_PARITY MISMATCH rounds tcp={} virtual={}",
+                out.rounds.len(),
+                reference.rounds.len()
+            );
+            ok = false;
+        }
+        for (t, v) in out.rounds.iter().zip(reference.rounds.iter()) {
+            if t.payload_bits != v.payload_bits {
+                eprintln!(
+                    "INPROC_PARITY MISMATCH round {} payload_bits tcp={} virtual={}",
+                    t.round, t.payload_bits, v.payload_bits
+                );
+                ok = false;
+            }
+        }
+        if !ok {
+            std::process::exit(1);
+        }
+        println!("INPROC_PARITY OK");
+    }
+}
+
+fn spec_from(args: &Args) -> Result<DeploySpec, gdsec::util::cli::CliError> {
+    let def = DeploySpec::default();
+    Ok(DeploySpec {
+        seed: args.get_u64("seed", def.seed)?,
+        rows: args.get_usize("rows", def.rows)?,
+        workers: args.get_usize("workers", def.workers)?,
+        iters: args.get_usize("iters", def.iters)?,
+    })
+}
+
+fn usage_text() -> String {
+    usage(
+        "gdsec-server",
+        "GD-SEC coordinator over real TCP links (pairs with gdsec-worker)",
+        &[],
+        &[
+            opt("listen", "bind address (env GDSEC_LISTEN)", Some("127.0.0.1:7700")),
+            opt("workers", "fleet size; must match the worker processes", Some("3")),
+            opt("iters", "training rounds (plus one final eval round)", Some("30")),
+            opt("seed", "dataset seed (must match the workers)", Some("17")),
+            opt("rows", "dataset rows (must match the workers)", Some("90")),
+            opt("check-inproc", "after the TCP run, assert bitwise parity vs in-proc", None),
+        ],
+    )
+}

@@ -1,0 +1,136 @@
+//! GD-SEC worker as a standalone process.
+//!
+//! Connects a real TCP socket to a running `gdsec-server`, identifies
+//! itself with a `Join` hello carrying its worker id, and then runs the
+//! exact same [`worker_loop`](gdsec::coordinator::worker::worker_loop)
+//! the in-proc threads run — the transport is the only difference. The
+//! problem shard is rebuilt locally from the seeded spec
+//! ([`gdsec::coordinator::deploy::DeploySpec`]), so no training data
+//! crosses the wire, only GD-SEC frames.
+//!
+//! ```text
+//! gdsec-worker --connect 127.0.0.1:7700 --id 0 --workers 3
+//! ```
+//!
+//! A dropped connection is not fatal: the worker reconnects with
+//! capped-backoff retries and re-hellos with the last round it saw, so
+//! the server's `Join` re-admission path gives it a fresh enrollment
+//! snapshot. The process exits 0 only on a protocol `Shutdown`.
+
+use gdsec::algo::engine::stale_window_from_env;
+use gdsec::compress::WireFormat;
+use gdsec::coordinator::deploy::DeploySpec;
+use gdsec::coordinator::tcp::{self, TcpTransport};
+use gdsec::coordinator::transport::FaultPlan;
+use gdsec::coordinator::worker::{worker_loop, GradProvider, LoopExit, NativeProvider};
+use gdsec::util::cli::{usage, Args, OptSpec};
+
+fn opt(name: &str, help: &str, default: Option<&str>) -> OptSpec {
+    OptSpec { name: name.into(), help: help.into(), default: default.map(|s| s.into()) }
+}
+
+fn main() {
+    let args = match Args::from_env(false) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("gdsec-worker: {e}");
+            std::process::exit(2);
+        }
+    };
+    if args.flag("help") {
+        println!("{}", usage_text());
+        return;
+    }
+    let (spec, id) = match parse(&args) {
+        Ok(v) => v,
+        Err(e) => {
+            eprintln!("gdsec-worker: {e}\n\n{}", usage_text());
+            std::process::exit(2);
+        }
+    };
+    let connect = args
+        .get("connect")
+        .map(|s| tcp::parse_addr("--connect", s))
+        .or_else(tcp::connect_from_env)
+        .unwrap_or_else(|| tcp::parse_addr("--connect", "127.0.0.1:7700"));
+
+    let prob = spec.problem();
+    assert!(
+        id < prob.m(),
+        "gdsec-worker: --id {id} out of range for --workers {}",
+        prob.m()
+    );
+    let gdsec_cfg = spec.gdsec(&prob);
+    let faults = FaultPlan::from_env().faults_for(id);
+    let wire = WireFormat::from_env();
+    let stale_window = stale_window_from_env();
+    let local = prob.locals[id].clone();
+
+    let mut last_seen: u32 = 0;
+    loop {
+        let mut end = match TcpTransport::connect(connect) {
+            Ok(e) => e,
+            Err(e) => {
+                eprintln!("gdsec-worker {id}: connect {connect}: {e}");
+                std::process::exit(1);
+            }
+        };
+        if !tcp::send_hello(&mut end, id as u32, last_seen) {
+            eprintln!("gdsec-worker {id}: hello to {connect} failed, retrying");
+            continue;
+        }
+        eprintln!("gdsec-worker {id}: connected to {connect} (last_seen={last_seen})");
+        let shard = local.clone();
+        let factory =
+            Box::new(move || Box::new(NativeProvider::new(shard)) as Box<dyn GradProvider>);
+        match worker_loop(
+            id as u32,
+            spec.workers,
+            gdsec_cfg.clone(),
+            factory,
+            end,
+            faults.clone(),
+            wire,
+            stale_window,
+        ) {
+            LoopExit::Shutdown => {
+                eprintln!("gdsec-worker {id}: shutdown, exiting");
+                return;
+            }
+            LoopExit::LinkLost { last_seen: seen } => {
+                last_seen = seen;
+                eprintln!("gdsec-worker {id}: link lost at round {seen}, reconnecting");
+            }
+        }
+    }
+}
+
+fn parse(args: &Args) -> Result<(DeploySpec, usize), gdsec::util::cli::CliError> {
+    let def = DeploySpec::default();
+    let spec = DeploySpec {
+        seed: args.get_u64("seed", def.seed)?,
+        rows: args.get_usize("rows", def.rows)?,
+        workers: args.get_usize("workers", def.workers)?,
+        iters: def.iters, // horizon is server-driven; workers follow broadcasts
+    };
+    let id = args.require("id")?;
+    let id = id
+        .parse::<usize>()
+        .map_err(|_| gdsec::util::cli::CliError(format!("--id: expected integer, got '{id}'")))?;
+    Ok((spec, id))
+}
+
+fn usage_text() -> String {
+    usage(
+        "gdsec-worker",
+        "GD-SEC worker over a real TCP link (pairs with gdsec-server)",
+        &[],
+        &[
+            opt("connect", "server address (env GDSEC_CONNECT)", Some("127.0.0.1:7700")),
+            opt("id", "worker id in 0..workers (required)", None),
+            opt("workers", "fleet size; must match the server", Some("3")),
+            opt("seed", "dataset seed (must match the server)", Some("17")),
+            opt("rows", "dataset rows (must match the server)", Some("90")),
+        ],
+    )
+}

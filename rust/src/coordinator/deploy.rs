@@ -1,0 +1,102 @@
+//! Shared run specification for the multi-process binaries.
+//!
+//! `gdsec-server` and `gdsec-worker` are separate OS processes that
+//! never exchange a config file: both rebuild the *same* seeded
+//! problem and GD-SEC hyper-parameters from the same four scalar flags
+//! (`--seed --rows --workers --iters`). [`DeploySpec`] is that
+//! derivation, factored out so the two binaries — and the server's
+//! `--check-inproc` parity run — cannot drift apart. The spec mirrors
+//! the integration suite's canonical logistic setup
+//! (`tests/integration_coordinator.rs::cfg_for`), so a loopback
+//! multi-process run is directly comparable to the pinned in-proc
+//! trajectories.
+
+use crate::algo::gdsec::{GdSecConfig, Xi};
+use crate::coordinator::CoordConfig;
+use crate::data::synthetic;
+use crate::objectives::Problem;
+use std::sync::Arc;
+
+/// Everything a process needs to reconstruct the run: the dataset seed
+/// and size, the worker count (which also shards the dataset), and the
+/// round horizon. Two processes with equal specs build bitwise-equal
+/// problems and configs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct DeploySpec {
+    pub seed: u64,
+    pub rows: usize,
+    pub workers: usize,
+    pub iters: usize,
+}
+
+impl DeploySpec {
+    /// The seeded logistic problem, sharded across `workers` locals.
+    /// Deterministic in the spec: `synthetic::dna_like` is a counter-mode
+    /// PRNG draw, and the row→worker shard split is positional.
+    pub fn problem(&self) -> Problem {
+        Problem::logistic(synthetic::dna_like(self.seed, self.rows), self.workers, 0.05)
+    }
+
+    /// The paper-faithful hyper-parameters for [`Self::problem`]:
+    /// α = 1/L, β = 0.05, ξ_j ≡ 40 (the integration suite's `cfg_for`).
+    pub fn gdsec(&self, prob: &Problem) -> GdSecConfig {
+        GdSecConfig {
+            alpha: 1.0 / prob.lipschitz(),
+            beta: 0.05,
+            xi: Xi::Uniform(40.0),
+            ..Default::default()
+        }
+    }
+
+    /// A server-side [`CoordConfig`] for this spec: exact evaluator,
+    /// fstar estimate, and problem label wired in; everything else
+    /// (quorum, wire, staleness window, faults, …) keeps the
+    /// `CoordConfig::new` env-override defaults so the binaries honor
+    /// the same `GDSEC_*` knobs as the in-proc runners.
+    pub fn coord_config(&self, prob: &Problem) -> CoordConfig {
+        let mut cfg = CoordConfig::new(self.gdsec(prob), self.iters);
+        let fstar = prob.estimate_fstar(crate::algo::gdsec::fstar_iters(self.iters));
+        let prob2 = prob.clone();
+        cfg.problem_name = prob.name.clone();
+        cfg.fstar = fstar;
+        cfg.evaluator = Some(Arc::new(move |theta: &[f64]| prob2.value(theta)));
+        cfg
+    }
+}
+
+impl Default for DeploySpec {
+    fn default() -> DeploySpec {
+        DeploySpec { seed: 17, rows: 90, workers: 3, iters: 30 }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn equal_specs_build_bitwise_equal_problems() {
+        let spec = DeploySpec::default();
+        let (a, b) = (spec.problem(), spec.problem());
+        assert_eq!(a.d, b.d);
+        assert_eq!(a.m(), spec.workers);
+        let theta = vec![0.01; a.d];
+        assert_eq!(a.value(&theta).to_bits(), b.value(&theta).to_bits());
+        let (ga, gb) = (spec.gdsec(&a), spec.gdsec(&b));
+        assert_eq!(ga.alpha.to_bits(), gb.alpha.to_bits());
+        assert_eq!(ga.beta.to_bits(), gb.beta.to_bits());
+    }
+
+    #[test]
+    fn coord_config_wires_evaluator_and_fstar() {
+        let spec = DeploySpec { seed: 3, rows: 40, workers: 2, iters: 5 };
+        let prob = spec.problem();
+        let cfg = spec.coord_config(&prob);
+        assert_eq!(cfg.iters, 5);
+        assert_eq!(cfg.problem_name, prob.name);
+        assert!(cfg.fstar.is_finite());
+        let theta = vec![0.0; prob.d];
+        let ev = cfg.evaluator.as_ref().expect("evaluator wired");
+        assert_eq!(ev(&theta).to_bits(), prob.value(&theta).to_bits());
+    }
+}

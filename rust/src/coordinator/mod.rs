@@ -49,9 +49,11 @@
 //!   reference ([`crate::algo::gdsec::run`]) — pinned by integration
 //!   tests, including under injected delays.
 
+pub mod deploy;
 pub mod protocol;
 pub mod round;
 pub mod scheduler;
+pub mod tcp;
 pub mod transport;
 pub mod worker;
 
@@ -68,9 +70,10 @@ use round::{
     delivery_age, evict_worker, in_sorted, split_due, Admit, Quorum, RoundState, StaleUpdate,
 };
 use scheduler::{CohortPlan, QuorumController, Scheduler};
+use std::sync::mpsc::Receiver;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
-use transport::{duplex, DelayPlan, FaultPlan, Recv, ServerEnd};
+use transport::{duplex, DelayPlan, FaultPlan, Recv, RecvStatus, Transport, TransportKind};
 use worker::ProviderFactory;
 
 /// What the server does with a dead worker's standing contribution while
@@ -103,13 +106,22 @@ impl DegradePolicy {
     }
 }
 
+/// Parse a `GDSEC_RECV_TIMEOUT_MS` value. Loud on garbage AND on zero —
+/// a zero deadline would strike out the entire fleet on the first
+/// gather, which is never what a tightened CI timeout meant.
+fn parse_recv_timeout_ms(s: &str) -> Duration {
+    let ms: u64 = s.trim().parse().unwrap_or_else(|e| {
+        panic!("GDSEC_RECV_TIMEOUT_MS must be integer milliseconds, got {s:?} ({e})")
+    });
+    assert!(ms > 0, "GDSEC_RECV_TIMEOUT_MS must be positive, got {s:?}");
+    Duration::from_millis(ms)
+}
+
 /// The `GDSEC_RECV_TIMEOUT_MS` override for the per-round receive
 /// deadline (30 s when unset).
 fn recv_timeout_from_env() -> Duration {
     match std::env::var("GDSEC_RECV_TIMEOUT_MS") {
-        Ok(s) => Duration::from_millis(
-            s.parse().unwrap_or_else(|e| panic!("GDSEC_RECV_TIMEOUT_MS must be integer ms: {e}")),
-        ),
+        Ok(s) => parse_recv_timeout_ms(&s),
         Err(_) => Duration::from_secs(30),
     }
 }
@@ -190,6 +202,14 @@ pub struct CoordConfig {
     /// ledger, allocation-for-allocation). Default honors
     /// `GDSEC_EVICT_ROUNDS`.
     pub evict_after: Option<u32>,
+    /// Link backend for [`Coordinator::spawn`]: seeded in-memory
+    /// channels (`Virtual`, the CI-deterministic default — quorum cuts
+    /// rank the virtual [`DelayPlan`]) or real loopback TCP sockets
+    /// (`Tcp` — quorum cuts and [`QuorumController::observe`] use
+    /// measured wall-clock reply delays). Default honors the
+    /// `GDSEC_TRANSPORT` env override; tests that pin exact trajectories
+    /// pin `Virtual`.
+    pub transport: TransportKind,
 }
 
 impl CoordConfig {
@@ -213,6 +233,7 @@ impl CoordConfig {
             degrade: DegradePolicy::from_env(),
             cohort: CohortPlan::from_env(),
             evict_after: evict_rounds_from_env(),
+            transport: TransportKind::from_env(),
         }
     }
 
@@ -249,10 +270,15 @@ pub struct RoundMetrics {
     /// Replies beyond this round's quorum cut (their updates are parked
     /// until their delivery age comes due).
     pub late: u64,
-    /// Wall-clock proxy under the virtual [`DelayPlan`]: the largest
-    /// delay among the replies the quorum actually waited for. The sum
-    /// over rounds is the quantity a straggler inflates in synchronous
-    /// mode and a quorum cut bounds.
+    /// The quorum size K this round was cut at (after liveness/cohort
+    /// clamping) — with [`Quorum::Adaptive`] this is the controller's
+    /// online decision, the per-round signal the wall-clock trace reads.
+    pub quorum_k: u64,
+    /// Delay of the slowest reply the quorum actually waited for: virtual
+    /// [`DelayPlan`] units on the in-memory transport, measured
+    /// **microseconds since broadcast** on TCP. The sum over rounds is
+    /// the quantity a straggler inflates in synchronous mode and a
+    /// quorum cut bounds.
     pub virtual_units: u64,
     /// Workers dead at the end of this round's gather (a level, not a
     /// per-round count — a re-admitted worker leaves it).
@@ -418,9 +444,17 @@ fn frame_round(frame: &[u8]) -> u32 {
 /// The leader. Owns the server side of every link.
 pub struct Coordinator {
     cfg: CoordConfig,
-    ends: Vec<ServerEnd>,
+    ends: Vec<Box<dyn Transport>>,
     handles: Vec<std::thread::JoinHandle<()>>,
     d: usize,
+    /// When true, quorum cuts and [`QuorumController::observe`] use
+    /// measured wall-clock reply delays (µs since broadcast) instead of
+    /// the virtual [`DelayPlan`] — set for real transports.
+    measured: bool,
+    /// Mid-run transport replacements (TCP reconnects): each delivered
+    /// `(worker, transport)` swaps the worker's link and re-admits it
+    /// through the Join path.
+    newcomers: Option<Receiver<(usize, Box<dyn Transport>)>>,
 }
 
 impl Coordinator {
@@ -430,23 +464,78 @@ impl Coordinator {
     /// Each worker gets its scripted crash/restart schedule from
     /// [`CoordConfig::faults`]; the link-level drop/corrupt draws stay
     /// server-side.
+    ///
+    /// [`CoordConfig::transport`] picks the link backend: `Virtual`
+    /// wires in-memory duplex channels (the historical behavior,
+    /// bit-for-bit); `Tcp` binds an ephemeral loopback listener and has
+    /// every worker thread connect a real socket through the same
+    /// hello/accept handshake the multi-process binaries use.
     pub fn spawn(cfg: CoordConfig, dim: usize, factories: Vec<ProviderFactory>) -> Coordinator {
         assert!(!factories.is_empty());
         let m = factories.len();
-        let mut ends = Vec::with_capacity(m);
-        let mut handles = Vec::with_capacity(m);
-        for (w, factory) in factories.into_iter().enumerate() {
-            let (server_end, worker_end) = duplex();
-            let wcfg = cfg.gdsec.clone();
-            let wire = cfg.wire;
-            let sw = cfg.stale_window;
-            let faults = cfg.faults.faults_for(w);
-            handles.push(std::thread::spawn(move || {
-                worker::worker_loop(w as u32, m, wcfg, factory, worker_end, faults, wire, sw)
-            }));
-            ends.push(server_end);
+        match cfg.transport {
+            TransportKind::Virtual => {
+                let mut ends: Vec<Box<dyn Transport>> = Vec::with_capacity(m);
+                let mut handles = Vec::with_capacity(m);
+                for (w, factory) in factories.into_iter().enumerate() {
+                    let (server_end, worker_end) = duplex();
+                    let wcfg = cfg.gdsec.clone();
+                    let wire = cfg.wire;
+                    let sw = cfg.stale_window;
+                    let faults = cfg.faults.faults_for(w);
+                    handles.push(std::thread::spawn(move || {
+                        let _ = worker::worker_loop(
+                            w as u32, m, wcfg, factory, worker_end, faults, wire, sw,
+                        );
+                    }));
+                    ends.push(Box::new(server_end));
+                }
+                Coordinator { cfg, ends, handles, d: dim, measured: false, newcomers: None }
+            }
+            TransportKind::Tcp => {
+                let listener =
+                    std::net::TcpListener::bind("127.0.0.1:0").expect("bind loopback listener");
+                let addr = listener.local_addr().unwrap();
+                let mut handles = Vec::with_capacity(m);
+                for (w, factory) in factories.into_iter().enumerate() {
+                    let wcfg = cfg.gdsec.clone();
+                    let wire = cfg.wire;
+                    let sw = cfg.stale_window;
+                    let faults = cfg.faults.faults_for(w);
+                    handles.push(std::thread::spawn(move || {
+                        let mut end =
+                            tcp::TcpTransport::connect(addr).expect("worker connect to server");
+                        assert!(tcp::send_hello(&mut end, w as u32, 0));
+                        let _ = worker::worker_loop(
+                            w as u32, m, wcfg, factory, end, faults, wire, sw,
+                        );
+                    }));
+                }
+                let ends: Vec<Box<dyn Transport>> = tcp::accept_fleet(&listener, m)
+                    .into_iter()
+                    .map(|t| Box::new(t) as Box<dyn Transport>)
+                    .collect();
+                let newcomers = Some(tcp::spawn_acceptor(listener, m));
+                Coordinator { cfg, ends, handles, d: dim, measured: true, newcomers }
+            }
         }
-        Coordinator { cfg, ends, handles, d: dim }
+    }
+
+    /// Assemble a coordinator over pre-connected transports — the
+    /// multi-process server binary's entry point (workers live in other
+    /// processes, so there are no threads to join). `ends[w]` must be
+    /// worker w's link, already past the hello handshake. `measured`
+    /// selects wall-clock quorum delays; `newcomers` (if any) delivers
+    /// replacement links for reconnecting workers.
+    pub fn from_transports(
+        cfg: CoordConfig,
+        dim: usize,
+        ends: Vec<Box<dyn Transport>>,
+        newcomers: Option<Receiver<(usize, Box<dyn Transport>)>>,
+        measured: bool,
+    ) -> Coordinator {
+        assert!(!ends.is_empty());
+        Coordinator { cfg, ends, handles: Vec::new(), d: dim, measured, newcomers }
     }
 
     /// Run the protocol to completion and join the workers. With
@@ -507,6 +596,15 @@ impl Coordinator {
         let mut due: Vec<StaleUpdate> = Vec::new();
         let mut parked: Vec<StaleUpdate> = Vec::new();
         let mut plan = ShardPlan::new();
+        // Receive scratch: the gather loop's frames land here via the
+        // transport's `recv_into` seam, so the virtual steady state
+        // allocates nothing per frame (covered by the zero-alloc pin).
+        let mut frame_buf: Vec<u8> = Vec::new();
+        // Measured wall-clock reply delays (µs since this round's
+        // broadcast), the real-transport replacement for the virtual
+        // DelayPlan in quorum cuts and controller observations.
+        let mut measured_us = vec![0u64; m];
+        let measured = self.measured;
 
         let (mut cum_bits, mut cum_tx, mut cum_entries, mut cum_stale) = (0u64, 0u64, 0u64, 0u64);
         let mut cum_stale_ages = [0u64; STALE_AGE_BINS];
@@ -531,6 +629,21 @@ impl Coordinator {
             }
             let mut metrics = RoundMetrics { round: k, ..Default::default() };
 
+            // Reconnected workers first (TCP only): a worker process
+            // that lost its socket reconnects through the acceptor, and
+            // its hello — a `Join` frame — IS the re-admission
+            // handshake. Swap in the fresh link and enroll it exactly
+            // like a channel-delivered Join.
+            if let Some(rx) = &self.newcomers {
+                while let Ok((w, end)) = rx.try_recv() {
+                    if w < m {
+                        self.ends[w] = end;
+                        readmit(w, &mut life, sv, &mut stale, &mut h, &mut store);
+                        metrics.rejoined += 1;
+                    }
+                }
+            }
+
             // Drain dead workers' links. A dead worker may still be a
             // live process replying to broadcasts; those frames are
             // discarded (full frame bits as overhead — the sender paid
@@ -542,7 +655,7 @@ impl Coordinator {
                 if life[w] != Life::Dead {
                     continue;
                 }
-                while let Some(Recv::Frame(frame)) = self.ends[w].rx.try_recv() {
+                while let Some(Recv::Frame(frame)) = self.ends[w].try_recv() {
                     metrics.overhead_bits += frame.len() as u64 * 8;
                     if life[w] == Life::Dead
                         && matches!(protocol::decode(&frame, d as u32), Ok(Msg::Join { .. }))
@@ -576,7 +689,7 @@ impl Coordinator {
             // delivered after its `Join` is its fresh enrollment
             // snapshot (it replies with a full update from zeroed local
             // state).
-            for (w, end) in self.ends.iter().enumerate() {
+            for (w, end) in self.ends.iter_mut().enumerate() {
                 let msg = Msg::Broadcast {
                     round: k as u32,
                     theta: theta.clone(),
@@ -584,7 +697,7 @@ impl Coordinator {
                 };
                 let frame = protocol::encode(&msg, d as u32);
                 metrics.downlink_bits += frame.len() as u64 * 8;
-                let delivered = end.tx.send(frame);
+                let delivered = end.send(frame);
                 if !delivered && life[w] != Life::Dead {
                     life[w] = Life::Dead;
                     retire(w, degrade, sv, &mut stale, &mut h, &mut store);
@@ -592,6 +705,10 @@ impl Coordinator {
                     life[w] = Life::Active;
                 }
             }
+            // Wall-clock reference for measured reply delays: this
+            // round's broadcast completion.
+            let bcast_done = Instant::now();
+            measured_us.fill(0);
 
             // Event-driven gather: admit frames in arrival order until
             // every waited-on worker resolves (fresh reply, strike-out,
@@ -611,10 +728,11 @@ impl Coordinator {
                 let deadline = Instant::now() + self.cfg.recv_timeout;
                 loop {
                     let remaining = deadline.saturating_duration_since(Instant::now());
-                    match self.ends[w].rx.recv_timeout(remaining) {
-                        Recv::Frame(mut frame) => {
+                    match self.ends[w].recv_into(&mut frame_buf, remaining) {
+                        RecvStatus::Frame => {
+                            let frame = &mut frame_buf;
                             let frame_bits = frame.len() as u64 * 8;
-                            let fround = frame_round(&frame);
+                            let fround = frame_round(frame);
                             if self.cfg.faults.drops(w, fround) {
                                 metrics.dropped_frames += 1;
                                 metrics.overhead_bits += frame_bits;
@@ -626,7 +744,7 @@ impl Coordinator {
                             if self.cfg.faults.corrupts(w, fround) {
                                 frame[0] ^= 0xFF;
                             }
-                            match protocol::decode(&frame, d as u32) {
+                            match protocol::decode(frame, d as u32) {
                                 Ok(msg @ (Msg::Update { .. } | Msg::Silence { .. })) => {
                                     // Codec-exact for either wire format
                                     // (the adaptive tag byte is real
@@ -656,6 +774,12 @@ impl Coordinator {
                                             // strikes, or `dead_after` is
                                             // defeated.
                                             life[w] = Life::Active;
+                                            if measured {
+                                                measured_us[w] = bcast_done
+                                                    .elapsed()
+                                                    .as_micros()
+                                                    as u64;
+                                            }
                                             break;
                                         }
                                         Admit::Stale(su) => {
@@ -711,13 +835,13 @@ impl Coordinator {
                                 }
                             }
                         }
-                        Recv::Timeout => {
+                        RecvStatus::Timeout => {
                             if strike(&mut life[w], k, self.cfg.dead_after) {
                                 retire(w, degrade, sv, &mut stale, &mut h, &mut store);
                             }
                             break;
                         }
-                        Recv::Disconnected => {
+                        RecvStatus::Disconnected => {
                             life[w] = Life::Dead;
                             retire(w, degrade, sv, &mut stale, &mut h, &mut store);
                             break;
@@ -725,14 +849,19 @@ impl Coordinator {
                     }
                 }
             }
-            // Feed the observed virtual arrivals to the adaptive
-            // controller (every replier, cut-late ones included — their
-            // delay is the straggler signal the next round's K needs).
+            // Feed the observed arrivals to the adaptive controller
+            // (every replier, cut-late ones included — their delay is
+            // the straggler signal the next round's K needs): measured
+            // wall-clock µs on a real transport, seeded virtual units
+            // otherwise (CI-deterministic).
             for &w in &expected_ids {
                 if rs.replied(w) {
-                    ctrl.observe(w, self.cfg.delay.delay(w, k));
+                    let units =
+                        if measured { measured_us[w] } else { self.cfg.delay.delay(w, k) };
+                    ctrl.observe(w, units);
                 }
             }
+            metrics.quorum_k = k_quorum as u64;
             metrics.dead = life.iter().filter(|l| l.is_dead()).count() as u64;
 
             // Record the objective of θ^k (the pre-update iterate), paired
@@ -783,12 +912,18 @@ impl Coordinator {
             // for any thread schedule) and park the late updates with the
             // delivery age their excess delay spans (due at round
             // `k + age`, hard-bounded by the staleness window).
-            let cut = rs.cut(k_quorum, &self.cfg.delay);
+            let cut = if measured {
+                rs.cut_by(k_quorum, |w| measured_us[w])
+            } else {
+                rs.cut(k_quorum, &self.cfg.delay)
+            };
             metrics.virtual_units = cut.units;
             metrics.late = cut.late.len() as u64;
             for &w in &cut.late {
                 if let Some(u) = rs.take_update(w) {
-                    let age = delivery_age(self.cfg.delay.delay(w, k), cut.units, window);
+                    let delay =
+                        if measured { measured_us[w] } else { self.cfg.delay.delay(w, k) };
+                    let age = delivery_age(delay, cut.units, window);
                     parked.push(StaleUpdate { round: k as u32, worker: w, age, update: u });
                 }
             }
@@ -867,14 +1002,14 @@ impl Coordinator {
         }
 
         // Shutdown and join.
-        for end in &self.ends {
-            let _ = end.tx.send(protocol::encode(&Msg::Shutdown, d as u32));
+        for end in self.ends.iter_mut() {
+            let _ = end.send(protocol::encode(&Msg::Shutdown, d as u32));
         }
         let mut uplink_bytes = 0u64;
         let mut downlink_bytes = 0u64;
         for end in &self.ends {
-            uplink_bytes += end.up_stats.bytes();
-            downlink_bytes += end.down_stats.bytes();
+            uplink_bytes += end.rcvd_stats().bytes();
+            downlink_bytes += end.sent_stats().bytes();
         }
         for hnd in self.handles.drain(..) {
             let _ = hnd.join();
@@ -942,10 +1077,10 @@ pub fn run_native(
 
 /// [`run_native`] with an explicit quorum policy and virtual delay
 /// schedule, and the fault plan, degradation policy, cohort sampler,
-/// and ledger-eviction horizon pinned to none (parity tests pin
-/// `Quorum::All`; straggler tests inject deterministic [`DelayPlan`]s —
-/// either way the trajectory must not depend on the CI fault/cohort
-/// environment).
+/// ledger-eviction horizon, and transport (virtual) pinned (parity
+/// tests pin `Quorum::All`; straggler tests inject deterministic
+/// [`DelayPlan`]s — either way the trajectory must not depend on the CI
+/// fault/cohort/transport environment).
 pub fn run_native_opts(
     prob: &crate::objectives::Problem,
     gdsec: GdSecConfig,
@@ -961,6 +1096,7 @@ pub fn run_native_opts(
     cfg.degrade = DegradePolicy::Freeze;
     cfg.cohort = None;
     cfg.evict_after = None;
+    cfg.transport = TransportKind::Virtual;
     Coordinator::spawn(cfg, prob.d, factories).run()
 }
 
@@ -983,14 +1119,14 @@ mod tests {
         // `dead_after` rounds of stale-only deliveries.
         let prob = Problem::linear(synthetic::dna_like(3, 30), 1, 0.1);
         let d = prob.d;
-        let (server_end, worker_end) = duplex();
+        let (server_end, mut worker_end) = duplex();
         // Scripted worker: fresh at round 1, then forever one round late.
         let handle = std::thread::spawn(move || {
             let mut up = SparseUpdate::empty(d);
             up.idx.push(0);
             up.val.push(0.001);
             loop {
-                let frame = match worker_end.rx.recv() {
+                let frame = match worker_end.recv() {
                     Recv::Frame(f) => f,
                     _ => return,
                 };
@@ -1004,7 +1140,7 @@ mod tests {
                             update: up.clone(),
                             local_f: 0.0,
                         };
-                        if !worker_end.tx.send(protocol::encode(&reply, d as u32)) {
+                        if !worker_end.send(protocol::encode(&reply, d as u32)) {
                             return;
                         }
                     }
@@ -1024,7 +1160,14 @@ mod tests {
         cfg.evict_after = None;
         cfg.problem_name = prob.name.clone();
         cfg.evaluator = Some(Arc::new(move |t: &[f64]| prob2.value(t)));
-        let coord = Coordinator { cfg, ends: vec![server_end], handles: vec![handle], d };
+        let coord = Coordinator {
+            cfg,
+            ends: vec![Box::new(server_end)],
+            handles: vec![handle],
+            d,
+            measured: false,
+            newcomers: None,
+        };
         let out = coord.run();
         assert_eq!(out.dead_workers, vec![0], "stale-only worker evaded dead_after");
         // Its stale deliveries were still folded (bits + contribution
@@ -1111,6 +1254,22 @@ mod tests {
         let frame = protocol::encode(&Msg::Join { round: 7, worker: 3 }, 4);
         assert_eq!(frame_round(&frame), 7);
         assert_eq!(frame_round(&[0xA5, 2]), 0); // runt
+    }
+
+    #[test]
+    fn recv_timeout_parses_and_rejects_garbage_and_zero() {
+        assert_eq!(parse_recv_timeout_ms("250"), Duration::from_millis(250));
+        assert_eq!(parse_recv_timeout_ms(" 5000 "), Duration::from_secs(5));
+        for bad in ["", "abc", "-3", "1.5"] {
+            let r = std::panic::catch_unwind(|| parse_recv_timeout_ms(bad));
+            assert!(r.is_err(), "{bad:?} must panic");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "must be positive, got \"0\"")]
+    fn recv_timeout_zero_panics_with_value() {
+        parse_recv_timeout_ms("0");
     }
 
     #[test]

@@ -357,9 +357,17 @@ impl RoundState {
     /// largest delay among the on-time replies: the wall-clock proxy the
     /// quorum actually waited for.
     pub fn cut(&self, k_quorum: usize, plan: &DelayPlan) -> Cut {
+        self.cut_by(k_quorum, |w| plan.delay(w, self.k as usize))
+    }
+
+    /// [`Self::cut`] over an arbitrary per-worker delay source — the
+    /// real-transport path ranks *measured wall-clock* reply delays
+    /// (µs since broadcast) with the identical `(delay, w)` tie-break,
+    /// so the cut logic is one implementation for both modes.
+    pub fn cut_by(&self, k_quorum: usize, delay_of: impl Fn(usize) -> u64) -> Cut {
         let mut arrivals: Vec<(u64, usize)> = (0..self.replied.len())
             .filter(|&w| self.replied[w])
-            .map(|w| (plan.delay(w, self.k as usize), w))
+            .map(|w| (delay_of(w), w))
             .collect();
         arrivals.sort_unstable();
         let on_time = k_quorum.min(arrivals.len());

@@ -241,9 +241,15 @@ pub const ADAPT_SLACK: f64 = 2.0;
 ///
 /// Both drivers use it identically: decide K from the PRE-round
 /// estimates ([`k_for`](QuorumController::k_for)), gather, then
-/// [`observe`](QuorumController::observe) every replier's delay. State
-/// depends only on the deterministic [`DelayPlan`], so adaptive
-/// trajectories stay reproducible and thread-count independent.
+/// [`observe`](QuorumController::observe) every replier's delay. The
+/// decide/observe split is transport-agnostic — the unit fed to
+/// `observe` is seeded virtual [`DelayPlan`] units on the in-memory
+/// transport (state then depends only on the deterministic plan, so
+/// adaptive trajectories stay reproducible and thread-count
+/// independent) and **measured wall-clock microseconds** since the
+/// round's broadcast on a real transport (the controller genuinely
+/// adapts to the machine; only relative magnitudes matter, so the unit
+/// swap needs no retuning of [`ADAPT_EMA`]/[`ADAPT_SLACK`]).
 pub struct QuorumController {
     policy: Quorum,
     ema: Vec<f64>,
@@ -292,9 +298,11 @@ impl QuorumController {
         k.clamp(floor, n)
     }
 
-    /// Feed one observed virtual arrival delay for worker `w` (called
-    /// for every replier after the gather, cut-late repliers included —
-    /// their delay is exactly the signal the next round's K needs).
+    /// Feed one observed arrival delay for worker `w` (called for every
+    /// replier after the gather, cut-late repliers included — their
+    /// delay is exactly the signal the next round's K needs). `units`
+    /// is virtual [`DelayPlan`] units on the in-memory transport,
+    /// measured µs since broadcast on a real one.
     pub fn observe(&mut self, w: usize, units: u64) {
         let x = units as f64;
         if self.seen[w] {

@@ -1,5 +1,8 @@
-//! In-process transport: framed links over `std::sync::mpsc` with exact
-//! per-link byte counters and optional simulated bandwidth.
+//! Link abstraction for the coordinator: the [`Transport`] trait, the
+//! in-process [`VirtualTransport`] default (framed links over
+//! `std::sync::mpsc` with exact per-link byte counters), and the seeded
+//! delay/fault injection plans. The real-socket backend lives in
+//! [`super::tcp`]; `GDSEC_TRANSPORT` selects between them.
 //!
 //! Substitution note (DESIGN.md §6): the paper's setting is a wireless
 //! uplink; what its evaluation measures is *transmitted bits*. This
@@ -263,26 +266,6 @@ impl LinkStats {
     }
 }
 
-/// Sending half of a link.
-pub struct TxLink {
-    tx: Sender<Vec<u8>>,
-    stats: Arc<LinkStats>,
-}
-
-impl TxLink {
-    /// Serialize a frame onto the link. Returns false if the peer is gone.
-    pub fn send(&self, frame: Vec<u8>) -> bool {
-        self.stats.frames.fetch_add(1, Ordering::Relaxed);
-        self.stats.bytes.fetch_add(frame.len() as u64, Ordering::Relaxed);
-        self.tx.send(frame).is_ok()
-    }
-}
-
-/// Receiving half of a link.
-pub struct RxLink {
-    rx: Receiver<Vec<u8>>,
-}
-
 /// Receive outcome distinguishing timeout (possible peer failure) from
 /// disconnect.
 #[derive(Debug)]
@@ -292,15 +275,136 @@ pub enum Recv {
     Disconnected,
 }
 
-impl RxLink {
-    pub fn recv(&self) -> Recv {
+/// Outcome of the buffer-reuse receive path ([`Transport::recv_into`]):
+/// like [`Recv`] but the frame bytes land in the caller's buffer instead
+/// of a freshly allocated `Vec` — the server gather loop's steady state
+/// stays allocation-free on the virtual transport.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RecvStatus {
+    Frame,
+    Timeout,
+    Disconnected,
+}
+
+/// One full-duplex framed link endpoint — the contract the coordinator
+/// and the worker loop are written against.
+///
+/// Two backends implement it: [`VirtualTransport`] (in-memory `mpsc`
+/// channels, the CI-deterministic default — bitwise identical to the
+/// pre-trait `TxLink`/`RxLink` pair) and
+/// [`super::tcp::TcpTransport`] (length-framed `std::net::TcpStream`,
+/// the real multi-process deployment path). Frames are the exact byte
+/// strings `protocol::encode` produces; a backend must deliver them
+/// whole and unmodified, so `protocol::decode` is transport-agnostic.
+///
+/// Byte accounting: `sent_stats`/`rcvd_stats` count *frame* bytes only —
+/// a backend's own framing overhead (e.g. TCP's 4-byte length prefix) is
+/// excluded, so the paper's transmitted-bit metric is identical across
+/// backends for identical trajectories (pinned by the loopback
+/// multi-process CI run).
+///
+/// Peer loss MUST surface as [`Recv::Disconnected`] (sticky): the
+/// coordinator maps it onto the liveness-machine strike path, and a
+/// restarted worker re-enters through the existing `Msg::Join`
+/// re-admission handshake.
+pub trait Transport: Send {
+    /// Serialize a frame onto the link. Returns false if the peer is
+    /// gone. The frame's bytes are counted against `sent_stats` whether
+    /// or not the peer still listens (the sender paid for them).
+    fn send(&mut self, frame: Vec<u8>) -> bool;
+
+    /// Block until a frame arrives or the peer disconnects.
+    fn recv(&mut self) -> Recv;
+
+    /// Block with a deadline; [`Recv::Timeout`] when it expires.
+    fn recv_timeout(&mut self, timeout: Duration) -> Recv;
+
+    /// Non-blocking receive: `None` when the link is empty (the worker
+    /// loop uses this to skip to the newest queued θ broadcast when the
+    /// server has raced ahead after a quorum cut).
+    fn try_recv(&mut self) -> Option<Recv>;
+
+    /// Buffer-reuse receive: on [`RecvStatus::Frame`] the frame bytes
+    /// replace `buf`'s contents (capacity reused — allocation-free once
+    /// warm on the virtual backend). `buf` is unspecified otherwise.
+    fn recv_into(&mut self, buf: &mut Vec<u8>, timeout: Duration) -> RecvStatus;
+
+    /// Byte/frame counters for frames this endpoint sent.
+    fn sent_stats(&self) -> &Arc<LinkStats>;
+
+    /// Byte/frame counters for frames arriving at this endpoint. On the
+    /// virtual backend this handle is shared with the peer's
+    /// `sent_stats` (counted at send time — in-flight frames at
+    /// shutdown are included, exactly the historical `up_stats`
+    /// accounting); the TCP backend counts at frame reassembly.
+    fn rcvd_stats(&self) -> &Arc<LinkStats>;
+}
+
+/// Which [`Transport`] backend a coordinator run wires its workers with
+/// (`GDSEC_TRANSPORT`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum TransportKind {
+    /// Seeded in-memory channels ([`VirtualTransport`]): deterministic
+    /// virtual [`DelayPlan`] straggler ordering, the CI mode. Default.
+    #[default]
+    Virtual,
+    /// Real loopback TCP sockets between the coordinator and its worker
+    /// threads ([`super::tcp::TcpTransport`]): quorum decisions rank
+    /// *measured wall-clock* reply delays, so trajectories with K < M
+    /// are machine-dependent (bitwise parity still holds at
+    /// `Quorum::All`, where no reply is ever cut).
+    Tcp,
+}
+
+impl TransportKind {
+    pub fn parse(s: &str) -> Result<TransportKind, String> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "" | "virtual" | "channel" => Ok(TransportKind::Virtual),
+            "tcp" => Ok(TransportKind::Tcp),
+            other => Err(format!("expected `virtual` or `tcp`, got {other:?}")),
+        }
+    }
+
+    /// Honor the `GDSEC_TRANSPORT` env override (`virtual` | `tcp`).
+    /// Panics on garbage so a misconfigured CI leg is loud, never a
+    /// silently-virtual "TCP" run.
+    pub fn from_env() -> TransportKind {
+        match std::env::var("GDSEC_TRANSPORT") {
+            Ok(s) => TransportKind::parse(&s)
+                .unwrap_or_else(|e| panic!("GDSEC_TRANSPORT: {e}")),
+            Err(_) => TransportKind::default(),
+        }
+    }
+}
+
+/// The default [`Transport`]: framed links over `std::sync::mpsc`,
+/// bitwise identical to the pre-trait `TxLink`/`RxLink` implementation.
+/// Ordering, timeout semantics, and byte accounting are exactly the
+/// channel pair's, so every seeded `DelayPlan`/`FaultPlan` trajectory is
+/// unchanged by the trait refactor (pinned by running the coordinator
+/// integration suite under `GDSEC_TRANSPORT=virtual`).
+pub struct VirtualTransport {
+    tx: Sender<Vec<u8>>,
+    rx: Receiver<Vec<u8>>,
+    sent: Arc<LinkStats>,
+    rcvd: Arc<LinkStats>,
+}
+
+impl Transport for VirtualTransport {
+    fn send(&mut self, frame: Vec<u8>) -> bool {
+        self.sent.frames.fetch_add(1, Ordering::Relaxed);
+        self.sent.bytes.fetch_add(frame.len() as u64, Ordering::Relaxed);
+        self.tx.send(frame).is_ok()
+    }
+
+    fn recv(&mut self) -> Recv {
         match self.rx.recv() {
             Ok(f) => Recv::Frame(f),
             Err(_) => Recv::Disconnected,
         }
     }
 
-    pub fn recv_timeout(&self, timeout: Duration) -> Recv {
+    fn recv_timeout(&mut self, timeout: Duration) -> Recv {
         match self.rx.recv_timeout(timeout) {
             Ok(f) => Recv::Frame(f),
             Err(RecvTimeoutError::Timeout) => Recv::Timeout,
@@ -308,46 +412,55 @@ impl RxLink {
         }
     }
 
-    /// Non-blocking receive: `None` when the link is empty (the worker
-    /// loop uses this to skip to the newest queued θ broadcast when the
-    /// server has raced ahead after a quorum cut).
-    pub fn try_recv(&self) -> Option<Recv> {
+    fn try_recv(&mut self) -> Option<Recv> {
         match self.rx.try_recv() {
             Ok(f) => Some(Recv::Frame(f)),
             Err(TryRecvError::Empty) => None,
             Err(TryRecvError::Disconnected) => Some(Recv::Disconnected),
         }
     }
+
+    fn recv_into(&mut self, buf: &mut Vec<u8>, timeout: Duration) -> RecvStatus {
+        match self.rx.recv_timeout(timeout) {
+            Ok(f) => {
+                // Copy into the caller's warm buffer; the channel-owned
+                // Vec (allocated at the SEND side) is dropped here, so
+                // the receive path itself performs no allocation.
+                buf.clear();
+                buf.extend_from_slice(&f);
+                RecvStatus::Frame
+            }
+            Err(RecvTimeoutError::Timeout) => RecvStatus::Timeout,
+            Err(RecvTimeoutError::Disconnected) => RecvStatus::Disconnected,
+        }
+    }
+
+    fn sent_stats(&self) -> &Arc<LinkStats> {
+        &self.sent
+    }
+
+    fn rcvd_stats(&self) -> &Arc<LinkStats> {
+        &self.rcvd
+    }
 }
 
-/// Create a unidirectional link; stats are shared between both halves and
-/// any observer.
-pub fn link() -> (TxLink, RxLink, Arc<LinkStats>) {
-    let (tx, rx) = channel();
-    let stats = Arc::new(LinkStats::default());
-    (TxLink { tx, stats: stats.clone() }, RxLink { rx }, stats)
-}
-
-/// Full-duplex endpoint pair for one worker: (server side, worker side).
-pub struct ServerEnd {
-    pub tx: TxLink,
-    pub rx: RxLink,
-    pub up_stats: Arc<LinkStats>,
-    pub down_stats: Arc<LinkStats>,
-}
-
-pub struct WorkerEnd {
-    pub tx: TxLink,
-    pub rx: RxLink,
-}
-
-/// Build the two ends of a server↔worker duplex link.
-pub fn duplex() -> (ServerEnd, WorkerEnd) {
-    let (down_tx, down_rx, down_stats) = link();
-    let (up_tx, up_rx, up_stats) = link();
+/// Build the two ends of a server↔worker duplex link:
+/// (server side, worker side). The downlink counters are shared between
+/// the server's `sent_stats` and the worker's `rcvd_stats` (and the
+/// uplink counters vice versa) — counted once, at send time.
+pub fn duplex() -> (VirtualTransport, VirtualTransport) {
+    let (down_tx, down_rx) = channel();
+    let (up_tx, up_rx) = channel();
+    let down_stats = Arc::new(LinkStats::default());
+    let up_stats = Arc::new(LinkStats::default());
     (
-        ServerEnd { tx: down_tx, rx: up_rx, up_stats, down_stats },
-        WorkerEnd { tx: up_tx, rx: down_rx },
+        VirtualTransport {
+            tx: down_tx,
+            rx: up_rx,
+            sent: down_stats.clone(),
+            rcvd: up_stats.clone(),
+        },
+        VirtualTransport { tx: up_tx, rx: down_rx, sent: up_stats, rcvd: down_stats },
     )
 }
 
@@ -357,26 +470,29 @@ mod tests {
 
     #[test]
     fn counts_bytes_and_frames() {
-        let (tx, rx, stats) = link();
-        assert!(tx.send(vec![1, 2, 3]));
-        assert!(tx.send(vec![4; 10]));
-        match rx.recv() {
+        let (mut server, mut worker) = duplex();
+        assert!(server.send(vec![1, 2, 3]));
+        assert!(server.send(vec![4; 10]));
+        match worker.recv() {
             Recv::Frame(f) => assert_eq!(f, vec![1, 2, 3]),
             other => panic!("{other:?}"),
         }
-        assert_eq!(stats.frames(), 2);
-        assert_eq!(stats.bytes(), 13);
+        // Counted at send time, shared with the peer's receive handle.
+        assert_eq!(server.sent_stats().frames(), 2);
+        assert_eq!(server.sent_stats().bytes(), 13);
+        assert_eq!(worker.rcvd_stats().frames(), 2);
+        assert_eq!(worker.rcvd_stats().bytes(), 13);
     }
 
     #[test]
     fn timeout_and_disconnect() {
-        let (tx, rx, _stats) = link();
-        match rx.recv_timeout(Duration::from_millis(5)) {
+        let (server, mut worker) = duplex();
+        match worker.recv_timeout(Duration::from_millis(5)) {
             Recv::Timeout => {}
             other => panic!("expected timeout, got {other:?}"),
         }
-        drop(tx);
-        match rx.recv() {
+        drop(server);
+        match worker.recv() {
             Recv::Disconnected => {}
             other => panic!("expected disconnect, got {other:?}"),
         }
@@ -384,36 +500,80 @@ mod tests {
 
     #[test]
     fn duplex_cross_talk() {
-        let (server, worker) = duplex();
-        assert!(server.tx.send(vec![9]));
-        match worker.rx.recv() {
+        let (mut server, mut worker) = duplex();
+        assert!(server.send(vec![9]));
+        match worker.recv() {
             Recv::Frame(f) => assert_eq!(f, vec![9]),
             other => panic!("{other:?}"),
         }
-        assert!(worker.tx.send(vec![7, 7]));
-        match server.rx.recv() {
+        assert!(worker.send(vec![7, 7]));
+        match server.recv() {
             Recv::Frame(f) => assert_eq!(f, vec![7, 7]),
             other => panic!("{other:?}"),
         }
-        assert_eq!(server.down_stats.bytes(), 1);
-        assert_eq!(server.up_stats.bytes(), 2);
+        assert_eq!(server.sent_stats().bytes(), 1); // downlink
+        assert_eq!(server.rcvd_stats().bytes(), 2); // uplink
+        assert_eq!(worker.sent_stats().bytes(), 2);
+        assert_eq!(worker.rcvd_stats().bytes(), 1);
     }
 
     #[test]
     fn send_to_dropped_peer_fails() {
-        let (tx, rx, _) = link();
-        drop(rx);
-        assert!(!tx.send(vec![1]));
+        let (mut server, worker) = duplex();
+        drop(worker);
+        assert!(!server.send(vec![1]));
+        // The frame was still paid for at the sender.
+        assert_eq!(server.sent_stats().bytes(), 1);
     }
 
     #[test]
     fn try_recv_empty_frame_disconnect() {
-        let (tx, rx, _) = link();
-        assert!(rx.try_recv().is_none());
-        tx.send(vec![1]);
-        assert!(matches!(rx.try_recv(), Some(Recv::Frame(_))));
-        drop(tx);
-        assert!(matches!(rx.try_recv(), Some(Recv::Disconnected)));
+        let (mut server, mut worker) = duplex();
+        assert!(worker.try_recv().is_none());
+        server.send(vec![1]);
+        assert!(matches!(worker.try_recv(), Some(Recv::Frame(_))));
+        drop(server);
+        assert!(matches!(worker.try_recv(), Some(Recv::Disconnected)));
+    }
+
+    #[test]
+    fn recv_into_reuses_buffer_and_reports_status() {
+        let (mut server, mut worker) = duplex();
+        let mut buf = vec![0xEE; 64]; // stale contents must be replaced
+        assert_eq!(
+            worker.recv_into(&mut buf, Duration::from_millis(5)),
+            RecvStatus::Timeout
+        );
+        server.send(vec![3, 1, 4, 1, 5]);
+        server.send(vec![9, 2]);
+        assert_eq!(
+            worker.recv_into(&mut buf, Duration::from_millis(100)),
+            RecvStatus::Frame
+        );
+        assert_eq!(buf, vec![3, 1, 4, 1, 5]);
+        let cap = buf.capacity();
+        assert_eq!(
+            worker.recv_into(&mut buf, Duration::from_millis(100)),
+            RecvStatus::Frame
+        );
+        assert_eq!(buf, vec![9, 2]);
+        assert_eq!(buf.capacity(), cap, "warm buffer must not reallocate");
+        drop(server);
+        assert_eq!(
+            worker.recv_into(&mut buf, Duration::from_millis(5)),
+            RecvStatus::Disconnected
+        );
+    }
+
+    #[test]
+    fn transport_kind_parses_and_defaults() {
+        assert_eq!(TransportKind::parse("virtual"), Ok(TransportKind::Virtual));
+        assert_eq!(TransportKind::parse(" TCP "), Ok(TransportKind::Tcp));
+        assert_eq!(TransportKind::parse("channel"), Ok(TransportKind::Virtual));
+        assert_eq!(TransportKind::parse(""), Ok(TransportKind::Virtual));
+        assert_eq!(TransportKind::default(), TransportKind::Virtual);
+        assert!(TransportKind::parse("udp").is_err());
+        assert!(TransportKind::parse("quantum").unwrap_err().contains("quantum"));
     }
 
     #[test]
@@ -513,14 +673,14 @@ mod tests {
 
     #[test]
     fn cross_thread() {
-        let (server, worker) = duplex();
+        let (mut server, mut worker) = duplex();
         let h = std::thread::spawn(move || {
-            if let Recv::Frame(f) = worker.rx.recv() {
-                worker.tx.send(f);
+            if let Recv::Frame(f) = worker.recv() {
+                worker.send(f);
             }
         });
-        server.tx.send(vec![5, 5, 5]);
-        match server.rx.recv() {
+        server.send(vec![5, 5, 5]);
+        match server.recv() {
             Recv::Frame(f) => assert_eq!(f, vec![5, 5, 5]),
             other => panic!("{other:?}"),
         }

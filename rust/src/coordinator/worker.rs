@@ -3,7 +3,7 @@
 //! XLA executable), run the GD-SEC censor/EC step, and reply.
 
 use super::protocol::{self, Msg, WireFormat};
-use super::transport::{Recv, WorkerEnd, WorkerFaults};
+use super::transport::{Recv, Transport, WorkerFaults};
 use crate::algo::engine::EngineOpts;
 use crate::algo::gdsec::{GdSecConfig, WorkerState};
 use crate::linalg;
@@ -70,6 +70,19 @@ enum Phase {
     Announced,
 }
 
+/// Why the worker loop ended — the multi-process worker binary's
+/// reconnect decision: `Shutdown` is a clean protocol exit;
+/// `LinkLost` means the transport died under the loop (server crash,
+/// dropped TCP connection), and carries the last round the worker saw so
+/// a reconnect can announce it in the `Msg::Join` hello (the server's
+/// re-admission handshake). In-process callers join the thread and
+/// ignore the value.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LoopExit {
+    Shutdown,
+    LinkLost { last_seen: u32 },
+}
+
 /// Run the worker loop until Shutdown (or link loss). `factory` is invoked
 /// on this thread to build the provider. `wire` selects the uplink update
 /// codec (the paper's sparse format, or the adaptive tagged format).
@@ -87,16 +100,16 @@ enum Phase {
 /// safe for every compress rule) and `theta_prev = θ`, so its first
 /// reply is a full transmission exactly like round 1.
 #[allow(clippy::too_many_arguments)]
-pub fn worker_loop(
+pub fn worker_loop<T: Transport>(
     id: u32,
     m_workers: usize,
     cfg: GdSecConfig,
     factory: ProviderFactory,
-    end: WorkerEnd,
+    mut end: T,
     faults: WorkerFaults,
     wire: WireFormat,
     stale_window: usize,
-) {
+) -> LoopExit {
     let stale_window = stale_window.max(1) as u32;
     let mut provider = factory();
     let d = provider.dim();
@@ -106,16 +119,16 @@ pub fn worker_loop(
     let mut phase = Phase::Live;
     let mut last_seen: u32 = 0;
     loop {
-        let frame = match end.rx.recv() {
+        let frame = match end.recv() {
             Recv::Frame(f) => f,
-            _ => return,
+            _ => return LoopExit::LinkLost { last_seen },
         };
         let msg = match protocol::decode(&frame, d as u32) {
             Ok(m) => m,
             Err(_) => continue, // corrupt frame: drop, stay alive
         };
         match msg {
-            Msg::Shutdown => return,
+            Msg::Shutdown => return LoopExit::Shutdown,
             Msg::Broadcast { round, theta, active } => {
                 // Quorum rounds let the server race ahead of a straggler:
                 // collect the queued backlog (in round order — the link
@@ -130,7 +143,7 @@ pub fn worker_loop(
                 // no-op there.)
                 let mut pending: Vec<(u32, Vec<f64>, bool)> = vec![(round, theta, active)];
                 loop {
-                    match end.rx.try_recv() {
+                    match end.try_recv() {
                         None => break,
                         Some(Recv::Frame(f)) => match protocol::decode(&f, d as u32) {
                             Ok(Msg::Broadcast { round: r2, theta: t2, active: a2 })
@@ -138,10 +151,10 @@ pub fn worker_loop(
                             {
                                 pending.push((r2, t2, a2));
                             }
-                            Ok(Msg::Shutdown) => return,
+                            Ok(Msg::Shutdown) => return LoopExit::Shutdown,
                             _ => {} // corrupt/out-of-order: drop
                         },
-                        Some(Recv::Disconnected) => return,
+                        Some(Recv::Disconnected) => return LoopExit::LinkLost { last_seen },
                         // try_recv never yields Timeout; the arm only
                         // keeps the match exhaustive.
                         Some(Recv::Timeout) => break,
@@ -161,12 +174,12 @@ pub fn worker_loop(
                         // Back up (round ≥ restart_at): announce with the
                         // last round seen before the crash and wait for a
                         // usable snapshot.
-                        if !end.tx.send(protocol::encode_wire(
+                        if !end.send(protocol::encode_wire(
                             &Msg::Join { round: last_seen, worker: id },
                             d as u32,
                             wire,
                         )) {
-                            return;
+                            return LoopExit::LinkLost { last_seen };
                         }
                         phase = Phase::Announced;
                         theta_prev.copy_from_slice(&theta);
@@ -200,8 +213,8 @@ pub fn worker_loop(
                         Msg::Silence { round, worker: id, local_f }
                     };
                     theta_prev.copy_from_slice(&theta);
-                    if !end.tx.send(protocol::encode_wire(&reply, d as u32, wire)) {
-                        return;
+                    if !end.send(protocol::encode_wire(&reply, d as u32, wire)) {
+                        return LoopExit::LinkLost { last_seen };
                     }
                 }
             }
@@ -236,13 +249,17 @@ mod tests {
     fn spawn_one(
         cfg: GdSecConfig,
         faults: WorkerFaults,
-    ) -> (crate::coordinator::transport::ServerEnd, std::thread::JoinHandle<()>, usize) {
+    ) -> (
+        crate::coordinator::transport::VirtualTransport,
+        std::thread::JoinHandle<LoopExit>,
+        usize,
+    ) {
         let prob = Problem::linear(synthetic::dna_like(1, 30), 1, 0.1);
         let d = prob.d;
         let local = prob.locals[0].clone();
         let factory: ProviderFactory =
             Box::new(move || Box::new(NativeProvider::new(local)) as Box<dyn GradProvider>);
-        let (server, worker) = duplex();
+        let (mut server, worker) = duplex();
         let h = std::thread::spawn(move || {
             worker_loop(0, 1, cfg, factory, worker, faults, WireFormat::Sparse, 1)
         });
@@ -252,13 +269,13 @@ mod tests {
     #[test]
     fn first_broadcast_gets_full_update() {
         let cfg = GdSecConfig { xi: Xi::Uniform(1.0), ..Default::default() };
-        let (server, h, d) = spawn_one(cfg, WorkerFaults::default());
+        let (mut server, h, d) = spawn_one(cfg, WorkerFaults::default());
         let theta = vec![0.0; d];
-        server.tx.send(protocol::encode(
+        server.send(protocol::encode(
             &Msg::Broadcast { round: 1, theta, active: true },
             d as u32,
         ));
-        match server.rx.recv() {
+        match server.recv() {
             Recv::Frame(f) => match protocol::decode(&f, d as u32).unwrap() {
                 Msg::Update { round, worker, update, local_f } => {
                     assert_eq!(round, 1);
@@ -270,45 +287,45 @@ mod tests {
             },
             other => panic!("{other:?}"),
         }
-        server.tx.send(protocol::encode(&Msg::Shutdown, d as u32));
+        server.send(protocol::encode(&Msg::Shutdown, d as u32));
         h.join().unwrap();
     }
 
     #[test]
     fn inactive_worker_stays_silent() {
         let cfg = GdSecConfig { xi: Xi::Uniform(1.0), ..Default::default() };
-        let (server, h, d) = spawn_one(cfg, WorkerFaults::default());
-        server.tx.send(protocol::encode(
+        let (mut server, h, d) = spawn_one(cfg, WorkerFaults::default());
+        server.send(protocol::encode(
             &Msg::Broadcast { round: 1, theta: vec![0.0; d], active: false },
             d as u32,
         ));
-        match server.rx.recv_timeout(silence_probe()) {
+        match server.recv_timeout(silence_probe()) {
             Recv::Timeout => {}
             other => panic!("expected no reply, got {other:?}"),
         }
-        server.tx.send(protocol::encode(&Msg::Shutdown, d as u32));
+        server.send(protocol::encode(&Msg::Shutdown, d as u32));
         h.join().unwrap();
     }
 
     #[test]
     fn failed_worker_goes_dark_but_drains() {
         let cfg = GdSecConfig { xi: Xi::Uniform(1.0), ..Default::default() };
-        let (server, h, d) =
+        let (mut server, h, d) =
             spawn_one(cfg, WorkerFaults { crash_at: Some(2), ..Default::default() });
-        server.tx.send(protocol::encode(
+        server.send(protocol::encode(
             &Msg::Broadcast { round: 1, theta: vec![0.0; d], active: true },
             d as u32,
         ));
-        assert!(matches!(server.rx.recv(), Recv::Frame(_)));
-        server.tx.send(protocol::encode(
+        assert!(matches!(server.recv(), Recv::Frame(_)));
+        server.send(protocol::encode(
             &Msg::Broadcast { round: 2, theta: vec![0.1; d], active: true },
             d as u32,
         ));
-        match server.rx.recv_timeout(silence_probe()) {
+        match server.recv_timeout(silence_probe()) {
             Recv::Timeout => {}
             other => panic!("expected dark worker, got {other:?}"),
         }
-        server.tx.send(protocol::encode(&Msg::Shutdown, d as u32));
+        server.send(protocol::encode(&Msg::Shutdown, d as u32));
         h.join().unwrap();
     }
 
@@ -323,12 +340,12 @@ mod tests {
         let local = prob.locals[0].clone();
         let factory: ProviderFactory =
             Box::new(move || Box::new(NativeProvider::new(local)) as Box<dyn GradProvider>);
-        let (server, worker) = duplex();
-        server.tx.send(protocol::encode(
+        let (mut server, worker) = duplex();
+        server.send(protocol::encode(
             &Msg::Broadcast { round: 1, theta: vec![0.0; d], active: true },
             d as u32,
         ));
-        server.tx.send(protocol::encode(
+        server.send(protocol::encode(
             &Msg::Broadcast { round: 2, theta: vec![0.01; d], active: true },
             d as u32,
         ));
@@ -336,7 +353,7 @@ mod tests {
         let h = std::thread::spawn(move || {
             worker_loop(0, 1, cfg, factory, worker, faults, WireFormat::Sparse, 1)
         });
-        match server.rx.recv() {
+        match server.recv() {
             Recv::Frame(f) => match protocol::decode(&f, d as u32).unwrap() {
                 Msg::Update { round, .. } => assert_eq!(round, 2, "superseded round replied"),
                 other => panic!("expected update, got {other:?}"),
@@ -344,11 +361,11 @@ mod tests {
             other => panic!("{other:?}"),
         }
         // No second reply: round 1 was skipped, not queued behind.
-        match server.rx.recv_timeout(silence_probe()) {
+        match server.recv_timeout(silence_probe()) {
             Recv::Timeout => {}
             other => panic!("expected exactly one reply, got {other:?}"),
         }
-        server.tx.send(protocol::encode(&Msg::Shutdown, d as u32));
+        server.send(protocol::encode(&Msg::Shutdown, d as u32));
         h.join().unwrap();
     }
 
@@ -365,9 +382,9 @@ mod tests {
         let local = prob.locals[0].clone();
         let factory: ProviderFactory =
             Box::new(move || Box::new(NativeProvider::new(local)) as Box<dyn GradProvider>);
-        let (server, worker) = duplex();
+        let (mut server, worker) = duplex();
         for (round, scale) in [(1u32, 0.0), (2, 0.01), (3, 0.02)] {
-            server.tx.send(protocol::encode(
+            server.send(protocol::encode(
                 &Msg::Broadcast { round, theta: vec![scale; d], active: true },
                 d as u32,
             ));
@@ -377,7 +394,7 @@ mod tests {
             worker_loop(0, 1, cfg, factory, worker, faults, WireFormat::Sparse, 3)
         });
         for expect in 1..=3u32 {
-            match server.rx.recv() {
+            match server.recv() {
                 Recv::Frame(f) => match protocol::decode(&f, d as u32).unwrap() {
                     Msg::Update { round, .. } | Msg::Silence { round, .. } => {
                         assert_eq!(round, expect, "backlog replies out of order")
@@ -387,11 +404,11 @@ mod tests {
                 other => panic!("{other:?}"),
             }
         }
-        match server.rx.recv_timeout(silence_probe()) {
+        match server.recv_timeout(silence_probe()) {
             Recv::Timeout => {}
             other => panic!("expected exactly three replies, got {other:?}"),
         }
-        server.tx.send(protocol::encode(&Msg::Shutdown, d as u32));
+        server.send(protocol::encode(&Msg::Shutdown, d as u32));
         h.join().unwrap();
     }
 
@@ -403,7 +420,7 @@ mod tests {
         // fresh snapshot — answered with a FULL transmission (θ-diff is
         // zero after the state reset, round-1 semantics).
         let cfg = GdSecConfig { xi: Xi::Uniform(1.0), ..Default::default() };
-        let (server, h, d) = spawn_one(
+        let (mut server, h, d) = spawn_one(
             cfg,
             WorkerFaults { crash_at: Some(2), restart_at: Some(4), ..Default::default() },
         );
@@ -413,8 +430,8 @@ mod tests {
                 d as u32,
             )
         };
-        server.tx.send(bcast(1, 0.0));
-        let first = match server.rx.recv() {
+        server.send(bcast(1, 0.0));
+        let first = match server.recv() {
             Recv::Frame(f) => protocol::decode(&f, d as u32).unwrap(),
             other => panic!("{other:?}"),
         };
@@ -424,15 +441,15 @@ mod tests {
         };
         assert!(full_nnz > 0, "round 1 transmits uncensored");
         // Rounds 2 and 3: crashed, no replies.
-        server.tx.send(bcast(2, 0.01));
-        server.tx.send(bcast(3, 0.02));
-        match server.rx.recv_timeout(silence_probe()) {
+        server.send(bcast(2, 0.01));
+        server.send(bcast(3, 0.02));
+        match server.recv_timeout(silence_probe()) {
             Recv::Timeout => {}
             other => panic!("expected dark worker, got {other:?}"),
         }
         // Round 4: restart → Join announcement with last_seen = 1.
-        server.tx.send(bcast(4, 0.03));
-        match server.rx.recv() {
+        server.send(bcast(4, 0.03));
+        match server.recv() {
             Recv::Frame(f) => match protocol::decode(&f, d as u32).unwrap() {
                 Msg::Join { round, worker } => {
                     assert_eq!((round, worker), (1, 0));
@@ -442,8 +459,8 @@ mod tests {
             other => panic!("{other:?}"),
         }
         // Round 5: fresh snapshot → full update tagged with the true round.
-        server.tx.send(bcast(5, 0.04));
-        match server.rx.recv() {
+        server.send(bcast(5, 0.04));
+        match server.recv() {
             Recv::Frame(f) => match protocol::decode(&f, d as u32).unwrap() {
                 Msg::Update { round, update, .. } => {
                     assert_eq!(round, 5);
@@ -456,21 +473,21 @@ mod tests {
             },
             other => panic!("{other:?}"),
         }
-        server.tx.send(protocol::encode(&Msg::Shutdown, d as u32));
+        server.send(protocol::encode(&Msg::Shutdown, d as u32));
         h.join().unwrap();
     }
 
     #[test]
     fn corrupt_frame_survivable() {
         let cfg = GdSecConfig { xi: Xi::Uniform(1.0), ..Default::default() };
-        let (server, h, d) = spawn_one(cfg, WorkerFaults::default());
-        server.tx.send(vec![0xde, 0xad]);
-        server.tx.send(protocol::encode(
+        let (mut server, h, d) = spawn_one(cfg, WorkerFaults::default());
+        server.send(vec![0xde, 0xad]);
+        server.send(protocol::encode(
             &Msg::Broadcast { round: 1, theta: vec![0.0; d], active: true },
             d as u32,
         ));
-        assert!(matches!(server.rx.recv(), Recv::Frame(_)));
-        server.tx.send(protocol::encode(&Msg::Shutdown, d as u32));
+        assert!(matches!(server.recv(), Recv::Frame(_)));
+        server.send(protocol::encode(&Msg::Shutdown, d as u32));
         h.join().unwrap();
     }
 }

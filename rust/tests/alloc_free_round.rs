@@ -386,4 +386,42 @@ fn steady_state_round_allocates_nothing() {
         "steady-state evict/restore ledger rounds performed heap allocations"
     );
     assert!(estore.evictions() > warm_evictions, "measured rounds stopped evicting");
+
+    // --- Virtual-transport receive phase: the server gather loop's
+    //     `recv_into` seam on the in-memory transport must be
+    //     allocation-free at steady state — the frame lands in the
+    //     caller's warm buffer (clear + extend into existing capacity),
+    //     and popping the channel node / dropping the sender-allocated
+    //     frame Vec are deallocations, which the counter ignores by
+    //     design. The frames are queued before the counter starts
+    //     (sending allocates channel nodes; receiving must not). ---
+    use gdsec::coordinator::protocol::{self, Msg};
+    use gdsec::coordinator::transport::{duplex, RecvStatus, Transport};
+    let (mut server_end, mut worker_end) = duplex();
+    let frame = protocol::encode(&Msg::Silence { round: 1, worker: 0, local_f: 0.5 }, d as u32);
+    for _ in 0..30 {
+        assert!(worker_end.send(frame.clone()));
+    }
+    let mut rbuf: Vec<u8> = Vec::new();
+    for _ in 0..3 {
+        assert_eq!(
+            server_end.recv_into(&mut rbuf, std::time::Duration::from_secs(1)),
+            RecvStatus::Frame
+        );
+        assert_eq!(rbuf, frame);
+    }
+    let before = ALLOC_CALLS.load(Ordering::SeqCst);
+    for _ in 0..25 {
+        assert_eq!(
+            server_end.recv_into(&mut rbuf, std::time::Duration::from_secs(1)),
+            RecvStatus::Frame
+        );
+    }
+    let after = ALLOC_CALLS.load(Ordering::SeqCst);
+    assert_eq!(
+        after - before,
+        0,
+        "steady-state virtual-transport recv_into performed heap allocations"
+    );
+    assert_eq!(rbuf, frame);
 }

@@ -14,9 +14,12 @@
 use gdsec::algo::gdsec::{GdSecConfig, Xi};
 use gdsec::coordinator::round::Quorum;
 use gdsec::coordinator::scheduler::{CohortPlan, Scheduler};
-use gdsec::coordinator::transport::{DelayPlan, FaultPlan, WorkerFaults};
-use gdsec::coordinator::worker::{GradProvider, NativeProvider, ProviderFactory};
-use gdsec::coordinator::{run_native_opts, CoordConfig, Coordinator, DegradePolicy};
+use gdsec::coordinator::transport::{
+    duplex, DelayPlan, FaultPlan, LinkStats, Recv, RecvStatus, Transport, TransportKind,
+    WorkerFaults,
+};
+use gdsec::coordinator::worker::{worker_loop, GradProvider, NativeProvider, ProviderFactory};
+use gdsec::coordinator::{run_native_opts, CoordConfig, CoordOutcome, Coordinator, DegradePolicy};
 use gdsec::data::synthetic;
 use gdsec::objectives::Problem;
 use std::sync::Arc;
@@ -178,6 +181,7 @@ fn multi_round_window_folds_aged_and_bounds_age() {
     ccfg.degrade = DegradePolicy::Freeze;
     ccfg.cohort = None; // pin: the fold/age census assumes full participation
     ccfg.evict_after = None;
+    ccfg.transport = TransportKind::Virtual; // pin: virtual DelayPlan semantics
     let out = Coordinator::spawn(ccfg, prob.d, factories).run();
 
     // Every fold is the straggler's, at delivery age 2 (its 899-unit
@@ -230,6 +234,7 @@ fn quorum_dead_worker_mid_run_keeps_converging() {
     ccfg.degrade = DegradePolicy::Freeze;
     ccfg.cohort = None; // pin: the scripted death round assumes full scheduling
     ccfg.evict_after = None;
+    ccfg.transport = TransportKind::Virtual; // pin: virtual DelayPlan semantics
     let out = Coordinator::spawn(ccfg, prob.d, factories).run();
     assert_eq!(out.dead_workers, vec![1]);
     let errs = out.trace.errors();
@@ -265,6 +270,7 @@ fn quorum_count_clamps_to_live_fleet() {
     ccfg.degrade = DegradePolicy::Freeze;
     ccfg.cohort = None; // pin: the wall-clock bound assumes full scheduling
     ccfg.evict_after = None;
+    ccfg.transport = TransportKind::Virtual; // pin: virtual DelayPlan semantics
     let t0 = std::time::Instant::now();
     let out = Coordinator::spawn(ccfg, prob.d, factories).run();
     assert_eq!(out.dead_workers, vec![1]);
@@ -306,6 +312,7 @@ fn crash_restart_readmits_with_ec_reset() {
     ccfg.degrade = DegradePolicy::Freeze;
     ccfg.cohort = None; // pin: the scripted crash/restart rounds assume full scheduling
     ccfg.evict_after = None;
+    ccfg.transport = TransportKind::Virtual; // pin: virtual DelayPlan semantics
     let out = Coordinator::spawn(ccfg, prob.d, factories).run();
 
     // Recovered: dead while down, alive at the end.
@@ -355,6 +362,7 @@ fn adaptive_wire_same_trajectory_tagged_bits() {
         ccfg.degrade = DegradePolicy::Freeze;
         ccfg.cohort = None; // pin: bitwise comparison
         ccfg.evict_after = None;
+    ccfg.transport = TransportKind::Virtual; // pin: virtual DelayPlan semantics
         Coordinator::spawn(ccfg, prob.d, factories).run()
     };
     let sparse = spawn_with(gdsec::coordinator::protocol::WireFormat::Sparse);
@@ -470,6 +478,7 @@ fn cohort_rounds_evict_and_readmit_with_faults() {
     // idle horizon (1 round) via effective_horizon.
     ccfg.cohort = Some(CohortPlan::fraction(0.67, 0xC0F0));
     ccfg.evict_after = None;
+    ccfg.transport = TransportKind::Virtual; // pin: virtual DelayPlan semantics
     let out = Coordinator::spawn(ccfg, prob.d, factories).run();
 
     // The store actually cycled: slabs were evicted when their workers
@@ -513,6 +522,7 @@ fn worker_failure_tolerated() {
     ccfg.degrade = DegradePolicy::Freeze;
     ccfg.cohort = None; // pin: the scripted death round assumes full scheduling
     ccfg.evict_after = None;
+    ccfg.transport = TransportKind::Virtual; // pin: virtual DelayPlan semantics
     let out = Coordinator::spawn(ccfg, prob.d, factories).run();
     assert_eq!(out.dead_workers, vec![1]);
     // Run completes and the survivors keep optimizing.
@@ -536,6 +546,7 @@ fn all_workers_fail_run_still_terminates() {
     ccfg.degrade = DegradePolicy::Freeze;
     ccfg.cohort = None; // pin: every worker must be scheduled into its crash round
     ccfg.evict_after = None;
+    ccfg.transport = TransportKind::Virtual; // pin: virtual DelayPlan semantics
     let out = Coordinator::spawn(ccfg, prob.d, factories).run();
     assert_eq!(out.dead_workers.len(), m);
     // θ never moves: every recorded objective equals f(0).
@@ -572,4 +583,213 @@ fn scheduled_serial_equivalence_round_robin() {
         );
         assert_eq!(s.bits, d.bits);
     }
+}
+
+/// A scripted-latency transport wrapper: behaves exactly like its inner
+/// transport but sleeps before each send — real wall-clock straggling
+/// over the virtual channel, so the measured-delay path is exercised
+/// deterministically without sockets.
+struct SleepyTransport<T: Transport> {
+    inner: T,
+    delay: Duration,
+}
+
+impl<T: Transport> Transport for SleepyTransport<T> {
+    fn send(&mut self, frame: Vec<u8>) -> bool {
+        if !self.delay.is_zero() {
+            std::thread::sleep(self.delay);
+        }
+        self.inner.send(frame)
+    }
+    fn recv(&mut self) -> Recv {
+        self.inner.recv()
+    }
+    fn recv_timeout(&mut self, timeout: Duration) -> Recv {
+        self.inner.recv_timeout(timeout)
+    }
+    fn try_recv(&mut self) -> Option<Recv> {
+        self.inner.try_recv()
+    }
+    fn recv_into(&mut self, buf: &mut Vec<u8>, timeout: Duration) -> RecvStatus {
+        self.inner.recv_into(buf, timeout)
+    }
+    fn sent_stats(&self) -> &Arc<LinkStats> {
+        self.inner.sent_stats()
+    }
+    fn rcvd_stats(&self) -> &Arc<LinkStats> {
+        self.inner.rcvd_stats()
+    }
+}
+
+/// Run the coordinator in measured (wall-clock) mode over in-memory
+/// links, with worker 2 sleeping `slow` before every reply.
+fn run_measured(prob: &Problem, quorum: Quorum, iters: usize, slow: Duration) -> CoordOutcome {
+    let m = prob.m();
+    let prob2 = prob.clone();
+    let mut ccfg = CoordConfig::new(cfg_for(prob), iters);
+    ccfg.problem_name = prob.name.clone();
+    ccfg.fstar = prob.estimate_fstar(2000);
+    ccfg.evaluator = Some(Arc::new(move |t: &[f64]| prob2.value(t)));
+    ccfg.quorum = quorum;
+    ccfg.faults = FaultPlan::default();
+    ccfg.degrade = DegradePolicy::Freeze;
+    ccfg.cohort = None;
+    ccfg.evict_after = None;
+    let mut ends: Vec<Box<dyn Transport>> = Vec::with_capacity(m);
+    let mut handles = Vec::with_capacity(m);
+    for (w, factory) in native_factories(prob).into_iter().enumerate() {
+        let (server_end, worker_end) = duplex();
+        let delay = if w == 2 { slow } else { Duration::ZERO };
+        let wcfg = ccfg.gdsec.clone();
+        let wire = ccfg.wire;
+        let sw = ccfg.stale_window;
+        handles.push(std::thread::spawn(move || {
+            let _ = worker_loop(
+                w as u32,
+                m,
+                wcfg,
+                factory,
+                SleepyTransport { inner: worker_end, delay },
+                WorkerFaults::default(),
+                wire,
+                sw,
+            );
+        }));
+        ends.push(Box::new(server_end));
+    }
+    let out = Coordinator::from_transports(ccfg, prob.d, ends, None, true).run();
+    for h in handles {
+        h.join().unwrap();
+    }
+    out
+}
+
+#[test]
+fn measured_mode_records_wall_clock_delays_and_keeps_all_quorum_bitwise() {
+    // Quorum::All over measured links: waiting for everyone is still the
+    // paper's synchronous protocol — the trajectory must stay bitwise
+    // equal to the virtual run — but the per-round delay metric must now
+    // be real microseconds dominated by the 20 ms sleeper, not virtual
+    // units.
+    let prob = problem();
+    let iters = 6;
+    let virt = run_native_opts(
+        &prob,
+        cfg_for(&prob),
+        iters,
+        Scheduler::All,
+        Quorum::All,
+        DelayPlan::None,
+    );
+    let out = run_measured(&prob, Quorum::All, iters, Duration::from_millis(20));
+    assert_eq!(virt.trace.rows.len(), out.trace.rows.len());
+    for (v, t) in virt.trace.rows.iter().zip(out.trace.rows.iter()) {
+        assert_eq!(
+            v.fval.to_bits(),
+            t.fval.to_bits(),
+            "measured-mode Quorum::All diverged at iter {}",
+            v.iter
+        );
+    }
+    assert!(out.rounds.iter().all(|r| r.quorum_k == prob.m() as u64));
+    // Every round waited on the sleeper: ≥ 5 ms measured (20 ms nominal,
+    // generous margin for scheduler noise in the fast direction only —
+    // a sleep cannot complete early).
+    assert!(
+        out.rounds.iter().all(|r| r.virtual_units >= 5_000),
+        "wall-clock delays not measured: {:?}",
+        out.rounds.iter().map(|r| r.virtual_units).collect::<Vec<_>>()
+    );
+}
+
+#[test]
+fn adaptive_quorum_cuts_on_measured_wall_clock_delays() {
+    // The discriminating property: with all-zero delay observations the
+    // adaptive controller NEVER cuts below the full fleet (tau = 0 ⇒
+    // every EMA passes ⇒ K = n, pinned by scheduler unit tests). So any
+    // post-warm-up round with quorum_k < n proves real measured
+    // microseconds reached `QuorumController::observe` — no flaky
+    // latency thresholds needed.
+    // 40 ms sleeper: the cut fires as long as the fast workers' reply
+    // EMAs stay under ADAPT_SLACK⁻¹ · 40 ms = 20 ms — two orders of
+    // magnitude above a loopback channel reply even on a loaded CI box.
+    let prob = problem();
+    let out = run_measured(
+        &prob,
+        Quorum::Adaptive { target_quantile: 0.5, min_frac: 0.25 },
+        12,
+        Duration::from_millis(40),
+    );
+    let cut_rounds: Vec<_> =
+        out.rounds.iter().filter(|r| r.round >= 2 && r.quorum_k < prob.m() as u64).collect();
+    assert!(
+        !cut_rounds.is_empty(),
+        "adaptive quorum never cut the 20 ms straggler: measured delays \
+         are not reaching the controller"
+    );
+    // The cut really happened: some round saw a late (parked) reply.
+    assert!(
+        out.rounds.iter().any(|r| r.late > 0) || out.trace.total_stale() > 0,
+        "no late reply ever recorded despite quorum cuts"
+    );
+    // And the run still converges: cutting a straggler is a latency
+    // optimization, not a correctness tradeoff.
+    let errs = out.trace.errors();
+    assert!(errs.last().unwrap().is_finite());
+    assert!(errs.last().unwrap() < &errs[0]);
+}
+
+#[test]
+fn tcp_loopback_matches_virtual_bitwise() {
+    // The transport-parity acceptance gate, in-process: the same spec
+    // over real loopback sockets (measured wall-clock mode) and over
+    // virtual channels must produce the identical trajectory bit for
+    // bit AND the identical byte accounting — TCP is a transport swap,
+    // not a protocol change.
+    let prob = problem();
+    let cfg = cfg_for(&prob);
+    let iters = 20;
+    let virt =
+        run_native_opts(&prob, cfg.clone(), iters, Scheduler::All, Quorum::All, DelayPlan::None);
+
+    let factories = native_factories(&prob);
+    let prob2 = prob.clone();
+    let mut ccfg = CoordConfig::new(cfg, iters);
+    ccfg.problem_name = prob.name.clone();
+    ccfg.fstar = prob.estimate_fstar(2000);
+    ccfg.evaluator = Some(Arc::new(move |t: &[f64]| prob2.value(t)));
+    ccfg.quorum = Quorum::All;
+    ccfg.faults = FaultPlan::default();
+    ccfg.degrade = DegradePolicy::Freeze;
+    ccfg.cohort = None;
+    ccfg.evict_after = None;
+    ccfg.transport = TransportKind::Tcp;
+    let tcp = Coordinator::spawn(ccfg, prob.d, factories).run();
+
+    assert_eq!(virt.trace.rows.len(), tcp.trace.rows.len());
+    for (v, t) in virt.trace.rows.iter().zip(tcp.trace.rows.iter()) {
+        assert_eq!(
+            v.fval.to_bits(),
+            t.fval.to_bits(),
+            "TCP trajectory diverged at iter {}: {} vs {}",
+            v.iter,
+            v.fval,
+            t.fval
+        );
+        assert_eq!(v.bits, t.bits, "payload-bit accounting diverged at iter {}", v.iter);
+        assert_eq!(v.transmissions, t.transmissions);
+    }
+    for (v, t) in virt.rounds.iter().zip(tcp.rounds.iter()) {
+        assert_eq!(
+            v.payload_bits, t.payload_bits,
+            "per-round payload bits diverged at round {}",
+            v.round
+        );
+    }
+    // Frame-byte totals: TCP counts receive-side at reassembly (stats
+    // exclude the 4-byte wire length prefix and the hello handshake),
+    // virtual counts send-side on the shared link — equal in a clean run.
+    assert_eq!(virt.uplink_frame_bytes, tcp.uplink_frame_bytes);
+    assert_eq!(virt.downlink_frame_bytes, tcp.downlink_frame_bytes);
+    assert!(tcp.dead_workers.is_empty());
 }

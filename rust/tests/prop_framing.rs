@@ -1,0 +1,188 @@
+//! Property tests for the TCP stream framing layer
+//! (`coordinator::tcp::FrameAssembler`).
+//!
+//! The framing contract the transport refactor rests on: a protocol
+//! frame pushed through `frame_to_wire` → arbitrary torn-read
+//! reassembly must come out byte-identical to the frame a virtual
+//! channel would have delivered — for EVERY `MsgKind`, at EVERY split
+//! point. Malformed streams (oversized length prefix, truncated tail)
+//! must fail loudly with the offending sizes, never yield a short
+//! frame.
+
+use gdsec::compress::SparseUpdate;
+use gdsec::coordinator::protocol::{self, Msg, WireFormat};
+use gdsec::coordinator::tcp::{frame_to_wire, FrameAssembler, FrameError, MAX_FRAME_LEN};
+use gdsec::coordinator::transport::{duplex, Recv, Transport};
+use gdsec::util::rng::Pcg64;
+
+const DIM: u32 = 7;
+
+/// One encoded frame per `MsgKind` byte (1..=6), labeled for failure
+/// messages. Kind 5 (`UpdateAdaptive`) comes from the adaptive codec on
+/// a dense-ish update; the others from the default sparse path.
+fn sample_frames() -> Vec<(&'static str, Vec<u8>)> {
+    let d = DIM as usize;
+    let mut up = SparseUpdate::empty(d);
+    up.idx.push(0);
+    up.idx.push(3);
+    up.val.push(-1.5);
+    up.val.push(0.25);
+    let mut dense = SparseUpdate::empty(d);
+    for j in 0..d {
+        dense.idx.push(j as u32);
+        dense.val.push(j as f32 - 2.0);
+    }
+    let theta: Vec<f64> = (0..d).map(|j| 0.1 * j as f64 - 0.3).collect();
+    let frames = vec![
+        (
+            "broadcast",
+            protocol::encode(&Msg::Broadcast { round: 3, theta, active: true }, DIM),
+        ),
+        (
+            "update-sparse",
+            protocol::encode(
+                &Msg::Update { round: 4, worker: 1, update: up, local_f: 0.5 },
+                DIM,
+            ),
+        ),
+        (
+            "silence",
+            protocol::encode(&Msg::Silence { round: 5, worker: 2, local_f: -0.25 }, DIM),
+        ),
+        ("shutdown", protocol::encode(&Msg::Shutdown, DIM)),
+        (
+            "update-adaptive",
+            protocol::encode_wire(
+                &Msg::Update { round: 6, worker: 0, update: dense, local_f: 1.0 },
+                DIM,
+                WireFormat::Adaptive,
+            ),
+        ),
+        ("join", protocol::encode(&Msg::Join { round: 2, worker: 1 }, DIM)),
+    ];
+    // The samples must actually cover every kind byte 1..=6.
+    let mut kinds: Vec<u8> = frames.iter().map(|(_, f)| f[1]).collect();
+    kinds.sort_unstable();
+    assert_eq!(kinds, vec![1, 2, 3, 4, 5, 6], "sample frames must span every MsgKind");
+    frames
+}
+
+/// Every frame kind survives reassembly split at EVERY possible tear
+/// point of its wire image, byte-identically, and still decodes.
+#[test]
+fn every_kind_survives_every_split_point() {
+    for (label, frame) in sample_frames() {
+        let wire = frame_to_wire(&frame);
+        for split in 1..wire.len() {
+            let mut asm = FrameAssembler::new();
+            let mut out = Vec::new();
+            asm.push(&wire[..split]);
+            let early = asm.next_into(&mut out).unwrap();
+            if early {
+                // A frame may only complete early if the split point
+                // was past the whole wire image — impossible here.
+                panic!("{label}: frame completed with only {split} of {} bytes", wire.len());
+            }
+            asm.push(&wire[split..]);
+            assert!(asm.next_into(&mut out).unwrap(), "{label}: split {split} lost the frame");
+            assert_eq!(out, frame, "{label}: split {split} corrupted the frame");
+            assert!(!asm.next_into(&mut out).unwrap(), "{label}: phantom extra frame");
+            asm.finish().unwrap_or_else(|e| panic!("{label}: leftover bytes: {e}"));
+            protocol::decode(&out, DIM)
+                .unwrap_or_else(|e| panic!("{label}: reassembled frame fails decode: {e:?}"));
+        }
+    }
+}
+
+/// A multi-frame stream torn at seeded-random chunk boundaries yields
+/// exactly the original frame sequence. This is the torn-read path the
+/// real socket exercises: many frames per read, frames spanning reads.
+#[test]
+fn random_tearing_over_concatenated_stream_preserves_order_and_bytes() {
+    let frames = sample_frames();
+    let mut stream = Vec::new();
+    let mut expect: Vec<&[u8]> = Vec::new();
+    for _ in 0..5 {
+        for (_, f) in &frames {
+            stream.extend_from_slice(&frame_to_wire(f));
+            expect.push(f);
+        }
+    }
+    let mut rng = Pcg64::new(0xF8A71, 1);
+    let mut asm = FrameAssembler::new();
+    let mut got = 0usize;
+    let mut out = Vec::new();
+    let mut i = 0usize;
+    while i < stream.len() {
+        let take = (1 + (rng.next_u64() % 17) as usize).min(stream.len() - i);
+        asm.push(&stream[i..i + take]);
+        i += take;
+        while asm.next_into(&mut out).unwrap() {
+            assert_eq!(out, expect[got], "frame {got} diverged under random tearing");
+            got += 1;
+        }
+    }
+    assert_eq!(got, expect.len(), "stream ended with frames missing");
+    asm.finish().unwrap();
+}
+
+/// The reassembled stream path and the virtual channel path deliver
+/// bitwise-identical frames — the invariant that makes TCP a pure
+/// transport swap for the byte-accounted protocol.
+#[test]
+fn stream_path_matches_channel_path_bitwise() {
+    for (label, frame) in sample_frames() {
+        let (mut server, mut worker) = duplex();
+        assert!(worker.send(frame.clone()));
+        let via_channel = match server.recv() {
+            Recv::Frame(f) => f,
+            other => panic!("{label}: channel path failed: {other:?}"),
+        };
+        let mut asm = FrameAssembler::new();
+        asm.push(&frame_to_wire(&frame));
+        let via_stream = asm.next().unwrap().expect("whole wire image pushed");
+        assert_eq!(via_stream, via_channel, "{label}: stream vs channel bytes diverged");
+    }
+}
+
+/// An oversized length prefix is rejected before any payload is
+/// buffered — a corrupt peer cannot make the server allocate 4 GiB.
+#[test]
+fn oversized_length_prefix_is_loud() {
+    let bad_len = MAX_FRAME_LEN + 1;
+    let mut wire = bad_len.to_le_bytes().to_vec();
+    wire.extend_from_slice(&[0xA5, 2, 0, 0]);
+    let mut asm = FrameAssembler::new();
+    asm.push(&wire);
+    let mut out = Vec::new();
+    match asm.next_into(&mut out) {
+        Err(FrameError::Oversized { len }) => {
+            assert_eq!(len, bad_len);
+            let msg = FrameError::Oversized { len }.to_string();
+            assert!(msg.contains(&bad_len.to_string()), "error must name the offending length");
+        }
+        other => panic!("oversized prefix not rejected: {other:?}"),
+    }
+}
+
+/// A stream that ends mid-frame reports exactly how much was buffered
+/// versus needed — both mid-prefix and mid-payload.
+#[test]
+fn truncated_tail_is_loud_with_sizes() {
+    let frames = sample_frames();
+    let (_, frame) = &frames[1];
+    let wire = frame_to_wire(frame);
+
+    let mut asm = FrameAssembler::new();
+    asm.push(&wire[..2]);
+    assert!(!asm.next_into(&mut Vec::new()).unwrap());
+    assert_eq!(asm.finish(), Err(FrameError::TruncatedTail { have: 2, need: 4 }));
+
+    let mut asm = FrameAssembler::new();
+    asm.push(&wire[..wire.len() - 3]);
+    assert!(!asm.next_into(&mut Vec::new()).unwrap());
+    assert_eq!(
+        asm.finish(),
+        Err(FrameError::TruncatedTail { have: wire.len() - 3, need: wire.len() })
+    );
+}
